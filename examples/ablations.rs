@@ -1,0 +1,103 @@
+//! Appendix B ablations (Figures 6, 7, 8, 9) on the 130M-analog.
+//!
+//! Sub-experiments (pick with the first positional arg; default `all`):
+//! * `freq`   — Figure 6/7: interval₀ × decay-ratio grid.  Moderate values
+//!              should win; extreme frequencies degrade.
+//! * `frozen` — Figure 8: frozen-steps N sweep (too small ⇒ momentum
+//!              shock, too large ⇒ data bias).
+//! * `init`   — Figure 9: the paper's Eq. (3) init vs LoRA-default init
+//!              under SwitchLoRA training.
+//!
+//! ```bash
+//! cargo run --release --example ablations -- [all|freq|frozen|init] \
+//!     [--spec tiny] [--steps 250]
+//! ```
+
+use anyhow::Result;
+
+use switchlora::cli::Args;
+use switchlora::coordinator::trainer::{Method, SwitchParams, TrainConfig};
+use switchlora::exp;
+use switchlora::model::init::InitMode;
+use switchlora::runtime::Engine;
+
+struct Row {
+    label: String,
+    eval: f64,
+    ppl: f64,
+}
+
+fn run(engine: &mut Engine, spec: &str, steps: u64, label: &str,
+       p: SwitchParams, init: InitMode) -> Result<Row> {
+    let mut cfg = TrainConfig::new(spec, Method::SwitchLora(p), steps);
+    cfg.init = init;
+    cfg.metrics_csv = Some(
+        format!("results/ablation_{spec}_{label}.csv").into());
+    let (res, _) = exp::pretrain(engine, cfg)?;
+    Ok(Row { label: label.to_string(), eval: res.final_eval_loss,
+             ppl: res.final_ppl })
+}
+
+fn print_rows(title: &str, rows: &[Row]) {
+    println!("\n== {title} ==");
+    println!("{:<28} {:>10} {:>8}", "setting", "eval_loss", "ppl");
+    for r in rows {
+        println!("{:<28} {:>10.4} {:>8.2}", r.label, r.eval, r.ppl);
+    }
+    if let Some(best) = rows.iter().min_by(|a, b|
+        a.eval.partial_cmp(&b.eval).unwrap()) {
+        println!("best: {}", best.label);
+    }
+}
+
+fn main() -> Result<()> {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let spec = args.get_or("spec", "tiny");
+    let steps = args.parse_num("steps", 250u64)?;
+    let mut engine = Engine::cpu()?;
+
+    if which == "freq" || which == "all" {
+        // Figure 6/7: interval0 × ratio grid (paper sweeps both)
+        let mut rows = Vec::new();
+        for interval0 in [5.0, 40.0, 320.0] {
+            for ratio in [0.025, 0.1, 0.4] {
+                rows.push(run(
+                    &mut engine, &spec, steps,
+                    &format!("freq_i{interval0}_r{ratio}"),
+                    SwitchParams { interval0, ratio, n_freeze: 5 },
+                    InitMode::SwitchLora)?);
+            }
+        }
+        print_rows("Figure 6/7 analog: switching frequency grid", &rows);
+    }
+
+    if which == "frozen" || which == "all" {
+        // Figure 8: N sweep
+        let mut rows = Vec::new();
+        for n in [0u64, 2, 5, 15, 40] {
+            rows.push(run(&mut engine, &spec, steps, &format!("frozen_N{n}"),
+                          SwitchParams { n_freeze: n,
+                                         ..SwitchParams::default() },
+                          InitMode::SwitchLora)?);
+        }
+        print_rows("Figure 8 analog: frozen steps N", &rows);
+    }
+
+    if which == "init" || which == "all" {
+        // Figure 9: init rule
+        let rows = vec![
+            run(&mut engine, &spec, steps, "init_switchlora",
+                SwitchParams::default(), InitMode::SwitchLora)?,
+            run(&mut engine, &spec, steps, "init_lora_default",
+                SwitchParams::default(), InitMode::LoraDefault)?,
+        ];
+        print_rows("Figure 9 analog: initialization rule", &rows);
+        if rows[0].eval < rows[1].eval {
+            println!("Eq.(3) init beats LoRA-default init \
+                      (paper's Figure 9 finding)");
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,78 @@
+//! Figure 2 / Figure 3 + Table 2 / Table 3 analog: full-rank vs LoRA vs
+//! SwitchLoRA across model sizes and LoRA ranks.
+//!
+//! The paper's claims under test (at testbed scale, see DESIGN.md):
+//!   1. plain LoRA pre-training trails full-rank badly;
+//!   2. SwitchLoRA closes most of the gap at the same rank;
+//!   3. a higher rank closes it further (Fig. 3 / Table 3).
+//!
+//! ```bash
+//! cargo run --release --example compare_methods -- \
+//!     [--specs tiny,s1m] [--steps 400] [--high-rank]
+//! ```
+//! Loss curves land in `results/<spec>_<method>.csv`.
+
+use anyhow::Result;
+
+use switchlora::cli::{csv_list, Args};
+use switchlora::coordinator::trainer::Method;
+use switchlora::exp;
+use switchlora::runtime::Engine;
+
+/// The higher-rank artifact spec for a base spec (rank h/4 → h/2).
+fn high_rank_spec(spec: &str) -> Option<&'static str> {
+    match spec {
+        "tiny" => Some("tiny_r32"),
+        "s1m" => Some("s1m_r64"),
+        "s4m" => Some("s4m_r128"),
+        _ => None,
+    }
+}
+
+fn main() -> Result<()> {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let specs = csv_list(&args.get_or("specs", "tiny,s1m"));
+    let steps = args.parse_num("steps", 400u64)?;
+    let out = std::path::PathBuf::from("results");
+    let mut engine = Engine::cpu()?;
+
+    let mut all = Vec::new();
+    for spec in &specs {
+        let methods = [
+            Method::Full,
+            Method::Lora,
+            Method::parse("switchlora").unwrap(),
+        ];
+        let mut rows = exp::compare_methods(&mut engine, spec, steps,
+                                            &methods, &out, 1)?;
+        // Fig. 3: SwitchLoRA again at double rank, if artifacts exist
+        if args.flag("high-rank") {
+            if let Some(hr) = high_rank_spec(spec) {
+                if switchlora::cli::check_spec(
+                    &switchlora::coordinator::trainer::
+                        default_artifacts_dir(), hr).is_ok() {
+                    rows.extend(exp::compare_methods(
+                        &mut engine, hr, steps,
+                        &[Method::parse("switchlora").unwrap()], &out, 1)?);
+                }
+            }
+        }
+        print!("{}", exp::results_table(
+            &format!("Table 2/3 analog — {spec}"), &rows));
+        // the paper's ordering
+        let get = |m: &str| rows.iter().find(|r| r.method == m)
+            .map(|r| r.final_eval_loss);
+        if let (Some(f), Some(l), Some(s)) =
+            (get("full"), get("lora"),
+             rows.iter().find(|r| r.method == "switchlora")
+                 .map(|r| r.final_eval_loss)) {
+            println!("ordering: lora {l:.4} > switchlora {s:.4} ≈ full \
+                      {f:.4}  (gap closed: {:.0}%)",
+                     100.0 * (l - s) / (l - f).max(1e-9));
+        }
+        all.extend(rows);
+    }
+    print!("{}", exp::results_table("all runs", &all));
+    Ok(())
+}

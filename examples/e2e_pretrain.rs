@@ -1,0 +1,92 @@
+//! End-to-end system driver (the EXPERIMENTS.md §E2E run).
+//!
+//! Exercises every layer of the stack on a real small workload: pre-trains
+//! the largest shipped config (`s8m`, ≈5.8M params — scaled for the
+//! single-core CPU testbed, see DESIGN.md) with SwitchLoRA under simulated
+//! data parallelism, logging:
+//!
+//! * the training/eval loss curve (→ `results/e2e_<spec>_<method>.csv`),
+//! * measured ring all-reduce traffic vs the Appendix F model,
+//! * measured candidate-offload traffic vs the Appendix D formula,
+//! * step-time breakdown,
+//!
+//! then saves the checkpoint and runs a fine-tuning probe on one task to
+//! prove the pretrain → merge → finetune path composes.
+//!
+//! ```bash
+//! cargo run --release --example e2e_pretrain -- \
+//!     [--spec s8m] [--steps 300] [--workers 2] [--method switchlora]
+//! ```
+
+use anyhow::Result;
+
+use switchlora::cli::Args;
+use switchlora::coordinator::checkpoint;
+use switchlora::coordinator::trainer::{Method, TrainConfig};
+use switchlora::data::tasks::Task;
+use switchlora::exp;
+use switchlora::model::analytics;
+use switchlora::model::layout::{Manifest, Variant};
+use switchlora::runtime::Engine;
+use switchlora::util::human_bytes;
+
+fn main() -> Result<()> {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let spec = args.get_or("spec", "s8m");
+    let steps = args.parse_num("steps", 300u64)?;
+    let workers = args.parse_num("workers", 2usize)?;
+    let method = Method::parse(&args.get_or("method", "switchlora"))
+        .expect("method");
+
+    let mut cfg = TrainConfig::new(&spec, method, steps);
+    cfg.workers = workers;
+    cfg.eval_every = (steps / 10).max(1);
+    cfg.metrics_csv = Some(
+        format!("results/e2e_{spec}_{}.csv", cfg.method.name()).into());
+
+    let mut engine = Engine::cpu()?;
+    let (res, store) = exp::pretrain(&mut engine, cfg)?;
+    print!("{}", exp::results_table("e2e pretrain", &[res.clone()]));
+
+    // ---- systems accounting vs the analytic models ----
+    let man = Manifest::load(
+        &switchlora::coordinator::trainer::default_artifacts_dir()
+            .join(&spec))?;
+    let measured_comm = res.comm.bytes as f64 / steps as f64;
+    let model_comm = analytics::dp_comm_bytes_per_step(
+        res.n_trainable as u64, workers as u64) as f64;
+    println!("\nDP comm/step: measured {}  model {}  (ratio {:.3})",
+             human_bytes(measured_comm as u64),
+             human_bytes(model_comm as u64),
+             measured_comm / model_comm.max(1.0));
+    if res.offload_bytes > 0 {
+        let measured_off = res.offload_bytes as f64 / steps as f64;
+        println!("offload/step: measured {}  (Appendix D formula scales \
+                  with switch frequency; see bench_tables for the model)",
+                 human_bytes(measured_off as u64));
+    }
+    println!("trainable: {} / full {}  (comm saving {:.1}%)",
+             res.n_trainable, man.full.n_trainable,
+             100.0 * (1.0 - res.n_trainable as f64
+                      / man.full.n_trainable as f64));
+    println!("mean step: {:.1} ms over {} steps ({} executable runs)",
+             res.mean_step_ms, steps, workers + 1);
+
+    // ---- checkpoint + fine-tune probe ----
+    let ckpt = format!("results/e2e_{spec}.ckpt");
+    checkpoint::save(std::path::Path::new(&ckpt), &spec, &store, None)?;
+    println!("checkpoint: {ckpt}");
+    if man.cls.is_some() {
+        let ft = exp::finetune::glue_suite(
+            &mut engine, &man, &store, Variant::Lora, &[Task::Majority],
+            120, 2e-3, 7)?;
+        println!("fine-tune probe (majority): acc {:.3}", ft[0].accuracy);
+    } else {
+        println!("(no cls artifacts for {spec}; fine-tune probe skipped)");
+    }
+    println!("\nE2E complete: loss {:.4} → {:.4} (ppl {:.2})",
+             res.train_curve.first().map(|x| x.1).unwrap_or(f64::NAN),
+             res.final_eval_loss, res.final_ppl);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Table 6 analog: GaLore vs SwitchLoRA across rank / model size / seq len.
+//!
+//! Paper's Table 6 rows (350M standard, rank 256, seq 256) mapped to the
+//! testbed: standard = s1m (rank 32 = h/4, seq 64); the sweep changes one
+//! variable at a time exactly as the paper does:
+//!
+//! | paper cell        | here        |
+//! |-------------------|-------------|
+//! | standard          | s1m         |
+//! | model size = 130M | tiny        |
+//! | rank = 128 (÷2)   | s1m_r8      |
+//! | rank = 32  (÷8)   | s1m_r4      |
+//! | seq len = 512 (×2)| s1m_s128    |
+//!
+//! Claim under test: SwitchLoRA ≥ GaLore everywhere, with the gap widening
+//! sharply at small rank (GaLore's SVD compresses away low-energy gradient
+//! directions; SwitchLoRA keeps covering all of them).
+//!
+//! ```bash
+//! cargo run --release --example galore_compare -- [--steps 300]
+//! ```
+
+use anyhow::Result;
+
+use switchlora::cli::Args;
+use switchlora::coordinator::trainer::{GaloreParams, Method, TrainConfig};
+use switchlora::exp;
+use switchlora::runtime::Engine;
+
+fn main() -> Result<()> {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let steps = args.parse_num("steps", 300u64)?;
+    let cells: Vec<(&str, &str)> = vec![
+        ("standard", "s1m"),
+        ("model=tiny", "tiny"),
+        ("rank/4", "s1m_r8"),
+        ("rank/8", "s1m_r4"),
+        ("seq x2", "s1m_s128"),
+    ];
+    let mut engine = Engine::cpu()?;
+
+    println!("{:<12} {:<10} {:>12} {:>12} {:>8}", "cell", "spec",
+             "galore_ppl", "switch_ppl", "winner");
+    let mut galore_wins = 0;
+    let mut rows = Vec::new();
+    for (cell, spec) in &cells {
+        // GaLore: project to the spec's LoRA rank, refresh every 50 steps
+        // (paper: 1/200 of 40k ≈ steps/200; at our scale steps/6 ≈ 50)
+        let galore = Method::Galore(GaloreParams {
+            rank: 0,
+            update_freq: (steps / 6).max(10),
+            scale: 0.25,
+        });
+        let mut cfg_g = TrainConfig::new(spec, galore, steps);
+        cfg_g.metrics_csv =
+            Some(format!("results/table6_{spec}_galore.csv").into());
+        let (g, _) = exp::pretrain(&mut engine, cfg_g)?;
+
+        let mut cfg_s = TrainConfig::new(
+            spec, Method::parse("switchlora").unwrap(), steps);
+        cfg_s.metrics_csv =
+            Some(format!("results/table6_{spec}_switchlora.csv").into());
+        let (s, _) = exp::pretrain(&mut engine, cfg_s)?;
+
+        let winner = if s.final_ppl <= g.final_ppl {
+            "switchlora"
+        } else {
+            galore_wins += 1;
+            "galore"
+        };
+        println!("{:<12} {:<10} {:>12.2} {:>12.2} {:>8}", cell, spec,
+                 g.final_ppl, s.final_ppl, winner);
+        rows.push((cell.to_string(), g, s));
+    }
+    // the paper's strongest claim is the small-rank cell
+    if let Some((_, g, s)) = rows.iter().find(|(c, _, _)| c == "rank/8") {
+        println!(
+            "\nsmall-rank gap: galore ppl {:.2} vs switchlora {:.2} \
+             (paper: 34.09 vs 25.26 — ratio {:.2} here vs 1.35 paper)",
+            g.final_ppl, s.final_ppl, g.final_ppl / s.final_ppl);
+    }
+    println!("galore wins {galore_wins}/{} cells (paper: 0)", rows.len());
+    Ok(())
+}

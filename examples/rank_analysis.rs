@@ -1,0 +1,70 @@
+//! Figures 10/11 + Appendix E analog: singular-value spectra of trained
+//! effective weights per layer type, for LoRA vs SwitchLoRA vs full-rank.
+//!
+//! Paper's finding: plain-LoRA training leaves weight spectra "ill" —
+//! singular values converge in a narrow band because all updates live in
+//! the rank-r adapter — while SwitchLoRA's spectra track full-rank
+//! training's.  We quantify that with s_max/s_med (spread) and effective
+//! rank at 1% of s_max.
+//!
+//! ```bash
+//! cargo run --release --example rank_analysis -- \
+//!     [--spec tiny] [--steps 300]
+//! ```
+
+use anyhow::Result;
+
+use switchlora::cli::Args;
+use switchlora::coordinator::trainer::{Method, TrainConfig};
+use switchlora::exp;
+use switchlora::exp::rank::{analyze, table};
+use switchlora::model::layout::Manifest;
+use switchlora::runtime::Engine;
+
+fn main() -> Result<()> {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let spec = args.get_or("spec", "tiny");
+    let steps = args.parse_num("steps", 300u64)?;
+    let mut engine = Engine::cpu()?;
+    let man = Manifest::load(
+        &switchlora::coordinator::trainer::default_artifacts_dir()
+            .join(&spec))?;
+
+    let mut spreads = Vec::new();
+    for method in [Method::Full, Method::Lora,
+                   Method::parse("switchlora").unwrap()] {
+        let name = method.name().to_string();
+        let variant = method.variant();
+        let cfg = TrainConfig::new(&spec, method, steps);
+        let (res, store) = exp::pretrain(&mut engine, cfg)?;
+        let rows = analyze(&store, &man, variant)?;
+        println!("\n== {} (eval ppl {:.2}) ==", name, res.final_ppl);
+        print!("{}", table(&rows));
+        let mean_cond: f64 = rows.iter().map(|r| r.condition).sum::<f64>()
+            / rows.len() as f64;
+        let mean_eff: f64 = rows.iter().map(|r| r.eff_rank_frac)
+            .sum::<f64>() / rows.len() as f64;
+        spreads.push((name, mean_cond, mean_eff));
+    }
+
+    println!("\n== Figure 10/11 summary ==");
+    println!("{:<12} {:>14} {:>12}", "method", "s_max/s_med", "eff_rank%");
+    for (name, cond, eff) in &spreads {
+        println!("{name:<12} {cond:>14.2} {:>12.1}", 100.0 * eff);
+    }
+    let get = |n: &str| spreads.iter().find(|(x, _, _)| x == n).cloned();
+    if let (Some(f), Some(l), Some(s)) =
+        (get("full"), get("lora"), get("switchlora")) {
+        println!("\nspectral spread: |switchlora − full| = {:.2}, \
+                  |lora − full| = {:.2} → {}",
+                 (s.1 - f.1).abs(), (l.1 - f.1).abs(),
+                 if (s.1 - f.1).abs() <= (l.1 - f.1).abs() {
+                     "SwitchLoRA's spectrum tracks full-rank more closely \
+                      (Fig. 11)"
+                 } else {
+                     "ordering NOT reproduced at this scale"
+                 });
+    }
+    Ok(())
+}

@@ -1,0 +1,213 @@
+"""AOT pipeline: lower every model variant to HLO **text** + a manifest.
+
+Build-time only; never imported at runtime.  For each requested spec this
+lowers the L2 functions (which call the L1 Pallas kernels) with
+``jax.jit(...).lower(...)``, converts the StableHLO module to an
+XlaComputation, and dumps ``as_hlo_text()``.  HLO *text* — not
+``.serialize()`` — is the interchange format because the image's
+xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit instruction ids; the
+text parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Artifacts per spec (written under --out-dir):
+
+    <spec>/lora_fwdbwd.hlo.txt    pre-training step, LoRA-adapted model
+    <spec>/lora_eval.hlo.txt      eval loss, LoRA-adapted model
+    <spec>/full_fwdbwd.hlo.txt    pre-training step, full-rank model
+    <spec>/full_eval.hlo.txt      eval loss, full-rank model
+    <spec>/cls_fwdbwd.hlo.txt     full fine-tuning step, classification head
+    <spec>/cls_eval.hlo.txt       classification eval (loss + #correct)
+    <spec>/manifest.json          parameter layout + metadata for Rust
+    adam_<N>.hlo.txt              fused AdamW over flat padded N (shared)
+
+Spec syntax: ``name[:rank=R][:seq=S][:batch=B]`` — overridden specs emit only
+the lora/full pre-training artifacts (they exist for rank/seq ablations).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts \
+            --specs tiny,s1m,s4m,s8m
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs as C
+from . import model as M
+from .kernels import adam as AK
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO module → XLA computation → HLO text (see module doc)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _param_args(spec):
+    return [jax.ShapeDtypeStruct(pi.shape, jnp.float32) for pi in spec]
+
+
+def lower_variant(cfg, variant):
+    """Lower one (config, variant) to HLO text.  variant in the set above."""
+    lora = variant.startswith("lora")
+    if variant.endswith("fwdbwd") and not variant.startswith("cls"):
+        fn, spec = M.make_fwdbwd(cfg, lora=lora)
+        data = [jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)]
+    elif variant.endswith("eval") and not variant.startswith("cls"):
+        fn, spec = M.make_eval(cfg, lora=lora)
+        data = [jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32)]
+    elif variant == "cls_fwdbwd":
+        fn, spec = M.make_cls_fwdbwd(cfg, lora=False)
+        data = [jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+                jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)]
+    elif variant == "cls_eval":
+        fn, spec = M.make_cls_eval(cfg, lora=False)
+        data = [jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32),
+                jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)]
+    else:
+        raise ValueError(variant)
+    args = _param_args(spec) + data
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered), spec
+
+
+def lower_adam(n_padded: int) -> str:
+    def fn(p, g, m, v, s, mask, hyper):
+        return AK.adam_step(p, g, m, v, s, mask, hyper)
+
+    vec = jax.ShapeDtypeStruct((n_padded,), jnp.float32)
+    hyp = jax.ShapeDtypeStruct((5,), jnp.float32)
+    lowered = jax.jit(fn).lower(vec, vec, vec, vec, vec, vec, hyp)
+    return to_hlo_text(lowered)
+
+
+def parse_spec(s: str):
+    """``name[:key=val]*`` → (spec_name, ModelConfig, overridden?)."""
+    parts = s.split(":")
+    cfg = C.get(parts[0])
+    overrides = {}
+    for kv in parts[1:]:
+        k, v = kv.split("=")
+        overrides[k] = int(v)
+    if not overrides:
+        return cfg.name, cfg, False
+    name = cfg.name + "".join(
+        f"_{k[0]}{v}" for k, v in sorted(overrides.items()))
+    if "rank" in overrides:
+        overrides["lora_alpha"] = float(overrides["rank"])
+    cfg = dataclasses.replace(cfg, name=name, **overrides)
+    return name, cfg, True
+
+
+def spec_json(spec):
+    return [{"name": pi.name, "shape": list(pi.shape), "role": pi.role,
+             "trainable": pi.trainable, "numel": pi.numel} for pi in spec]
+
+
+def n_trainable(spec):
+    return sum(pi.numel for pi in spec if pi.trainable)
+
+
+def build_spec(out_dir: str, spec_name: str, cfg, overridden: bool,
+               adam_sizes: set, force: bool) -> None:
+    d = os.path.join(out_dir, spec_name)
+    os.makedirs(d, exist_ok=True)
+    manifest_path = os.path.join(d, "manifest.json")
+    variants = (["lora_fwdbwd", "lora_eval", "full_fwdbwd", "full_eval"]
+                if overridden else
+                ["lora_fwdbwd", "lora_eval", "full_fwdbwd", "full_eval",
+                 "cls_fwdbwd", "cls_eval"])
+    if os.path.exists(manifest_path) and not force:
+        with open(manifest_path) as f:
+            man = json.load(f)
+        if man.get("variants") == variants and all(
+                os.path.exists(os.path.join(d, f"{v}.hlo.txt"))
+                for v in variants):
+            for key in ("adam_padded_lora", "adam_padded_full",
+                        "adam_padded_cls"):
+                if man.get(key):
+                    adam_sizes.add(man[key])
+            print(f"[aot] {spec_name}: up to date, skipping")
+            return
+
+    man = {"config": cfg.to_dict(), "variants": variants,
+           "block": int(os.environ.get("SWITCHLORA_BLOCK", "0"))}
+    specs = {}
+    for v in variants:
+        t0 = time.time()
+        text, spec = lower_variant(cfg, v)
+        with open(os.path.join(d, f"{v}.hlo.txt"), "w") as f:
+            f.write(text)
+        specs[v] = spec
+        print(f"[aot] {spec_name}/{v}: {len(text)/1e6:.2f} MB HLO "
+              f"in {time.time()-t0:.1f}s", flush=True)
+
+    lora_spec = specs["lora_fwdbwd"]
+    full_spec = specs["full_fwdbwd"]
+    _, linears = M.param_spec(cfg, lora=True)
+    man["params_lora"] = spec_json(lora_spec)
+    man["params_full"] = spec_json(full_spec)
+    man["linears"] = [{"name": li.name, "a": li.a, "b": li.b,
+                       "m": li.out_dim, "n": li.in_dim} for li in linears]
+    man["n_trainable_lora"] = n_trainable(lora_spec)
+    man["n_trainable_full"] = n_trainable(full_spec)
+    man["adam_padded_lora"] = AK.padded_size(man["n_trainable_lora"])
+    man["adam_padded_full"] = AK.padded_size(man["n_trainable_full"])
+    adam_sizes.add(man["adam_padded_lora"])
+    adam_sizes.add(man["adam_padded_full"])
+    if "cls_fwdbwd" in variants:
+        cls_spec = specs["cls_fwdbwd"]
+        man["params_cls"] = spec_json(cls_spec)
+        man["n_trainable_cls"] = n_trainable(cls_spec)
+        man["adam_padded_cls"] = AK.padded_size(man["n_trainable_cls"])
+        adam_sizes.add(man["adam_padded_cls"])
+    with open(manifest_path, "w") as f:
+        json.dump(man, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--specs", default="tiny,s1m,s4m,s8m")
+    ap.add_argument("--force", action="store_true")
+    # Whole-matrix blocks (grid 1×1) by default for the shipped artifacts:
+    # fastest choice under the Pallas interpreter on CPU; tests exercise the
+    # tiled path.  See kernels/lora_matmul.py.
+    ap.add_argument("--block", default=os.environ.get("SWITCHLORA_BLOCK",
+                                                      "0"))
+    args = ap.parse_args()
+    os.environ["SWITCHLORA_BLOCK"] = str(args.block)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    adam_sizes: set = set()
+    for s in args.specs.split(","):
+        s = s.strip()
+        if not s:
+            continue
+        name, cfg, overridden = parse_spec(s)
+        build_spec(args.out_dir, name, cfg, overridden, adam_sizes,
+                   args.force)
+
+    for n in sorted(adam_sizes):
+        path = os.path.join(args.out_dir, f"adam_{n}.hlo.txt")
+        if os.path.exists(path) and not args.force:
+            print(f"[aot] adam_{n}: up to date, skipping")
+            continue
+        t0 = time.time()
+        text = lower_adam(n)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] adam_{n}: {len(text)/1e6:.2f} MB HLO "
+              f"in {time.time()-t0:.1f}s", flush=True)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""Model configuration presets.
+
+Two families live here:
+
+* **Runnable configs** (``tiny`` … ``s8m``): laptop-scale LLaMA-family models
+  used by every experiment driver in this repo.  The testbed is a single-core
+  CPU PJRT client, so these are scaled-down analogs of the paper's 130M-1.3B
+  models (see DESIGN.md "Substitutions").
+* **Paper configs** (``p130m`` … ``p7b``): the exact architectures of the
+  paper's Table 1 / Table 9.  These are *never lowered to HLO*; they drive
+  the analytic parameter-count / memory / communication tables (Tables 4, 5,
+  Appendix F), which the Rust side (``model/analytics.rs``) reproduces
+  bit-for-bit from the same numbers.
+
+This file is the single source of truth for architecture shapes: ``aot.py``
+serializes the chosen config into ``manifest.json`` and the Rust coordinator
+reads it from there — the two sides can never drift.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int
+    layers: int
+    heads: int
+    ff: int
+    seq: int          # training sequence length
+    rank: int         # LoRA rank r
+    lora_alpha: float  # LoRA alpha; scale applied is lora_alpha / rank
+    batch: int        # per-step batch used for the AOT example shapes
+    n_cls: int = 4    # classification head width for the GLUE-analog variant
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.rank
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        return d
+
+
+def _cfg(name, vocab, hidden, layers, heads, ff, seq, rank, batch, n_cls=4):
+    # Paper sets alpha = r so that alpha/r = 1 (Section 2.1).
+    return ModelConfig(
+        name=name, vocab=vocab, hidden=hidden, layers=layers, heads=heads,
+        ff=ff, seq=seq, rank=rank, lora_alpha=float(rank), batch=batch,
+        n_cls=n_cls,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Runnable (lowered-to-HLO) configs.  rank defaults to hidden/4, the ratio
+# used throughout the paper's Table 5; experiment drivers can request
+# rank-variant artifacts (e.g. hidden/8) via aot.py --ranks.
+# ---------------------------------------------------------------------------
+CONFIGS = {
+    "tiny": _cfg("tiny", vocab=256, hidden=64, layers=2, heads=4, ff=128,
+                 seq=64, rank=16, batch=8),
+    "s1m":  _cfg("s1m", vocab=512, hidden=128, layers=4, heads=4, ff=256,
+                 seq=64, rank=32, batch=8),
+    "s4m":  _cfg("s4m", vocab=512, hidden=256, layers=4, heads=8, ff=512,
+                 seq=64, rank=64, batch=8),
+    "s8m":  _cfg("s8m", vocab=1024, hidden=256, layers=8, heads=8, ff=512,
+                 seq=128, rank=64, batch=4),
+}
+
+# ---------------------------------------------------------------------------
+# Paper configs (Table 1 + Table 9), analytics only.
+# ---------------------------------------------------------------------------
+PAPER_CONFIGS = {
+    "p130m": _cfg("p130m", vocab=32000, hidden=768, layers=12, heads=12,
+                  ff=2048, seq=256, rank=128, batch=600),
+    "p250m": _cfg("p250m", vocab=32000, hidden=768, layers=24, heads=16,
+                  ff=2560, seq=512, rank=128, batch=1152),
+    "p350m": _cfg("p350m", vocab=32000, hidden=1024, layers=24, heads=16,
+                  ff=2736, seq=512, rank=128, batch=1152),
+    "p1b":   _cfg("p1b", vocab=32000, hidden=2048, layers=24, heads=32,
+                  ff=5461, seq=512, rank=512, batch=1536),
+    "p3b":   _cfg("p3b", vocab=32000, hidden=2560, layers=32, heads=32,
+                  ff=6826, seq=512, rank=640, batch=1536),
+    "p7b":   _cfg("p7b", vocab=32000, hidden=4096, layers=32, heads=32,
+                  ff=11008, seq=512, rank=1024, batch=1536),
+}
+
+
+def get(name: str) -> ModelConfig:
+    if name in CONFIGS:
+        return CONFIGS[name]
+    if name in PAPER_CONFIGS:
+        return PAPER_CONFIGS[name]
+    raise KeyError(f"unknown config {name!r}; have {sorted(CONFIGS)} "
+                   f"and paper configs {sorted(PAPER_CONFIGS)}")

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: fused AdamW step over the flattened trainable vector.
+
+The paper (Appendix D) reshapes the optimizer's ``step`` state from a scalar
+into a per-row/per-column vector so that switching can reset the states of
+individual LoRA vectors.  We take that idea to its limit: the Rust
+coordinator flattens every *trainable* tensor into one f32 vector and keeps
+**per-element** ``step`` counts plus a 0/1 ``mask`` (the freeze mask of
+Algorithm 2, line 8/13).  This single kernel then implements, elementwise:
+
+    step' = step + mask
+    m'    = mask ? b1*m + (1-b1)*g : m
+    v'    = mask ? b2*v + (1-b2)*g^2 : v
+    mhat  = m' / (1 - b1^step')
+    vhat  = v' / (1 - b2^step')
+    p'    = p - mask * lr * (mhat / (sqrt(vhat) + eps) + wd * p)
+
+Frozen elements (mask=0) neither update nor advance their bias-correction
+clock, and freshly-switched vectors restart from step=0 exactly as the
+modified-AdamW of Appendix D does at row/column granularity.
+
+The kernel is 1-D blocked; the flat vector is padded (by aot.py / the Rust
+side) to a multiple of the block so every grid step is full.  Padding lanes
+carry mask=0 and step=1 so they are inert — bias correction never divides by
+zero.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1-D block for the flat vector.  8192 f32 * 7 arrays ~= 224 KiB VMEM/step.
+BLOCK = 8192
+
+
+def padded_size(n: int, block: int = BLOCK) -> int:
+    return ((n + block - 1) // block) * block
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, s_ref, mask_ref, h_ref,
+                 po_ref, mo_ref, vo_ref, so_ref):
+    lr, b1, b2, eps, wd = (h_ref[0], h_ref[1], h_ref[2], h_ref[3], h_ref[4])
+    p = p_ref[...]
+    g = g_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    s = s_ref[...]
+    mask = mask_ref[...]
+    s_new = s + mask
+    m_new = mask * (b1 * m + (1.0 - b1) * g) + (1.0 - mask) * m
+    v_new = mask * (b2 * v + (1.0 - b2) * g * g) + (1.0 - mask) * v
+    # Frozen lanes can legitimately have s == 0 (a freshly reset-and-frozen
+    # LoRA vector: reset zeroes s, the freeze zeroes mask).  Clamp the
+    # bias-correction clock to >= 1 so 1-b^0 = 0 never divides; this never
+    # changes live lanes, where mask == 1 implies s_new >= 1.
+    s_c = jnp.maximum(s_new, 1.0)
+    c1 = 1.0 - jnp.power(b1, s_c)
+    c2 = 1.0 - jnp.power(b2, s_c)
+    mhat = m_new / c1
+    vhat = v_new / c2
+    upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p
+    po_ref[...] = p - mask * lr * upd
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+    so_ref[...] = s_new
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def adam_step(p, g, m, v, s, mask, hyper, block: int = BLOCK):
+    """One fused AdamW step over flat padded vectors.
+
+    Args:
+      p, g, m, v, s, mask: f32[N] with N % block == 0.
+      hyper: f32[5] = (lr, beta1, beta2, eps, weight_decay).
+    Returns:
+      (p', m', v', s').
+    """
+    n = p.shape[0]
+    assert n % block == 0, f"{n} not a multiple of {block}"
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    hspec = pl.BlockSpec((5,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 4
+    return tuple(pl.pallas_call(
+        _adam_kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, spec, spec, hspec],
+        out_specs=[spec, spec, spec, spec],
+        interpret=True,
+    )(p, g, m, v, s, mask, hyper))

@@ -1,0 +1,158 @@
+"""L1 Pallas kernels: tiled matmul, plain linear, and the fused LoRA linear.
+
+These are the compute hot spots of the SwitchLoRA training step.  Pallas has
+no built-in reverse-mode autodiff, so both ``linear`` and ``lora_linear`` are
+wrapped in ``jax.custom_vjp`` with the backward pass *also* expressed in
+Pallas kernels — the entire fwd+bwd graph of every linear layer therefore
+lowers through the same tiled-matmul kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper trains on
+A800 GPUs; here we think in the TPU model Pallas targets.  ``BlockSpec``
+expresses the HBM→VMEM schedule: an (bm × K) x-tile and (K × bn) w-tile are
+staged per grid step and contracted on the MXU via ``jnp.dot`` with
+``preferred_element_type=float32``.  Default tile target is 128 — the MXU
+systolic-array edge — clamped to divisors of the actual dims.  On this CPU
+testbed kernels run with ``interpret=True`` (a Mosaic custom-call cannot
+execute on the CPU PJRT plugin), so tiling is a *structural* property we
+verify and cost-model rather than a wallclock win; set the environment
+variable ``SWITCHLORA_BLOCK=0`` to lower whole-matrix blocks (grid 1×1, the
+fastest choice under the interpreter) — ``aot.py`` does this for the shipped
+artifacts and records the choice in the manifest.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile edge target.  128 matches the MXU; divisor-clamped per dimension.
+_DEFAULT_BLOCK = 128
+
+
+def block_target() -> int:
+    """Tile-edge target; 0 means whole-matrix blocks (grid 1x1)."""
+    return int(os.environ.get("SWITCHLORA_BLOCK", _DEFAULT_BLOCK))
+
+
+def pick_block(dim: int, target: int | None = None) -> int:
+    """Largest divisor of ``dim`` that is <= target (whole dim if target<=0).
+
+    All model dims in this repo are powers of two, so this returns a power of
+    two; for odd dims it degrades gracefully to the largest divisor.
+    """
+    if target is None:
+        target = block_target()
+    if target <= 0 or target >= dim:
+        return dim
+    best = 1
+    d = 1
+    while d * d <= dim:
+        if dim % d == 0:
+            if d <= target:
+                best = max(best, d)
+            q = dim // d
+            if q <= target:
+                best = max(best, q)
+        d += 1
+    return best
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """One grid step: contract a (bm,K) tile with a (K,bn) tile on the MXU."""
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn"))
+def _matmul_impl(x, w, bm, bn):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contract mismatch {x.shape} @ {w.shape}"
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _mm_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+def matmul(x, w, block: int | None = None):
+    """Tiled Pallas matmul ``x @ w`` for 2-D f32 operands.
+
+    VMEM working set per grid step is ``bm*K + K*bn + bm*bn`` f32 — with the
+    default 128 target and K<=4096 this stays under 4.2 MiB, comfortably
+    inside a 16 MiB VMEM budget (see EXPERIMENTS.md §Perf for the footprint
+    table).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    bm = pick_block(x.shape[0], block)
+    bn = pick_block(w.shape[1], block)
+    return _matmul_impl(x, w, bm, bn)
+
+
+# ---------------------------------------------------------------------------
+# Plain linear:  y = x @ W^T   (W stored [out, in], torch convention)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def linear(x, w):
+    """``x[: , in] @ w[out, in]^T`` with Pallas fwd and bwd."""
+    return matmul(x, w.T)
+
+
+def _linear_fwd(x, w):
+    return matmul(x, w.T), (x, w)
+
+
+def _linear_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w)          # [m, out] @ [out, in] -> [m, in]
+    dw = matmul(g.T, x)        # [out, m] @ [m, in]  -> [out, in]
+    return dx, dw
+
+
+linear.defvjp(_linear_fwd, _linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused LoRA linear:  y = x W^T + s * (x A^T) B^T
+#   W: [out, in] (frozen base), A: [r, in], B: [out, r], s = alpha / r
+# The rank-r bottleneck means the LoRA branch stages only (bm*r + r*bn)
+# extra VMEM per grid step — the reason LoRA's training cost is ~the base
+# matmul (paper Table 5: LoRA/SwitchLoRA step time == full-rank).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lora_linear(x, w, a, b, scale):
+    xa = matmul(x, a.T)
+    return matmul(x, w.T) + scale * matmul(xa, b.T)
+
+
+def _lora_fwd(x, w, a, b, scale):
+    xa = matmul(x, a.T)                       # [m, r]
+    y = matmul(x, w.T) + scale * matmul(xa, b.T)
+    return y, (x, w, a, b, xa)
+
+
+def _lora_bwd(scale, res, g):
+    x, w, a, b, xa = res
+    gb = matmul(g, b)                         # [m, r]
+    dx = matmul(g, w) + scale * matmul(gb, a)
+    # Base W is frozen during (Switch)LoRA training; its cotangent is still
+    # produced for the full-rank/GaLore variants that differentiate w.
+    dw = matmul(g.T, x)
+    da = scale * matmul(gb.T, x)              # [r, in]
+    db = scale * matmul(g.T, xa)              # [out, r]
+    return dx, dw, da, db
+
+
+lora_linear.defvjp(_lora_fwd, _lora_bwd)

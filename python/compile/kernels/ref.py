@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the L1 correctness contract).
+
+Each ``ref_*`` below is the mathematical definition the corresponding Pallas
+kernel must match to float32 tolerance; ``python/tests/test_kernels.py``
+sweeps shapes/dtypes with hypothesis and asserts ``allclose`` against these.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_matmul(x, w):
+    return jnp.asarray(x, jnp.float32) @ jnp.asarray(w, jnp.float32)
+
+
+def ref_linear(x, w):
+    """y = x @ W^T with W stored [out, in]."""
+    return ref_matmul(x, w.T)
+
+
+def ref_lora_linear(x, w, a, b, scale):
+    """y = x W^T + scale * (x A^T) B^T."""
+    return ref_matmul(x, w.T) + scale * ref_matmul(ref_matmul(x, a.T), b.T)
+
+
+def ref_adam_step(p, g, m, v, s, mask, hyper):
+    """Elementwise masked AdamW with per-element step counts (see adam.py)."""
+    lr, b1, b2, eps, wd = [jnp.float32(h) for h in hyper]
+    p, g, m, v, s, mask = [jnp.asarray(t, jnp.float32)
+                           for t in (p, g, m, v, s, mask)]
+    s_new = s + mask
+    m_new = mask * (b1 * m + (1 - b1) * g) + (1 - mask) * m
+    v_new = mask * (b2 * v + (1 - b2) * g * g) + (1 - mask) * v
+    s_c = jnp.maximum(s_new, 1.0)  # see adam.py: frozen+reset lanes have s=0
+    mhat = m_new / (1 - b1 ** s_c)
+    vhat = v_new / (1 - b2 ** s_c)
+    upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p
+    return p - mask * lr * upd, m_new, v_new, s_new

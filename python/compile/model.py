@@ -1,0 +1,359 @@
+"""L2: LLaMA-family decoder with LoRA adapters, in JAX, calling L1 kernels.
+
+This module defines everything the AOT pipeline lowers to HLO:
+
+* ``param_spec(cfg, lora, cls)`` — the **canonical ordered parameter list**.
+  aot.py serializes it into ``manifest.json``; the Rust coordinator builds
+  its flat state layout from that manifest, so Python and Rust can never
+  disagree about parameter order, shapes, roles or trainability.
+* ``make_fwdbwd`` / ``make_eval`` — the pre-training step (loss + grads for
+  the trainable subset) and the evaluation forward.
+* ``make_cls_fwdbwd`` / ``make_cls_eval`` — the sequence-classification
+  variant used for the GLUE-analog full fine-tuning experiments (paper
+  Tables 7/8).
+
+Architecture (matching the paper's LLaMA setup): token embedding, N decoder
+blocks of [RMSNorm → causal multi-head attention with RoPE → residual,
+RMSNorm → SwiGLU MLP → residual], final RMSNorm, linear LM head.  LoRA
+adapters (paper Section 2.1: ``W + (alpha/r) B A``) are attached to **every
+attention and MLP linear** as in Section 4.1; embeddings, norms and the LM
+head remain directly trainable (the ReLoRA/SwitchLoRA convention).
+
+Every linear goes through the L1 Pallas kernels (``kernels/lora_matmul.py``);
+``use_pallas=False`` switches to the pure-jnp oracles from ``kernels/ref.py``
+so tests can diff the full model fwd+bwd against a kernel-free reference.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import lora_matmul as K
+from .kernels import ref as R
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamInfo:
+    name: str
+    shape: tuple
+    role: str        # embed | norm | base | lora_a | lora_b | head | cls_head
+    trainable: bool
+
+    @property
+    def numel(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclass(frozen=True)
+class LinearInfo:
+    """One LoRA-adapted linear: metadata the switch algorithm needs."""
+    name: str        # base weight param name
+    a: str           # lora A param name ([r, in])
+    b: str           # lora B param name ([out, r])
+    out_dim: int     # m
+    in_dim: int      # n
+
+
+def _linears(cfg: ModelConfig):
+    """(name, out_dim, in_dim) for every LoRA-adapted linear, in order."""
+    h, ff = cfg.hidden, cfg.ff
+    out = []
+    for i in range(cfg.layers):
+        for w in ("wq", "wk", "wv", "wo"):
+            out.append((f"l{i}.{w}", h, h))
+        out.append((f"l{i}.w_gate", ff, h))
+        out.append((f"l{i}.w_up", ff, h))
+        out.append((f"l{i}.w_down", h, ff))
+    return out
+
+
+def param_spec(cfg: ModelConfig, lora: bool, cls: bool = False):
+    """The canonical ordered parameter list for a model variant.
+
+    Returns (list[ParamInfo], list[LinearInfo]).
+    """
+    r = cfg.rank
+    spec = [ParamInfo("embed", (cfg.vocab, cfg.hidden), "embed", True)]
+    linears = []
+    lin_dims = {name: (m, n) for name, m, n in _linears(cfg)}
+    for i in range(cfg.layers):
+        spec.append(ParamInfo(f"l{i}.attn_norm", (cfg.hidden,), "norm", True))
+        for w in ("wq", "wk", "wv", "wo"):
+            name = f"l{i}.{w}"
+            m, n = lin_dims[name]
+            spec.append(ParamInfo(name, (m, n), "base", not lora))
+            if lora:
+                spec.append(ParamInfo(f"{name}.a", (r, n), "lora_a", True))
+                spec.append(ParamInfo(f"{name}.b", (m, r), "lora_b", True))
+                linears.append(LinearInfo(name, f"{name}.a", f"{name}.b",
+                                          m, n))
+        spec.append(ParamInfo(f"l{i}.mlp_norm", (cfg.hidden,), "norm", True))
+        for w in ("w_gate", "w_up", "w_down"):
+            name = f"l{i}.{w}"
+            m, n = lin_dims[name]
+            spec.append(ParamInfo(name, (m, n), "base", not lora))
+            if lora:
+                spec.append(ParamInfo(f"{name}.a", (r, n), "lora_a", True))
+                spec.append(ParamInfo(f"{name}.b", (m, r), "lora_b", True))
+                linears.append(LinearInfo(name, f"{name}.a", f"{name}.b",
+                                          m, n))
+    spec.append(ParamInfo("final_norm", (cfg.hidden,), "norm", True))
+    if cls:
+        spec.append(ParamInfo("cls_head", (cfg.n_cls, cfg.hidden),
+                              "cls_head", True))
+    else:
+        spec.append(ParamInfo("lm_head", (cfg.vocab, cfg.hidden), "head",
+                              True))
+    return spec, linears
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions):
+    """Rotary embedding over the last dim of x[..., T, D]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def _apply_linear(p, name, x2d, lora, use_pallas, scale):
+    """Apply one (possibly LoRA-adapted) linear on [tokens, in] activations."""
+    w = p[name]
+    if lora:
+        a, b = p[f"{name}.a"], p[f"{name}.b"]
+        if use_pallas:
+            return K.lora_linear(x2d, w, a, b, scale)
+        return R.ref_lora_linear(x2d, w, a, b, scale)
+    if use_pallas:
+        return K.linear(x2d, w)
+    return R.ref_linear(x2d, w)
+
+
+def forward(cfg: ModelConfig, p: dict, tokens, *, lora: bool,
+            use_pallas: bool = True):
+    """Hidden states [B, T, H] for int32 tokens [B, T]."""
+    Bsz, T = tokens.shape
+    h, nh, hd = cfg.hidden, cfg.heads, cfg.head_dim
+    scale = cfg.lora_scale
+    x = jnp.take(p["embed"], tokens, axis=0)          # [B, T, H]
+    positions = jnp.arange(T)
+    causal = jnp.tril(jnp.ones((T, T), dtype=bool))
+
+    def lin(name, t3d, out_dim):
+        y = _apply_linear(p, name, t3d.reshape(Bsz * T, -1), lora,
+                          use_pallas, scale)
+        return y.reshape(Bsz, T, out_dim)
+
+    for i in range(cfg.layers):
+        # --- attention block ---
+        xn = _rms_norm(x, p[f"l{i}.attn_norm"])
+        q = lin(f"l{i}.wq", xn, h).reshape(Bsz, T, nh, hd)
+        k = lin(f"l{i}.wk", xn, h).reshape(Bsz, T, nh, hd)
+        v = lin(f"l{i}.wv", xn, h).reshape(Bsz, T, nh, hd)
+        q = _rope(q.transpose(0, 2, 1, 3), positions)  # [B, nh, T, hd]
+        k = _rope(k.transpose(0, 2, 1, 3), positions)
+        v = v.transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(Bsz, T, h)
+        x = x + lin(f"l{i}.wo", o, h)
+        # --- MLP block (SwiGLU) ---
+        xn = _rms_norm(x, p[f"l{i}.mlp_norm"])
+        gate = lin(f"l{i}.w_gate", xn, cfg.ff)
+        up = lin(f"l{i}.w_up", xn, cfg.ff)
+        act = jax.nn.silu(gate) * up
+        x = x + lin(f"l{i}.w_down", act, h)
+    return _rms_norm(x, p["final_norm"])
+
+
+def lm_loss(cfg: ModelConfig, p: dict, tokens, *, lora: bool,
+            use_pallas: bool = True):
+    """Mean next-token cross-entropy.  tokens: int32 [B, seq+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    hdn = forward(cfg, p, inp, lora=lora, use_pallas=use_pallas)
+    Bsz, T, H = hdn.shape
+    flat = hdn.reshape(Bsz * T, H)
+    if use_pallas:
+        logits = K.linear(flat, p["lm_head"])
+    else:
+        logits = R.ref_linear(flat, p["lm_head"])
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt.reshape(-1, 1), axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def cls_logits(cfg: ModelConfig, p: dict, tokens, *, lora: bool,
+               use_pallas: bool = True):
+    """Classification logits from the last-token hidden state."""
+    hdn = forward(cfg, p, tokens, lora=lora, use_pallas=use_pallas)
+    pooled = hdn[:, -1, :]                             # causal → last token
+    if use_pallas:
+        return K.linear(pooled, p["cls_head"])
+    return R.ref_linear(pooled, p["cls_head"])
+
+
+def cls_loss(cfg, p, tokens, labels, *, lora: bool, use_pallas: bool = True):
+    logits = cls_logits(cfg, p, tokens, lora=lora, use_pallas=use_pallas)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels.reshape(-1, 1), axis=-1)[:, 0]
+    return jnp.mean(lse - gold), logits
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: flat-argument functions with a stable signature.
+# Argument order = param_spec order, then data arrays.  The returned tuple is
+# (loss, grad_0, grad_1, ...) with grads in trainable-spec order — exactly
+# what manifest.json tells the Rust side to expect.
+# ---------------------------------------------------------------------------
+
+def _split_args(spec, args):
+    names = [pi.name for pi in spec]
+    params = dict(zip(names, args[:len(names)]))
+    rest = args[len(names):]
+    return params, rest
+
+
+def _grads_fn(spec, loss_of_params, params):
+    names = [pi.name for pi in spec]
+    t_idx = [i for i, pi in enumerate(spec) if pi.trainable]
+
+    def f(tr):
+        p2 = dict(params)
+        for j, i in enumerate(t_idx):
+            p2[names[i]] = tr[j]
+        return loss_of_params(p2)
+
+    tr0 = tuple(params[names[i]] for i in t_idx)
+    return jax.value_and_grad(f)(tr0)
+
+
+def make_fwdbwd(cfg: ModelConfig, lora: bool, use_pallas: bool = True):
+    spec, _ = param_spec(cfg, lora=lora)
+
+    def fwdbwd(*args):
+        params, (tokens,) = _split_args(spec, args)
+        loss, grads = _grads_fn(
+            spec,
+            lambda p: lm_loss(cfg, p, tokens, lora=lora,
+                              use_pallas=use_pallas),
+            params)
+        return (loss,) + tuple(grads)
+
+    return fwdbwd, spec
+
+
+def make_eval(cfg: ModelConfig, lora: bool, use_pallas: bool = True):
+    spec, _ = param_spec(cfg, lora=lora)
+
+    def evaluate(*args):
+        params, (tokens,) = _split_args(spec, args)
+        return (lm_loss(cfg, params, tokens, lora=lora,
+                        use_pallas=use_pallas),)
+
+    return evaluate, spec
+
+
+def make_cls_fwdbwd(cfg: ModelConfig, lora: bool, use_pallas: bool = True):
+    spec, _ = param_spec(cfg, lora=lora, cls=True)
+
+    def fwdbwd(*args):
+        params, (tokens, labels) = _split_args(spec, args)
+        loss, grads = _grads_fn(
+            spec,
+            lambda p: cls_loss(cfg, p, tokens, labels, lora=lora,
+                               use_pallas=use_pallas)[0],
+            params)
+        return (loss,) + tuple(grads)
+
+    return fwdbwd, spec
+
+
+def make_cls_eval(cfg: ModelConfig, lora: bool, use_pallas: bool = True):
+    spec, _ = param_spec(cfg, lora=lora, cls=True)
+
+    def evaluate(*args):
+        params, (tokens, labels) = _split_args(spec, args)
+        loss, logits = cls_loss(cfg, params, tokens, labels, lora=lora,
+                                use_pallas=use_pallas)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+        return (loss, correct)
+
+    return evaluate, spec
+
+
+# ---------------------------------------------------------------------------
+# Initialization (paper Section 2.2 Eq. (3) / Appendix A Eq. (18)).
+# The Rust coordinator owns real training init; this Python version exists
+# for tests (kernel-free grad checks, init-law verification) and must match
+# the Rust implementation in distribution.
+# ---------------------------------------------------------------------------
+
+def switchlora_stds(m: int, n: int, r: int, gain: float = 1.0):
+    """(std_B, std_A) from paper Eq. (3): B is [m, r], A is [r, n]."""
+    std_b = (r / (m * n) ** 0.5) ** 0.25 * gain ** 0.5
+    std_a = ((m * r) ** 0.5 / (n * n ** 0.5)) ** 0.25 * gain ** 0.5
+    return std_b, std_a
+
+
+def init_params(cfg: ModelConfig, key, lora: bool, cls: bool = False,
+                init: str = "switchlora", base_std: float = 0.02):
+    """Random parameters for tests.  init in {switchlora, lora_default}."""
+    spec, _ = param_spec(cfg, lora=lora, cls=cls)
+    lin_dims = {name: (m, n) for name, m, n in _linears(cfg)}
+    params = {}
+    for pi in spec:
+        key, sub = jax.random.split(key)
+        if pi.role == "norm":
+            params[pi.name] = jnp.ones(pi.shape, jnp.float32)
+        elif pi.role in ("embed", "head", "cls_head", "base"):
+            params[pi.name] = base_std * jax.random.normal(
+                sub, pi.shape, jnp.float32)
+        elif pi.role == "lora_a":
+            base = pi.name[:-2]
+            m, n = lin_dims[base]
+            if init == "switchlora":
+                _, std_a = switchlora_stds(m, n, cfg.rank)
+                lim = (3.0 ** 0.5) * std_a     # uniform with that std
+                params[pi.name] = jax.random.uniform(
+                    sub, pi.shape, jnp.float32, -lim, lim)
+            else:  # LoRA default: Kaiming-uniform on A
+                lim = (6.0 / n) ** 0.5
+                params[pi.name] = jax.random.uniform(
+                    sub, pi.shape, jnp.float32, -lim, lim)
+        elif pi.role == "lora_b":
+            base = pi.name[:-2]
+            m, n = lin_dims[base]
+            if init == "switchlora":
+                std_b, _ = switchlora_stds(m, n, cfg.rank)
+                lim = (3.0 ** 0.5) * std_b
+                params[pi.name] = jax.random.uniform(
+                    sub, pi.shape, jnp.float32, -lim, lim)
+            else:  # LoRA default: B = 0
+                params[pi.name] = jnp.zeros(pi.shape, jnp.float32)
+        else:
+            raise ValueError(pi.role)
+    return params

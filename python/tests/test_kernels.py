@@ -1,0 +1,232 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the tiling block target) and asserts
+``assert_allclose`` against ``kernels/ref.py`` — the core correctness signal
+for the compute hot path.
+"""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lora_matmul as K
+from compile.kernels import adam as AK
+from compile.kernels import ref as R
+
+DIMS = st.sampled_from([1, 2, 3, 4, 8, 16, 24, 32, 64, 96, 128])
+BLOCKS = st.sampled_from([0, 8, 16, 32, 128])
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# pick_block
+# ---------------------------------------------------------------------------
+
+@given(dim=st.integers(1, 4096), target=st.integers(-4, 4096))
+@settings(max_examples=200, deadline=None)
+def test_pick_block_invariants(dim, target):
+    b = K.pick_block(dim, target)
+    assert 1 <= b <= dim
+    assert dim % b == 0
+    if target > 0:
+        assert b <= max(target, 1) or b == 1 or dim % min(target, dim) != 0
+    if target <= 0 or target >= dim:
+        assert b == dim
+
+
+def test_pick_block_power_of_two():
+    assert K.pick_block(256, 128) == 128
+    assert K.pick_block(64, 128) == 64
+    assert K.pick_block(96, 128) == 96
+    assert K.pick_block(96, 64) == 48
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@given(m=DIMS, k=DIMS, n=DIMS, block=BLOCKS)
+@settings(max_examples=30, deadline=None)
+def test_matmul_matches_ref(m, k, n, block):
+    x, w = rand(m * 1000 + k, m, k), rand(n * 1000 + k, k, n)
+    got = K.matmul(x, w, block=block)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(R.ref_matmul(x, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_matmul_tiled_equals_whole():
+    x, w = rand(1, 64, 32), rand(2, 32, 64)
+    a = K.matmul(x, w, block=0)
+    b = K.matmul(x, w, block=16)
+    # f32 reduction order differs between tilings; bitwise equality is not
+    # expected, only float32-level agreement.
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear fwd + bwd
+# ---------------------------------------------------------------------------
+
+@given(m=DIMS, inp=DIMS, out=DIMS)
+@settings(max_examples=20, deadline=None)
+def test_linear_fwd_bwd(m, inp, out):
+    x, w = rand(3, m, inp), rand(4, out, inp)
+
+    def f_pl(x, w):
+        return (K.linear(x, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (R.ref_linear(x, w) ** 2).sum()
+
+    lp, gp = jax.value_and_grad(f_pl, argnums=(0, 1))(x, w)
+    lr, gr = jax.value_and_grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(float(lp), float(lr), rtol=1e-4)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# lora_linear fwd + bwd
+# ---------------------------------------------------------------------------
+
+@given(m=DIMS, inp=DIMS, out=DIMS, r=st.sampled_from([1, 2, 4, 8, 16]),
+       scale=st.sampled_from([0.25, 1.0, 2.0]))
+@settings(max_examples=20, deadline=None)
+def test_lora_linear_fwd(m, inp, out, r, scale):
+    x = rand(5, m, inp)
+    w, a, b = rand(6, out, inp), rand(7, r, inp), rand(8, out, r)
+    got = K.lora_linear(x, w, a, b, scale)
+    want = R.ref_lora_linear(x, w, a, b, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(m=st.sampled_from([2, 8, 32]), inp=st.sampled_from([8, 32]),
+       out=st.sampled_from([8, 48]), r=st.sampled_from([2, 8]))
+@settings(max_examples=15, deadline=None)
+def test_lora_linear_grads(m, inp, out, r):
+    x = rand(9, m, inp)
+    w, a, b = rand(10, out, inp), rand(11, r, inp), rand(12, out, r)
+    t = rand(13, m, out)
+
+    def f_pl(x, w, a, b):
+        return ((K.lora_linear(x, w, a, b, 1.0) - t) ** 2).mean()
+
+    def f_ref(x, w, a, b):
+        return ((R.ref_lora_linear(x, w, a, b, 1.0) - t) ** 2).mean()
+
+    gp = jax.grad(f_pl, argnums=(0, 1, 2, 3))(x, w, a, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, w, a, b)
+    for got, want in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_lora_linear_zero_b_is_base_linear():
+    """With B=0 the adapter contributes nothing (LoRA-default init)."""
+    x, w = rand(14, 8, 16), rand(15, 12, 16)
+    a, b = rand(16, 4, 16), jnp.zeros((12, 4), jnp.float32)
+    got = K.lora_linear(x, w, a, b, 1.0)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(R.ref_linear(x, w)), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_lora_rank_additivity():
+    """BA = sum of rank-1 outer products (paper Eq. (1))."""
+    x = rand(17, 4, 8)
+    w = jnp.zeros((6, 8), jnp.float32)
+    a, b = rand(18, 3, 8), rand(19, 6, 3)
+    full = K.lora_linear(x, w, a, b, 1.0)
+    acc = jnp.zeros_like(full)
+    for k in range(3):
+        acc += K.lora_linear(x, w, a[k:k + 1], b[:, k:k + 1], 1.0)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(full), rtol=1e-4,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused Adam kernel
+# ---------------------------------------------------------------------------
+
+HYPER = st.tuples(st.sampled_from([1e-3, 1e-2]), st.just(0.9),
+                  st.just(0.999), st.just(1e-8), st.sampled_from([0.0, 0.1]))
+
+
+@given(nblocks=st.integers(1, 3), hyper=HYPER, seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_adam_matches_ref(nblocks, hyper, seed):
+    n = nblocks * AK.BLOCK
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    p = jax.random.normal(ks[0], (n,))
+    g = jax.random.normal(ks[1], (n,))
+    m = jax.random.normal(ks[2], (n,)) * 0.01
+    v = jax.random.uniform(ks[3], (n,)) * 0.01
+    s = jnp.floor(jax.random.uniform(ks[4], (n,)) * 10) + 1
+    mask = (jax.random.uniform(ks[5], (n,)) > 0.3).astype(jnp.float32)
+    h = jnp.asarray(hyper, jnp.float32)
+    got = AK.adam_step(p, g, m, v, s, mask, h)
+    want = R.ref_adam_step(p, g, m, v, s, mask, hyper)
+    for gg, ww in zip(got, want):
+        np.testing.assert_allclose(np.asarray(gg), np.asarray(ww),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_adam_frozen_elements_inert():
+    """mask=0 lanes keep p, m, v, s bit-identical (the freeze contract)."""
+    n = AK.BLOCK
+    p = jnp.arange(n, dtype=jnp.float32)
+    g = jnp.ones((n,))
+    m = jnp.full((n,), 0.5)
+    v = jnp.full((n,), 0.25)
+    s = jnp.ones((n,))
+    mask = jnp.zeros((n,))
+    h = jnp.asarray([1e-2, 0.9, 0.999, 1e-8, 0.1], jnp.float32)
+    p2, m2, v2, s2 = AK.adam_step(p, g, m, v, s, mask, h)
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(m2), np.asarray(m))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v))
+    np.testing.assert_array_equal(np.asarray(s2), np.asarray(s))
+
+
+def test_adam_first_step_bias_correction():
+    """From zero state with step 0, first update == -lr * sign-ish(g)."""
+    n = AK.BLOCK
+    g = jnp.full((n,), 2.0)
+    zeros = jnp.zeros((n,))
+    ones = jnp.ones((n,))
+    h = jnp.asarray([1e-2, 0.9, 0.999, 1e-8, 0.0], jnp.float32)
+    p2, m2, v2, s2 = AK.adam_step(zeros, g, zeros, zeros, zeros, ones, h)
+    # mhat = g, vhat = g^2 -> update = lr * g/|g| = lr
+    np.testing.assert_allclose(np.asarray(p2), -1e-2 * np.ones(n), rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(s2), np.ones(n))
+
+
+def test_adam_reset_plus_frozen_lane_stays_finite():
+    """Regression: a freshly reset (s=0, m=v=0) AND frozen (mask=0) lane —
+    exactly what the switch op produces — must not go NaN via 0/0 bias
+    correction multiplied by mask 0 (0·NaN = NaN)."""
+    n = AK.BLOCK
+    zeros = jnp.zeros((n,))
+    mask = jnp.zeros((n,))
+    h = jnp.asarray([1e-2, 0.9, 0.999, 1e-8, 0.0], jnp.float32)
+    p = jnp.full((n,), 3.0)
+    p2, m2, v2, s2 = AK.adam_step(p, jnp.ones((n,)), zeros, zeros, zeros,
+                                  mask, h)
+    assert np.all(np.isfinite(np.asarray(p2)))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(s2), np.zeros(n))
+
+
+def test_padded_size():
+    assert AK.padded_size(1) == AK.BLOCK
+    assert AK.padded_size(AK.BLOCK) == AK.BLOCK
+    assert AK.padded_size(AK.BLOCK + 1) == 2 * AK.BLOCK

@@ -1,0 +1,102 @@
+"""Manifest integrity: the Python↔Rust contract emitted by aot.py.
+
+These tests run against the artifacts/ directory if it exists (built by
+``make artifacts``); they are skipped otherwise so `pytest` stays green on a
+fresh checkout.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import configs as C
+from compile import model as M
+from compile import aot
+from compile.kernels import adam as AK
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _manifests():
+    if not os.path.isdir(ART):
+        return []
+    out = []
+    for d in sorted(os.listdir(ART)):
+        mp = os.path.join(ART, d, "manifest.json")
+        if os.path.exists(mp):
+            out.append(mp)
+    return out
+
+
+MANIFESTS = _manifests()
+pytestmark = pytest.mark.skipif(not MANIFESTS,
+                                reason="artifacts/ not built")
+
+
+@pytest.mark.parametrize("mp", MANIFESTS, ids=lambda p: p.split(os.sep)[-2])
+def test_manifest_matches_spec(mp):
+    with open(mp) as f:
+        man = json.load(f)
+    c = man["config"]
+    cfg = C.ModelConfig(
+        name=c["name"], vocab=c["vocab"], hidden=c["hidden"],
+        layers=c["layers"], heads=c["heads"], ff=c["ff"], seq=c["seq"],
+        rank=c["rank"], lora_alpha=c["lora_alpha"], batch=c["batch"],
+        n_cls=c["n_cls"])
+    for lora, key in ((True, "params_lora"), (False, "params_full")):
+        spec, _ = M.param_spec(cfg, lora=lora)
+        got = man[key]
+        assert len(got) == len(spec)
+        for gi, pi in zip(got, spec):
+            assert gi["name"] == pi.name
+            assert tuple(gi["shape"]) == pi.shape
+            assert gi["role"] == pi.role
+            assert gi["trainable"] == pi.trainable
+            assert gi["numel"] == pi.numel
+    # linears metadata drives the switch algorithm
+    _, linears = M.param_spec(cfg, lora=True)
+    assert len(man["linears"]) == len(linears)
+    for gl, li in zip(man["linears"], linears):
+        assert (gl["name"], gl["a"], gl["b"]) == (li.name, li.a, li.b)
+        assert (gl["m"], gl["n"]) == (li.out_dim, li.in_dim)
+
+
+@pytest.mark.parametrize("mp", MANIFESTS, ids=lambda p: p.split(os.sep)[-2])
+def test_manifest_counts_and_padding(mp):
+    with open(mp) as f:
+        man = json.load(f)
+    assert man["n_trainable_lora"] == sum(
+        p["numel"] for p in man["params_lora"] if p["trainable"])
+    assert man["n_trainable_full"] == sum(
+        p["numel"] for p in man["params_full"] if p["trainable"])
+    assert man["n_trainable_lora"] < man["n_trainable_full"]
+    for key, pad in (("n_trainable_lora", "adam_padded_lora"),
+                     ("n_trainable_full", "adam_padded_full")):
+        assert man[pad] == AK.padded_size(man[key])
+        assert man[pad] % AK.BLOCK == 0
+        # the shared adam artifact for this size must exist
+        assert os.path.exists(os.path.join(ART, f"adam_{man[pad]}.hlo.txt"))
+
+
+@pytest.mark.parametrize("mp", MANIFESTS, ids=lambda p: p.split(os.sep)[-2])
+def test_hlo_artifacts_exist_and_parse_header(mp):
+    with open(mp) as f:
+        man = json.load(f)
+    d = os.path.dirname(mp)
+    for v in man["variants"]:
+        path = os.path.join(d, f"{v}.hlo.txt")
+        assert os.path.exists(path), path
+        with open(path) as f:
+            head = f.read(200)
+        assert head.startswith("HloModule"), f"{path} is not HLO text"
+
+
+def test_parse_spec_overrides():
+    name, cfg, over = aot.parse_spec("s4m:rank=8")
+    assert over and name == "s4m_r8" and cfg.rank == 8
+    assert cfg.lora_alpha == 8.0
+    name, cfg, over = aot.parse_spec("tiny")
+    assert not over and name == "tiny"
+    name, cfg, over = aot.parse_spec("s4m:seq=128")
+    assert name == "s4m_s128" and cfg.seq == 128

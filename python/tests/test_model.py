@@ -1,0 +1,166 @@
+"""L2 model correctness: shapes, pallas-vs-ref equivalence, loss semantics."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import configs as C
+from compile import model as M
+
+CFG = C.get("tiny")
+
+
+@pytest.fixture(scope="module")
+def lora_setup():
+    p = M.init_params(CFG, jax.random.PRNGKey(0), lora=True)
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (2, CFG.seq + 1), 0, CFG.vocab)
+    return p, tokens
+
+
+@pytest.fixture(scope="module")
+def full_setup():
+    p = M.init_params(CFG, jax.random.PRNGKey(0), lora=False)
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (2, CFG.seq + 1), 0, CFG.vocab)
+    return p, tokens
+
+
+# ---------------------------------------------------------------------------
+# param_spec
+# ---------------------------------------------------------------------------
+
+def test_param_spec_lora_structure():
+    spec, linears = M.param_spec(CFG, lora=True)
+    names = [pi.name for pi in spec]
+    assert names[0] == "embed" and names[-1] == "lm_head"
+    assert len(set(names)) == len(names), "duplicate param names"
+    # 7 LoRA-adapted linears per layer
+    assert len(linears) == 7 * CFG.layers
+    for li in linears:
+        byname = {pi.name: pi for pi in spec}
+        assert byname[li.name].shape == (li.out_dim, li.in_dim)
+        assert byname[li.a].shape == (CFG.rank, li.in_dim)
+        assert byname[li.b].shape == (li.out_dim, CFG.rank)
+        assert not byname[li.name].trainable
+        assert byname[li.a].trainable and byname[li.b].trainable
+
+
+def test_param_spec_full_has_no_lora():
+    spec, linears = M.param_spec(CFG, lora=False)
+    assert linears == []
+    assert all(pi.trainable for pi in spec)
+    assert all(pi.role not in ("lora_a", "lora_b") for pi in spec)
+
+
+def test_param_spec_cls_swaps_head():
+    spec, _ = M.param_spec(CFG, lora=False, cls=True)
+    names = [pi.name for pi in spec]
+    assert "cls_head" in names and "lm_head" not in names
+    byname = {pi.name: pi for pi in spec}
+    assert byname["cls_head"].shape == (CFG.n_cls, CFG.hidden)
+
+
+def test_trainable_counts_lora_less_than_full():
+    lora_spec, _ = M.param_spec(CFG, lora=True)
+    full_spec, _ = M.param_spec(CFG, lora=False)
+    n_lora = sum(p.numel for p in lora_spec if p.trainable)
+    n_full = sum(p.numel for p in full_spec if p.trainable)
+    assert n_lora < n_full
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def test_forward_shape(lora_setup):
+    p, tokens = lora_setup
+    h = M.forward(CFG, p, tokens[:, :-1], lora=True)
+    assert h.shape == (2, CFG.seq, CFG.hidden)
+
+
+def test_initial_loss_near_uniform(full_setup):
+    """Random init ⇒ loss ≈ ln(vocab)."""
+    p, tokens = full_setup
+    loss = M.lm_loss(CFG, p, tokens, lora=False)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_pallas_matches_ref_full_model(lora_setup):
+    """Entire fwd+bwd through Pallas kernels == pure-jnp reference."""
+    p, tokens = lora_setup
+    fn, spec = M.make_fwdbwd(CFG, lora=True, use_pallas=True)
+    fn_ref, _ = M.make_fwdbwd(CFG, lora=True, use_pallas=False)
+    args = [p[pi.name] for pi in spec] + [tokens]
+    out = jax.jit(fn)(*args)
+    out_ref = jax.jit(fn_ref)(*args)
+    assert len(out) == 1 + sum(pi.trainable for pi in spec)
+    for a, b in zip(out, out_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=3e-4, atol=3e-5)
+
+
+def test_causality(lora_setup):
+    """Changing a future token must not change past hidden states."""
+    p, tokens = lora_setup
+    t1 = tokens[:, :-1]
+    t2 = t1.at[:, -1].set((t1[:, -1] + 1) % CFG.vocab)
+    h1 = M.forward(CFG, p, t1, lora=True)
+    h2 = M.forward(CFG, p, t2, lora=True)
+    np.testing.assert_allclose(np.asarray(h1[:, :-1]),
+                               np.asarray(h2[:, :-1]), rtol=1e-5, atol=1e-6)
+    assert not np.allclose(np.asarray(h1[:, -1]), np.asarray(h2[:, -1]))
+
+
+def test_frozen_base_receives_no_grad(lora_setup):
+    """fwdbwd in LoRA mode returns grads only for trainable params."""
+    p, tokens = lora_setup
+    fn, spec = M.make_fwdbwd(CFG, lora=True)
+    args = [p[pi.name] for pi in spec] + [tokens]
+    out = jax.jit(fn)(*args)
+    t_spec = [pi for pi in spec if pi.trainable]
+    assert len(out) == 1 + len(t_spec)
+    for g, pi in zip(out[1:], t_spec):
+        assert g.shape == pi.shape
+
+
+def test_lora_merge_equivalence(lora_setup):
+    """Merging W ← W + s·BA and zeroing the adapter preserves outputs —
+    the invariant behind both the switch op (Alg. 1) and checkpoint merging."""
+    p, tokens = lora_setup
+    _, linears = M.param_spec(CFG, lora=True)
+    merged = dict(p)
+    for li in linears:
+        merged[li.name] = p[li.name] + CFG.lora_scale * (p[li.b] @ p[li.a])
+        merged[li.b] = jnp.zeros_like(p[li.b])
+    l1 = M.lm_loss(CFG, p, tokens, lora=True)
+    l2 = M.lm_loss(CFG, merged, tokens, lora=True)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+
+
+def test_cls_outputs(lora_setup):
+    p = M.init_params(CFG, jax.random.PRNGKey(2), lora=False, cls=True)
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (4, CFG.seq), 0,
+                                CFG.vocab)
+    labels = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    fn, spec = M.make_cls_eval(CFG, lora=False)
+    args = [p[pi.name] for pi in spec] + [tokens, labels]
+    loss, correct = jax.jit(fn)(*args)
+    assert 0 <= float(correct) <= 4
+    assert abs(float(loss) - np.log(CFG.n_cls)) < 1.0
+
+
+def test_grad_direction_decreases_loss(full_setup):
+    """One SGD step along -grad lowers the loss (sanity of the bwd pass)."""
+    p, tokens = full_setup
+    fn, spec = M.make_fwdbwd(CFG, lora=False)
+    args = [p[pi.name] for pi in spec] + [tokens]
+    out = jax.jit(fn)(*args)
+    loss0 = float(out[0])
+    lr = 0.1
+    newp = dict(p)
+    for g, pi in zip(out[1:], spec):
+        newp[pi.name] = p[pi.name] - lr * g
+    loss1 = float(M.lm_loss(CFG, newp, tokens, lora=False))
+    assert loss1 < loss0

@@ -1,0 +1,142 @@
+//! Micro-benchmarks of the coordinator hot paths (`harness = false`):
+//! switch op, freeze-mask application, ring all-reduce, host vs fused-HLO
+//! Adam, SVD (the GaLore per-refresh cost), and literal marshaling.
+//!
+//! These are the L3 profile the §Perf iteration worked from; see
+//! EXPERIMENTS.md §Perf for the before/after log.
+
+use switchlora::bench::{bench, bench_budget};
+use switchlora::coordinator::data_parallel::{ring_all_reduce, CommLedger};
+use switchlora::coordinator::trainer::default_artifacts_dir;
+use switchlora::model::init::{init_store, InitMode};
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::optim::adam::{host_step, AdamState};
+use switchlora::optim::AdamHyper;
+use switchlora::runtime::{Engine, ModelRuntime};
+use switchlora::switchlora::schedule::SwitchSchedule;
+use switchlora::switchlora::switcher::SwitchLora;
+use switchlora::tensor::linalg::svd;
+use switchlora::tensor::Tensor;
+use switchlora::util::rng::Rng;
+
+fn bench_switch_op() {
+    println!("\n-- switch op (Algorithm 1) --");
+    let dir = default_artifacts_dir().join("s1m");
+    let Ok(man) = Manifest::load(&dir) else {
+        println!("(s1m artifacts missing)");
+        return;
+    };
+    let layout = std::sync::Arc::new(man.lora.clone());
+    let mut store = ParamStore::zeros(layout.clone());
+    let mut rng = Rng::new(0);
+    init_store(&mut store, &man.linears, man.config.rank,
+               InitMode::SwitchLora, &mut rng);
+    let mut opt = AdamState::new(layout.n_trainable, layout.n_trainable);
+    // initial-frequency schedule: every step switches r/40 vectors/matrix
+    let mut sl = SwitchLora::new(&man.linears, man.config.rank, 1.0,
+                                 SwitchSchedule::new(40.0, 0.0), 5, 1);
+    let mut step = 0u64;
+    let r = bench("apply_step (s1m, initial freq)", 3, 50, || {
+        sl.apply_step(step, &mut store, &mut opt, &man.linears);
+        step += 1;
+    });
+    println!("{}", r.row());
+    println!("   switches so far: {} (≈{:.2}/step/matrix at interval 40)",
+             sl.total_switches,
+             sl.total_switches as f64 / (step as f64 * 2.0
+                 * man.linears.len() as f64));
+}
+
+fn bench_ring() {
+    println!("\n-- ring all-reduce --");
+    for (w, n) in [(4usize, 1 << 16), (4, 1 << 20), (8, 1 << 20)] {
+        let mut rng = Rng::new(3);
+        let grads0: Vec<Vec<f32>> = (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut ledger = CommLedger::default();
+        let mut grads = grads0.clone();
+        let r = bench(&format!("ring w={w} n={n}"), 1, 10, || {
+            grads.clone_from(&grads0);
+            ring_all_reduce(&mut grads, &mut ledger);
+        });
+        let gbps = (ledger.bytes_per_round() / 1e9)
+            / (r.mean_ms / 1e3);
+        println!("{}   ({gbps:.2} GB/s effective)", r.row());
+    }
+}
+
+fn bench_adam(engine: &mut Engine) {
+    println!("\n-- AdamW: host vs fused HLO kernel --");
+    let dir = default_artifacts_dir().join("s1m");
+    let Ok(man) = Manifest::load(&dir) else { return };
+    let Ok(rt) = ModelRuntime::load(engine, man, Variant::Lora) else {
+        return;
+    };
+    let n = rt.padded;
+    let mut rng = Rng::new(5);
+    let mut p: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mask = vec![1.0f32; n];
+    let h = AdamHyper::new(1e-2);
+    let mut st = AdamState::new(n, n);
+    let r1 = bench(&format!("host adam n={n}"), 2, 30, || {
+        host_step(&mut p, &g, &mut st, &mask, &h);
+    });
+    println!("{}", r1.row());
+    let mut st2 = AdamState::new(n, n);
+    let mut p2 = p.clone();
+    let r2 = bench(&format!("fused HLO adam n={n}"), 2, 30, || {
+        rt.adam_step(&mut p2, &g, &mut st2, &mask, &h).unwrap();
+    });
+    println!("{}", r2.row());
+}
+
+fn bench_svd() {
+    println!("\n-- SVD (GaLore projection refresh cost) --");
+    for n in [64usize, 128, 256] {
+        let mut rng = Rng::new(7);
+        let a = Tensor::randn(n, n, 1.0, &mut rng);
+        let r = bench_budget(&format!("jacobi svd {n}x{n}"), 1000.0, || {
+            std::hint::black_box(svd(&a));
+        });
+        println!("{}", r.row());
+    }
+}
+
+fn bench_exec(engine: &mut Engine) {
+    println!("\n-- executable latency per config --");
+    for spec in ["tiny", "s1m", "s4m", "s8m"] {
+        let dir = default_artifacts_dir().join(spec);
+        let Ok(man) = Manifest::load(&dir) else { continue };
+        let layout = std::sync::Arc::new(man.lora.clone());
+        let mut store = ParamStore::zeros(layout);
+        let mut rng = Rng::new(0);
+        init_store(&mut store, &man.linears, man.config.rank,
+                   InitMode::SwitchLora, &mut rng);
+        let Ok(rt) = ModelRuntime::load(engine, man.clone(), Variant::Lora)
+        else { continue };
+        let mc = man.config.clone();
+        let mut it = switchlora::data::dataset::synth_batches(
+            mc.vocab, 1, 0, mc.batch, mc.seq);
+        let b = it.next_batch();
+        let r = bench_budget(&format!(
+            "lora_fwdbwd {spec} (bs{} seq{})", mc.batch, mc.seq), 2500.0,
+            || {
+                rt.fwdbwd(&store, &b.tokens, b.batch, b.seq_plus_1)
+                    .unwrap();
+            });
+        println!("{}", r.row());
+    }
+}
+
+fn main() {
+    switchlora::util::logging::init();
+    let mut engine = Engine::cpu().expect("PJRT");
+    bench_switch_op();
+    bench_ring();
+    bench_adam(&mut engine);
+    bench_svd();
+    bench_exec(&mut engine);
+    println!("\nbench_micro complete");
+}

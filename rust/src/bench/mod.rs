@@ -1,0 +1,89 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use `harness = false` binaries built on this:
+//! warm-up, repeated timed runs, mean/p50/p95 + throughput reporting.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>7} it  mean {:>9.3} ms  p50 {:>9.3} ms  \
+             p95 {:>9.3} ms  min {:>9.3} ms",
+            self.name, self.iters, self.mean_ms, self.p50_ms, self.p95_ms,
+            self.min_ms
+        )
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
+    -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |p: f64| samples[(p * (samples.len() - 1) as f64) as usize];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ms: mean,
+        p50_ms: pct(0.50),
+        p95_ms: pct(0.95),
+        min_ms: samples[0],
+    }
+}
+
+/// Adaptive variant: time-boxed to roughly `budget_ms` of measurement.
+pub fn bench_budget<F: FnMut()>(name: &str, budget_ms: f64, mut f: F)
+    -> BenchResult {
+    // one probe run decides the iteration count
+    let t = Instant::now();
+    f();
+    let probe = t.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / probe.max(1e-3)) as usize).clamp(3, 10_000);
+    bench(name, 1.min(iters), iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let r = bench("sleep", 1, 8, || {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        });
+        assert_eq!(r.iters, 8);
+        assert!(r.mean_ms >= 1.0);
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p95_ms);
+        assert!(r.row().contains("sleep"));
+    }
+
+    #[test]
+    fn budget_runs_at_least_three() {
+        let mut count = 0;
+        let r = bench_budget("counter", 5.0, || {
+            count += 1;
+        });
+        assert!(r.iters >= 3);
+        assert!(count >= r.iters);
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal CLI argument substrate (clap is not in the offline vendor set):
+//! `--key value` options, `--flag` booleans, positional subcommands.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.  A token `--k` followed by a non-`--` token is an
+    /// option; a `--k` followed by another `--` token (or end) is a flag.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = argv.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(),
+                                       toks[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(t.clone());
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing required --{key}"))
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T)
+        -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn subcommand(&self) -> Result<&str> {
+        self.positional
+            .first()
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing subcommand"))
+    }
+}
+
+/// Parse a comma-separated list.
+pub fn csv_list(s: &str) -> Vec<String> {
+    s.split(',')
+        .map(|x| x.trim().to_string())
+        .filter(|x| !x.is_empty())
+        .collect()
+}
+
+/// Validate a spec name exists under the artifacts dir.
+pub fn check_spec(artifacts: &std::path::Path, spec: &str) -> Result<()> {
+    let p = artifacts.join(spec).join("manifest.json");
+    if !p.exists() {
+        bail!("spec {spec:?} not found ({} missing) — run `make artifacts`",
+              p.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn options_flags_positionals() {
+        let a = parse("pretrain --spec s1m --steps 100 --verbose \
+                       --lr 0.02 extra");
+        assert_eq!(a.subcommand().unwrap(), "pretrain");
+        assert_eq!(a.get("spec"), Some("s1m"));
+        assert_eq!(a.parse_num::<u64>("steps", 0).unwrap(), 100);
+        assert_eq!(a.parse_num::<f32>("lr", 0.0).unwrap(), 0.02);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pretrain", "extra"]);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("x");
+        assert_eq!(a.get_or("spec", "tiny"), "tiny");
+        assert!(a.req("spec").is_err());
+        assert_eq!(a.parse_num::<u64>("steps", 7).unwrap(), 7);
+        let b = parse("x --steps banana");
+        assert!(b.parse_num::<u64>("steps", 0).is_err());
+    }
+
+    #[test]
+    fn csv_parsing() {
+        assert_eq!(csv_list("a, b,,c"), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Checkpoints: binary save/load of a `ParamStore` (+ optional optimizer
+//! state), keyed by parameter name so stores with different layouts (e.g.
+//! LoRA pre-train → merged full fine-tune) can exchange weights.
+//!
+//! Format (little-endian):
+//!   magic "SWLORA1\0" | config-name len+bytes | n_params
+//!   then per param: name len+bytes | numel u64 | f32 data
+//!   then opt flag u8; if 1: n u64 | m | v | s  (f32 arrays of length n)
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::layout::ParamStore;
+use crate::optim::adam::AdamState;
+
+const MAGIC: &[u8; 8] = b"SWLORA1\0";
+
+fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())?;
+    Ok(())
+}
+
+fn read_str(r: &mut impl Read) -> Result<String> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
+    r.read_exact(&mut buf)?;
+    String::from_utf8(buf).context("non-utf8 string in checkpoint")
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    // bulk copy via bytemuck-free manual chunking
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len = [0u8; 8];
+    r.read_exact(&mut len)?;
+    let n = u64::from_le_bytes(len) as usize;
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub fn save(path: &Path, config_name: &str, store: &ParamStore,
+            opt: Option<&AdamState>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    write_str(&mut w, config_name)?;
+    w.write_all(&(store.layout.params.len() as u64).to_le_bytes())?;
+    for p in &store.layout.params {
+        write_str(&mut w, &p.name)?;
+        write_f32s(&mut w, &store.data[p.offset..p.offset + p.numel])?;
+    }
+    match opt {
+        Some(o) => {
+            w.write_all(&[1u8])?;
+            write_f32s(&mut w, &o.m)?;
+            write_f32s(&mut w, &o.v)?;
+            write_f32s(&mut w, &o.s)?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Checkpoint contents, layout-agnostic.
+pub struct Checkpoint {
+    pub config_name: String,
+    pub params: Vec<(String, Vec<f32>)>,
+    pub opt: Option<AdamState>,
+}
+
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a switchlora checkpoint", path.display());
+    }
+    let config_name = read_str(&mut r)?;
+    let mut nbuf = [0u8; 8];
+    r.read_exact(&mut nbuf)?;
+    let n = u64::from_le_bytes(nbuf) as usize;
+    let mut params = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = read_str(&mut r)?;
+        let data = read_f32s(&mut r)?;
+        params.push((name, data));
+    }
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let opt = if flag[0] == 1 {
+        let m = read_f32s(&mut r)?;
+        let v = read_f32s(&mut r)?;
+        let s = read_f32s(&mut r)?;
+        Some(AdamState { m, v, s })
+    } else {
+        None
+    };
+    Ok(Checkpoint { config_name, params, opt })
+}
+
+impl Checkpoint {
+    /// Copy parameters into a store by name; returns (#loaded, #missing).
+    pub fn restore_into(&self, store: &mut ParamStore) -> (usize, usize) {
+        let mut loaded = 0;
+        let mut missing = 0;
+        for (name, data) in &self.params {
+            match store.layout.meta(name) {
+                Ok(meta) if meta.numel == data.len() => {
+                    let (off, n) = (meta.offset, meta.numel);
+                    store.data[off..off + n].copy_from_slice(data);
+                    loaded += 1;
+                }
+                _ => missing += 1,
+            }
+        }
+        (loaded, missing)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::{Layout, ParamMeta, Role};
+    use std::sync::Arc;
+
+    fn toy_store(fill: f32) -> ParamStore {
+        let layout = Layout::from_metas(vec![
+            ParamMeta { name: "w".into(), shape: vec![2, 3],
+                        role: Role::Base, trainable: true, numel: 6,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "n".into(), shape: vec![4], role: Role::Norm,
+                        trainable: true, numel: 4, offset: 0,
+                        t_offset: None },
+        ]);
+        let mut s = ParamStore::zeros(Arc::new(layout));
+        for (i, x) in s.data.iter_mut().enumerate() {
+            *x = fill + i as f32;
+        }
+        s
+    }
+
+    #[test]
+    fn save_load_roundtrip_with_opt() {
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt");
+        let path = dir.join("a.ckpt");
+        let store = toy_store(10.0);
+        let mut opt = AdamState::new(10, 16);
+        opt.m[3] = 0.5;
+        save(&path, "tiny", &store, Some(&opt)).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.config_name, "tiny");
+        assert_eq!(ck.params.len(), 2);
+        let o = ck.opt.as_ref().unwrap();
+        assert_eq!(o.m.len(), 16);
+        assert_eq!(o.m[3], 0.5);
+        let mut dst = toy_store(0.0);
+        let (loaded, missing) = ck.restore_into(&mut dst);
+        assert_eq!((loaded, missing), (2, 0));
+        assert_eq!(dst.data, store.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partial_restore_counts_missing() {
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt2");
+        let path = dir.join("b.ckpt");
+        let store = toy_store(1.0);
+        save(&path, "x", &store, None).unwrap();
+        let mut ck = load(&path).unwrap();
+        ck.params.push(("ghost".into(), vec![1.0]));
+        let mut dst = toy_store(0.0);
+        let (loaded, missing) = ck.restore_into(&mut dst);
+        assert_eq!((loaded, missing), (2, 1));
+        assert!(ck.opt.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,187 @@
+//! Simulated data-parallel runtime with a real ring all-reduce.
+//!
+//! The paper's communication claim (Appendix F, the abstract's "54% less
+//! communication") is about data-parallel gradient synchronization, whose
+//! volume is proportional to the number of *trainable* parameters.  This
+//! module makes that measurable: `w` workers each produce a gradient vector
+//! for their shard; `ring_all_reduce` then runs the standard two-phase ring
+//! (reduce-scatter + all-gather) over the actual buffers, counting every
+//! byte that crosses a "link".  On this single-core testbed workers are
+//! interleaved on one thread — the communication *pattern and volume* are
+//! exactly those of the real algorithm, which is the quantity under test.
+//!
+//! Byte accounting uses bf16-equivalents (2 bytes/element), matching the
+//! paper's bf16 gradient wire format.
+
+/// Per-step communication ledger.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CommLedger {
+    /// total bytes that crossed links this run
+    pub bytes: u64,
+    /// number of all-reduce invocations
+    pub rounds: u64,
+}
+
+impl CommLedger {
+    pub fn bytes_per_round(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// In-place ring all-reduce (average) across `grads` (one vector per
+/// worker, all the same length).  After the call every worker holds the
+/// element-wise mean.  Returns bytes moved (2 bytes/element accounting).
+pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
+    -> u64 {
+    let w = grads.len();
+    assert!(w > 0);
+    let n = grads[0].len();
+    assert!(grads.iter().all(|g| g.len() == n), "ragged gradient vectors");
+    if w == 1 {
+        ledger.rounds += 1;
+        return 0;
+    }
+    // chunk boundaries: chunk c = [starts[c], starts[c+1])
+    let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
+    let mut moved = 0u64;
+    // --- phase 1: reduce-scatter ---
+    // round t: worker i sends chunk (i - t) to worker (i + 1)
+    for t in 0..w - 1 {
+        // compute all sends first (simultaneous round)
+        let mut sends: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(w);
+        for i in 0..w {
+            let c = (i + w - t) % w;
+            let (s, e) = (starts[c], starts[c + 1]);
+            sends.push(((i + 1) % w, c, grads[i][s..e].to_vec()));
+            moved += 2 * (e - s) as u64;
+        }
+        for (dst, c, data) in sends {
+            let (s, e) = (starts[c], starts[c + 1]);
+            for (x, y) in grads[dst][s..e].iter_mut().zip(&data) {
+                *x += y;
+            }
+        }
+    }
+    // now worker i holds the fully-reduced chunk (i + 1) % w
+    // --- phase 2: all-gather ---
+    for t in 0..w - 1 {
+        let mut sends: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(w);
+        for i in 0..w {
+            let c = (i + 1 + w - t) % w;
+            let (s, e) = (starts[c], starts[c + 1]);
+            sends.push(((i + 1) % w, c, grads[i][s..e].to_vec()));
+            moved += 2 * (e - s) as u64;
+        }
+        for (dst, c, data) in sends {
+            let (s, e) = (starts[c], starts[c + 1]);
+            grads[dst][s..e].copy_from_slice(&data);
+        }
+    }
+    // average
+    let inv = 1.0 / w as f32;
+    for g in grads.iter_mut() {
+        for x in g.iter_mut() {
+            *x *= inv;
+        }
+    }
+    ledger.bytes += moved;
+    ledger.rounds += 1;
+    moved
+}
+
+/// Theoretical ring volume: 2·(w−1)/w of the buffer per worker, summed.
+pub fn expected_ring_bytes(n_elems: usize, w: usize) -> u64 {
+    if w <= 1 {
+        return 0;
+    }
+    // per round, every worker sends one chunk; 2(w-1) rounds total
+    let mut total = 0u64;
+    for t in 0..2 * (w - 1) {
+        let _ = t;
+    }
+    // chunks are n/w ± 1; exact accounting mirrors the implementation
+    let starts: Vec<usize> = (0..=w).map(|c| c * n_elems / w).collect();
+    for t in 0..(w - 1) {
+        for i in 0..w {
+            let c = (i + w - t) % w;
+            total += 2 * (starts[c + 1] - starts[c]) as u64;
+        }
+    }
+    total * 2 // the all-gather phase moves the same volume
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn make_grads(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn all_workers_get_the_mean() {
+        for (w, n) in [(2, 10), (3, 17), (4, 64), (5, 5)] {
+            let mut grads = make_grads(w, n, w as u64);
+            let want: Vec<f32> = (0..n)
+                .map(|j| {
+                    grads.iter().map(|g| g[j]).sum::<f32>() / w as f32
+                })
+                .collect();
+            let mut ledger = CommLedger::default();
+            ring_all_reduce(&mut grads, &mut ledger);
+            for (i, g) in grads.iter().enumerate() {
+                for (a, b) in g.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-4,
+                            "worker {i}: {a} vs {b} (w={w} n={n})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_volume_matches_theory() {
+        for (w, n) in [(2, 1000), (4, 999), (8, 4096)] {
+            let mut grads = make_grads(w, n, 7);
+            let mut ledger = CommLedger::default();
+            let moved = ring_all_reduce(&mut grads, &mut ledger);
+            assert_eq!(moved, expected_ring_bytes(n, w));
+            // aggregate volume ≈ 2 phases · (w−1) rounds · w senders ·
+            // (n/w elems) · 2 bytes = 4·(w−1)·n bytes
+            let approx = 4.0 * (w - 1) as f64 * n as f64;
+            assert!((moved as f64 - approx).abs() / approx < 0.05,
+                    "w={w}: {moved} vs {approx}");
+        }
+    }
+
+    #[test]
+    fn single_worker_is_free() {
+        let mut grads = make_grads(1, 100, 1);
+        let before = grads[0].clone();
+        let mut ledger = CommLedger::default();
+        assert_eq!(ring_all_reduce(&mut grads, &mut ledger), 0);
+        assert_eq!(grads[0], before);
+        assert_eq!(ledger.rounds, 1);
+    }
+
+    #[test]
+    fn lora_reduces_measured_traffic_proportionally() {
+        // The paper's claim, measured: traffic ratio == trainable ratio.
+        let (full_n, lora_n, w) = (10_000, 4_600, 4);
+        let mut a = make_grads(w, full_n, 2);
+        let mut b = make_grads(w, lora_n, 3);
+        let mut ledger = CommLedger::default();
+        let full_bytes = ring_all_reduce(&mut a, &mut ledger) as f64;
+        let lora_bytes = ring_all_reduce(&mut b, &mut ledger) as f64;
+        let ratio = lora_bytes / full_bytes;
+        assert!((ratio - 0.46).abs() < 0.01, "ratio {ratio}");
+        assert_eq!(ledger.rounds, 2);
+    }
+}

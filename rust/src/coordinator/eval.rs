@@ -1,0 +1,39 @@
+//! Evaluation: fixed-set validation loss / perplexity.
+
+use anyhow::Result;
+
+use crate::data::dataset::EvalSet;
+use crate::model::layout::ParamStore;
+use crate::runtime::ModelRuntime;
+
+/// Mean validation loss over the (fixed) evaluation set.  Parameter
+/// literals are marshaled once for the whole set (§Perf L3).
+pub fn eval_loss(rt: &ModelRuntime, store: &ParamStore, set: &EvalSet)
+    -> Result<f32> {
+    let batches: Vec<(&[i32], usize, usize)> = set
+        .batches
+        .iter()
+        .map(|b| (b.tokens.as_slice(), b.batch, b.seq_plus_1))
+        .collect();
+    let losses = rt.eval_loss_multi(store, &batches)?;
+    Ok((losses.iter().map(|&l| l as f64).sum::<f64>()
+        / losses.len() as f64) as f32)
+}
+
+/// Classification accuracy + loss over pre-drawn (tokens, labels) batches.
+pub fn eval_cls(rt: &ModelRuntime, store: &ParamStore,
+                batches: &[(Vec<i32>, Vec<i32>)], seq: usize)
+    -> Result<(f32, f32)> {
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    for (toks, labels) in batches {
+        let bsz = labels.len();
+        let (l, c) = rt.cls_eval(store, toks, labels, bsz, seq)?;
+        loss += l as f64;
+        correct += c as f64;
+        total += bsz;
+    }
+    Ok(((loss / batches.len() as f64) as f32,
+        (correct / total as f64) as f32))
+}

@@ -1,0 +1,108 @@
+//! Metrics: CSV loss-curve writers (the Figure 2/3/4/6/8/9 data files) and
+//! run summaries.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Streaming CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+    pub rows: u64,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len(), rows: 0 })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        anyhow::ensure!(values.len() == self.cols,
+                        "row has {} cols, header has {}", values.len(),
+                        self.cols);
+        writeln!(self.out, "{}", values.join(","))?;
+        self.rows += 1;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush().map_err(Into::into)
+    }
+}
+
+/// Exponential moving average of the training loss.
+#[derive(Clone, Copy, Debug)]
+pub struct Ema {
+    pub value: f64,
+    alpha: f64,
+    primed: bool,
+}
+
+impl Ema {
+    pub fn new(alpha: f64) -> Ema {
+        Ema { value: 0.0, alpha, primed: false }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        if !self.primed {
+            self.value = x;
+            self.primed = true;
+        } else {
+            self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
+        }
+        self.value
+    }
+}
+
+/// Perplexity from a mean NLL.
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("switchlora_test_metrics");
+        let path = dir.join("m.csv");
+        {
+            let mut w =
+                CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&["0".into(), "5.5".into()]).unwrap();
+            w.row(&["1".into(), "5.4".into()]).unwrap();
+            assert!(w.row(&["oops".into()]).is_err());
+            w.flush().unwrap();
+            assert_eq!(w.rows, 2);
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        assert!(text.starts_with("step,loss\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ema_tracks() {
+        let mut e = Ema::new(0.5);
+        assert_eq!(e.update(10.0), 10.0);
+        assert_eq!(e.update(0.0), 5.0);
+        assert_eq!(e.update(5.0), 5.0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v: f64 = 256.0;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-6);
+    }
+}

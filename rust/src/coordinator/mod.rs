@@ -1,0 +1,10 @@
+//! L3 coordinator: training orchestration (`trainer.rs`), the simulated
+//! data-parallel runtime with ring all-reduce (`data_parallel.rs`),
+//! evaluation (`eval.rs`), checkpointing (`checkpoint.rs`) and metrics
+//! (`metrics.rs`).
+
+pub mod checkpoint;
+pub mod data_parallel;
+pub mod eval;
+pub mod metrics;
+pub mod trainer;

@@ -1,0 +1,435 @@
+//! Training orchestrator: the leader loop tying together data, runtime,
+//! optimizer, and the method-specific machinery (SwitchLoRA switching,
+//! ReLoRA resets, GaLore projection, plain LoRA / full-rank baselines).
+//!
+//! One `Trainer::run` executes the paper's Algorithm 2 end to end:
+//! ```text
+//! for step:                                  (Alg. 2 line 1)
+//!   lr ← schedule(step)
+//!   per-worker fwd+bwd on its shard          (data-parallel sim)
+//!   ring all-reduce of gradients             (measured comm bytes)
+//!   fused AdamW with freeze mask             (Alg. 2 line 2 + freezes)
+//!   method post-step:
+//!     SwitchLoRA: switch vectors             (Alg. 2 lines 3–15)
+//!     ReLoRA: merge-and-reset when due
+//! ```
+//! plus periodic fixed-set evaluation, CSV metrics and a final report.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::data_parallel::{ring_all_reduce, CommLedger};
+use crate::coordinator::eval::eval_loss;
+use crate::coordinator::metrics::{perplexity, CsvWriter, Ema};
+use crate::data::dataset::{synth_batches, BatchIter, EvalSet};
+use crate::data::synth::CorpusGen;
+use crate::model::init::{copy_shared, init_store, InitMode};
+use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::galore::Galore;
+use crate::optim::schedule::LrSchedule;
+use crate::optim::AdamHyper;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::switchlora::relora::ReLora;
+use crate::switchlora::schedule::SwitchSchedule;
+use crate::switchlora::switcher::SwitchLora;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SwitchParams {
+    /// initial switching interval (paper: 40)
+    pub interval0: f64,
+    /// fraction of total steps at which frequency reaches 1/3 (paper: 0.1)
+    pub ratio: f64,
+    /// freeze length N after a switch (paper: 5)
+    pub n_freeze: u64,
+}
+
+impl Default for SwitchParams {
+    fn default() -> Self {
+        SwitchParams { interval0: 40.0, ratio: 0.1, n_freeze: 5 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ReLoraParams {
+    pub reset_interval: u64,
+    pub rewarm: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct GaloreParams {
+    pub rank: usize,
+    pub update_freq: u64,
+    pub scale: f32,
+}
+
+#[derive(Clone, Debug)]
+pub enum Method {
+    Full,
+    Lora,
+    SwitchLora(SwitchParams),
+    ReLora(ReLoraParams),
+    Galore(GaloreParams),
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::Lora => "lora",
+            Method::SwitchLora(_) => "switchlora",
+            Method::ReLora(_) => "relora",
+            Method::Galore(_) => "galore",
+        }
+    }
+
+    pub fn variant(&self) -> Variant {
+        match self {
+            Method::Full | Method::Galore(_) => Variant::Full,
+            _ => Variant::Lora,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s {
+            "full" => Method::Full,
+            "lora" => Method::Lora,
+            "switchlora" => Method::SwitchLora(SwitchParams::default()),
+            "relora" => Method::ReLora(ReLoraParams {
+                reset_interval: 500,
+                rewarm: 50,
+            }),
+            "galore" => Method::Galore(GaloreParams {
+                rank: 0, // 0 ⇒ use the config's LoRA rank
+                update_freq: 200,
+                scale: 0.25,
+            }),
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// artifact spec directory name (e.g. "s1m", "s4m_r8")
+    pub spec: String,
+    pub artifacts_dir: PathBuf,
+    pub method: Method,
+    pub steps: u64,
+    pub peak_lr: f32,
+    pub warmup: u64,
+    pub weight_decay: f32,
+    pub seed: u64,
+    /// simulated data-parallel workers (gradient sharding + ring allreduce)
+    pub workers: usize,
+    pub eval_every: u64,
+    pub eval_batches: usize,
+    pub init: InitMode,
+    /// full-rank warm-start steps before low-rank training (Figure 4)
+    pub full_warmup_steps: u64,
+    /// optional CSV path for the per-step loss curve
+    pub metrics_csv: Option<PathBuf>,
+    /// log every k steps
+    pub log_every: u64,
+}
+
+impl TrainConfig {
+    pub fn new(spec: &str, method: Method, steps: u64) -> TrainConfig {
+        TrainConfig {
+            spec: spec.to_string(),
+            artifacts_dir: default_artifacts_dir(),
+            method,
+            steps,
+            peak_lr: 0.0, // 0 ⇒ method default below
+            warmup: 100.min(steps / 10).max(1),
+            weight_decay: 0.0,
+            seed: 42,
+            workers: 1,
+            eval_every: 0, // 0 ⇒ steps/10
+            eval_batches: 8,
+            init: InitMode::SwitchLora,
+            full_warmup_steps: 0,
+            metrics_csv: None,
+            log_every: 50,
+        }
+    }
+
+    /// Paper Section 4.1 learning rates: full 1e-3, LoRA 1e-2,
+    /// SwitchLoRA 2e-2 (GaLore appendix C.3: 1e-2).
+    pub fn method_default_lr(method: &Method) -> f32 {
+        match method {
+            Method::Full => 1e-3,
+            Method::Lora => 1e-2,
+            Method::SwitchLora(_) => 2e-2,
+            Method::ReLora(_) => 1e-2,
+            Method::Galore(_) => 1e-2,
+        }
+    }
+}
+
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("SWITCHLORA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| {
+            Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        })
+}
+
+/// Outcome of a run: loss curves, final metrics, systems counters.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub method: String,
+    pub spec: String,
+    /// (step, train loss EMA)
+    pub train_curve: Vec<(u64, f64)>,
+    /// (step, eval loss)
+    pub eval_curve: Vec<(u64, f64)>,
+    pub final_eval_loss: f64,
+    pub final_ppl: f64,
+    pub elapsed_secs: f64,
+    pub mean_step_ms: f64,
+    pub comm: CommLedger,
+    pub offload_bytes: u64,
+    pub total_switches: u64,
+    pub n_trainable: usize,
+}
+
+/// The training driver.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub manifest: Manifest,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> Result<Trainer> {
+        let dir = cfg.artifacts_dir.join(&cfg.spec);
+        let manifest = Manifest::load(&dir)
+            .with_context(|| format!("loading manifest for {}", cfg.spec))?;
+        Ok(Trainer { cfg, manifest })
+    }
+
+    /// Run the configured training; returns curves + counters, plus the
+    /// final parameter store (for checkpointing / fine-tuning).
+    pub fn run(&self, engine: &mut Engine)
+        -> Result<(RunResult, ParamStore)> {
+        let cfg = &self.cfg;
+        let mc = &self.manifest.config;
+        let variant = cfg.method.variant();
+        let layout = std::sync::Arc::new(
+            self.manifest.layout(variant)?.clone());
+        let mut rng = Rng::new(cfg.seed);
+
+        // ---- state ----
+        let mut store = ParamStore::zeros(layout.clone());
+        init_store(&mut store, &self.manifest.linears, mc.rank, cfg.init,
+                   &mut rng);
+        let rt = ModelRuntime::load(engine, self.manifest.clone(), variant)?;
+        let padded = rt.padded;
+        let mut opt = AdamState::new(layout.n_trainable, padded);
+        let mut base_mask = vec![0.0f32; padded];
+        for x in base_mask.iter_mut().take(layout.n_trainable) {
+            *x = 1.0;
+        }
+
+        // ---- method machinery ----
+        let peak_lr = if cfg.peak_lr > 0.0 {
+            cfg.peak_lr
+        } else {
+            TrainConfig::method_default_lr(&cfg.method)
+        };
+        let sched = LrSchedule::cosine(peak_lr, cfg.warmup, cfg.steps);
+        let mut switcher = match &cfg.method {
+            Method::SwitchLora(p) => Some(SwitchLora::new(
+                &self.manifest.linears,
+                mc.rank,
+                mc.lora_scale() as f32,
+                SwitchSchedule::with_third_at(p.interval0, p.ratio,
+                                              cfg.steps),
+                p.n_freeze,
+                cfg.seed,
+            )),
+            _ => None,
+        };
+        let mut relora = match &cfg.method {
+            Method::ReLora(p) => Some(ReLora::new(p.reset_interval,
+                                                  p.rewarm)),
+            _ => None,
+        };
+        let mut galore = match &cfg.method {
+            Method::Galore(p) => {
+                let rank = if p.rank == 0 { mc.rank } else { p.rank };
+                Some(Galore::new(&layout, rank, p.update_freq, p.scale))
+            }
+            _ => None,
+        };
+
+        // ---- full-rank warm start (Figure 4 protocol) ----
+        if cfg.full_warmup_steps > 0 && variant == Variant::Lora {
+            let warm = self.full_warm_start(engine, cfg.full_warmup_steps)?;
+            let copied = copy_shared(&warm, &mut store);
+            crate::info!("full-rank warm start: {} steps, {} params carried",
+                         cfg.full_warmup_steps, copied);
+        }
+
+        // ---- data ----
+        let mut workers: Vec<BatchIter<CorpusGen>> = (0..cfg.workers)
+            .map(|w| synth_batches(mc.vocab, cfg.seed, w as u64, mc.batch,
+                                   mc.seq))
+            .collect();
+        let eval_set = EvalSet::synth(mc.vocab, cfg.seed, mc.batch, mc.seq,
+                                      cfg.eval_batches);
+
+        // ---- metrics ----
+        let mut csv = match &cfg.metrics_csv {
+            Some(p) => Some(CsvWriter::create(
+                p, &["step", "loss", "ema", "lr", "eval_loss"])?),
+            None => None,
+        };
+        let mut ema = Ema::new(0.05);
+        let mut comm = CommLedger::default();
+        let mut train_curve = Vec::new();
+        let mut eval_curve = Vec::new();
+        let eval_every = if cfg.eval_every > 0 {
+            cfg.eval_every
+        } else {
+            (cfg.steps / 10).max(1)
+        };
+        let hyper0 = AdamHyper {
+            weight_decay: cfg.weight_decay,
+            ..AdamHyper::new(peak_lr)
+        };
+
+        let t0 = Instant::now();
+        for step in 0..cfg.steps {
+            // learning rate (with ReLoRA local re-warm after resets)
+            let mut lr = sched.lr(step);
+            if let Some(rl) = &relora {
+                if rl.n_resets > 0 {
+                    lr = sched.with_restart(step, rl.last_reset, rl.rewarm);
+                }
+            }
+            let hyper = hyper0.with_lr(lr);
+
+            // ---- gradients (data-parallel) ----
+            // One batch per worker; parameter literals marshaled once for
+            // all workers (fwdbwd_multi, §Perf L3).
+            let batches: Vec<_> =
+                workers.iter_mut().map(|w| w.next_batch()).collect();
+            let views: Vec<(&[i32], usize, usize)> = batches
+                .iter()
+                .map(|b| (b.tokens.as_slice(), b.batch, b.seq_plus_1))
+                .collect();
+            let results = rt.fwdbwd_multi(&store, &views)?;
+            let mut losses = 0.0f64;
+            let mut grads: Vec<Vec<f32>> =
+                Vec::with_capacity(cfg.workers);
+            for (l, g) in results {
+                losses += l as f64;
+                grads.push(g);
+            }
+            let loss = losses / cfg.workers as f64;
+            ring_all_reduce(&mut grads, &mut comm);
+            let grad = &grads[0];
+
+            // ---- optimizer ----
+            if let Some(gl) = galore.as_mut() {
+                // host optimizer (needs SVD between grad and update)
+                let mut flat = store.gather_trainable(padded);
+                gl.step(step, &mut flat[..layout.n_trainable],
+                        &grad[..layout.n_trainable], &hyper);
+                store.scatter_trainable(&flat);
+            } else {
+                let mut mask = base_mask.clone();
+                if let Some(sw) = switcher.as_mut() {
+                    sw.freeze.apply(step, &mut mask);
+                }
+                let mut flat = store.gather_trainable(padded);
+                rt.adam_step(&mut flat, grad, &mut opt, &mask, &hyper)?;
+                store.scatter_trainable(&flat);
+            }
+
+            // ---- method post-step ----
+            if let Some(sw) = switcher.as_mut() {
+                sw.apply_step(step, &mut store, &mut opt,
+                              &self.manifest.linears);
+            }
+            if let Some(rl) = relora.as_mut() {
+                if rl.due(step) {
+                    let n = rl.reset(step, &mut store, &mut opt,
+                                     &self.manifest.linears, mc.rank,
+                                     mc.lora_scale() as f32, &mut rng);
+                    crate::info!("step {step}: ReLoRA reset {n} adapters");
+                }
+            }
+
+            // ---- metrics / eval ----
+            let e = ema.update(loss);
+            train_curve.push((step, e));
+            let mut eval_s = String::new();
+            if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
+                let el = eval_loss(&rt, &store, &eval_set)? as f64;
+                eval_curve.push((step, el));
+                eval_s = format!("{el:.4}");
+                crate::info!(
+                    "[{}/{}] step {step} loss {loss:.4} ema {e:.4} \
+                     eval {el:.4} ppl {:.2} lr {lr:.2e}",
+                    cfg.method.name(), cfg.spec, perplexity(el));
+            } else if step % cfg.log_every == 0 {
+                crate::debuglog!("step {step} loss {loss:.4} ema {e:.4}");
+            }
+            if let Some(c) = csv.as_mut() {
+                c.row(&[step.to_string(), format!("{loss:.6}"),
+                        format!("{e:.6}"), format!("{lr:.6e}"), eval_s])?;
+            }
+        }
+        if let Some(c) = csv.as_mut() {
+            c.flush()?;
+        }
+
+        let elapsed = t0.elapsed().as_secs_f64();
+        let final_eval = eval_curve
+            .last()
+            .map(|&(_, l)| l)
+            .unwrap_or(f64::NAN);
+        let result = RunResult {
+            method: cfg.method.name().to_string(),
+            spec: cfg.spec.clone(),
+            train_curve,
+            eval_curve,
+            final_eval_loss: final_eval,
+            final_ppl: perplexity(final_eval),
+            elapsed_secs: elapsed,
+            mean_step_ms: 1e3 * elapsed / cfg.steps.max(1) as f64,
+            comm,
+            offload_bytes: switcher
+                .as_ref()
+                .map(|s| s.ledger.total_bytes())
+                .unwrap_or(0),
+            total_switches: switcher
+                .as_ref()
+                .map(|s| s.total_switches)
+                .unwrap_or(0),
+            n_trainable: layout.n_trainable,
+        };
+        Ok((result, store))
+    }
+
+    /// Short full-rank run used as warm start (Figure 4 protocol); returns
+    /// its parameter store for transplanting into the LoRA store.
+    fn full_warm_start(&self, engine: &mut Engine, steps: u64)
+        -> Result<ParamStore> {
+        let mut sub = self.cfg.clone();
+        sub.method = Method::Full;
+        sub.steps = steps;
+        sub.full_warmup_steps = 0;
+        sub.peak_lr = 0.0;
+        sub.metrics_csv = None;
+        sub.eval_every = steps; // single eval at the end
+        let t = Trainer { cfg: sub, manifest: self.manifest.clone() };
+        let (_, store) = t.run(engine)?;
+        Ok(store)
+    }
+}

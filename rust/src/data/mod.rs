@@ -1,0 +1,12 @@
+//! Data substrate: synthetic pre-training corpus, tokenizer, batching,
+//! and the GLUE-analog downstream task suite.
+//!
+//! The paper pre-trains on C4; this environment has no large corpus, so
+//! `synth.rs` generates a structured synthetic language whose learnability
+//! profile exercises the same distinction the paper measures (full-rank vs
+//! rank-limited updates) — see DESIGN.md "Substitutions".
+
+pub mod dataset;
+pub mod synth;
+pub mod tasks;
+pub mod tokenizer;

@@ -1,0 +1,291 @@
+//! GLUE-analog downstream task suite (the Tables 7/8 substitute).
+//!
+//! Five synthetic sequence-classification tasks over the pre-training token
+//! distribution, graded in difficulty the way GLUE tasks are.  Each task
+//! yields `(tokens[seq], label)` pairs with balanced labels; fine-tuning a
+//! pre-trained checkpoint on them measures representation transfer exactly
+//! as the paper's GLUE full fine-tuning does:
+//!
+//! | task        | labels | skill probed                                  |
+//! |-------------|--------|-----------------------------------------------|
+//! | `majority`  | 4      | bag-of-tokens pooling (easy, SST2-ish)        |
+//! | `contains`  | 2      | pattern detection (QNLI-ish)                  |
+//! | `pairmatch` | 2      | two-segment comparison (MRPC/QQP-ish)         |
+//! | `parity`    | 2      | counting mod 2 (hard, CoLA-ish)               |
+//! | `recall`    | 4      | induction: recall token after a marker (RTE-ish) |
+
+use super::synth::{CorpusGen, SynthConfig};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Majority,
+    Contains,
+    PairMatch,
+    Parity,
+    Recall,
+}
+
+impl Task {
+    pub const ALL: [Task; 5] = [Task::Majority, Task::Contains,
+                                Task::PairMatch, Task::Parity, Task::Recall];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::Majority => "majority",
+            Task::Contains => "contains",
+            Task::PairMatch => "pairmatch",
+            Task::Parity => "parity",
+            Task::Recall => "recall",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        Task::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Task::Majority | Task::Recall => 4,
+            _ => 2,
+        }
+    }
+}
+
+/// Generates labelled examples for one task.
+pub struct TaskGen {
+    pub task: Task,
+    vocab: usize,
+    seq: usize,
+    corpus: CorpusGen,
+    rng: Rng,
+}
+
+impl TaskGen {
+    pub fn new(task: Task, vocab: usize, seq: usize, seed: u64) -> Self {
+        let corpus = CorpusGen::new(SynthConfig::for_vocab(vocab),
+                                    seed ^ 0x7A5C, seed);
+        TaskGen { task, vocab, seq, corpus, rng: Rng::new(seed) }
+    }
+
+    /// One example: (tokens of length seq, label < n_classes).
+    pub fn example(&mut self) -> (Vec<i32>, i32) {
+        match self.task {
+            Task::Majority => self.gen_majority(),
+            Task::Contains => self.gen_contains(),
+            Task::PairMatch => self.gen_pairmatch(),
+            Task::Parity => self.gen_parity(),
+            Task::Recall => self.gen_recall(),
+        }
+    }
+
+    /// A batch of examples: (tokens [n, seq] row-major, labels [n]).
+    pub fn batch(&mut self, n: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut toks = Vec::with_capacity(n * self.seq);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (t, l) = self.example();
+            toks.extend_from_slice(&t);
+            labels.push(l);
+        }
+        (toks, labels)
+    }
+
+    fn base_seq(&mut self) -> Vec<i32> {
+        let mut buf = vec![0i32; self.seq];
+        self.corpus.fill(&mut buf);
+        buf
+    }
+
+    /// Token-class quartile of a token (labels for majority/recall tasks).
+    pub fn class_of(&self, tok: i32) -> usize {
+        (tok as usize * 4) / self.vocab
+    }
+
+    /// Label = most frequent token-class quartile; ties broken by planting.
+    fn gen_majority(&mut self) -> (Vec<i32>, i32) {
+        let label = self.rng.below(4) as i32;
+        let mut toks = self.base_seq();
+        // overwrite a random 40% of positions with tokens from the label
+        // class so the majority is unambiguous
+        let k = self.seq * 2 / 5;
+        let quarter = self.vocab / 4;
+        for pos in self.rng.sample_distinct(self.seq, k) {
+            let t = label as usize * quarter + self.rng.below(quarter);
+            toks[pos] = t as i32;
+        }
+        (toks, label)
+    }
+
+    /// Label = whether the fixed trigram pattern occurs.
+    fn gen_contains(&mut self) -> (Vec<i32>, i32) {
+        let pat = [1i32, 3, 5]; // fixed, rare under zipf-permuted corpus
+        let mut toks = self.base_seq();
+        // clear natural occurrences to control the label exactly
+        for i in 0..self.seq.saturating_sub(2) {
+            if toks[i..i + 3] == pat {
+                toks[i] = (toks[i] + 7) % self.vocab as i32;
+            }
+        }
+        let label = self.rng.below(2) as i32;
+        if label == 1 {
+            let pos = self.rng.below(self.seq - 3);
+            toks[pos..pos + 3].copy_from_slice(&pat);
+        }
+        (toks, label)
+    }
+
+    /// First half vs second half equality (with a separator position).
+    fn gen_pairmatch(&mut self) -> (Vec<i32>, i32) {
+        let half = self.seq / 2;
+        let mut toks = self.base_seq();
+        let label = self.rng.below(2) as i32;
+        if label == 1 {
+            for i in 0..half.min(self.seq - half) {
+                toks[half + i] = toks[i];
+            }
+        } else {
+            // ensure at least a few mismatches
+            let mut diff = 0;
+            for i in 0..half.min(self.seq - half) {
+                if toks[half + i] != toks[i] {
+                    diff += 1;
+                }
+            }
+            if diff < 3 {
+                for _ in 0..3 {
+                    let i = self.rng.below(half);
+                    toks[half + i] =
+                        (toks[i] + 1 + self.rng.below(self.vocab - 1) as i32)
+                            % self.vocab as i32;
+                }
+            }
+        }
+        (toks, label)
+    }
+
+    /// Parity of the count of the marker token 2.
+    fn gen_parity(&mut self) -> (Vec<i32>, i32) {
+        let marker = 2i32;
+        let mut toks = self.base_seq();
+        for t in toks.iter_mut() {
+            if *t == marker {
+                *t = 9;
+            }
+        }
+        let count = 1 + self.rng.below(8);
+        for pos in self.rng.sample_distinct(self.seq, count) {
+            toks[pos] = marker;
+        }
+        (toks, (count % 2) as i32)
+    }
+
+    /// Induction recall: marker token appears twice; the label is the class
+    /// of the token that followed its first occurrence.
+    fn gen_recall(&mut self) -> (Vec<i32>, i32) {
+        let marker = 4i32;
+        let mut toks = self.base_seq();
+        for t in toks.iter_mut() {
+            if *t == marker {
+                *t = 11;
+            }
+        }
+        let quarter = self.vocab / 4;
+        let label = self.rng.below(4) as i32;
+        let value = (label as usize * quarter + self.rng.below(quarter))
+            as i32;
+        let first = 1 + self.rng.below(self.seq / 2 - 2);
+        toks[first] = marker;
+        toks[first + 1] = value;
+        // second marker near the end cues the recall
+        toks[self.seq - 1] = marker;
+        (toks, label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_task(task: Task) {
+        let mut g = TaskGen::new(task, 512, 64, 42);
+        let mut counts = vec![0usize; task.n_classes()];
+        for _ in 0..200 {
+            let (toks, label) = g.example();
+            assert_eq!(toks.len(), 64);
+            assert!(toks.iter().all(|&t| (0..512).contains(&t)));
+            assert!((label as usize) < task.n_classes());
+            counts[label as usize] += 1;
+        }
+        // labels roughly balanced
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(c > 200 / task.n_classes() / 3,
+                    "{} label {i} count {c}", task.name());
+        }
+    }
+
+    #[test]
+    fn all_tasks_well_formed() {
+        for t in Task::ALL {
+            check_task(t);
+        }
+    }
+
+    #[test]
+    fn contains_label_is_checkable() {
+        let mut g = TaskGen::new(Task::Contains, 512, 64, 7);
+        for _ in 0..100 {
+            let (toks, label) = g.example();
+            let found = toks.windows(3).any(|w| w == [1, 3, 5]);
+            assert_eq!(found, label == 1);
+        }
+    }
+
+    #[test]
+    fn pairmatch_label_is_checkable() {
+        let mut g = TaskGen::new(Task::PairMatch, 512, 64, 8);
+        for _ in 0..100 {
+            let (toks, label) = g.example();
+            let same = (0..32).all(|i| toks[i] == toks[32 + i]);
+            assert_eq!(same, label == 1);
+        }
+    }
+
+    #[test]
+    fn parity_label_is_checkable() {
+        let mut g = TaskGen::new(Task::Parity, 512, 64, 9);
+        for _ in 0..100 {
+            let (toks, label) = g.example();
+            let count = toks.iter().filter(|&&t| t == 2).count();
+            assert_eq!((count % 2) as i32, label);
+        }
+    }
+
+    #[test]
+    fn recall_label_is_checkable() {
+        let mut g = TaskGen::new(Task::Recall, 512, 64, 10);
+        for _ in 0..100 {
+            let (toks, label) = g.example();
+            let first = toks.iter().position(|&t| t == 4).unwrap();
+            let value = toks[first + 1];
+            assert_eq!((value as usize * 4 / 512) as i32, label);
+            assert_eq!(toks[63], 4);
+        }
+    }
+
+    #[test]
+    fn batch_layout() {
+        let mut g = TaskGen::new(Task::Majority, 512, 32, 1);
+        let (toks, labels) = g.batch(5);
+        assert_eq!(toks.len(), 5 * 32);
+        assert_eq!(labels.len(), 5);
+    }
+
+    #[test]
+    fn task_names_roundtrip() {
+        for t in Task::ALL {
+            assert_eq!(Task::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Task::from_name("nope"), None);
+    }
+}

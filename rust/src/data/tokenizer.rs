@@ -1,0 +1,172 @@
+//! Tokenizers: byte-level identity and a small trainable BPE.
+//!
+//! The synthetic corpus is already token ids, but the CLI also accepts raw
+//! text files (`--data path.txt`); those go through byte-level BPE trained
+//! on a prefix of the file, so the full pipeline (train tokenizer → encode →
+//! pre-train) works on real text too.
+
+use std::collections::HashMap;
+
+/// Common interface for the data pipeline.
+pub trait Tokenizer {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &str) -> Vec<i32>;
+}
+
+/// Identity over raw bytes, clamped into the model vocab.
+pub struct ByteTokenizer {
+    vocab: usize,
+}
+
+impl ByteTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab >= 256 || vocab > 0);
+        ByteTokenizer { vocab }
+    }
+}
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        text.bytes().map(|b| (b as usize % self.vocab) as i32).collect()
+    }
+}
+
+/// Byte-level BPE: 256 base tokens + learned merges.
+pub struct BpeTokenizer {
+    /// merge table: (left, right) -> merged id, in training order
+    merges: Vec<(u32, u32)>,
+    rank: HashMap<(u32, u32), u32>,
+    vocab: usize,
+}
+
+impl BpeTokenizer {
+    /// Train merges on `text` until `vocab` tokens exist (vocab >= 257).
+    pub fn train(text: &str, vocab: usize) -> Self {
+        assert!(vocab > 256, "BPE vocab must exceed 256 byte tokens");
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        let mut merges = Vec::new();
+        let mut next_id = 256u32;
+        while (next_id as usize) < vocab && ids.len() >= 2 {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for w in ids.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            // deterministic argmax: max count, then smallest pair
+            let best = counts
+                .iter()
+                .max_by_key(|(&pair, &c)| {
+                    (c, std::cmp::Reverse((pair.0, pair.1)))
+                })
+                .map(|(&p, &c)| (p, c));
+            let Some((pair, count)) = best else { break };
+            if count < 2 {
+                break;
+            }
+            merges.push(pair);
+            ids = Self::apply_merge(&ids, pair, next_id);
+            next_id += 1;
+        }
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| (p, i as u32))
+            .collect();
+        BpeTokenizer { merges, rank, vocab }
+    }
+
+    fn apply_merge(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(ids.len());
+        let mut i = 0;
+        while i < ids.len() {
+            if i + 1 < ids.len() && (ids[i], ids[i + 1]) == pair {
+                out.push(new_id);
+                i += 2;
+            } else {
+                out.push(ids[i]);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+}
+
+impl Tokenizer for BpeTokenizer {
+    fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<u32> = text.bytes().map(u32::from).collect();
+        // iteratively apply lowest-rank available merge (standard BPE encode)
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (rank, pos)
+            for (i, w) in ids.windows(2).enumerate() {
+                if let Some(&r) = self.rank.get(&(w[0], w[1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((r, _)) = best else { break };
+            let pair = self.merges[r as usize];
+            ids = Self::apply_merge(&ids, pair, 256 + r);
+        }
+        ids.into_iter().map(|x| x as i32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_tokenizer_roundtrip_range() {
+        let t = ByteTokenizer::new(256);
+        let ids = t.encode("hello ☃");
+        assert_eq!(ids.len(), "hello ☃".len());
+        assert!(ids.iter().all(|&i| (0..256).contains(&i)));
+    }
+
+    #[test]
+    fn byte_tokenizer_clamps_small_vocab() {
+        let t = ByteTokenizer::new(64);
+        assert!(t.encode("\u{ff}").iter().all(|&i| i < 64));
+    }
+
+    #[test]
+    fn bpe_learns_frequent_pairs() {
+        let text = "ababababab cdcdcdcd ababab";
+        let t = BpeTokenizer::train(text, 260);
+        assert!(t.n_merges() > 0);
+        let ids = t.encode("abab");
+        assert!(ids.len() < 4, "merge not applied: {ids:?}");
+    }
+
+    #[test]
+    fn bpe_encode_is_deterministic_and_compresses() {
+        let text: String = "the quick brown fox jumps over the lazy dog. "
+            .repeat(50);
+        let t = BpeTokenizer::train(&text, 300);
+        let a = t.encode(&text);
+        let b = t.encode(&text);
+        assert_eq!(a, b);
+        assert!(a.len() < text.len(), "{} !< {}", a.len(), text.len());
+        assert!(a.iter().all(|&i| (i as usize) < t.vocab_size()));
+    }
+
+    #[test]
+    fn bpe_handles_unseen_bytes() {
+        let t = BpeTokenizer::train("aaaa bbbb", 258);
+        let ids = t.encode("zzzz");
+        assert_eq!(ids, vec![b'z' as i32; 4]);
+    }
+}

@@ -1,0 +1,179 @@
+//! GLUE-analog full fine-tuning (Tables 7/8 substitute).
+//!
+//! Protocol mirrors the paper's Section 4.4: take a pre-trained checkpoint;
+//! if it was trained with (Switch)LoRA, merge every adapter into the base
+//! weights (`W ← W + s·BA`); then **full** fine-tune a classification head
+//! variant on each downstream task and report accuracy.
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::eval::eval_cls;
+use crate::data::tasks::{Task, TaskGen};
+use crate::model::init::BASE_STD;
+use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::schedule::LrSchedule;
+use crate::optim::AdamHyper;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::tensor::matmul::matmul;
+use crate::util::rng::Rng;
+
+/// Merge all LoRA adapters of a lora-layout store into its base weights,
+/// producing the effective full-rank weights (paper: "all LoRA adapters are
+/// merged into the original weights ... before the fine-tuning process").
+pub fn merge_adapters(store: &mut ParamStore, manifest: &Manifest) {
+    let scale = manifest.config.lora_scale() as f32;
+    for li in &manifest.linears {
+        let a = store.tensor(&li.a).expect("A");
+        let b = store.tensor(&li.b).expect("B");
+        let mut ba = matmul(&b, &a);
+        ba.scale(scale);
+        let w = store.slice_mut(&li.name).expect("W");
+        for (wi, d) in w.iter_mut().zip(&ba.data) {
+            *wi += d;
+        }
+        // zero the adapters so a later re-merge is a no-op
+        store.slice_mut(&li.b).expect("B").fill(0.0);
+    }
+}
+
+/// Build a cls-variant store from a pre-trained store (lora or full),
+/// merging adapters if needed and freshly initializing the class head.
+pub fn to_cls_store(pretrained: &ParamStore, from_variant: Variant,
+                    manifest: &Manifest, seed: u64) -> Result<ParamStore> {
+    let mut src = pretrained.clone();
+    if from_variant == Variant::Lora {
+        merge_adapters(&mut src, manifest);
+    }
+    let cls_layout = std::sync::Arc::new(
+        manifest.layout(Variant::Cls)?.clone());
+    let mut dst = ParamStore::zeros(cls_layout);
+    let copied = crate::model::init::copy_shared(&src, &mut dst);
+    anyhow::ensure!(copied > 0, "no parameters carried into cls store");
+    // fresh classification head
+    let mut rng = Rng::new(seed ^ 0xC15);
+    let head = dst.slice_mut("cls_head").context("cls_head")?;
+    for x in head.iter_mut() {
+        *x = rng.normal_f32(0.0, BASE_STD);
+    }
+    Ok(dst)
+}
+
+#[derive(Clone, Debug)]
+pub struct FinetuneResult {
+    pub task: Task,
+    pub accuracy: f32,
+    pub loss: f32,
+    pub steps: u64,
+}
+
+/// Full fine-tuning of a cls store on one task; returns held-out accuracy.
+#[allow(clippy::too_many_arguments)]
+pub fn finetune_task(engine: &mut Engine, manifest: &Manifest,
+                     cls_store: &mut ParamStore, task: Task, steps: u64,
+                     lr: f32, seed: u64, eval_examples: usize)
+    -> Result<FinetuneResult> {
+    let mc = &manifest.config;
+    let rt = ModelRuntime::load(engine, manifest.clone(), Variant::Cls)?;
+    let layout = cls_store.layout.clone();
+    let padded = rt.padded;
+    let mut opt = AdamState::new(layout.n_trainable, padded);
+    let mut mask = vec![0.0f32; padded];
+    for x in mask.iter_mut().take(layout.n_trainable) {
+        *x = 1.0;
+    }
+    let sched = LrSchedule::cosine(lr, (steps / 10).max(1), steps);
+    let mut gen = TaskGen::new(task, mc.vocab, mc.seq, seed);
+    // held-out eval batches (disjoint stream: different seed)
+    let mut eval_gen = TaskGen::new(task, mc.vocab, mc.seq, seed ^ 0xEEE);
+    let n_eval_batches = (eval_examples / mc.batch).max(1);
+    let eval_batches: Vec<(Vec<i32>, Vec<i32>)> =
+        (0..n_eval_batches).map(|_| eval_gen.batch(mc.batch)).collect();
+
+    for step in 0..steps {
+        let (toks, labels) = gen.batch(mc.batch);
+        let (loss, grad) =
+            rt.cls_fwdbwd(cls_store, &toks, &labels, mc.batch, mc.seq)?;
+        let hyper = AdamHyper::new(sched.lr(step));
+        let mut flat = cls_store.gather_trainable(padded);
+        rt.adam_step(&mut flat, &grad, &mut opt, &mask, &hyper)?;
+        cls_store.scatter_trainable(&flat);
+        if step % 50 == 0 {
+            crate::debuglog!("ft {} step {step} loss {loss:.4}",
+                             task.name());
+        }
+    }
+    let (loss, acc) = eval_cls(&rt, cls_store, &eval_batches, mc.seq)?;
+    crate::info!("finetune {}: acc {:.3} loss {:.4} ({} steps)",
+                 task.name(), acc, loss, steps);
+    Ok(FinetuneResult { task, accuracy: acc, loss, steps })
+}
+
+/// Fine-tune one pre-trained store on a suite of tasks (Table 7/8 row).
+#[allow(clippy::too_many_arguments)]
+pub fn glue_suite(engine: &mut Engine, manifest: &Manifest,
+                  pretrained: &ParamStore, from_variant: Variant,
+                  tasks: &[Task], steps: u64, lr: f32, seed: u64)
+    -> Result<Vec<FinetuneResult>> {
+    let mut out = Vec::new();
+    for &task in tasks {
+        // fresh cls store per task (fine-tuning is independent per task)
+        let mut cls = to_cls_store(pretrained, from_variant, manifest,
+                                   seed)?;
+        out.push(finetune_task(engine, manifest, &mut cls, task, steps, lr,
+                               seed, 256)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::{init_store, InitMode};
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::coordinator::trainer::default_artifacts_dir()
+            .join("tiny");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn merge_preserves_zero_after() {
+        let Some(man) = manifest() else { return };
+        let layout = std::sync::Arc::new(man.lora.clone());
+        let mut store = ParamStore::zeros(layout);
+        let mut rng = Rng::new(0);
+        init_store(&mut store, &man.linears, man.config.rank,
+                   InitMode::SwitchLora, &mut rng);
+        let w_before = store.tensor(&man.linears[0].name).unwrap();
+        merge_adapters(&mut store, &man);
+        // B zeroed, W changed
+        assert!(store
+            .slice(&man.linears[0].b)
+            .unwrap()
+            .iter()
+            .all(|&x| x == 0.0));
+        let w_after = store.tensor(&man.linears[0].name).unwrap();
+        assert!(w_before.max_abs_diff(&w_after) > 0.0);
+        // re-merge is a no-op now
+        let w2 = w_after.clone();
+        merge_adapters(&mut store, &man);
+        assert_eq!(w2.data,
+                   store.tensor(&man.linears[0].name).unwrap().data);
+    }
+
+    #[test]
+    fn cls_store_has_head_and_weights() {
+        let Some(man) = manifest() else { return };
+        let layout = std::sync::Arc::new(man.lora.clone());
+        let mut store = ParamStore::zeros(layout);
+        let mut rng = Rng::new(1);
+        init_store(&mut store, &man.linears, man.config.rank,
+                   InitMode::SwitchLora, &mut rng);
+        let cls = to_cls_store(&store, Variant::Lora, &man, 7).unwrap();
+        assert!(cls.layout.meta("cls_head").is_ok());
+        assert!(cls.layout.meta("lm_head").is_err());
+        // embeddings carried over
+        assert_eq!(cls.slice("embed").unwrap(), store.slice("embed").unwrap());
+    }
+}

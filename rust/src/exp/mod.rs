@@ -1,0 +1,53 @@
+//! Experiment drivers: one entry point per paper table/figure, shared by
+//! the examples, the CLI and the bench targets (see DESIGN.md experiment
+//! index).
+
+pub mod finetune;
+pub mod rank;
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::{Method, RunResult, TrainConfig, Trainer};
+use crate::runtime::Engine;
+
+/// Run one pre-training configuration and return its result + final store.
+pub fn pretrain(engine: &mut Engine, cfg: TrainConfig)
+    -> Result<(RunResult, crate::model::layout::ParamStore)> {
+    let t = Trainer::new(cfg)?;
+    t.run(engine)
+}
+
+/// Compare several methods on one spec (Figure 2/3 + Table 2/3 analog).
+pub fn compare_methods(engine: &mut Engine, spec: &str, steps: u64,
+                       methods: &[Method], out_dir: &std::path::Path,
+                       workers: usize) -> Result<Vec<RunResult>> {
+    let mut out = Vec::new();
+    for m in methods {
+        let mut cfg = TrainConfig::new(spec, m.clone(), steps);
+        cfg.workers = workers;
+        cfg.metrics_csv = Some(out_dir.join(format!(
+            "{spec}_{}.csv", m.name())));
+        let (res, _) = pretrain(engine, cfg)?;
+        crate::info!("{spec}/{}: final eval loss {:.4} ppl {:.2}",
+                     res.method, res.final_eval_loss, res.final_ppl);
+        out.push(res);
+    }
+    Ok(out)
+}
+
+/// Render a compact results table (printed by examples and benches).
+pub fn results_table(title: &str, rows: &[RunResult]) -> String {
+    let mut s = format!("\n== {title} ==\n");
+    s.push_str(&format!(
+        "{:<12} {:<10} {:>10} {:>8} {:>12} {:>12} {:>10}\n",
+        "method", "spec", "eval_loss", "ppl", "trainable",
+        "comm_bytes", "step_ms"));
+    for r in rows {
+        s.push_str(&format!(
+            "{:<12} {:<10} {:>10.4} {:>8.2} {:>12} {:>12} {:>10.1}\n",
+            r.method, r.spec, r.final_eval_loss, r.final_ppl,
+            crate::util::human_params(r.n_trainable as u64),
+            crate::util::human_bytes(r.comm.bytes), r.mean_step_ms));
+    }
+    s
+}

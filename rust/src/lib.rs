@@ -1,0 +1,36 @@
+//! # SwitchLoRA — switched low-rank adaptation pre-training system
+//!
+//! A production-grade reproduction of *“SwitchLoRA: Switched Low-Rank
+//! Adaptation Can Learn Full-Rank Information”* (2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 1 (Pallas)** — tiled matmul / fused LoRA-linear / fused AdamW
+//!   kernels (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **Layer 2 (JAX)** — LLaMA-family decoder with LoRA adapters
+//!   (`python/compile/model.py`), lowered per variant by
+//!   `python/compile/aot.py`.
+//! * **Layer 3 (this crate)** — the coordinator: training orchestration, the
+//!   switching algorithm (paper Alg. 1/2), optimizer-state resets and
+//!   freezes, candidate-vector management with offload accounting, a
+//!   simulated data-parallel runtime with ring all-reduce, baselines
+//!   (full-rank, LoRA, ReLoRA, GaLore), evaluation, checkpointing, metrics
+//!   and the CLI.
+//!
+//! Python never runs on the training path: the binary loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and drives everything
+//! from Rust.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod switchlora;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,276 @@
+//! `switchlora` — the leader binary / launcher.
+//!
+//! ```text
+//! switchlora pretrain --spec s1m --method switchlora --steps 400
+//!            [--lr 2e-2] [--workers 4] [--interval0 40] [--ratio 0.1]
+//!            [--nfreeze 5] [--full-warmup 0] [--out ckpt.bin]
+//!            [--csv curve.csv] [--init switchlora|lora_default]
+//! switchlora finetune --spec s1m --ckpt ckpt.bin --from lora
+//!            [--tasks majority,contains,...] [--steps 150] [--lr 1e-3]
+//! switchlora eval --spec s1m --ckpt ckpt.bin --variant lora
+//! switchlora rank --spec s1m --ckpt ckpt.bin --variant lora
+//! switchlora tables            # analytic Tables 4/5 + App. D/F
+//! switchlora info              # list available artifact specs
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use switchlora::cli::{check_spec, csv_list, Args};
+use switchlora::coordinator::checkpoint;
+use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
+                                       TrainConfig};
+use switchlora::data::tasks::Task;
+use switchlora::exp;
+use switchlora::model::analytics as an;
+use switchlora::model::config::ModelConfig;
+use switchlora::model::init::InitMode;
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::runtime::Engine;
+use switchlora::util::{human_bytes, human_params};
+
+fn main() {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand().unwrap_or("help") {
+        "pretrain" => cmd_pretrain(args),
+        "finetune" => cmd_finetune(args),
+        "eval" => cmd_eval(args),
+        "rank" => cmd_rank(args),
+        "tables" => cmd_tables(),
+        "info" => cmd_info(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "switchlora — switched low-rank adaptation pre-training\n\
+subcommands: pretrain finetune eval rank tables info\n\
+see `rust/src/main.rs` header or README.md for full flag reference\n";
+
+fn method_from_args(args: &Args) -> Result<Method> {
+    let name = args.get_or("method", "switchlora");
+    let mut m = Method::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown method {name:?}"))?;
+    match &mut m {
+        Method::SwitchLora(p) => {
+            p.interval0 = args.parse_num("interval0", p.interval0)?;
+            p.ratio = args.parse_num("ratio", p.ratio)?;
+            p.n_freeze = args.parse_num("nfreeze", p.n_freeze)?;
+        }
+        Method::ReLora(p) => {
+            p.reset_interval =
+                args.parse_num("reset-interval", p.reset_interval)?;
+            p.rewarm = args.parse_num("rewarm", p.rewarm)?;
+        }
+        Method::Galore(p) => {
+            p.rank = args.parse_num("galore-rank", p.rank)?;
+            p.update_freq = args.parse_num("update-freq", p.update_freq)?;
+            p.scale = args.parse_num("galore-scale", p.scale)?;
+        }
+        _ => {}
+    }
+    Ok(m)
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "tiny");
+    let artifacts = default_artifacts_dir();
+    check_spec(&artifacts, &spec)?;
+    let method = method_from_args(args)?;
+    let steps = args.parse_num("steps", 200u64)?;
+    let mut cfg = TrainConfig::new(&spec, method, steps);
+    cfg.peak_lr = args.parse_num("lr", 0.0f32)?;
+    cfg.warmup = args.parse_num("warmup", cfg.warmup)?;
+    cfg.weight_decay = args.parse_num("wd", 0.0f32)?;
+    cfg.seed = args.parse_num("seed", 42u64)?;
+    cfg.workers = args.parse_num("workers", 1usize)?;
+    cfg.eval_every = args.parse_num("eval-every", 0u64)?;
+    cfg.full_warmup_steps = args.parse_num("full-warmup", 0u64)?;
+    cfg.init = match args.get_or("init", "switchlora").as_str() {
+        "switchlora" => InitMode::SwitchLora,
+        "lora_default" => InitMode::LoraDefault,
+        other => bail!("unknown --init {other:?}"),
+    };
+    cfg.metrics_csv = args.get("csv").map(PathBuf::from);
+    let mut engine = Engine::cpu()?;
+    let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
+    print!("{}", exp::results_table("pretrain", &[res.clone()]));
+    println!("comm bytes/step: {}  offload bytes/step: {}  switches: {}",
+             human_bytes((res.comm.bytes as f64 / steps as f64) as u64),
+             human_bytes((res.offload_bytes as f64 / steps as f64) as u64),
+             res.total_switches);
+    if let Some(out) = args.get("out") {
+        checkpoint::save(&PathBuf::from(out), &spec, &store, None)?;
+        println!("checkpoint written to {out}");
+    }
+    Ok(())
+}
+
+fn load_store(manifest: &Manifest, variant: Variant, ckpt: &str)
+    -> Result<ParamStore> {
+    let layout =
+        std::sync::Arc::new(manifest.layout(variant)?.clone());
+    let mut store = ParamStore::zeros(layout);
+    let ck = checkpoint::load(&PathBuf::from(ckpt))?;
+    let (loaded, missing) = ck.restore_into(&mut store);
+    switchlora::info!("checkpoint: {loaded} params loaded, {missing} \
+                       skipped");
+    Ok(store)
+}
+
+fn variant_from_args(args: &Args) -> Result<Variant> {
+    Ok(match args.get_or("variant", "lora").as_str() {
+        "lora" => Variant::Lora,
+        "full" => Variant::Full,
+        "cls" => Variant::Cls,
+        other => bail!("unknown --variant {other:?}"),
+    })
+}
+
+fn cmd_finetune(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "tiny");
+    let artifacts = default_artifacts_dir();
+    check_spec(&artifacts, &spec)?;
+    let manifest = Manifest::load(&artifacts.join(&spec))?;
+    let from = match args.get_or("from", "lora").as_str() {
+        "lora" => Variant::Lora,
+        "full" => Variant::Full,
+        other => bail!("--from must be lora|full, got {other:?}"),
+    };
+    let store = load_store(&manifest, from, args.req("ckpt")?)?;
+    let tasks: Vec<Task> = csv_list(&args.get_or(
+        "tasks", "majority,contains,pairmatch,parity,recall"))
+        .iter()
+        .map(|t| Task::from_name(t)
+            .ok_or_else(|| anyhow::anyhow!("unknown task {t:?}")))
+        .collect::<Result<_>>()?;
+    let steps = args.parse_num("steps", 150u64)?;
+    let lr = args.parse_num("lr", 1e-3f32)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let mut engine = Engine::cpu()?;
+    let results = exp::finetune::glue_suite(&mut engine, &manifest, &store,
+                                            from, &tasks, steps, lr, seed)?;
+    println!("\n{:<12} {:>8} {:>8}", "task", "acc", "loss");
+    let mut mean = 0.0;
+    for r in &results {
+        println!("{:<12} {:>8.3} {:>8.4}", r.task.name(), r.accuracy,
+                 r.loss);
+        mean += r.accuracy;
+    }
+    println!("{:<12} {:>8.3}", "average", mean / results.len() as f32);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "tiny");
+    let artifacts = default_artifacts_dir();
+    check_spec(&artifacts, &spec)?;
+    let manifest = Manifest::load(&artifacts.join(&spec))?;
+    let variant = variant_from_args(args)?;
+    let store = load_store(&manifest, variant, args.req("ckpt")?)?;
+    let mut engine = Engine::cpu()?;
+    let rt = switchlora::runtime::ModelRuntime::load(&mut engine,
+                                                     manifest.clone(),
+                                                     variant)?;
+    let mc = &manifest.config;
+    let set = switchlora::data::dataset::EvalSet::synth(
+        mc.vocab, args.parse_num("seed", 42u64)?, mc.batch, mc.seq,
+        args.parse_num("batches", 16usize)?);
+    let loss = switchlora::coordinator::eval::eval_loss(&rt, &store, &set)?;
+    println!("eval loss {loss:.4}  ppl {:.2}  ({} tokens)",
+             (loss as f64).exp(), set.n_tokens());
+    Ok(())
+}
+
+fn cmd_rank(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "tiny");
+    let artifacts = default_artifacts_dir();
+    check_spec(&artifacts, &spec)?;
+    let manifest = Manifest::load(&artifacts.join(&spec))?;
+    let variant = variant_from_args(args)?;
+    let store = load_store(&manifest, variant, args.req("ckpt")?)?;
+    let rows = exp::rank::analyze(&store, &manifest, variant)?;
+    println!("singular-value spectra ({} variant):\n{}", variant.key(),
+             exp::rank::table(&rows));
+    Ok(())
+}
+
+fn cmd_tables() -> Result<()> {
+    // Table 4
+    println!("== Table 4: trainable parameters (paper architectures) ==");
+    println!("{:<8} {:>12} {:>14} {:>14}", "model", "full",
+             "lora r=h/8", "lora r=h/4");
+    for c in ModelConfig::paper_presets() {
+        let full = an::full_params(&c);
+        let r1 = (c.hidden / 8) as u64;
+        let r2 = (c.hidden / 4) as u64;
+        println!("{:<8} {:>12} {:>14} {:>14}", c.name, human_params(full),
+                 human_params(an::lora_trainable_params(&c, r1)),
+                 human_params(an::lora_trainable_params(&c, r2)));
+    }
+    // Table 5
+    println!("\n== Table 5: memory model (4 GPUs, rank=h/4) ==");
+    println!("{:<8} {:>4} {:<11} {:>12} {:>10} {:>12} {:>12}",
+             "model", "bs", "method", "trainable", "mem", "comm/step",
+             "offload/step");
+    for (name, bs) in [("p1b", 16u64), ("p3b", 4), ("p7b", 1)] {
+        let c = ModelConfig::paper_preset(name).unwrap();
+        let r = (c.hidden / 4) as u64;
+        for (meth, tr) in [("full", an::full_params(&c)),
+                           ("switchlora",
+                            an::lora_trainable_params(&c, r))] {
+            let mem = an::memory_model(&c, tr, bs, 4).total();
+            let comm = an::dp_comm_bytes_per_step(tr, 4);
+            let off = if meth == "switchlora" {
+                an::offload_bytes_per_step(&c, r, 1.0 / 40.0)
+            } else {
+                0
+            };
+            println!("{:<8} {:>4} {:<11} {:>12} {:>10} {:>12} {:>12}",
+                     name, bs, meth, human_params(tr), human_bytes(mem),
+                     human_bytes(comm), human_bytes(off));
+        }
+    }
+    // Appendix F headline
+    let c = ModelConfig::paper_preset("p1b").unwrap();
+    println!("\nAppendix F: 1.3B r=512 communication saving: {:.1}% \
+              (paper: 54%)",
+             100.0 * an::comm_saving_fraction(&c, 512));
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let artifacts = default_artifacts_dir();
+    println!("artifacts dir: {}", artifacts.display());
+    let mut specs: Vec<String> = std::fs::read_dir(&artifacts)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .filter(|e| e.path().join("manifest.json").exists())
+                .map(|e| e.file_name().to_string_lossy().into_owned())
+                .collect()
+        })
+        .unwrap_or_default();
+    specs.sort();
+    for s in specs {
+        let man = Manifest::load(&artifacts.join(&s))?;
+        println!(
+            "  {:<10} h={:<4} L={:<2} vocab={:<5} seq={:<4} r={:<4} \
+             trainable lora/full = {} / {}",
+            s, man.config.hidden, man.config.layers, man.config.vocab,
+            man.config.seq, man.config.rank,
+            human_params(man.lora.n_trainable as u64),
+            human_params(man.full.n_trainable as u64));
+    }
+    Ok(())
+}

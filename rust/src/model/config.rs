@@ -1,0 +1,99 @@
+//! Model configuration: parsed from `manifest.json` (runnable configs) or
+//! constructed from the paper's Table 1 / Table 9 presets (analytics only).
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ff: usize,
+    pub seq: usize,
+    pub rank: usize,
+    pub lora_alpha: f64,
+    pub batch: usize,
+    pub n_cls: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    pub fn lora_scale(&self) -> f64 {
+        self.lora_alpha / self.rank as f64
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab: j.get("vocab")?.as_usize()?,
+            hidden: j.get("hidden")?.as_usize()?,
+            layers: j.get("layers")?.as_usize()?,
+            heads: j.get("heads")?.as_usize()?,
+            ff: j.get("ff")?.as_usize()?,
+            seq: j.get("seq")?.as_usize()?,
+            rank: j.get("rank")?.as_usize()?,
+            lora_alpha: j.get("lora_alpha")?.as_f64()?,
+            batch: j.get("batch")?.as_usize()?,
+            n_cls: j.get("n_cls")?.as_usize()?,
+        })
+    }
+
+    fn preset(name: &str, vocab: usize, hidden: usize, layers: usize,
+              heads: usize, ff: usize, seq: usize, rank: usize,
+              batch: usize) -> ModelConfig {
+        ModelConfig {
+            name: name.to_string(), vocab, hidden, layers, heads, ff, seq,
+            rank, lora_alpha: rank as f64, batch, n_cls: 4,
+        }
+    }
+
+    /// The paper's architectures (Table 1 + Table 9).  Never lowered to
+    /// HLO here — they drive the analytic Tables 4/5 reproduction.
+    pub fn paper_presets() -> Vec<ModelConfig> {
+        vec![
+            Self::preset("p130m", 32000, 768, 12, 12, 2048, 256, 128, 600),
+            Self::preset("p250m", 32000, 768, 24, 16, 2560, 512, 128, 1152),
+            Self::preset("p350m", 32000, 1024, 24, 16, 2736, 512, 128, 1152),
+            Self::preset("p1b", 32000, 2048, 24, 32, 5461, 512, 512, 1536),
+            Self::preset("p3b", 32000, 2560, 32, 32, 6826, 512, 640, 1536),
+            Self::preset("p7b", 32000, 4096, 32, 32, 11008, 512, 1024, 1536),
+        ]
+    }
+
+    pub fn paper_preset(name: &str) -> Option<ModelConfig> {
+        Self::paper_presets().into_iter().find(|c| c.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_from_json() {
+        let j = Json::parse(
+            r#"{"name":"tiny","vocab":256,"hidden":64,"layers":2,
+                "heads":4,"ff":128,"seq":64,"rank":16,"lora_alpha":16.0,
+                "batch":8,"n_cls":4,"head_dim":16}"#).unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c.hidden, 64);
+        assert_eq!(c.head_dim(), 16);
+        assert_eq!(c.lora_scale(), 1.0);
+    }
+
+    #[test]
+    fn paper_presets_match_table1() {
+        let p = ModelConfig::paper_preset("p1b").unwrap();
+        assert_eq!((p.hidden, p.heads, p.layers, p.batch, p.seq),
+                   (2048, 32, 24, 1536, 512));
+        let p7 = ModelConfig::paper_preset("p7b").unwrap();
+        assert_eq!((p7.hidden, p7.layers), (4096, 32));
+    }
+}

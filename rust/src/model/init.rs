@@ -1,0 +1,198 @@
+//! Parameter initialization (paper Section 2.2 Eq. (3) / Appendix A).
+//!
+//! * `SwitchLora` — the paper's init: both A and B (and every candidate
+//!   vector) drawn uniform with std from Eq. (3):
+//!     std[B] = (r/√(mn))^(1/4) · gain^(1/2)
+//!     std[A] = (√(mr)/(n√n))^(1/4) · gain^(1/2)
+//! * `LoraDefault` — Hu et al. 2022: A Kaiming-uniform, B = 0 (the Figure 9
+//!   ablation baseline).
+//!
+//! Base weights / embeddings / heads use N(0, 0.02²) (the small-LLaMA
+//! convention the paper inherits from ReLoRA); norms start at 1.
+
+use std::collections::HashMap;
+
+use super::layout::{LinearMeta, ParamStore, Role};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitMode {
+    SwitchLora,
+    LoraDefault,
+}
+
+pub const BASE_STD: f32 = 0.02;
+
+/// Eq. (3) standard deviations: returns (std_B, std_A) for a linear with
+/// out-dim `m`, in-dim `n`, LoRA rank `r`.
+pub fn switchlora_stds(m: usize, n: usize, r: usize, gain: f64)
+    -> (f64, f64) {
+    let (m, n, r) = (m as f64, n as f64, r as f64);
+    let std_b = (r / (m * n).sqrt()).powf(0.25) * gain.sqrt();
+    let std_a = ((m * r).sqrt() / (n * n.sqrt())).powf(0.25) * gain.sqrt();
+    (std_b, std_a)
+}
+
+/// Uniform(-lim, lim) has std lim/√3; invert to hit a target std.
+fn uniform_lim_for_std(std: f64) -> f32 {
+    (std * 3.0_f64.sqrt()) as f32
+}
+
+fn fill_uniform(buf: &mut [f32], lim: f32, rng: &mut Rng) {
+    for x in buf.iter_mut() {
+        *x = rng.uniform_range(-lim, lim);
+    }
+}
+
+fn fill_normal(buf: &mut [f32], std: f32, rng: &mut Rng) {
+    for x in buf.iter_mut() {
+        *x = rng.normal_f32(0.0, std);
+    }
+}
+
+/// Map each LoRA param name to its linear's (m, n).
+pub fn lora_dims(linears: &[LinearMeta]) -> HashMap<String, (usize, usize)> {
+    let mut map = HashMap::new();
+    for li in linears {
+        map.insert(li.a.clone(), (li.m, li.n));
+        map.insert(li.b.clone(), (li.m, li.n));
+    }
+    map
+}
+
+/// Initialize every parameter in the store.
+pub fn init_store(store: &mut ParamStore, linears: &[LinearMeta], rank: usize,
+                  mode: InitMode, rng: &mut Rng) {
+    let dims = lora_dims(linears);
+    let metas: Vec<_> = store.layout.params.clone();
+    for p in &metas {
+        let buf = &mut store.data[p.offset..p.offset + p.numel];
+        match p.role {
+            Role::Norm => buf.fill(1.0),
+            Role::Embed | Role::Head | Role::ClsHead | Role::Base => {
+                fill_normal(buf, BASE_STD, rng);
+            }
+            Role::LoraA => {
+                let (m, n) = dims[&p.name];
+                match mode {
+                    InitMode::SwitchLora => {
+                        let (_, std_a) = switchlora_stds(m, n, rank, 1.0);
+                        fill_uniform(buf, uniform_lim_for_std(std_a), rng);
+                    }
+                    InitMode::LoraDefault => {
+                        // Kaiming-uniform with fan_in = n
+                        let lim = (6.0 / n as f64).sqrt() as f32;
+                        fill_uniform(buf, lim, rng);
+                    }
+                }
+            }
+            Role::LoraB => {
+                let (m, n) = dims[&p.name];
+                match mode {
+                    InitMode::SwitchLora => {
+                        let (std_b, _) = switchlora_stds(m, n, rank, 1.0);
+                        fill_uniform(buf, uniform_lim_for_std(std_b), rng);
+                    }
+                    InitMode::LoraDefault => buf.fill(0.0),
+                }
+            }
+        }
+    }
+}
+
+/// Copy shared parameters between two stores by name (e.g. pre-trained LoRA
+/// store → full/cls store for fine-tuning, after merging adapters).
+pub fn copy_shared(src: &ParamStore, dst: &mut ParamStore) -> usize {
+    let mut copied = 0;
+    let names: Vec<String> =
+        dst.layout.params.iter().map(|p| p.name.clone()).collect();
+    for name in names {
+        if let (Ok(s), Ok(_)) = (src.slice(&name), dst.layout.meta(&name)) {
+            let s = s.to_vec();
+            let d = dst.slice_mut(&name).unwrap();
+            if s.len() == d.len() {
+                d.copy_from_slice(&s);
+                copied += 1;
+            }
+        }
+    }
+    copied
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::{Layout, ParamMeta};
+    use std::sync::Arc;
+
+    fn toy() -> (ParamStore, Vec<LinearMeta>) {
+        let layout = Layout::from_metas(vec![
+            ParamMeta { name: "n0".into(), shape: vec![8], role: Role::Norm,
+                        trainable: true, numel: 8, offset: 0,
+                        t_offset: None },
+            ParamMeta { name: "w".into(), shape: vec![32, 16],
+                        role: Role::Base, trainable: false, numel: 512,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "w.a".into(), shape: vec![4, 16],
+                        role: Role::LoraA, trainable: true, numel: 64,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "w.b".into(), shape: vec![32, 4],
+                        role: Role::LoraB, trainable: true, numel: 128,
+                        offset: 0, t_offset: None },
+        ]);
+        let store = ParamStore::zeros(Arc::new(layout));
+        let linears = vec![LinearMeta {
+            name: "w".into(), a: "w.a".into(), b: "w.b".into(), m: 32, n: 16,
+        }];
+        (store, linears)
+    }
+
+    fn std_of(xs: &[f32]) -> f64 {
+        let n = xs.len() as f64;
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / n;
+        (xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n)
+            .sqrt()
+    }
+
+    #[test]
+    fn switchlora_init_hits_eq3_stds() {
+        let (mut s, lins) = toy();
+        let mut rng = Rng::new(0);
+        init_store(&mut s, &lins, 4, InitMode::SwitchLora, &mut rng);
+        let (std_b, std_a) = switchlora_stds(32, 16, 4, 1.0);
+        assert!((std_of(s.slice("w.a").unwrap()) - std_a).abs() / std_a < 0.3);
+        assert!((std_of(s.slice("w.b").unwrap()) - std_b).abs() / std_b < 0.3);
+        assert!(s.slice("n0").unwrap().iter().all(|&x| x == 1.0));
+        assert!((std_of(s.slice("w").unwrap()) - 0.02).abs() < 0.01);
+    }
+
+    #[test]
+    fn lora_default_has_zero_b() {
+        let (mut s, lins) = toy();
+        let mut rng = Rng::new(1);
+        init_store(&mut s, &lins, 4, InitMode::LoraDefault, &mut rng);
+        assert!(s.slice("w.b").unwrap().iter().all(|&x| x == 0.0));
+        assert!(std_of(s.slice("w.a").unwrap()) > 0.0);
+    }
+
+    #[test]
+    fn stds_formula_spot_check() {
+        let (std_b, std_a) = switchlora_stds(64, 128, 16, 1.0);
+        let want_b = (16.0 / (64.0f64 * 128.0).sqrt()).powf(0.25);
+        let want_a =
+            ((64.0f64 * 16.0).sqrt() / (128.0 * 128.0f64.sqrt())).powf(0.25);
+        assert!((std_b - want_b).abs() < 1e-12);
+        assert!((std_a - want_a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copy_shared_by_name() {
+        let (mut a, lins) = toy();
+        let mut rng = Rng::new(2);
+        init_store(&mut a, &lins, 4, InitMode::SwitchLora, &mut rng);
+        let (mut b, _) = toy();
+        let n = copy_shared(&a, &mut b);
+        assert_eq!(n, 4);
+        assert_eq!(a.slice("w").unwrap(), b.slice("w").unwrap());
+    }
+}

@@ -1,0 +1,404 @@
+//! Manifest-driven parameter layout: the Python↔Rust contract.
+//!
+//! `aot.py` serializes `model.param_spec(...)` into `manifest.json`; this
+//! module parses it into a `Layout` (ordered parameter metadata with flat
+//! offsets) and a `ParamStore` (one contiguous f32 buffer holding every
+//! parameter).  The trainable subset additionally gets a second, packed
+//! flat addressing (`t_offset`) used by the fused Adam executable and the
+//! gradient all-reduce.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::config::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Embed,
+    Norm,
+    Base,
+    LoraA,
+    LoraB,
+    Head,
+    ClsHead,
+}
+
+impl Role {
+    fn parse(s: &str) -> Result<Role> {
+        Ok(match s {
+            "embed" => Role::Embed,
+            "norm" => Role::Norm,
+            "base" => Role::Base,
+            "lora_a" => Role::LoraA,
+            "lora_b" => Role::LoraB,
+            "head" => Role::Head,
+            "cls_head" => Role::ClsHead,
+            _ => bail!("unknown role {s:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: Role,
+    pub trainable: bool,
+    pub numel: usize,
+    /// offset into the full flat store
+    pub offset: usize,
+    /// offset into the packed trainable vector (None if frozen)
+    pub t_offset: Option<usize>,
+}
+
+impl ParamMeta {
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        if self.shape.len() > 1 { self.shape[1] } else { 1 }
+    }
+}
+
+/// One LoRA-adapted linear (drives the switch algorithm).
+#[derive(Clone, Debug)]
+pub struct LinearMeta {
+    pub name: String,
+    pub a: String,
+    pub b: String,
+    /// out dim (rows of W and of B)
+    pub m: usize,
+    /// in dim (cols of W, cols of A)
+    pub n: usize,
+}
+
+/// Ordered parameter layout with flat offsets.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub params: Vec<ParamMeta>,
+    pub by_name: HashMap<String, usize>,
+    pub total: usize,
+    pub n_trainable: usize,
+}
+
+impl Layout {
+    pub fn from_metas(mut params: Vec<ParamMeta>) -> Layout {
+        // Trainable parameters are packed FIRST in the store, in layout
+        // order, so that the store prefix [0, n_trainable) *is* the packed
+        // trainable vector (offset == t_offset) — gather/scatter for the
+        // fused Adam kernel and the gradient all-reduce become single
+        // memcpys (§Perf L3).  Frozen parameters follow.
+        let mut t_offset = 0;
+        for p in params.iter_mut() {
+            if p.trainable {
+                p.offset = t_offset;
+                p.t_offset = Some(t_offset);
+                t_offset += p.numel;
+            }
+        }
+        let n_trainable = t_offset;
+        let mut offset = n_trainable;
+        for p in params.iter_mut() {
+            if !p.trainable {
+                p.offset = offset;
+                p.t_offset = None;
+                offset += p.numel;
+            }
+        }
+        let by_name = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.clone(), i))
+            .collect();
+        Layout { params, by_name, total: offset, n_trainable }
+    }
+
+    fn from_json(arr: &[Json]) -> Result<Layout> {
+        let mut metas = Vec::with_capacity(arr.len());
+        for j in arr {
+            let shape: Vec<usize> = j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            metas.push(ParamMeta {
+                name: j.get("name")?.as_str()?.to_string(),
+                role: Role::parse(j.get("role")?.as_str()?)?,
+                trainable: j.get("trainable")?.as_bool()?,
+                numel: j.get("numel")?.as_usize()?,
+                shape,
+                offset: 0,
+                t_offset: None,
+            });
+        }
+        for m in &metas {
+            let numel: usize = m.shape.iter().product();
+            if numel != m.numel {
+                bail!("param {}: numel {} != shape product {numel}",
+                      m.name, m.numel);
+            }
+        }
+        Ok(Layout::from_metas(metas))
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&ParamMeta> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.params[i])
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))
+    }
+
+    /// Trainable params in order (the grad-output order of fwdbwd HLO).
+    pub fn trainable(&self) -> impl Iterator<Item = &ParamMeta> {
+        self.params.iter().filter(|p| p.trainable)
+    }
+}
+
+/// Which model variant a layout/artifact belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Lora,
+    Full,
+    Cls,
+}
+
+impl Variant {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Variant::Lora => "lora",
+            Variant::Full => "full",
+            Variant::Cls => "cls",
+        }
+    }
+}
+
+/// Parsed `manifest.json` for one AOT'd spec.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub variants: Vec<String>,
+    pub lora: Layout,
+    pub full: Layout,
+    pub cls: Option<Layout>,
+    pub linears: Vec<LinearMeta>,
+    pub adam_padded_lora: usize,
+    pub adam_padded_full: usize,
+    pub adam_padded_cls: Option<usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("manifest in {}", dir.display()))?;
+        let config = ModelConfig::from_json(j.get("config")?)?;
+        let lora = Layout::from_json(j.get("params_lora")?.as_arr()?)?;
+        let full = Layout::from_json(j.get("params_full")?.as_arr()?)?;
+        let cls = match j.opt("params_cls") {
+            Some(arr) => Some(Layout::from_json(arr.as_arr()?)?),
+            None => None,
+        };
+        let mut linears = Vec::new();
+        for lj in j.get("linears")?.as_arr()? {
+            linears.push(LinearMeta {
+                name: lj.get("name")?.as_str()?.to_string(),
+                a: lj.get("a")?.as_str()?.to_string(),
+                b: lj.get("b")?.as_str()?.to_string(),
+                m: lj.get("m")?.as_usize()?,
+                n: lj.get("n")?.as_usize()?,
+            });
+        }
+        let variants = j
+            .get("variants")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            variants,
+            lora,
+            full,
+            cls,
+            linears,
+            adam_padded_lora: j.get("adam_padded_lora")?.as_usize()?,
+            adam_padded_full: j.get("adam_padded_full")?.as_usize()?,
+            adam_padded_cls: match j.opt("adam_padded_cls") {
+                Some(v) => Some(v.as_usize()?),
+                None => None,
+            },
+        })
+    }
+
+    pub fn layout(&self, v: Variant) -> Result<&Layout> {
+        match v {
+            Variant::Lora => Ok(&self.lora),
+            Variant::Full => Ok(&self.full),
+            Variant::Cls => self
+                .cls
+                .as_ref()
+                .ok_or_else(|| anyhow!("manifest has no cls variant")),
+        }
+    }
+
+    pub fn adam_padded(&self, v: Variant) -> Result<usize> {
+        match v {
+            Variant::Lora => Ok(self.adam_padded_lora),
+            Variant::Full => Ok(self.adam_padded_full),
+            Variant::Cls => self
+                .adam_padded_cls
+                .ok_or_else(|| anyhow!("manifest has no cls variant")),
+        }
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Path of the shared fused-Adam artifact for a trainable size.
+    pub fn adam_hlo_path(&self, padded: usize) -> PathBuf {
+        self.dir
+            .parent()
+            .unwrap_or(&self.dir)
+            .join(format!("adam_{padded}.hlo.txt"))
+    }
+}
+
+/// One contiguous f32 buffer holding every parameter of a layout.
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub layout: std::sync::Arc<Layout>,
+    pub data: Vec<f32>,
+}
+
+impl ParamStore {
+    pub fn zeros(layout: std::sync::Arc<Layout>) -> ParamStore {
+        let data = vec![0.0; layout.total];
+        ParamStore { layout, data }
+    }
+
+    pub fn slice(&self, name: &str) -> Result<&[f32]> {
+        let m = self.layout.meta(name)?;
+        Ok(&self.data[m.offset..m.offset + m.numel])
+    }
+
+    pub fn slice_mut(&mut self, name: &str) -> Result<&mut [f32]> {
+        let m = self.layout.meta(name)?.clone();
+        Ok(&mut self.data[m.offset..m.offset + m.numel])
+    }
+
+    /// Copy a parameter out as a Tensor (rank-analysis / checkpoints).
+    pub fn tensor(&self, name: &str) -> Result<crate::tensor::Tensor> {
+        let m = self.layout.meta(name)?;
+        Ok(crate::tensor::Tensor::from_vec(
+            m.rows(),
+            m.cols(),
+            self.slice(name)?.to_vec(),
+        ))
+    }
+
+    /// Gather the packed trainable vector (padded to `padded` with zeros).
+    /// Because trainable params are packed first (offset == t_offset) this
+    /// is a single memcpy of the store prefix.
+    pub fn gather_trainable(&self, padded: usize) -> Vec<f32> {
+        let n = self.layout.n_trainable;
+        let mut out = vec![0.0; padded.max(n)];
+        out[..n].copy_from_slice(&self.data[..n]);
+        out
+    }
+
+    /// Scatter a packed trainable vector back into the store (single
+    /// memcpy of the trainable prefix).
+    pub fn scatter_trainable(&mut self, flat: &[f32]) {
+        let n = self.layout.n_trainable;
+        self.data[..n].copy_from_slice(&flat[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn toy_layout() -> Layout {
+        Layout::from_metas(vec![
+            ParamMeta { name: "w".into(), shape: vec![2, 3], role: Role::Base,
+                        trainable: false, numel: 6, offset: 0,
+                        t_offset: None },
+            ParamMeta { name: "a".into(), shape: vec![1, 3],
+                        role: Role::LoraA, trainable: true, numel: 3,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "b".into(), shape: vec![2, 1],
+                        role: Role::LoraB, trainable: true, numel: 2,
+                        offset: 0, t_offset: None },
+        ])
+    }
+
+    #[test]
+    fn offsets_trainable_first() {
+        let l = toy_layout();
+        assert_eq!(l.total, 11);
+        assert_eq!(l.n_trainable, 5);
+        // trainable packed first (offset == t_offset), frozen after
+        assert_eq!(l.meta("a").unwrap().offset, 0);
+        assert_eq!(l.meta("b").unwrap().offset, 3);
+        assert_eq!(l.meta("w").unwrap().offset, 5);
+        assert_eq!(l.meta("a").unwrap().t_offset, Some(0));
+        assert_eq!(l.meta("b").unwrap().t_offset, Some(3));
+        assert_eq!(l.meta("w").unwrap().t_offset, None);
+        for p in l.trainable() {
+            assert_eq!(p.offset, p.t_offset.unwrap());
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let l = Arc::new(toy_layout());
+        let mut s = ParamStore::zeros(l);
+        for (i, x) in s.data.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let flat = s.gather_trainable(8);
+        assert_eq!(flat.len(), 8);
+        assert_eq!(&flat[..5], &[0., 1., 2., 3., 4.]);
+        assert_eq!(&flat[5..], &[0., 0., 0.]);
+        let mut flat2 = flat.clone();
+        for x in flat2.iter_mut() {
+            *x += 100.0;
+        }
+        s.scatter_trainable(&flat2);
+        assert_eq!(s.slice("a").unwrap(), &[100., 101., 102.]);
+        assert_eq!(s.slice("b").unwrap(), &[103., 104.]);
+        assert_eq!(s.slice("w").unwrap(), &[5., 6., 7., 8., 9., 10.]);
+    }
+
+    #[test]
+    fn load_real_manifest_if_built() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.config.name, "tiny");
+        assert!(man.lora.n_trainable < man.full.n_trainable);
+        assert_eq!(man.linears.len(), 7 * man.config.layers);
+        assert!(man.adam_padded_lora >= man.lora.n_trainable);
+        // every linear's params exist with consistent shapes
+        for li in &man.linears {
+            let w = man.lora.meta(&li.name).unwrap();
+            let a = man.lora.meta(&li.a).unwrap();
+            let b = man.lora.meta(&li.b).unwrap();
+            assert_eq!(w.shape, vec![li.m, li.n]);
+            assert_eq!(a.shape[1], li.n);
+            assert_eq!(b.shape[0], li.m);
+            assert!(!w.trainable && a.trainable && b.trainable);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Model-side substrate: configuration presets, the manifest-driven
+//! parameter layout (the Python↔Rust contract), initialization rules, and
+//! the analytic parameter/memory/communication models behind the paper's
+//! Tables 4/5 and Appendices D/F.
+
+pub mod analytics;
+pub mod config;
+pub mod init;
+pub mod layout;

@@ -1,0 +1,201 @@
+//! AdamW state over the packed trainable vector, with **per-element step
+//! counts** and span-level resets — the Appendix D optimizer modification
+//! generalized from per-row/column to per-element granularity.
+//!
+//! The actual hot-path update runs inside the fused Pallas/HLO kernel
+//! (`python/compile/kernels/adam.py`); `host_step` here implements the
+//! identical math for (a) the GaLore baseline (whose projection needs host
+//! control between grad and update) and (b) differential testing of the
+//! kernel (`rust/tests/test_runtime.rs`).
+
+use super::AdamHyper;
+
+/// A (possibly strided) span of elements in the packed trainable vector.
+/// `stride == 1` is a contiguous row; LoRA-B columns have `stride == rank`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub offset: usize,
+    pub stride: usize,
+    pub count: usize,
+}
+
+impl Span {
+    pub fn contiguous(offset: usize, count: usize) -> Span {
+        Span { offset, stride: 1, count }
+    }
+
+    pub fn indices(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.count).map(move |k| self.offset + k * self.stride)
+    }
+
+    pub fn end(&self) -> usize {
+        if self.count == 0 {
+            self.offset
+        } else {
+            self.offset + (self.count - 1) * self.stride + 1
+        }
+    }
+}
+
+/// Adam moments + per-element step counts, padded like the kernel buffers.
+#[derive(Clone, Debug)]
+pub struct AdamState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// per-element step counts (f32 to match the kernel layout)
+    pub s: Vec<f32>,
+}
+
+impl AdamState {
+    /// `n` live elements padded to `padded` (padding lanes get step=1 so
+    /// bias correction never divides by zero — they are masked anyway).
+    pub fn new(n: usize, padded: usize) -> AdamState {
+        let padded = padded.max(n);
+        let mut s = vec![0.0; padded];
+        for x in s.iter_mut().skip(n) {
+            *x = 1.0;
+        }
+        AdamState { m: vec![0.0; padded], v: vec![0.0; padded], s }
+    }
+
+    pub fn len(&self) -> usize {
+        self.m.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.m.is_empty()
+    }
+
+    /// Zero the moments and step counts of a span — the Algorithm 1 line 3
+    /// `opt_state(Q_i,:) ← 0`.
+    pub fn reset_span(&mut self, span: Span) {
+        for i in span.indices() {
+            self.m[i] = 0.0;
+            self.v[i] = 0.0;
+            self.s[i] = 0.0;
+        }
+    }
+}
+
+/// One AdamW step on host buffers; bit-compatible with the fused kernel:
+///   s' = s + mask;  m' = mask?(b1 m + (1-b1) g):m;  v' likewise;
+///   p' = p - mask·lr·( m̂/(√v̂+eps) + wd·p ).
+pub fn host_step(p: &mut [f32], g: &[f32], st: &mut AdamState, mask: &[f32],
+                 h: &AdamHyper) {
+    let n = p.len();
+    assert!(g.len() >= n && mask.len() >= n && st.len() >= n);
+    for i in 0..n {
+        let mk = mask[i];
+        let s_new = st.s[i] + mk;
+        let m_new = mk * (h.beta1 * st.m[i] + (1.0 - h.beta1) * g[i])
+            + (1.0 - mk) * st.m[i];
+        let v_new = mk * (h.beta2 * st.v[i] + (1.0 - h.beta2) * g[i] * g[i])
+            + (1.0 - mk) * st.v[i];
+        // Frozen lanes can have s == 0 (reset + freeze of a switched
+        // vector); clamp the bias-correction clock so 1-b^0 never divides.
+        // Live lanes (mask == 1) always have s_new >= 1.
+        let s_c = s_new.max(1.0);
+        let c1 = 1.0 - h.beta1.powf(s_c);
+        let c2 = 1.0 - h.beta2.powf(s_c);
+        let mhat = m_new / c1;
+        let vhat = v_new / c2;
+        let upd = mhat / (vhat.sqrt() + h.eps) + h.weight_decay * p[i];
+        p[i] -= mk * h.lr * upd;
+        st.m[i] = m_new;
+        st.v[i] = v_new;
+        st.s[i] = s_new;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_indices() {
+        let s = Span { offset: 10, stride: 4, count: 3 };
+        assert_eq!(s.indices().collect::<Vec<_>>(), vec![10, 14, 18]);
+        assert_eq!(s.end(), 19);
+        let c = Span::contiguous(5, 3);
+        assert_eq!(c.indices().collect::<Vec<_>>(), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        // From zero state, update magnitude == lr (bias-corrected).
+        let mut p = vec![0.0f32; 4];
+        let g = vec![2.0, -3.0, 0.5, 1.0];
+        let mut st = AdamState::new(4, 4);
+        let h = AdamHyper::new(0.01);
+        host_step(&mut p, &g, &mut st, &[1.0; 4], &h);
+        for (x, gg) in p.iter().zip(&g) {
+            assert!((x.abs() - 0.01).abs() < 1e-4, "{x} {gg}");
+            assert_eq!(x.signum(), -gg.signum());
+        }
+        assert!(st.s.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn masked_elements_fully_inert() {
+        let mut p = vec![1.0f32, 2.0];
+        let mut st = AdamState::new(2, 2);
+        st.m[1] = 0.5;
+        st.v[1] = 0.3;
+        st.s[1] = 7.0;
+        let h = AdamHyper::new(0.1);
+        host_step(&mut p, &[1.0, 1.0], &mut st, &[1.0, 0.0], &h);
+        assert_ne!(p[0], 1.0);
+        assert_eq!(p[1], 2.0);
+        assert_eq!((st.m[1], st.v[1], st.s[1]), (0.5, 0.3, 7.0));
+    }
+
+    #[test]
+    fn reset_span_strided() {
+        let mut st = AdamState::new(12, 12);
+        for i in 0..12 {
+            st.m[i] = 1.0;
+            st.v[i] = 1.0;
+            st.s[i] = 5.0;
+        }
+        // a "column" of a 3x4 row-major matrix: offset 2, stride 4, count 3
+        st.reset_span(Span { offset: 2, stride: 4, count: 3 });
+        for i in 0..12 {
+            let zeroed = i % 4 == 2;
+            assert_eq!(st.m[i] == 0.0, zeroed, "index {i}");
+            assert_eq!(st.s[i] == 0.0, zeroed, "index {i}");
+        }
+    }
+
+    #[test]
+    fn reset_then_step_restarts_bias_correction() {
+        let mut p = vec![0.0f32];
+        let mut st = AdamState::new(1, 1);
+        let h = AdamHyper::new(0.01);
+        for _ in 0..10 {
+            host_step(&mut p, &[1.0], &mut st, &[1.0], &h);
+        }
+        st.reset_span(Span::contiguous(0, 1));
+        let before = p[0];
+        host_step(&mut p, &[1.0], &mut st, &[1.0], &h);
+        // after reset, first-step bias correction applies again: full-lr step
+        assert!(((before - p[0]) - 0.01).abs() < 1e-4);
+        assert_eq!(st.s[0], 1.0);
+    }
+
+    #[test]
+    fn padding_lanes_have_step_one() {
+        let st = AdamState::new(3, 8);
+        assert_eq!(&st.s[..3], &[0.0, 0.0, 0.0]);
+        assert!(st.s[3..].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut p = vec![10.0f32];
+        let mut st = AdamState::new(1, 1);
+        let mut h = AdamHyper::new(0.1);
+        h.weight_decay = 0.1;
+        host_step(&mut p, &[0.0], &mut st, &[1.0], &h);
+        assert!(p[0] < 10.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! Optimizers: host AdamW (mirror of the fused L1 kernel, also the GaLore
+//! backend), learning-rate schedules, and the GaLore baseline projector.
+
+pub mod adam;
+pub mod galore;
+pub mod schedule;
+
+/// AdamW hyper-parameters, matching the fused kernel's `hyper` vector
+/// `(lr, beta1, beta2, eps, weight_decay)`.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamHyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl AdamHyper {
+    pub fn new(lr: f32) -> Self {
+        AdamHyper { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8,
+                    weight_decay: 0.0 }
+    }
+
+    pub fn with_lr(&self, lr: f32) -> Self {
+        AdamHyper { lr, ..*self }
+    }
+
+    pub fn to_vec(&self) -> Vec<f32> {
+        vec![self.lr, self.beta1, self.beta2, self.eps, self.weight_decay]
+    }
+}

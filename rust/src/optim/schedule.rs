@@ -1,0 +1,99 @@
+//! Learning-rate schedules.  The paper uses cosine decay with linear
+//! warm-up (Section 4.1: "cosine learning rate schedule with 100 warm-up
+//! steps"); ReLoRA additionally re-warms after each reset, which
+//! `with_restart` supports.
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant(f32),
+    CosineWarmup {
+        peak: f32,
+        warmup: u64,
+        total: u64,
+        /// floor as a fraction of peak (0.1 ⇒ decay to 10% of peak)
+        min_ratio: f32,
+    },
+}
+
+impl LrSchedule {
+    pub fn cosine(peak: f32, warmup: u64, total: u64) -> LrSchedule {
+        LrSchedule::CosineWarmup { peak, warmup, total, min_ratio: 0.1 }
+    }
+
+    pub fn lr(&self, step: u64) -> f32 {
+        match *self {
+            LrSchedule::Constant(x) => x,
+            LrSchedule::CosineWarmup { peak, warmup, total, min_ratio } => {
+                if warmup > 0 && step < warmup {
+                    return peak * (step + 1) as f32 / warmup as f32;
+                }
+                let t = (step.min(total) - warmup) as f32
+                    / (total.saturating_sub(warmup)).max(1) as f32;
+                let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                let floor = peak * min_ratio;
+                floor + (peak - floor) * cos
+            }
+        }
+    }
+
+    /// ReLoRA-style local re-warm: after a reset at `reset_step`, ramp the
+    /// scheduled lr linearly back up over `rewarm` steps.
+    pub fn with_restart(&self, step: u64, reset_step: u64, rewarm: u64)
+        -> f32 {
+        let base = self.lr(step);
+        if rewarm == 0 || step < reset_step {
+            return base;
+        }
+        let since = step - reset_step;
+        if since >= rewarm {
+            base
+        } else {
+            base * (since + 1) as f32 / rewarm as f32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule::cosine(1.0, 10, 100);
+        assert!((s.lr(10) - 1.0).abs() < 1e-3);
+        let mid = s.lr(55);
+        assert!(mid < 1.0 && mid > 0.1);
+        assert!((s.lr(100) - 0.1).abs() < 1e-3);
+        // clamps beyond total
+        assert!((s.lr(500) - 0.1).abs() < 1e-3);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = LrSchedule::cosine(0.02, 100, 4000);
+        let mut prev = f32::MAX;
+        for step in (100..4000).step_by(100) {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn restart_rewarms() {
+        let s = LrSchedule::Constant(1.0);
+        assert!((s.with_restart(1000, 1000, 10) - 0.1).abs() < 1e-6);
+        assert!((s.with_restart(1004, 1000, 10) - 0.5).abs() < 1e-6);
+        assert_eq!(s.with_restart(1010, 1000, 10), 1.0);
+        // before the reset, unaffected
+        assert_eq!(s.with_restart(999, 1000, 10), 1.0);
+    }
+}

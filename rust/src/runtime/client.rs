@@ -1,0 +1,110 @@
+//! PJRT client wrapper and executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::util::logging::Timer;
+
+/// Owns the PJRT client and caches compiled executables by artifact path.
+///
+/// PJRT handles are not `Send`; the engine lives on the coordinator thread
+/// (on this single-core testbed there is nothing to gain from cross-thread
+/// execution; the data-parallel simulator interleaves workers instead).
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    cache: HashMap<PathBuf, Rc<Executable>>,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new() })
+    }
+
+    /// Load-and-compile an HLO-text artifact (cached).
+    pub fn load(&mut self, path: &Path) -> Result<Rc<Executable>> {
+        if let Some(e) = self.cache.get(path) {
+            return Ok(e.clone());
+        }
+        let mut t = Timer::new("compile");
+        t.start();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        t.stop();
+        crate::info!("compiled {} in {:.2}s", path.display(),
+                     t.total_secs());
+        let e = Rc::new(Executable {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        });
+        self.cache.insert(path.to_path_buf(), e.clone());
+        Ok(e)
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// A compiled HLO module.  All our modules are lowered with
+/// `return_tuple=True`, so execution returns one tuple literal that we
+/// unpack into per-output literals.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple().map_err(Into::into)
+    }
+}
+
+/// Build an f32 literal of the given dims from a host slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {dims:?} != len {}",
+                    data.len());
+    let d64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d64)?)
+}
+
+/// Build an i32 literal of the given dims from a host slice.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {dims:?} != len {}",
+                    data.len());
+    let d64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&d64)?)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn lit_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(Into::into)
+}
+
+/// Extract a scalar f32.
+pub fn lit_scalar(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(Into::into)
+}

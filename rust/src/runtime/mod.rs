@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
+//! them from the Rust hot path.  Python is never involved at runtime.
+//!
+//! * `client.rs` — PJRT CPU client wrapper + executable cache (HLO text →
+//!   `HloModuleProto::from_text_file` → compile; text is the interchange
+//!   format because xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
+//! * `exec.rs` — literal marshaling and the typed step interfaces
+//!   (`ModelRuntime::fwdbwd`, `eval_loss`, `adam_step`, `cls_*`).
+
+pub mod client;
+pub mod exec;
+
+pub use client::{Engine, Executable};
+pub use exec::ModelRuntime;

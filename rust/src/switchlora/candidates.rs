@@ -1,0 +1,198 @@
+//! Candidate-vector store (paper Section 2.2).
+//!
+//! Each LoRA-adapted linear `W[m,n] + s·B[m,r]A[r,n]` keeps two ordered
+//! pools: `C(B)` with `min(m,n)` column candidates for B, and `C(Aᵀ)` with
+//! `min(m,n)` row candidates for A.  A switch **swaps** a LoRA vector with
+//! a pool slot (Algorithm 1 line 2), so trained vectors return to the pool
+//! and can be re-selected later — the total vector population is conserved.
+//!
+//! The pools live "offloaded" (plain host memory standing in for the
+//! paper's CPU offload of spare candidates); a `OffloadLedger` counts bytes
+//! moved per step in bf16-equivalents so Appendix D's offload-traffic
+//! formula is *measured*, not just asserted.
+
+use crate::model::init::switchlora_stds;
+use crate::model::layout::LinearMeta;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Byte-traffic accounting for candidate offload (bf16 = 2 bytes/elem,
+/// matching the paper's accounting in Appendix D / Table 5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OffloadLedger {
+    pub bytes_to_gpu: u64,
+    pub bytes_to_cpu: u64,
+    pub swaps: u64,
+}
+
+impl OffloadLedger {
+    pub fn record_swap(&mut self, elems: usize) {
+        // one vector fetched from the pool, one written back
+        self.bytes_to_gpu += 2 * elems as u64;
+        self.bytes_to_cpu += 2 * elems as u64;
+        self.swaps += 1;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_to_gpu + self.bytes_to_cpu
+    }
+}
+
+/// Candidate pools for one linear layer.
+pub struct LinearCandidates {
+    /// pool for B columns: [m, c] column-major-by-use (Tensor row-major,
+    /// we use columns), c = min(m,n)
+    pub cb: Tensor,
+    /// pool for A rows, stored as rows of an [c, n] tensor
+    pub ca: Tensor,
+    /// sequential selection cursors (paper Appendix D: sequential selection
+    /// enables batched contiguous copies)
+    pub next_b: usize,
+    pub next_a: usize,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl LinearCandidates {
+    /// Initialize pools with the Eq. (3) distribution (same law as the live
+    /// LoRA vectors — "the values of B and A ... along with their candidate
+    /// vectors").
+    pub fn init(li: &LinearMeta, rank: usize, rng: &mut Rng)
+        -> LinearCandidates {
+        let c = li.m.min(li.n);
+        let (std_b, std_a) = switchlora_stds(li.m, li.n, rank, 1.0);
+        let lim_b = (std_b * 3f64.sqrt()) as f32;
+        let lim_a = (std_a * 3f64.sqrt()) as f32;
+        let cb = Tensor::rand_uniform(li.m, c, lim_b, rng);
+        let ca = Tensor::rand_uniform(c, li.n, lim_a, rng);
+        LinearCandidates {
+            cb,
+            ca,
+            // Cursors start at `rank`: conceptually slots 0..rank mirror the
+            // live LoRA vectors, so the first switches bring in fresh ones.
+            next_b: rank.min(c),
+            next_a: rank.min(c),
+            m: li.m,
+            n: li.n,
+        }
+    }
+
+    pub fn pool_size(&self) -> usize {
+        self.cb.cols
+    }
+
+    /// Sequentially pick the next pool slot for a B switch.
+    pub fn pick_b(&mut self) -> usize {
+        let j = self.next_b;
+        self.next_b = (self.next_b + 1) % self.pool_size();
+        j
+    }
+
+    pub fn pick_a(&mut self) -> usize {
+        let j = self.next_a;
+        self.next_a = (self.next_a + 1) % self.pool_size();
+        j
+    }
+
+    /// Swap pool slot `j` of C(B) with the provided column buffer (the live
+    /// `B[:,i]`), recording offload traffic.
+    pub fn swap_b(&mut self, j: usize, live_col: &mut [f32],
+                  ledger: &mut OffloadLedger) {
+        assert_eq!(live_col.len(), self.m);
+        for (i, x) in live_col.iter_mut().enumerate() {
+            std::mem::swap(x, self.cb.at_mut(i, j));
+        }
+        ledger.record_swap(self.m);
+    }
+
+    /// Swap pool slot `j` of C(Aᵀ) with the live `A[i,:]` row buffer.
+    pub fn swap_a(&mut self, j: usize, live_row: &mut [f32],
+                  ledger: &mut OffloadLedger) {
+        assert_eq!(live_row.len(), self.n);
+        let row = self.ca.row_mut(j);
+        for (x, y) in live_row.iter_mut().zip(row.iter_mut()) {
+            std::mem::swap(x, y);
+        }
+        ledger.record_swap(self.n);
+    }
+
+    /// Bytes this pool occupies in (simulated) CPU memory, bf16 accounting.
+    pub fn resident_bytes(&self) -> u64 {
+        2 * (self.cb.numel() + self.ca.numel()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn li() -> LinearMeta {
+        LinearMeta { name: "w".into(), a: "w.a".into(), b: "w.b".into(),
+                     m: 12, n: 8 }
+    }
+
+    #[test]
+    fn pool_dimensions() {
+        let mut rng = Rng::new(0);
+        let c = LinearCandidates::init(&li(), 4, &mut rng);
+        assert_eq!(c.pool_size(), 8); // min(12, 8)
+        assert_eq!((c.cb.rows, c.cb.cols), (12, 8));
+        assert_eq!((c.ca.rows, c.ca.cols), (8, 8));
+        assert_eq!(c.resident_bytes(), 2 * (12 * 8 + 8 * 8) as u64);
+    }
+
+    #[test]
+    fn sequential_cursor_wraps() {
+        let mut rng = Rng::new(1);
+        let mut c = LinearCandidates::init(&li(), 4, &mut rng);
+        let picks: Vec<usize> = (0..10).map(|_| c.pick_b()).collect();
+        assert_eq!(picks, vec![4, 5, 6, 7, 0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn swap_b_exchanges_and_ledgers() {
+        let mut rng = Rng::new(2);
+        let mut c = LinearCandidates::init(&li(), 4, &mut rng);
+        let pool_before = c.cb.col(5);
+        let mut live: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let live_before = live.clone();
+        let mut ledger = OffloadLedger::default();
+        c.swap_b(5, &mut live, &mut ledger);
+        assert_eq!(live, pool_before);
+        assert_eq!(c.cb.col(5), live_before);
+        assert_eq!(ledger.swaps, 1);
+        assert_eq!(ledger.total_bytes(), 2 * (2 * 12));
+        // double swap restores
+        c.swap_b(5, &mut live, &mut ledger);
+        assert_eq!(live, live_before);
+    }
+
+    #[test]
+    fn swap_a_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut c = LinearCandidates::init(&li(), 4, &mut rng);
+        let mut live = vec![7.0f32; 8];
+        let pool_before = c.ca.row(2).to_vec();
+        let mut ledger = OffloadLedger::default();
+        c.swap_a(2, &mut live, &mut ledger);
+        assert_eq!(live, pool_before);
+        assert_eq!(c.ca.row(2), &[7.0f32; 8][..]);
+    }
+
+    #[test]
+    fn candidate_distribution_matches_eq3() {
+        let mut rng = Rng::new(4);
+        let lim = LinearMeta { name: "w".into(), a: "a".into(),
+                               b: "b".into(), m: 128, n: 64 };
+        let c = LinearCandidates::init(&lim, 16, &mut rng);
+        let (std_b, std_a) = switchlora_stds(128, 64, 16, 1.0);
+        let emp = |d: &[f32]| {
+            let mean: f64 =
+                d.iter().map(|&x| x as f64).sum::<f64>() / d.len() as f64;
+            (d.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>()
+                / d.len() as f64).sqrt()
+        };
+        assert!((emp(&c.cb.data) - std_b).abs() / std_b < 0.1);
+        assert!((emp(&c.ca.data) - std_a).abs() / std_a < 0.1);
+    }
+}

@@ -1,0 +1,92 @@
+//! Freeze manager: after a switch, the counterpart LoRA vector is frozen
+//! for `N` steps (Algorithm 2 lines 8/13; paper sets N=5).  Freezing is
+//! realized as zeros in the per-element mask consumed by the fused Adam
+//! kernel — frozen elements neither update nor advance their step counts.
+
+use crate::optim::adam::Span;
+
+#[derive(Clone, Debug)]
+struct Entry {
+    expire_step: u64,
+    span: Span,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct FreezeManager {
+    entries: Vec<Entry>,
+}
+
+impl FreezeManager {
+    pub fn new() -> FreezeManager {
+        FreezeManager { entries: Vec::new() }
+    }
+
+    /// Freeze `span` through step `until_step` (exclusive): the mask is 0
+    /// for steps `< until_step`.
+    pub fn freeze(&mut self, span: Span, until_step: u64) {
+        self.entries.push(Entry { expire_step: until_step, span });
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Write the freeze mask for `step`: `mask` must come in as the base
+    /// mask (normally all ones over live elements, zeros over padding);
+    /// active freezes zero their spans.  Expired entries are pruned.
+    pub fn apply(&mut self, step: u64, mask: &mut [f32]) {
+        self.entries.retain(|e| e.expire_step > step);
+        for e in &self.entries {
+            for i in e.span.indices() {
+                mask[i] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn freezes_for_n_steps_then_expires() {
+        let mut fm = FreezeManager::new();
+        fm.freeze(Span::contiguous(2, 3), 5); // frozen for steps 0..4
+        for step in 0..5 {
+            let mut mask = vec![1.0f32; 8];
+            fm.apply(step, &mut mask);
+            assert_eq!(&mask[2..5], &[0.0, 0.0, 0.0], "step {step}");
+            assert_eq!(mask[0], 1.0);
+            assert_eq!(mask[5], 1.0);
+        }
+        let mut mask = vec![1.0f32; 8];
+        fm.apply(5, &mut mask);
+        assert!(mask.iter().all(|&x| x == 1.0));
+        assert_eq!(fm.active_count(), 0);
+    }
+
+    #[test]
+    fn overlapping_freezes_compose() {
+        let mut fm = FreezeManager::new();
+        fm.freeze(Span::contiguous(0, 2), 3);
+        fm.freeze(Span { offset: 1, stride: 2, count: 2 }, 6);
+        let mut mask = vec![1.0f32; 4];
+        fm.apply(0, &mut mask);
+        assert_eq!(mask, vec![0.0, 0.0, 1.0, 0.0]);
+        let mut mask = vec![1.0f32; 4];
+        fm.apply(4, &mut mask);
+        assert_eq!(mask, vec![1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn strided_column_freeze() {
+        let mut fm = FreezeManager::new();
+        // column 1 of a 3x4 matrix at offset 0
+        fm.freeze(Span { offset: 1, stride: 4, count: 3 }, 2);
+        let mut mask = vec![1.0f32; 12];
+        fm.apply(0, &mut mask);
+        for i in 0..12 {
+            assert_eq!(mask[i] == 0.0, i % 4 == 1, "index {i}");
+        }
+    }
+}

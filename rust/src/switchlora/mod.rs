@@ -1,0 +1,10 @@
+//! The paper's contribution: **SwitchLoRA** — frequent, smooth switching of
+//! LoRA vectors against candidate pools, with counterpart optimizer-state
+//! resets and temporary freezing (Algorithms 1 and 2), plus the ReLoRA
+//! baseline resetter.
+
+pub mod candidates;
+pub mod freeze;
+pub mod relora;
+pub mod schedule;
+pub mod switcher;

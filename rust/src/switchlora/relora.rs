@@ -1,0 +1,153 @@
+//! ReLoRA baseline (Lialin et al. 2023), the Figure 4 comparison arm.
+//!
+//! Every `reset_interval` steps ReLoRA merges all adapters into the base
+//! weights (`W ← W + s·BA`), re-initializes the adapters (A Kaiming, B=0),
+//! zeroes **all** optimizer state of the adapters, and re-warms the lr.
+//! The contrast with SwitchLoRA: resets are coarse (every vector at once,
+//! thousands of steps apart) instead of smooth (a few vectors per step),
+//! which is exactly the mechanism the paper's Figure 4 interrogates.
+
+use crate::model::layout::{LinearMeta, ParamStore};
+use crate::optim::adam::{AdamState, Span};
+use crate::tensor::matmul::matmul;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ReLora {
+    pub reset_interval: u64,
+    /// lr re-warm length after each reset (ReLoRA's scheduler quirk)
+    pub rewarm: u64,
+    pub last_reset: u64,
+    pub n_resets: u64,
+}
+
+impl ReLora {
+    pub fn new(reset_interval: u64, rewarm: u64) -> ReLora {
+        ReLora { reset_interval, rewarm, last_reset: 0, n_resets: 0 }
+    }
+
+    pub fn due(&self, step: u64) -> bool {
+        step > 0 && step % self.reset_interval == 0
+    }
+
+    /// Merge-and-reset every adapter.  Returns number of linears reset.
+    pub fn reset(&mut self, step: u64, store: &mut ParamStore,
+                 opt: &mut AdamState, linears: &[LinearMeta], rank: usize,
+                 scale: f32, rng: &mut Rng) -> usize {
+        for li in linears {
+            // W ← W + s·B·A
+            let a = store.tensor(&li.a).expect("A");
+            let b = store.tensor(&li.b).expect("B");
+            let mut ba = matmul(&b, &a);
+            ba.scale(scale);
+            {
+                let w = store.slice_mut(&li.name).expect("W");
+                for (wi, di) in w.iter_mut().zip(&ba.data) {
+                    *wi += di;
+                }
+            }
+            // reinit adapters: A Kaiming-uniform, B = 0 (LoRA default)
+            let lim = (6.0 / li.n as f64).sqrt() as f32;
+            {
+                let a = store.slice_mut(&li.a).expect("A");
+                for x in a.iter_mut() {
+                    *x = rng.uniform_range(-lim, lim);
+                }
+            }
+            store.slice_mut(&li.b).expect("B").fill(0.0);
+            // zero ALL adapter optimizer state
+            let am = store.layout.meta(&li.a).unwrap();
+            let bm = store.layout.meta(&li.b).unwrap();
+            opt.reset_span(Span::contiguous(am.t_offset.unwrap(), am.numel));
+            opt.reset_span(Span::contiguous(bm.t_offset.unwrap(), bm.numel));
+        }
+        let _ = rank;
+        self.last_reset = step;
+        self.n_resets += 1;
+        linears.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::{Layout, ParamMeta, Role};
+    use crate::tensor::Tensor;
+    use std::sync::Arc;
+
+    const M: usize = 8;
+    const N: usize = 6;
+    const R: usize = 2;
+
+    fn setup() -> (ParamStore, Vec<LinearMeta>, AdamState) {
+        let layout = Layout::from_metas(vec![
+            ParamMeta { name: "w".into(), shape: vec![M, N],
+                        role: Role::Base, trainable: false, numel: M * N,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "w.a".into(), shape: vec![R, N],
+                        role: Role::LoraA, trainable: true, numel: R * N,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "w.b".into(), shape: vec![M, R],
+                        role: Role::LoraB, trainable: true, numel: M * R,
+                        offset: 0, t_offset: None },
+        ]);
+        let mut store = ParamStore::zeros(Arc::new(layout));
+        let mut rng = Rng::new(11);
+        for x in store.data.iter_mut() {
+            *x = rng.normal_f32(0.0, 0.5);
+        }
+        let linears = vec![LinearMeta {
+            name: "w".into(), a: "w.a".into(), b: "w.b".into(), m: M, n: N,
+        }];
+        let opt = AdamState::new(R * N + M * R, R * N + M * R);
+        (store, linears, opt)
+    }
+
+    fn effective(store: &ParamStore, scale: f32) -> Tensor {
+        let w = store.tensor("w").unwrap();
+        let mut ba = matmul(&store.tensor("w.b").unwrap(),
+                            &store.tensor("w.a").unwrap());
+        ba.scale(scale);
+        let mut e = w;
+        e.axpy(1.0, &ba);
+        e
+    }
+
+    #[test]
+    fn reset_preserves_effective_weight() {
+        let (mut store, linears, mut opt) = setup();
+        let before = effective(&store, 0.5);
+        let mut rng = Rng::new(1);
+        let mut rl = ReLora::new(100, 10);
+        let n = rl.reset(100, &mut store, &mut opt, &linears, R, 0.5,
+                         &mut rng);
+        assert_eq!(n, 1);
+        let after = effective(&store, 0.5);
+        assert!(before.max_abs_diff(&after) < 1e-4,
+                "drift {}", before.max_abs_diff(&after));
+    }
+
+    #[test]
+    fn reset_zeroes_b_and_opt_state() {
+        let (mut store, linears, mut opt) = setup();
+        for x in opt.m.iter_mut() {
+            *x = 2.0;
+        }
+        let mut rng = Rng::new(2);
+        let mut rl = ReLora::new(100, 10);
+        rl.reset(100, &mut store, &mut opt, &linears, R, 1.0, &mut rng);
+        assert!(store.slice("w.b").unwrap().iter().all(|&x| x == 0.0));
+        assert!(opt.m.iter().all(|&x| x == 0.0));
+        assert!(opt.s.iter().all(|&x| x == 0.0));
+        assert_eq!(rl.n_resets, 1);
+    }
+
+    #[test]
+    fn due_schedule() {
+        let rl = ReLora::new(500, 10);
+        assert!(!rl.due(0));
+        assert!(!rl.due(499));
+        assert!(rl.due(500));
+        assert!(rl.due(1000));
+    }
+}

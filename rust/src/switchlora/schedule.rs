@@ -1,0 +1,94 @@
+//! Switching-frequency schedule (paper Section 2.2 "Switching frequency" +
+//! Algorithm 2's `switch_num`).
+//!
+//! The expected number of switched vectors per matrix per step is
+//! `s(step) = r / (interval₀ · e^(θ·step))`; the integer count is
+//! `⌊s⌋ + Bernoulli(s − ⌊s⌋)`.  θ is set so the frequency falls to 1/3 of
+//! its initial value at `ratio × total_steps` (Section 4.1: ratio = 1/10).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SwitchSchedule {
+    /// initial switching interval (steps between switches per vector)
+    pub interval0: f64,
+    /// exponential decay rate of the frequency
+    pub theta: f64,
+}
+
+impl SwitchSchedule {
+    pub fn new(interval0: f64, theta: f64) -> SwitchSchedule {
+        assert!(interval0 > 0.0);
+        SwitchSchedule { interval0, theta }
+    }
+
+    /// Paper parameterization: frequency drops to 1/3 of initial at
+    /// `ratio * total_steps`.
+    pub fn with_third_at(interval0: f64, ratio: f64, total_steps: u64)
+        -> SwitchSchedule {
+        let at = (ratio * total_steps as f64).max(1.0);
+        SwitchSchedule::new(interval0, 3f64.ln() / at)
+    }
+
+    /// Expected switches per matrix at `step` for LoRA rank `r`.
+    pub fn expected(&self, step: u64, r: usize) -> f64 {
+        r as f64 / (self.interval0 * (self.theta * step as f64).exp())
+    }
+
+    /// Integer draw: ⌊s⌋ + Bernoulli(frac(s)), clamped to r.
+    pub fn switch_count(&self, step: u64, r: usize, rng: &mut Rng) -> usize {
+        let s = self.expected(step, r);
+        let base = s.floor();
+        let frac = s - base;
+        let n = base as usize + usize::from(rng.bernoulli(frac));
+        n.min(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expected_decays_exponentially() {
+        let s = SwitchSchedule::with_third_at(40.0, 0.1, 40_000);
+        let e0 = s.expected(0, 512);
+        let e4k = s.expected(4_000, 512);
+        let e8k = s.expected(8_000, 512);
+        assert!((e0 - 512.0 / 40.0).abs() < 1e-9);
+        assert!((e4k / e0 - 1.0 / 3.0).abs() < 1e-6, "{}", e4k / e0);
+        assert!((e8k / e0 - 1.0 / 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn paper_example_13_vectors() {
+        // Appendix D: 1.3B, r=512, interval 40 → ≈13 switches per step.
+        let s = SwitchSchedule::new(40.0, 0.0);
+        assert_eq!(s.expected(0, 512).floor() as usize, 12); // 512/40 = 12.8
+        let mut rng = Rng::new(0);
+        let mean: f64 = (0..2000)
+            .map(|_| s.switch_count(0, 512, &mut rng) as f64)
+            .sum::<f64>() / 2000.0;
+        assert!((mean - 12.8).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn count_bounded_by_rank() {
+        let s = SwitchSchedule::new(0.01, 0.0); // absurdly frequent
+        let mut rng = Rng::new(1);
+        for step in 0..10 {
+            assert!(s.switch_count(step, 8, &mut rng) <= 8);
+        }
+    }
+
+    #[test]
+    fn bernoulli_fraction_statistics() {
+        // expected 0.5 → mean count ≈ 0.5
+        let s = SwitchSchedule::new(2.0, 0.0);
+        let mut rng = Rng::new(2);
+        let mean: f64 = (0..4000)
+            .map(|_| s.switch_count(0, 1, &mut rng) as f64)
+            .sum::<f64>() / 4000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean}");
+    }
+}

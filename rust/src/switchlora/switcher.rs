@@ -1,0 +1,382 @@
+//! The switch operation (Algorithm 1) and per-step driver (Algorithm 2).
+//!
+//! Switching a LoRA vector must leave the function computed by the layer
+//! unchanged: for the forward `y = (W + s·BA)x`,
+//!
+//! ```text
+//! W ← W + s·b_i a_iᵀ          (merge the outgoing pair)
+//! b_i ↔ C(B)[j]               (swap with the candidate pool)
+//! opt_state(a_i) ← 0          (reset the *counterpart*'s Adam state)
+//! W ← W − s·b_i a_iᵀ          (unmerge with the incoming vector)
+//! freeze a_i for N steps
+//! ```
+//!
+//! (and symmetrically for switching `a_i`, resetting/freezing `b_i`).  The
+//! two rank-1 updates are fused into one pass with `Δ = b_old − b_new`.
+//! Appendix A explains why the *counterpart* state is reset: the gradient
+//! of `b_i` is `(a_iᵀx)∇_y L` — it depends on `a_i`, not on `b_i` itself,
+//! so the switched-in vector's own moments stay valid while the
+//! counterpart's become stale.
+
+use crate::model::layout::{LinearMeta, ParamStore};
+use crate::optim::adam::{AdamState, Span};
+use crate::util::rng::Rng;
+
+use super::candidates::{LinearCandidates, OffloadLedger};
+use super::freeze::FreezeManager;
+use super::schedule::SwitchSchedule;
+
+/// Flat-span addressing for a LoRA pair within the packed trainable vector.
+pub struct LoraSpans {
+    /// A is [r, n]: row i is contiguous
+    pub a_t_offset: usize,
+    /// B is [m, r]: column i is strided by r
+    pub b_t_offset: usize,
+    pub m: usize,
+    pub n: usize,
+    pub r: usize,
+}
+
+impl LoraSpans {
+    pub fn from_layout(store: &ParamStore, li: &LinearMeta, r: usize)
+        -> LoraSpans {
+        let a = store.layout.meta(&li.a).expect("lora A in layout");
+        let b = store.layout.meta(&li.b).expect("lora B in layout");
+        LoraSpans {
+            a_t_offset: a.t_offset.expect("A trainable"),
+            b_t_offset: b.t_offset.expect("B trainable"),
+            m: li.m,
+            n: li.n,
+            r,
+        }
+    }
+
+    pub fn a_row(&self, i: usize) -> Span {
+        Span::contiguous(self.a_t_offset + i * self.n, self.n)
+    }
+
+    pub fn b_col(&self, i: usize) -> Span {
+        Span { offset: self.b_t_offset + i, stride: self.r, count: self.m }
+    }
+}
+
+/// All SwitchLoRA runtime state for one model.
+pub struct SwitchLora {
+    pub cands: Vec<LinearCandidates>,
+    pub sched: SwitchSchedule,
+    pub freeze: FreezeManager,
+    pub ledger: OffloadLedger,
+    pub n_freeze: u64,
+    pub rank: usize,
+    pub scale: f32,
+    pub total_switches: u64,
+    rng: Rng,
+}
+
+impl SwitchLora {
+    pub fn new(linears: &[LinearMeta], rank: usize, scale: f32,
+               sched: SwitchSchedule, n_freeze: u64, seed: u64)
+        -> SwitchLora {
+        let mut rng = Rng::new(seed ^ 0x5317C); // switch-stream RNG
+        let cands = linears
+            .iter()
+            .map(|li| LinearCandidates::init(li, rank, &mut rng))
+            .collect();
+        SwitchLora {
+            cands,
+            sched,
+            freeze: FreezeManager::new(),
+            ledger: OffloadLedger::default(),
+            n_freeze,
+            rank,
+            scale,
+            total_switches: 0,
+            rng,
+        }
+    }
+
+    /// Resident candidate-pool bytes (the simulated CPU-offload footprint).
+    pub fn resident_bytes(&self) -> u64 {
+        self.cands.iter().map(|c| c.resident_bytes()).sum()
+    }
+
+    /// Algorithm 2 for one step (call *after* the optimizer update of
+    /// `step`): for every linear, switch `switch_num` B-columns and
+    /// `switch_num` A-rows against their pools.
+    pub fn apply_step(&mut self, step: u64, store: &mut ParamStore,
+                      opt: &mut AdamState, linears: &[LinearMeta]) {
+        for (idx, li) in linears.iter().enumerate() {
+            let spans = LoraSpans::from_layout(store, li, self.rank);
+            // --- switch B columns ---
+            let nb = self.sched.switch_count(step, self.rank, &mut self.rng);
+            let is = self.rng.sample_distinct(self.rank, nb);
+            for i in is {
+                let j = self.cands[idx].pick_b();
+                switch_b(store, opt, &mut self.freeze, &mut self.cands[idx],
+                         &mut self.ledger, li, &spans, i, j, self.scale,
+                         step + 1 + self.n_freeze);
+                self.total_switches += 1;
+            }
+            // --- switch A rows ---
+            let na = self.sched.switch_count(step, self.rank, &mut self.rng);
+            let is = self.rng.sample_distinct(self.rank, na);
+            for i in is {
+                let j = self.cands[idx].pick_a();
+                switch_a(store, opt, &mut self.freeze, &mut self.cands[idx],
+                         &mut self.ledger, li, &spans, i, j, self.scale,
+                         step + 1 + self.n_freeze);
+                self.total_switches += 1;
+            }
+        }
+    }
+}
+
+/// Rank-1 update `W += alpha * u vᵀ` directly on the store slice of W.
+fn w_rank1(store: &mut ParamStore, li: &LinearMeta, alpha: f32, u: &[f32],
+           v: &[f32]) {
+    let w = store.slice_mut(&li.name).expect("W in layout");
+    let n = v.len();
+    for (i, &ui) in u.iter().enumerate() {
+        let scaled = alpha * ui;
+        if scaled == 0.0 {
+            continue;
+        }
+        let row = &mut w[i * n..(i + 1) * n];
+        for (rj, &vj) in row.iter_mut().zip(v) {
+            *rj += scaled * vj;
+        }
+    }
+}
+
+fn read_b_col(store: &ParamStore, li: &LinearMeta, r: usize, i: usize)
+    -> Vec<f32> {
+    let b = store.slice(&li.b).expect("B in layout");
+    (0..li.m).map(|row| b[row * r + i]).collect()
+}
+
+fn write_b_col(store: &mut ParamStore, li: &LinearMeta, r: usize, i: usize,
+               col: &[f32]) {
+    let b = store.slice_mut(&li.b).expect("B in layout");
+    for (row, &x) in col.iter().enumerate() {
+        b[row * r + i] = x;
+    }
+}
+
+/// Algorithm 1 specialized to switching column `i` of B with pool slot `j`.
+#[allow(clippy::too_many_arguments)]
+pub fn switch_b(store: &mut ParamStore, opt: &mut AdamState,
+                freeze: &mut FreezeManager, cands: &mut LinearCandidates,
+                ledger: &mut OffloadLedger, li: &LinearMeta,
+                spans: &LoraSpans, i: usize, j: usize, scale: f32,
+                freeze_until: u64) {
+    let r = spans.r;
+    let b_old = read_b_col(store, li, r, i);
+    let mut b_new = b_old.clone();
+    cands.swap_b(j, &mut b_new, ledger); // pool[j] ← b_old, b_new ← pool[j]
+    write_b_col(store, li, r, i, &b_new);
+    // fused merge/unmerge: W += s·(b_old − b_new)·a_iᵀ
+    let delta: Vec<f32> =
+        b_old.iter().zip(&b_new).map(|(o, n)| o - n).collect();
+    let a_row = {
+        let a = store.slice(&li.a).expect("A in layout");
+        a[i * spans.n..(i + 1) * spans.n].to_vec()
+    };
+    w_rank1(store, li, scale, &delta, &a_row);
+    // reset the counterpart's optimizer state and freeze it
+    let a_span = spans.a_row(i);
+    opt.reset_span(a_span);
+    freeze.freeze(a_span, freeze_until);
+}
+
+/// Algorithm 1 transposed: switching row `i` of A with pool slot `j`.
+#[allow(clippy::too_many_arguments)]
+pub fn switch_a(store: &mut ParamStore, opt: &mut AdamState,
+                freeze: &mut FreezeManager, cands: &mut LinearCandidates,
+                ledger: &mut OffloadLedger, li: &LinearMeta,
+                spans: &LoraSpans, i: usize, j: usize, scale: f32,
+                freeze_until: u64) {
+    let a_old = {
+        let a = store.slice(&li.a).expect("A in layout");
+        a[i * spans.n..(i + 1) * spans.n].to_vec()
+    };
+    let mut a_new = a_old.clone();
+    cands.swap_a(j, &mut a_new, ledger);
+    {
+        let a = store.slice_mut(&li.a).expect("A in layout");
+        a[i * spans.n..(i + 1) * spans.n].copy_from_slice(&a_new);
+    }
+    let delta: Vec<f32> =
+        a_old.iter().zip(&a_new).map(|(o, n)| o - n).collect();
+    let b_col = read_b_col(store, li, spans.r, i);
+    w_rank1(store, li, scale, &b_col, &delta);
+    let b_span = spans.b_col(i);
+    opt.reset_span(b_span);
+    freeze.freeze(b_span, freeze_until);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::layout::{Layout, ParamMeta, Role};
+    use crate::switchlora::schedule::SwitchSchedule;
+    use crate::tensor::matmul::matmul;
+    use crate::tensor::Tensor;
+    use std::sync::Arc;
+
+    const M: usize = 10;
+    const N: usize = 6;
+    const R: usize = 3;
+
+    fn setup() -> (ParamStore, Vec<LinearMeta>, AdamState) {
+        let layout = Layout::from_metas(vec![
+            ParamMeta { name: "w".into(), shape: vec![M, N],
+                        role: Role::Base, trainable: false, numel: M * N,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "w.a".into(), shape: vec![R, N],
+                        role: Role::LoraA, trainable: true, numel: R * N,
+                        offset: 0, t_offset: None },
+            ParamMeta { name: "w.b".into(), shape: vec![M, R],
+                        role: Role::LoraB, trainable: true, numel: M * R,
+                        offset: 0, t_offset: None },
+        ]);
+        let mut store = ParamStore::zeros(Arc::new(layout));
+        let mut rng = Rng::new(7);
+        for x in store.data.iter_mut() {
+            *x = rng.normal_f32(0.0, 1.0);
+        }
+        let linears = vec![LinearMeta {
+            name: "w".into(), a: "w.a".into(), b: "w.b".into(), m: M, n: N,
+        }];
+        let opt = AdamState::new(R * N + M * R, R * N + M * R);
+        (store, linears, opt)
+    }
+
+    /// effective weight s·(W + scale·B·A) as a Tensor
+    fn effective(store: &ParamStore, scale: f32) -> Tensor {
+        let w = store.tensor("w").unwrap();
+        let a = store.tensor("w.a").unwrap();
+        let b = store.tensor("w.b").unwrap();
+        let mut ba = matmul(&b, &a);
+        ba.scale(scale);
+        let mut e = w.clone();
+        e.axpy(1.0, &ba);
+        e
+    }
+
+    #[test]
+    fn switch_b_preserves_effective_weight() {
+        let (mut store, linears, mut opt) = setup();
+        let li = &linears[0];
+        let spans = LoraSpans::from_layout(&store, li, R);
+        let mut rng = Rng::new(1);
+        let mut cands = LinearCandidates::init(li, R, &mut rng);
+        let mut ledger = OffloadLedger::default();
+        let mut freeze = FreezeManager::new();
+        for scale in [1.0f32, 0.5] {
+            let before = effective(&store, scale);
+            let b_before = store.tensor("w.b").unwrap();
+            switch_b(&mut store, &mut opt, &mut freeze, &mut cands,
+                     &mut ledger, li, &spans, 1, 4, scale, 10);
+            let after = effective(&store, scale);
+            assert!(before.max_abs_diff(&after) < 1e-4,
+                    "effective weight changed by {}",
+                    before.max_abs_diff(&after));
+            // B actually changed
+            let b_after = store.tensor("w.b").unwrap();
+            assert!(b_before.max_abs_diff(&b_after) > 1e-3);
+        }
+    }
+
+    #[test]
+    fn switch_a_preserves_effective_weight() {
+        let (mut store, linears, mut opt) = setup();
+        let li = &linears[0];
+        let spans = LoraSpans::from_layout(&store, li, R);
+        let mut rng = Rng::new(2);
+        let mut cands = LinearCandidates::init(li, R, &mut rng);
+        let mut ledger = OffloadLedger::default();
+        let mut freeze = FreezeManager::new();
+        let before = effective(&store, 1.0);
+        switch_a(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+                 li, &spans, 0, 3, 1.0, 10);
+        let after = effective(&store, 1.0);
+        assert!(before.max_abs_diff(&after) < 1e-4);
+    }
+
+    #[test]
+    fn switch_b_resets_counterpart_a_state_only() {
+        let (mut store, linears, mut opt) = setup();
+        let li = &linears[0];
+        let spans = LoraSpans::from_layout(&store, li, R);
+        for x in opt.m.iter_mut() {
+            *x = 1.0;
+        }
+        for x in opt.s.iter_mut() {
+            *x = 5.0;
+        }
+        let mut rng = Rng::new(3);
+        let mut cands = LinearCandidates::init(li, R, &mut rng);
+        let mut ledger = OffloadLedger::default();
+        let mut freeze = FreezeManager::new();
+        switch_b(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+                 li, &spans, 1, 0, 1.0, 10);
+        // A row 1 zeroed; A rows 0,2 untouched; all of B untouched
+        for i in spans.a_row(1).indices() {
+            assert_eq!(opt.m[i], 0.0);
+            assert_eq!(opt.s[i], 0.0);
+        }
+        for i in spans.a_row(0).indices().chain(spans.a_row(2).indices()) {
+            assert_eq!(opt.m[i], 1.0);
+        }
+        for i in 0..R {
+            for k in spans.b_col(i).indices() {
+                assert_eq!(opt.m[k], 1.0, "B col {i} touched");
+            }
+        }
+        // the counterpart is frozen
+        let mut mask = vec![1.0f32; opt.len()];
+        freeze.apply(5, &mut mask);
+        for i in spans.a_row(1).indices() {
+            assert_eq!(mask[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn apply_step_runs_algorithm2() {
+        let (mut store, linears, mut opt) = setup();
+        // interval 1 → expect ~R switches per side per step
+        let sched = SwitchSchedule::new(1.0, 0.0);
+        let mut sl = SwitchLora::new(&linears, R, 1.0, sched, 5, 42);
+        let before = effective(&store, 1.0);
+        for step in 0..5 {
+            sl.apply_step(step, &mut store, &mut opt, &linears);
+        }
+        let after = effective(&store, 1.0);
+        assert!(before.max_abs_diff(&after) < 1e-3,
+                "drift {}", before.max_abs_diff(&after));
+        assert!(sl.total_switches >= 5 * 2, "{}", sl.total_switches);
+        assert_eq!(sl.ledger.swaps, sl.total_switches);
+        assert!(sl.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn switched_in_vectors_expand_span() {
+        // After enough switches the set of distinct B columns observed
+        // exceeds the rank — the full-rank-information mechanism.
+        let (mut store, linears, mut opt) = setup();
+        let sched = SwitchSchedule::new(1.0, 0.0);
+        let mut sl = SwitchLora::new(&linears, R, 1.0, sched, 5, 43);
+        let mut seen = std::collections::HashSet::new();
+        let quantize = |col: &[f32]| -> Vec<i64> {
+            col.iter().map(|&x| (x * 1e4) as i64).collect()
+        };
+        for step in 0..8 {
+            let b = store.tensor("w.b").unwrap();
+            for c in 0..R {
+                seen.insert(quantize(&b.col(c)));
+            }
+            sl.apply_step(step, &mut store, &mut opt, &linears);
+        }
+        assert!(seen.len() > R, "only {} distinct columns", seen.len());
+    }
+}

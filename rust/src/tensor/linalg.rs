@@ -1,0 +1,260 @@
+//! Dense linear algebra substrate: one-sided Jacobi SVD and Householder QR.
+//!
+//! Two consumers:
+//! * **GaLore** (`optim/galore.rs`) needs the top-r singular vectors of each
+//!   gradient matrix to build its projection (paper §3 "Other compression
+//!   methods", Zhao et al. 2024b).
+//! * **Rank analysis** (Figures 10/11) needs full singular-value spectra of
+//!   trained weight matrices.
+
+use super::Tensor;
+
+#[cfg(test)]
+use super::matmul::matmul;
+
+/// Thin SVD `A = U diag(S) V^T` via one-sided Jacobi on the columns.
+///
+/// Returns `(U [m,p], S [p], V [n,p])` with `p = min(m,n)` and singular
+/// values sorted descending.  For `m < n` the decomposition is computed on
+/// `A^T` and swapped back.
+pub fn svd(a: &Tensor) -> (Tensor, Vec<f32>, Tensor) {
+    if a.rows < a.cols {
+        let (u, s, v) = svd(&a.transpose());
+        return (v, s, u);
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Work on columns of a copy; accumulate right rotations into V.
+    let mut w = a.clone();
+    let mut v = Tensor::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-9f64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                // 2x2 Gram entries over columns p, q
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let xp = w.at(i, p) as f64;
+                    let xq = w.at(i, q) as f64;
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                off += apq.abs();
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = w.at(i, p) as f64;
+                    let xq = w.at(i, q) as f64;
+                    *w.at_mut(i, p) = (c * xp - s * xq) as f32;
+                    *w.at_mut(i, q) = (s * xp + c * xq) as f32;
+                }
+                for i in 0..n {
+                    let vp = v.at(i, p) as f64;
+                    let vq = v.at(i, q) as f64;
+                    *v.at_mut(i, p) = (c * vp - s * vq) as f32;
+                    *v.at_mut(i, q) = (s * vp + c * vq) as f32;
+                }
+            }
+        }
+        if off < 1e-10 {
+            break;
+        }
+    }
+    // Column norms are the singular values; normalize into U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sv: Vec<f32> = (0..n)
+        .map(|j| {
+            (0..m).map(|i| {
+                let x = w.at(i, j) as f64;
+                x * x
+            }).sum::<f64>().sqrt() as f32
+        })
+        .collect();
+    order.sort_by(|&i, &j| sv[j].partial_cmp(&sv[i]).unwrap());
+    let mut u = Tensor::zeros(m, n);
+    let mut v_sorted = Tensor::zeros(n, n);
+    let mut s_sorted = Vec::with_capacity(n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        let s = sv[oldj];
+        s_sorted.push(s);
+        let inv = if s > 1e-20 { 1.0 / s } else { 0.0 };
+        for i in 0..m {
+            *u.at_mut(i, newj) = w.at(i, oldj) * inv;
+        }
+        for i in 0..n {
+            *v_sorted.at_mut(i, newj) = v.at(i, oldj);
+        }
+    }
+    sv = s_sorted;
+    (u, sv, v_sorted)
+}
+
+/// Singular values only (descending).
+pub fn singular_values(a: &Tensor) -> Vec<f32> {
+    svd(a).1
+}
+
+/// Householder QR: `A[m,n] = Q[m,n] R[n,n]` (thin, m >= n).
+pub fn qr(a: &Tensor) -> (Tensor, Tensor) {
+    assert!(a.rows >= a.cols, "thin QR needs m >= n");
+    let (m, n) = (a.rows, a.cols);
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f32>> = Vec::with_capacity(n);
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut x: Vec<f32> = (k..m).map(|i| r.at(i, k)).collect();
+        let norm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            let sign = if x[0] >= 0.0 { 1.0 } else { -1.0 };
+            x[0] += sign * norm;
+            let vnorm = x.iter().map(|v| v * v).sum::<f32>().sqrt();
+            if vnorm > 0.0 {
+                for v in x.iter_mut() {
+                    *v /= vnorm;
+                }
+                // Apply reflection to R
+                for j in k..n {
+                    let dot: f32 = (k..m).map(|i| x[i - k] * r.at(i, j))
+                        .sum();
+                    for i in k..m {
+                        *r.at_mut(i, j) -= 2.0 * x[i - k] * dot;
+                    }
+                }
+            }
+        }
+        vs.push(x);
+    }
+    // Build thin Q by applying reflections to identity columns.
+    let mut q = Tensor::zeros(m, n);
+    for j in 0..n {
+        let mut e = vec![0.0f32; m];
+        e[j] = 1.0;
+        for k in (0..n).rev() {
+            let v = &vs[k];
+            if v.iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let dot: f32 = (k..m).map(|i| v[i - k] * e[i]).sum();
+            for i in k..m {
+                e[i] -= 2.0 * v[i - k] * dot;
+            }
+        }
+        for i in 0..m {
+            *q.at_mut(i, j) = e[i];
+        }
+    }
+    // Zero out sub-diagonal fuzz in R.
+    let mut r_thin = Tensor::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            *r_thin.at_mut(i, j) = r.at(i, j);
+        }
+    }
+    (q, r_thin)
+}
+
+/// Effective rank: #singular values above `tol * s_max`.
+pub fn effective_rank(s: &[f32], tol: f32) -> usize {
+    if s.is_empty() {
+        return 0;
+    }
+    let cutoff = s[0] * tol;
+    s.iter().filter(|&&x| x > cutoff).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, prop_check};
+    use crate::util::rng::Rng;
+
+    fn reconstruct(u: &Tensor, s: &[f32], v: &Tensor) -> Tensor {
+        let mut us = u.clone();
+        for j in 0..s.len() {
+            for i in 0..us.rows {
+                *us.at_mut(i, j) *= s[j];
+            }
+        }
+        matmul(&us, &v.transpose())
+    }
+
+    #[test]
+    fn svd_reconstructs() {
+        prop_check("U S V^T == A", 10, |rng| {
+            let (m, n) = (2 + rng.below(20), 2 + rng.below(20));
+            let a = Tensor::randn(m, n, 1.0, rng);
+            let (u, s, v) = svd(&a);
+            let r = reconstruct(&u, &s, &v);
+            assert_close(&r.data, &a.data, 5e-3, 5e-3)
+        });
+    }
+
+    #[test]
+    fn svd_orthonormal_u() {
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(20, 8, 1.0, &mut rng);
+        let (u, _, v) = svd(&a);
+        let utu = matmul(&u.transpose(), &u);
+        let vtv = matmul(&v.transpose(), &v);
+        assert_close(&utu.data, &Tensor::eye(8).data, 1e-3, 1e-3).unwrap();
+        assert_close(&vtv.data, &Tensor::eye(8).data, 1e-3, 1e-3).unwrap();
+    }
+
+    #[test]
+    fn svd_sorted_and_known_rank() {
+        let mut rng = Rng::new(3);
+        // rank-2 matrix: sum of two outer products
+        let u1 = Tensor::randn(16, 1, 1.0, &mut rng);
+        let v1 = Tensor::randn(1, 12, 1.0, &mut rng);
+        let u2 = Tensor::randn(16, 1, 1.0, &mut rng);
+        let v2 = Tensor::randn(1, 12, 1.0, &mut rng);
+        let mut a = matmul(&u1, &v1);
+        a.axpy(1.0, &matmul(&u2, &v2));
+        let s = singular_values(&a);
+        for w in s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-5, "not sorted: {s:?}");
+        }
+        assert_eq!(effective_rank(&s, 1e-4), 2, "spectrum {s:?}");
+    }
+
+    #[test]
+    fn svd_wide_matrix() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(6, 17, 1.0, &mut rng);
+        let (u, s, v) = svd(&a);
+        assert_eq!((u.rows, u.cols), (6, 6));
+        assert_eq!((v.rows, v.cols), (17, 6));
+        assert_eq!(s.len(), 6);
+        let r = reconstruct(&u, &s, &v);
+        assert_close(&r.data, &a.data, 5e-3, 5e-3).unwrap();
+    }
+
+    #[test]
+    fn qr_reconstructs_and_orthogonal() {
+        prop_check("QR == A and Q^T Q = I", 10, |rng| {
+            let (m, n) = (3 + rng.below(20), 2 + rng.below(10));
+            let (m, n) = (m.max(n), n);
+            let a = Tensor::randn(m, n, 1.0, rng);
+            let (q, r) = qr(&a);
+            assert_close(&matmul(&q, &r).data, &a.data, 1e-3, 1e-3)?;
+            assert_close(&matmul(&q.transpose(), &q).data,
+                         &Tensor::eye(n).data, 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn effective_rank_edges() {
+        assert_eq!(effective_rank(&[], 0.01), 0);
+        assert_eq!(effective_rank(&[5.0, 0.0], 0.01), 1);
+        assert_eq!(effective_rank(&[5.0, 4.0, 0.04], 0.01), 2);
+    }
+}

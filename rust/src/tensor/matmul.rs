@@ -1,0 +1,97 @@
+//! Blocked host matmul.  Used off the hot path (GaLore projection, rank
+//! analysis, tests); the training-step matmuls run inside the AOT-compiled
+//! XLA executables.
+
+use super::Tensor;
+
+/// Cache-blocked `A[m,k] @ B[k,n]` with an i-k-j inner order (streams B rows,
+/// accumulates into C rows — good locality for row-major data).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch {}x{} @ {}x{}",
+               a.rows, a.cols, b.rows, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Tensor::zeros(m, n);
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let a_row = a.row(i);
+            let c_row = c.row_mut(i);
+            for kk in k0..k1 {
+                let aik = a_row[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = b.row(kk);
+                for j in 0..n {
+                    c_row[j] += aik * b_row[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `A^T @ A` (n×n Gram matrix), used by the SVD substrate.
+pub fn gram(a: &Tensor) -> Tensor {
+    let n = a.cols;
+    let mut g = Tensor::zeros(n, n);
+    for i in 0..a.rows {
+        let row = a.row(i);
+        for p in 0..n {
+            let rp = row[p];
+            if rp == 0.0 {
+                continue;
+            }
+            let g_row = g.row_mut(p);
+            for q in 0..n {
+                g_row[q] += rp * row[q];
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, prop_check};
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        Tensor::from_fn(a.rows, b.cols, |i, j| {
+            (0..a.cols).map(|k| a.at(i, k) * b.at(k, j)).sum()
+        })
+    }
+
+    #[test]
+    fn matches_naive() {
+        prop_check("blocked matmul == naive", 25, |rng| {
+            let (m, k, n) =
+                (1 + rng.below(40), 1 + rng.below(90), 1 + rng.below(40));
+            let a = Tensor::randn(m, k, 1.0, rng);
+            let b = Tensor::randn(k, n, 1.0, rng);
+            assert_close(&matmul(&a, &b).data, &naive(&a, &b).data,
+                         1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let mut rng = Rng::new(1);
+        let a = Tensor::randn(7, 7, 1.0, &mut rng);
+        let c = matmul(&a, &Tensor::eye(7));
+        assert_close(&a.data, &c.data, 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        prop_check("gram == A^T A", 15, |rng| {
+            let (m, n) = (1 + rng.below(30), 1 + rng.below(20));
+            let a = Tensor::randn(m, n, 1.0, rng);
+            let g = gram(&a);
+            let expect = matmul(&a.transpose(), &a);
+            assert_close(&g.data, &expect.data, 1e-4, 1e-4)
+        });
+    }
+}

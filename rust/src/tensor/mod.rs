@@ -1,0 +1,214 @@
+//! Host tensor substrate: row-major f32 matrices/vectors.
+//!
+//! This is the coordinator-side math library — it backs the switch
+//! operation (rank-1 updates on `W`), GaLore's gradient projection, the
+//! host optimizer, checkpoint manipulation and the singular-value analysis
+//! of Figures 10/11.  It is deliberately simple (no strides/broadcasting):
+//! every shape in the system is a vector or a 2-D matrix.
+
+pub mod linalg;
+pub mod matmul;
+
+use crate::util::rng::Rng;
+
+/// Row-major 2-D matrix (or 1-D vector when `rows == 1`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Tensor { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize,
+                   mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Tensor { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Tensor::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal_f32(0.0, std))
+            .collect();
+        Tensor { rows, cols, data }
+    }
+
+    pub fn rand_uniform(rows: usize, cols: usize, lim: f32, rng: &mut Rng)
+        -> Self {
+        let data = (0..rows * cols).map(|_| rng.uniform_range(-lim, lim))
+            .collect();
+        Tensor { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f32> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            *self.at_mut(i, j) = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let mut t = Tensor::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                *t.at_mut(j, i) = self.at(i, j);
+            }
+        }
+        t
+    }
+
+    /// `self += alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += alpha * y;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for x in self.data.iter_mut() {
+            *x *= alpha;
+        }
+    }
+
+    /// Rank-1 update `self += alpha * u v^T` — the core of the switch op
+    /// (Algorithm 1 lines 1 and 4): `W ← W ± b_k a_k^T`.
+    pub fn rank1_update(&mut self, alpha: f32, u: &[f32], v: &[f32]) {
+        assert_eq!(u.len(), self.rows);
+        assert_eq!(v.len(), self.cols);
+        for i in 0..self.rows {
+            let ui = alpha * u[i];
+            let row = self.row_mut(i);
+            for j in 0..v.len() {
+                row[j] += ui * v[j];
+            }
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    /// Maximum absolute elementwise difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, prop_check};
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at(0, 2), 3.0);
+        assert_eq!(t.at(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop_check("transpose twice is identity", 20, |rng| {
+            let (r, c) = (1 + rng.below(20), 1 + rng.below(20));
+            let t = Tensor::randn(r, c, 1.0, rng);
+            let tt = t.transpose().transpose();
+            assert_close(&t.data, &tt.data, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn rank1_update_matches_dense() {
+        prop_check("rank1 == dense outer product", 20, |rng| {
+            let (m, n) = (1 + rng.below(12), 1 + rng.below(12));
+            let mut w = Tensor::randn(m, n, 1.0, rng);
+            let w0 = w.clone();
+            let u: Vec<f32> = (0..m).map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            let v: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0))
+                .collect();
+            w.rank1_update(0.5, &u, &v);
+            let expect = Tensor::from_fn(m, n,
+                |i, j| w0.at(i, j) + 0.5 * u[i] * v[j]);
+            assert_close(&w.data, &expect.data, 1e-6, 1e-6)
+        });
+    }
+
+    #[test]
+    fn set_col_roundtrip() {
+        let mut t = Tensor::zeros(3, 2);
+        t.set_col(1, &[1.0, 2.0, 3.0]);
+        assert_eq!(t.col(1), vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.col(0), vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Tensor::from_vec(1, 3, vec![10., 20., 30.]);
+        a.axpy(0.1, &b);
+        assert_eq!(a.data, vec![2., 4., 6.]);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn frob_norm() {
+        let t = Tensor::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((t.frob_norm() - 5.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,159 @@
+//! Lightweight leveled logging + wall-clock timers.
+//!
+//! Level is read once from `SWITCHLORA_LOG` (error|warn|info|debug|trace,
+//! default info).  Output goes to stderr so CSV/table output on stdout stays
+//! machine-readable.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: OnceLock<()> = OnceLock::new();
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn init() {
+    INIT.get_or_init(|| {
+        START.get_or_init(Instant::now);
+        if let Ok(v) = std::env::var("SWITCHLORA_LOG") {
+            let lvl = match v.to_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "info" => Level::Info,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            };
+            LEVEL.store(lvl as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn set_level(l: Level) {
+    init();
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(l: Level) -> bool {
+    init();
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments) {
+    if enabled(l) {
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {tag}] {args}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info,
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnlog {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn,
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debuglog {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug,
+                                   format_args!($($arg)*))
+    };
+}
+
+/// Scope timer: accumulates elapsed time across start/stop cycles.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    pub name: &'static str,
+    total: f64,
+    count: u64,
+    started: Option<Instant>,
+}
+
+impl Timer {
+    pub fn new(name: &'static str) -> Self {
+        Timer { name, total: 0.0, count: 0, started: None }
+    }
+
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.total += t.elapsed().as_secs_f64();
+            self.count += 1;
+        }
+    }
+
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        self.start();
+        let out = f();
+        self.stop();
+        out
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.total
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            1e3 * self.total / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = Timer::new("x");
+        for _ in 0..3 {
+            t.time(|| std::thread::sleep(std::time::Duration::from_millis(2)));
+        }
+        assert_eq!(t.count(), 3);
+        assert!(t.total_secs() >= 0.006);
+        assert!(t.mean_ms() >= 2.0);
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut t = Timer::new("y");
+        t.stop();
+        assert_eq!(t.count(), 0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Shared utilities: RNG, JSON, logging/timing, property-test harness.
+
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+
+/// Format a byte count as a human-readable string.
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
+/// Format a parameter count with M/B suffixes (paper-table style).
+pub fn human_params(n: u64) -> String {
+    if n >= 1_000_000_000 {
+        format!("{:.1}B", n as f64 / 1e9)
+    } else if n >= 1_000_000 {
+        format!("{:.1}M", n as f64 / 1e6)
+    } else if n >= 1_000 {
+        format!("{:.1}K", n as f64 / 1e3)
+    } else {
+        format!("{n}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512B");
+        assert_eq!(human_bytes(2048), "2.0KB");
+        assert_eq!(human_bytes(95_600_000), "91.2MB");
+    }
+
+    #[test]
+    fn params_formatting() {
+        assert_eq!(human_params(1_339_500_000), "1.3B");
+        assert_eq!(human_params(610_000_000), "610.0M");
+        assert_eq!(human_params(999), "999");
+    }
+}

@@ -1,0 +1,90 @@
+//! Property-based testing harness (proptest is not in the offline vendor
+//! set; this provides the same methodology: seeded generative cases with a
+//! reproduction message on failure).
+//!
+//! ```ignore
+//! prop_check("matmul associates with identity", 100, |rng| {
+//!     let n = 1 + rng.below(16);
+//!     // ... build case, return Err(msg) on violation ...
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed: override with SWITCHLORA_PROP_SEED to replay a failure.
+fn base_seed() -> u64 {
+    std::env::var("SWITCHLORA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE)
+}
+
+/// Run `cases` generated checks.  The property receives a fresh seeded RNG
+/// per case; return `Err(description)` to fail.  Panics with the case seed
+/// so failures are replayable via `SWITCHLORA_PROP_SEED`.
+pub fn prop_check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed on case {case} \
+                 (SWITCHLORA_PROP_SEED={base}): {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f32 slices are elementwise close.
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32)
+    -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff|={} tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        prop_check("u64 xor self is zero", 50, |rng| {
+            let x = rng.next_u64();
+            if x ^ x == 0 {
+                Ok(())
+            } else {
+                Err("xor broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_false_property() {
+        prop_check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_checks() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-6)
+            .is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-5, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-5, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration tests over the PJRT runtime: the Rust↔HLO contract.
+//!
+//! These need `artifacts/tiny` built (`make artifacts`); they skip
+//! gracefully when it is absent so `cargo test` stays green on a fresh
+//! checkout.
+
+use std::sync::Arc;
+
+use switchlora::coordinator::trainer::default_artifacts_dir;
+use switchlora::data::dataset::synth_batches;
+use switchlora::model::init::{init_store, InitMode};
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::optim::adam::{host_step, AdamState};
+use switchlora::optim::AdamHyper;
+use switchlora::runtime::{Engine, ModelRuntime};
+use switchlora::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = default_artifacts_dir().join("tiny");
+    Manifest::load(&dir).ok()
+}
+
+fn init(man: &Manifest, variant: Variant, seed: u64) -> ParamStore {
+    let layout = Arc::new(man.layout(variant).unwrap().clone());
+    let mut store = ParamStore::zeros(layout);
+    let mut rng = Rng::new(seed);
+    init_store(&mut store, &man.linears, man.config.rank,
+               InitMode::SwitchLora, &mut rng);
+    store
+}
+
+#[test]
+fn fwdbwd_loss_near_uniform_and_grads_shaped() {
+    let Some(man) = manifest() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let store = init(&man, Variant::Lora, 0);
+    let rt = ModelRuntime::load(&mut engine, man.clone(), Variant::Lora)
+        .unwrap();
+    let mc = &man.config;
+    let mut it = synth_batches(mc.vocab, 1, 0, mc.batch, mc.seq);
+    let b = it.next_batch();
+    let (loss, grads) = rt.fwdbwd(&store, &b.tokens, b.batch, b.seq_plus_1)
+        .unwrap();
+    // random init ⇒ loss ≈ ln(vocab)
+    assert!((loss - (mc.vocab as f32).ln()).abs() < 0.6, "loss {loss}");
+    assert_eq!(grads.len(), rt.padded);
+    // gradients are non-trivial on live lanes, zero on padding
+    let live = &grads[..man.lora.n_trainable];
+    assert!(live.iter().any(|&g| g.abs() > 1e-6));
+    assert!(grads[man.lora.n_trainable..].iter().all(|&g| g == 0.0));
+    assert!(live.iter().all(|g| g.is_finite()));
+}
+
+#[test]
+fn eval_matches_between_variants_when_adapters_zero() {
+    // With B=0 adapters, the lora model computes the same function as the
+    // full model with identical base weights.
+    let Some(man) = manifest() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let mut lora_store = init(&man, Variant::Lora, 3);
+    for li in &man.linears {
+        lora_store.slice_mut(&li.b).unwrap().fill(0.0);
+    }
+    let mut full_store = ParamStore::zeros(Arc::new(man.full.clone()));
+    switchlora::model::init::copy_shared(&lora_store, &mut full_store);
+    let rt_l = ModelRuntime::load(&mut engine, man.clone(), Variant::Lora)
+        .unwrap();
+    let rt_f = ModelRuntime::load(&mut engine, man.clone(), Variant::Full)
+        .unwrap();
+    let mc = &man.config;
+    let mut it = synth_batches(mc.vocab, 2, 0, mc.batch, mc.seq);
+    let b = it.next_batch();
+    let ll = rt_l.eval_loss(&lora_store, &b.tokens, b.batch, b.seq_plus_1)
+        .unwrap();
+    let lf = rt_f.eval_loss(&full_store, &b.tokens, b.batch, b.seq_plus_1)
+        .unwrap();
+    assert!((ll - lf).abs() < 1e-4, "lora {ll} vs full {lf}");
+}
+
+#[test]
+fn fused_adam_hlo_matches_host_adam() {
+    // Differential test: the L1 Adam kernel (via PJRT) against the Rust
+    // host implementation, including masked and freshly-reset lanes.
+    let Some(man) = manifest() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let rt = ModelRuntime::load(&mut engine, man.clone(), Variant::Lora)
+        .unwrap();
+    let n = rt.padded;
+    let mut rng = Rng::new(9);
+    let mut p_h: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0))
+        .collect();
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut st_h = AdamState::new(n, n);
+    // non-trivial state: random moments, mixed steps, mixed mask,
+    // including the reset+frozen (s=0, mask=0) corner
+    let mut mask = vec![1.0f32; n];
+    for i in 0..n {
+        st_h.m[i] = rng.normal_f32(0.0, 0.1);
+        st_h.v[i] = rng.uniform_range(0.0, 0.01);
+        st_h.s[i] = (rng.below(10)) as f32;
+        if rng.bernoulli(0.3) {
+            mask[i] = 0.0;
+        }
+        if rng.bernoulli(0.1) {
+            st_h.m[i] = 0.0;
+            st_h.v[i] = 0.0;
+            st_h.s[i] = 0.0;
+            mask[i] = 0.0;
+        }
+    }
+    let mut p_k = p_h.clone();
+    let mut st_k = st_h.clone();
+    let hyper = AdamHyper { weight_decay: 0.1, ..AdamHyper::new(2e-2) };
+    rt.adam_step(&mut p_k, &g, &mut st_k, &mask, &hyper).unwrap();
+    host_step(&mut p_h, &g, &mut st_h, &mask, &hyper);
+    let close = |a: &[f32], b: &[f32], what: &str| {
+        for i in 0..n {
+            assert!(a[i].is_finite() && b[i].is_finite(),
+                    "{what}[{i}] not finite: {} vs {}", a[i], b[i]);
+            let tol = 1e-5 + 1e-4 * b[i].abs();
+            assert!((a[i] - b[i]).abs() < tol,
+                    "{what}[{i}]: kernel {} vs host {}", a[i], b[i]);
+        }
+    };
+    close(&p_k, &p_h, "p");
+    close(&st_k.m, &st_h.m, "m");
+    close(&st_k.v, &st_h.v, "v");
+    close(&st_k.s, &st_h.s, "s");
+}
+
+#[test]
+fn cls_eval_counts_correct() {
+    let Some(man) = manifest() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let store = init(&man, Variant::Cls, 5);
+    let rt = ModelRuntime::load(&mut engine, man.clone(), Variant::Cls)
+        .unwrap();
+    let mc = &man.config;
+    let mut gen = switchlora::data::tasks::TaskGen::new(
+        switchlora::data::tasks::Task::Majority, mc.vocab, mc.seq, 7);
+    let (toks, labels) = gen.batch(mc.batch);
+    let (loss, correct) =
+        rt.cls_eval(&store, &toks, &labels, mc.batch, mc.seq).unwrap();
+    assert!(loss.is_finite());
+    assert!((0.0..=mc.batch as f32).contains(&correct));
+    // random head ⇒ loss near ln(n_cls)
+    assert!((loss - (mc.n_cls as f32).ln()).abs() < 1.0, "loss {loss}");
+}
+
+#[test]
+fn grad_descent_through_runtime_decreases_loss() {
+    let Some(man) = manifest() else { return };
+    let mut engine = Engine::cpu().unwrap();
+    let mut store = init(&man, Variant::Lora, 11);
+    let rt = ModelRuntime::load(&mut engine, man.clone(), Variant::Lora)
+        .unwrap();
+    let mc = &man.config;
+    let mut it = synth_batches(mc.vocab, 4, 0, mc.batch, mc.seq);
+    let b = it.next_batch();
+    let (loss0, _) =
+        rt.fwdbwd(&store, &b.tokens, b.batch, b.seq_plus_1).unwrap();
+    let n = rt.padded;
+    let mut opt = AdamState::new(man.lora.n_trainable, n);
+    let mut mask = vec![0.0f32; n];
+    for x in mask.iter_mut().take(man.lora.n_trainable) {
+        *x = 1.0;
+    }
+    let hyper = AdamHyper::new(1e-2);
+    // five Adam steps on the same batch must overfit it
+    let mut last = loss0;
+    for _ in 0..5 {
+        let (loss, g) =
+            rt.fwdbwd(&store, &b.tokens, b.batch, b.seq_plus_1).unwrap();
+        last = loss;
+        let mut flat = store.gather_trainable(n);
+        rt.adam_step(&mut flat, &g, &mut opt, &mask, &hyper).unwrap();
+        store.scatter_trainable(&flat);
+    }
+    assert!(last < loss0 - 0.1, "loss {loss0} -> {last}");
+}

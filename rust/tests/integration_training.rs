@@ -1,0 +1,179 @@
+//! Integration tests over the full training loop: Trainer invariants,
+//! checkpointing, data parallelism, fine-tuning.  Skip without artifacts.
+
+use std::path::PathBuf;
+
+use switchlora::coordinator::checkpoint;
+use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
+                                       ReLoraParams, SwitchParams,
+                                       TrainConfig, Trainer};
+use switchlora::model::layout::{Manifest, Variant};
+use switchlora::runtime::Engine;
+
+fn have_artifacts() -> bool {
+    default_artifacts_dir().join("tiny/manifest.json").exists()
+}
+
+fn quick_cfg(method: Method, steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny", method, steps);
+    cfg.eval_every = steps;
+    cfg.eval_batches = 2;
+    cfg.warmup = 5;
+    cfg
+}
+
+#[test]
+fn all_methods_train_and_reduce_loss() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let uniform = (256f64).ln();
+    for method in [
+        Method::Full,
+        Method::Lora,
+        Method::SwitchLora(SwitchParams { interval0: 10.0, ratio: 0.3,
+                                          n_freeze: 3 }),
+        Method::ReLora(ReLoraParams { reset_interval: 15, rewarm: 5 }),
+        Method::parse("galore").unwrap(),
+    ] {
+        let name = method.name();
+        let (res, _) = Trainer::new(quick_cfg(method, 40))
+            .unwrap()
+            .run(&mut engine)
+            .unwrap();
+        assert!(res.final_eval_loss.is_finite(), "{name} diverged");
+        assert!(res.final_eval_loss < uniform - 0.2,
+                "{name}: eval {} not below uniform {uniform}",
+                res.final_eval_loss);
+        assert_eq!(res.train_curve.len(), 40);
+    }
+}
+
+#[test]
+fn switchlora_switches_and_ledgers() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let cfg = quick_cfg(
+        Method::SwitchLora(SwitchParams { interval0: 8.0, ratio: 0.5,
+                                          n_freeze: 2 }),
+        20,
+    );
+    let (res, _) = Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
+    assert!(res.total_switches > 0);
+    assert!(res.offload_bytes > 0);
+    // offload accounting: 2 swapped vectors per switch, 2 bytes/elem —
+    // bounded by 2 * 2bytes * max(m,n) per switch
+    let man = Manifest::load(&default_artifacts_dir().join("tiny")).unwrap();
+    let max_dim = man.linears.iter().map(|l| l.m.max(l.n)).max().unwrap();
+    assert!(res.offload_bytes <= res.total_switches * 2 * 2 * max_dim as u64);
+}
+
+#[test]
+fn data_parallel_traffic_scales_with_trainable() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let mut run = |method: Method| {
+        let mut cfg = quick_cfg(method, 4);
+        cfg.workers = 4;
+        let (res, _) =
+            Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
+        res
+    };
+    let full = run(Method::Full);
+    let lora = run(Method::Lora);
+    assert!(full.comm.bytes > 0 && lora.comm.bytes > 0);
+    let ratio = lora.comm.bytes as f64 / full.comm.bytes as f64;
+    let want = lora.n_trainable as f64 / full.n_trainable as f64;
+    // measured ring traffic tracks trainable-parameter ratio (padding adds
+    // a little slack)
+    assert!((ratio - want).abs() < 0.15, "ratio {ratio} vs want {want}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let cfg = quick_cfg(Method::Lora, 10);
+    let trainer = Trainer::new(cfg).unwrap();
+    let (res, store) = trainer.run(&mut engine).unwrap();
+    let dir = std::env::temp_dir().join("switchlora_it_ckpt");
+    let path = dir.join("t.ckpt");
+    checkpoint::save(&path, "tiny", &store, None).unwrap();
+    // reload into a fresh store and re-evaluate
+    let man = Manifest::load(&default_artifacts_dir().join("tiny")).unwrap();
+    let mut fresh = switchlora::model::layout::ParamStore::zeros(
+        std::sync::Arc::new(man.lora.clone()));
+    let ck = checkpoint::load(&path).unwrap();
+    let (loaded, missing) = ck.restore_into(&mut fresh);
+    assert_eq!(missing, 0);
+    assert_eq!(loaded, man.lora.params.len());
+    let rt = switchlora::runtime::ModelRuntime::load(
+        &mut engine, man.clone(), Variant::Lora).unwrap();
+    let set = switchlora::data::dataset::EvalSet::synth(
+        man.config.vocab, 42, man.config.batch, man.config.seq, 2);
+    let loss = switchlora::coordinator::eval::eval_loss(&rt, &fresh, &set)
+        .unwrap();
+    assert!((loss as f64 - res.final_eval_loss).abs() < 1e-4,
+            "{loss} vs {}", res.final_eval_loss);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn full_warmup_carries_into_lora_phase() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let mut cfg = quick_cfg(
+        Method::SwitchLora(SwitchParams::default()), 15);
+    cfg.full_warmup_steps = 10;
+    let (res, _) = Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
+    assert!(res.final_eval_loss.is_finite());
+    // warm-started run should already be better than uniform quickly
+    assert!(res.final_eval_loss < (256f64).ln() - 0.3,
+            "eval {}", res.final_eval_loss);
+}
+
+#[test]
+fn finetune_improves_over_chance() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    // brief pretrain, then fine-tune on the easiest task
+    let (_, store) = Trainer::new(quick_cfg(Method::Lora, 15))
+        .unwrap()
+        .run(&mut engine)
+        .unwrap();
+    let man = Manifest::load(&default_artifacts_dir().join("tiny")).unwrap();
+    let results = switchlora::exp::finetune::glue_suite(
+        &mut engine, &man, &store, Variant::Lora,
+        &[switchlora::data::tasks::Task::Majority], 250, 3e-3, 1).unwrap();
+    let acc = results[0].accuracy;
+    // majority over 4 classes: chance = 0.25
+    assert!(acc > 0.45, "majority accuracy {acc} not above chance");
+}
+
+#[test]
+fn metrics_csv_is_written() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut engine = Engine::cpu().unwrap();
+    let dir = std::env::temp_dir().join("switchlora_it_csv");
+    let path: PathBuf = dir.join("curve.csv");
+    let mut cfg = quick_cfg(Method::Lora, 6);
+    cfg.metrics_csv = Some(path.clone());
+    Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), 7); // header + 6 steps
+    assert!(text.starts_with("step,loss,ema,lr,eval_loss"));
+    std::fs::remove_dir_all(&dir).ok();
+}
