@@ -1,7 +1,7 @@
 //! Figure 2 / Figure 3 + Table 2 / Table 3 analog: full-rank vs LoRA vs
 //! SwitchLoRA across model sizes and LoRA ranks.
 //!
-//! The paper's claims under test (at testbed scale, see DESIGN.md):
+//! The paper's claims under test (at testbed scale):
 //!   1. plain LoRA pre-training trails full-rank badly;
 //!   2. SwitchLoRA closes most of the gap at the same rank;
 //!   3. a higher rank closes it further (Fig. 3 / Table 3).

@@ -1,8 +1,8 @@
-//! End-to-end system driver (the EXPERIMENTS.md §E2E run).
+//! End-to-end system driver.
 //!
 //! Exercises every layer of the stack on a real small workload: pre-trains
 //! the largest shipped config (`s8m`, ≈5.8M params — scaled for the
-//! single-core CPU testbed, see DESIGN.md) with SwitchLoRA under simulated
+//! single-core CPU testbed) with SwitchLoRA under simulated
 //! data parallelism, logging:
 //!
 //! * the training/eval loss curve (→ `results/e2e_<spec>_<method>.csv`),
@@ -50,9 +50,9 @@ fn main() -> Result<()> {
     print!("{}", exp::results_table("e2e pretrain", &[res.clone()]));
 
     // ---- systems accounting vs the analytic models ----
-    let man = Manifest::load(
-        &switchlora::coordinator::trainer::default_artifacts_dir()
-            .join(&spec))?;
+    let man = Manifest::for_spec(
+        &switchlora::coordinator::trainer::default_artifacts_dir(),
+        &spec)?;
     let measured_comm = res.comm.bytes as f64 / steps as f64;
     let model_comm = analytics::dp_comm_bytes_per_step(
         res.n_trainable as u64, workers as u64) as f64;

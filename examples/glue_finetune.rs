@@ -28,9 +28,9 @@ fn main() -> Result<()> {
     let ft_steps = args.parse_num("ft-steps", 250u64)?;
     let seed = args.parse_num("seed", 42u64)?;
     let mut engine = Engine::cpu()?;
-    let man = Manifest::load(
-        &switchlora::coordinator::trainer::default_artifacts_dir()
-            .join(&spec))?;
+    let man = Manifest::for_spec(
+        &switchlora::coordinator::trainer::default_artifacts_dir(),
+        &spec)?;
 
     let arms: Vec<(&str, Method, Variant, f32)> = vec![
         // fine-tune lr per arm follows the paper's Table 10 pattern:

@@ -1,9 +1,8 @@
-//! Quickstart: pre-train a tiny LLaMA with SwitchLoRA through the full
-//! three-layer stack (Rust coordinator → AOT HLO via PJRT → Pallas-lowered
-//! kernels), evaluate, and save a checkpoint.
+//! Quickstart: pre-train a tiny LLaMA with SwitchLoRA, evaluate, and save
+//! a checkpoint.  Runs on the native CPU engine out of the box; with
+//! `--features pjrt` + AOT artifacts it drives the PJRT/HLO path instead.
 //!
 //! ```bash
-//! make artifacts            # once: AOT-lower the models
 //! cargo run --release --example quickstart
 //! ```
 

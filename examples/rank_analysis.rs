@@ -27,9 +27,9 @@ fn main() -> Result<()> {
     let spec = args.get_or("spec", "tiny");
     let steps = args.parse_num("steps", 300u64)?;
     let mut engine = Engine::cpu()?;
-    let man = Manifest::load(
-        &switchlora::coordinator::trainer::default_artifacts_dir()
-            .join(&spec))?;
+    let man = Manifest::for_spec(
+        &switchlora::coordinator::trainer::default_artifacts_dir(),
+        &spec)?;
 
     let mut spreads = Vec::new();
     for method in [Method::Full, Method::Lora,

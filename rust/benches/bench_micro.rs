@@ -2,8 +2,7 @@
 //! switch op, freeze-mask application, ring all-reduce, host vs fused-HLO
 //! Adam, SVD (the GaLore per-refresh cost), and literal marshaling.
 //!
-//! These are the L3 profile the §Perf iteration worked from; see
-//! EXPERIMENTS.md §Perf for the before/after log.
+//! These are the L3 profile the §Perf iteration worked from.
 
 use switchlora::bench::{bench, bench_budget};
 use switchlora::coordinator::data_parallel::{ring_all_reduce, CommLedger};
@@ -21,9 +20,9 @@ use switchlora::util::rng::Rng;
 
 fn bench_switch_op() {
     println!("\n-- switch op (Algorithm 1) --");
-    let dir = default_artifacts_dir().join("s1m");
-    let Ok(man) = Manifest::load(&dir) else {
-        println!("(s1m artifacts missing)");
+    let Ok(man) = Manifest::for_spec(&default_artifacts_dir(), "s1m")
+    else {
+        println!("(s1m spec unavailable)");
         return;
     };
     let layout = std::sync::Arc::new(man.lora.clone());
@@ -68,8 +67,8 @@ fn bench_ring() {
 
 fn bench_adam(engine: &mut Engine) {
     println!("\n-- AdamW: host vs fused HLO kernel --");
-    let dir = default_artifacts_dir().join("s1m");
-    let Ok(man) = Manifest::load(&dir) else { return };
+    let Ok(man) = Manifest::for_spec(&default_artifacts_dir(), "s1m")
+    else { return };
     let Ok(rt) = ModelRuntime::load(engine, man, Variant::Lora) else {
         return;
     };
@@ -86,7 +85,7 @@ fn bench_adam(engine: &mut Engine) {
     println!("{}", r1.row());
     let mut st2 = AdamState::new(n, n);
     let mut p2 = p.clone();
-    let r2 = bench(&format!("fused HLO adam n={n}"), 2, 30, || {
+    let r2 = bench(&format!("engine adam_step n={n}"), 2, 30, || {
         rt.adam_step(&mut p2, &g, &mut st2, &mask, &h).unwrap();
     });
     println!("{}", r2.row());
@@ -107,8 +106,8 @@ fn bench_svd() {
 fn bench_exec(engine: &mut Engine) {
     println!("\n-- executable latency per config --");
     for spec in ["tiny", "s1m", "s4m", "s8m"] {
-        let dir = default_artifacts_dir().join(spec);
-        let Ok(man) = Manifest::load(&dir) else { continue };
+        let Ok(man) = Manifest::for_spec(&default_artifacts_dir(), spec)
+        else { continue };
         let layout = std::sync::Arc::new(man.lora.clone());
         let mut store = ParamStore::zeros(layout);
         let mut rng = Rng::new(0);
@@ -132,7 +131,7 @@ fn bench_exec(engine: &mut Engine) {
 
 fn main() {
     switchlora::util::logging::init();
-    let mut engine = Engine::cpu().expect("PJRT");
+    let mut engine = Engine::cpu().expect("engine");
     bench_switch_op();
     bench_ring();
     bench_adam(&mut engine);

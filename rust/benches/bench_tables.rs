@@ -58,16 +58,12 @@ fn table5_analytic() {
         }
     }
     println!("(model calibrated on the full-rank 1.3B row only; all other \
-              cells are predictions — see DESIGN.md)");
+              cells are predictions)");
 }
 
 fn table5_measured(engine: &mut Engine) {
     println!("\n===== Table 5 (measured at testbed scale): step time =====");
     let spec = "s1m";
-    if !default_artifacts_dir().join(spec).join("manifest.json").exists() {
-        println!("artifacts for {spec} missing — run `make artifacts`");
-        return;
-    }
     println!("{:<12} {:>10} {:>12} {:>14}", "method", "step_ms",
              "trainable", "offload/step");
     for m in [Method::Full, Method::Lora,
@@ -95,14 +91,14 @@ fn appendix_d(engine: &mut Engine) {
               (paper ≈ 16.25MB)", human_bytes(f));
     // measured at testbed scale
     let spec = "tiny";
-    if default_artifacts_dir().join(spec).join("manifest.json").exists() {
+    {
         let mut cfg = TrainConfig::new(
             spec, Method::parse("switchlora").unwrap(), 40);
         cfg.eval_every = 40;
         cfg.eval_batches = 1;
         let (res, _) = Trainer::new(cfg).unwrap().run(engine).unwrap();
-        let man = switchlora::model::layout::Manifest::load(
-            &default_artifacts_dir().join(spec)).unwrap();
+        let man = switchlora::model::layout::Manifest::for_spec(
+            &default_artifacts_dir(), spec).unwrap();
         let mc = &man.config;
         // Appendix D formula applied to this config, summed over the decay
         // schedule ≈ freq(avg) * r/h * params * 2B * 2 (both pools swap)
@@ -146,11 +142,8 @@ fn appendix_f() {
 fn marshal_bench(engine: &mut Engine) {
     println!("\n===== coordinator overhead (L3 perf target) =====");
     let spec = "tiny";
-    let dir = default_artifacts_dir().join(spec);
-    if !dir.join("manifest.json").exists() {
-        return;
-    }
-    let man = switchlora::model::layout::Manifest::load(&dir).unwrap();
+    let man = switchlora::model::layout::Manifest::for_spec(
+        &default_artifacts_dir(), spec).unwrap();
     let layout = std::sync::Arc::new(man.lora.clone());
     let mut store = switchlora::model::layout::ParamStore::zeros(layout);
     let mut rng = switchlora::util::rng::Rng::new(0);
@@ -180,7 +173,7 @@ fn marshal_bench(engine: &mut Engine) {
 
 fn main() {
     switchlora::util::logging::init();
-    let mut engine = Engine::cpu().expect("PJRT");
+    let mut engine = Engine::cpu().expect("engine");
     table4();
     table5_analytic();
     table5_measured(&mut engine);

@@ -83,11 +83,15 @@ pub fn csv_list(s: &str) -> Vec<String> {
         .collect()
 }
 
-/// Validate a spec name exists under the artifacts dir.
+/// Validate a spec name: either AOT artifacts exist under the artifacts
+/// dir, or the spec is a builtin preset the native backend can synthesize.
 pub fn check_spec(artifacts: &std::path::Path, spec: &str) -> Result<()> {
     let p = artifacts.join(spec).join("manifest.json");
-    if !p.exists() {
-        bail!("spec {spec:?} not found ({} missing) — run `make artifacts`",
+    if !p.exists()
+        && crate::model::config::ModelConfig::builtin(spec).is_none()
+    {
+        bail!("spec {spec:?} not found: no artifacts at {} and no builtin \
+               preset of that name",
               p.display());
     }
     Ok(())
@@ -126,5 +130,13 @@ mod tests {
     #[test]
     fn csv_parsing() {
         assert_eq!(csv_list("a, b,,c"), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn check_spec_accepts_builtins_without_artifacts() {
+        let dir = std::env::temp_dir().join("switchlora_no_artifacts_cli");
+        assert!(check_spec(&dir, "tiny").is_ok());
+        assert!(check_spec(&dir, "s1m_r64").is_ok());
+        assert!(check_spec(&dir, "bogus").is_err());
     }
 }

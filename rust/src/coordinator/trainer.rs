@@ -205,9 +205,10 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: TrainConfig) -> Result<Trainer> {
-        let dir = cfg.artifacts_dir.join(&cfg.spec);
-        let manifest = Manifest::load(&dir)
-            .with_context(|| format!("loading manifest for {}", cfg.spec))?;
+        // AOT artifacts when present; otherwise the builtin (native-only)
+        // manifest, so training runs on a clean machine.
+        let manifest = Manifest::for_spec(&cfg.artifacts_dir, &cfg.spec)
+            .with_context(|| format!("resolving spec {}", cfg.spec))?;
         Ok(Trainer { cfg, manifest })
     }
 

@@ -4,7 +4,7 @@
 //! The paper pre-trains on C4; this environment has no large corpus, so
 //! `synth.rs` generates a structured synthetic language whose learnability
 //! profile exercises the same distinction the paper measures (full-rank vs
-//! rank-limited updates) — see DESIGN.md "Substitutions".
+//! rank-limited updates).
 
 pub mod dataset;
 pub mod synth;

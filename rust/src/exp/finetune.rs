@@ -131,15 +131,15 @@ mod tests {
     use super::*;
     use crate::model::init::{init_store, InitMode};
 
-    fn manifest() -> Option<Manifest> {
-        let dir = crate::coordinator::trainer::default_artifacts_dir()
-            .join("tiny");
-        Manifest::load(&dir).ok()
+    fn manifest() -> Manifest {
+        Manifest::for_spec(
+            &crate::coordinator::trainer::default_artifacts_dir(), "tiny")
+            .unwrap()
     }
 
     #[test]
     fn merge_preserves_zero_after() {
-        let Some(man) = manifest() else { return };
+        let man = manifest();
         let layout = std::sync::Arc::new(man.lora.clone());
         let mut store = ParamStore::zeros(layout);
         let mut rng = Rng::new(0);
@@ -164,7 +164,7 @@ mod tests {
 
     #[test]
     fn cls_store_has_head_and_weights() {
-        let Some(man) = manifest() else { return };
+        let man = manifest();
         let layout = std::sync::Arc::new(man.lora.clone());
         let mut store = ParamStore::zeros(layout);
         let mut rng = Rng::new(1);

@@ -1,6 +1,5 @@
 //! Experiment drivers: one entry point per paper table/figure, shared by
-//! the examples, the CLI and the bench targets (see DESIGN.md experiment
-//! index).
+//! the examples, the CLI and the bench targets.
 
 pub mod finetune;
 pub mod rank;

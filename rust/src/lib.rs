@@ -1,27 +1,30 @@
 //! # SwitchLoRA — switched low-rank adaptation pre-training system
 //!
 //! A production-grade reproduction of *“SwitchLoRA: Switched Low-Rank
-//! Adaptation Can Learn Full-Rank Information”* (2024) as a three-layer
-//! Rust + JAX + Pallas system:
+//! Adaptation Can Learn Full-Rank Information”* (2024).  The crate is the
+//! whole system: training orchestration, the switching algorithm (paper
+//! Alg. 1/2), optimizer-state resets and freezes, candidate-vector
+//! management with offload accounting, a simulated data-parallel runtime
+//! with ring all-reduce, baselines (full-rank, LoRA, ReLoRA, GaLore),
+//! evaluation, checkpointing, metrics and the CLI.
 //!
-//! * **Layer 1 (Pallas)** — tiled matmul / fused LoRA-linear / fused AdamW
-//!   kernels (`python/compile/kernels/`), AOT-lowered to HLO text.
-//! * **Layer 2 (JAX)** — LLaMA-family decoder with LoRA adapters
-//!   (`python/compile/model.py`), lowered per variant by
-//!   `python/compile/aot.py`.
-//! * **Layer 3 (this crate)** — the coordinator: training orchestration, the
-//!   switching algorithm (paper Alg. 1/2), optimizer-state resets and
-//!   freezes, candidate-vector management with offload accounting, a
-//!   simulated data-parallel runtime with ring all-reduce, baselines
-//!   (full-rank, LoRA, ReLoRA, GaLore), evaluation, checkpointing, metrics
-//!   and the CLI.
+//! Model execution is pluggable (`runtime::Engine`):
 //!
-//! Python never runs on the training path: the binary loads the HLO
-//! artifacts through the PJRT C API (`xla` crate) and drives everything
-//! from Rust.
+//! * **native** (default) — a pure-Rust implementation of the LLaMA-lite
+//!   decoder with LoRA adapters and a hand-written backward pass
+//!   (`runtime/native.rs`).  No Python, XLA library or AOT artifacts are
+//!   needed; `cargo test` trains every method end-to-end on any machine.
+//! * **pjrt** (`--features pjrt`) — the original AOT path: JAX + Pallas
+//!   kernels (`python/compile/`) lowered to HLO text, loaded through the
+//!   PJRT C API (`xla` crate).  Python never runs on the training path.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index,
-//! and `EXPERIMENTS.md` for paper-vs-measured results.
+//! Both backends consume the same manifest-driven parameter layout
+//! (`model/layout.rs`), either parsed from `manifest.json` artifacts or
+//! synthesized in-process from the builtin configs, so the coordinator is
+//! backend-agnostic.
+//!
+//! See the top-level `README.md` for backend selection, the experiment
+//! drivers under `examples/`, and `ROADMAP.md` for where this is headed.
 
 pub mod bench;
 pub mod cli;

@@ -56,6 +56,8 @@ fn dispatch(args: &Args) -> Result<()> {
 
 const HELP: &str = "switchlora — switched low-rank adaptation pre-training\n\
 subcommands: pretrain finetune eval rank tables info\n\
+backend: native CPU by default (no artifacts needed); build with\n\
+`--features pjrt` and set SWITCHLORA_BACKEND=pjrt for the AOT/PJRT path\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
 
 fn method_from_args(args: &Args) -> Result<Method> {
@@ -104,6 +106,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     };
     cfg.metrics_csv = args.get("csv").map(PathBuf::from);
     let mut engine = Engine::cpu()?;
+    switchlora::info!("execution backend: {}", engine.backend_name());
     let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
     print!("{}", exp::results_table("pretrain", &[res.clone()]));
     println!("comm bytes/step: {}  offload bytes/step: {}  switches: {}",
@@ -142,7 +145,7 @@ fn cmd_finetune(args: &Args) -> Result<()> {
     let spec = args.get_or("spec", "tiny");
     let artifacts = default_artifacts_dir();
     check_spec(&artifacts, &spec)?;
-    let manifest = Manifest::load(&artifacts.join(&spec))?;
+    let manifest = Manifest::for_spec(&artifacts, &spec)?;
     let from = match args.get_or("from", "lora").as_str() {
         "lora" => Variant::Lora,
         "full" => Variant::Full,
@@ -176,7 +179,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let spec = args.get_or("spec", "tiny");
     let artifacts = default_artifacts_dir();
     check_spec(&artifacts, &spec)?;
-    let manifest = Manifest::load(&artifacts.join(&spec))?;
+    let manifest = Manifest::for_spec(&artifacts, &spec)?;
     let variant = variant_from_args(args)?;
     let store = load_store(&manifest, variant, args.req("ckpt")?)?;
     let mut engine = Engine::cpu()?;
@@ -197,7 +200,7 @@ fn cmd_rank(args: &Args) -> Result<()> {
     let spec = args.get_or("spec", "tiny");
     let artifacts = default_artifacts_dir();
     check_spec(&artifacts, &spec)?;
-    let manifest = Manifest::load(&artifacts.join(&spec))?;
+    let manifest = Manifest::for_spec(&artifacts, &spec)?;
     let variant = variant_from_args(args)?;
     let store = load_store(&manifest, variant, args.req("ckpt")?)?;
     let rows = exp::rank::analyze(&store, &manifest, variant)?;
@@ -261,12 +264,23 @@ fn cmd_info() -> Result<()> {
                 .collect()
         })
         .unwrap_or_default();
+    // builtin presets run on the native backend with no artifacts
+    for c in ModelConfig::runnable_presets() {
+        if !specs.contains(&c.name) {
+            specs.push(c.name);
+        }
+    }
     specs.sort();
     for s in specs {
-        let man = Manifest::load(&artifacts.join(&s))?;
+        let man = Manifest::for_spec(&artifacts, &s)?;
+        let kind = if man.dir.starts_with("<builtin>") {
+            "builtin"
+        } else {
+            "artifacts"
+        };
         println!(
             "  {:<10} h={:<4} L={:<2} vocab={:<5} seq={:<4} r={:<4} \
-             trainable lora/full = {} / {}",
+             trainable lora/full = {} / {}  [{kind}]",
             s, man.config.hidden, man.config.layers, man.config.vocab,
             man.config.seq, man.config.rank,
             human_params(man.lora.n_trainable as u64),

@@ -54,6 +54,42 @@ impl ModelConfig {
         }
     }
 
+    /// The runnable testbed architectures, mirroring
+    /// `python/compile/configs.py` `CONFIGS` exactly.  These back the
+    /// native CPU engine when no AOT artifacts are present: the native
+    /// backend synthesizes a manifest from them (`Manifest::builtin`), so
+    /// the full training loop runs with no Python, XLA or artifacts.
+    pub fn runnable_presets() -> Vec<ModelConfig> {
+        vec![
+            Self::preset("tiny", 256, 64, 2, 4, 128, 64, 16, 8),
+            Self::preset("s1m", 512, 128, 4, 4, 256, 64, 32, 8),
+            Self::preset("s4m", 512, 256, 4, 8, 512, 64, 64, 8),
+            Self::preset("s8m", 1024, 256, 8, 8, 512, 128, 64, 4),
+        ]
+    }
+
+    /// Resolve a spec name to a runnable preset, accepting the aot.py
+    /// rank-override naming scheme (`tiny_r32` ⇒ tiny with rank=alpha=32).
+    pub fn builtin(spec: &str) -> Option<ModelConfig> {
+        if let Some(c) =
+            Self::runnable_presets().into_iter().find(|c| c.name == spec)
+        {
+            return Some(c);
+        }
+        let (base, rank) = spec.rsplit_once("_r")?;
+        let rank: usize = rank.parse().ok()?;
+        let mut c = Self::runnable_presets()
+            .into_iter()
+            .find(|c| c.name == base)?;
+        if rank == 0 {
+            return None;
+        }
+        c.name = spec.to_string();
+        c.rank = rank;
+        c.lora_alpha = rank as f64;
+        Some(c)
+    }
+
     /// The paper's architectures (Table 1 + Table 9).  Never lowered to
     /// HLO here — they drive the analytic Tables 4/5 reproduction.
     pub fn paper_presets() -> Vec<ModelConfig> {
@@ -86,6 +122,21 @@ mod tests {
         assert_eq!(c.hidden, 64);
         assert_eq!(c.head_dim(), 16);
         assert_eq!(c.lora_scale(), 1.0);
+    }
+
+    #[test]
+    fn builtin_specs_resolve() {
+        let t = ModelConfig::builtin("tiny").unwrap();
+        assert_eq!((t.vocab, t.hidden, t.layers, t.heads, t.ff, t.seq,
+                    t.rank, t.batch),
+                   (256, 64, 2, 4, 128, 64, 16, 8));
+        let hr = ModelConfig::builtin("tiny_r32").unwrap();
+        assert_eq!(hr.name, "tiny_r32");
+        assert_eq!(hr.rank, 32);
+        assert_eq!(hr.lora_alpha, 32.0);
+        assert_eq!(hr.hidden, t.hidden);
+        assert!(ModelConfig::builtin("nope").is_none());
+        assert!(ModelConfig::builtin("nope_r8").is_none());
     }
 
     #[test]

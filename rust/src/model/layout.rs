@@ -192,6 +192,81 @@ pub struct Manifest {
     pub adam_padded_cls: Option<usize>,
 }
 
+/// Fused-Adam buffer padding (mirrors `kernels/adam.py::padded_size`,
+/// BLOCK = 8192).  Must match exactly: a builtin manifest and an on-disk
+/// one for the same spec have to agree on buffer sizes, or optimizer
+/// state checkpointed under one fails `adam_step`'s padding check under
+/// the other.
+fn adam_pad(n: usize) -> usize {
+    n.div_ceil(8192) * 8192
+}
+
+/// Build the canonical ordered parameter list for one variant, mirroring
+/// `python/compile/model.py::param_spec` field-for-field.  This is what
+/// lets the native backend run with no manifest.json on disk: both sides
+/// derive the same layout from the same config.
+fn spec_params(c: &ModelConfig, lora: bool, cls: bool) -> Vec<ParamMeta> {
+    let meta = |name: String, shape: Vec<usize>, role, trainable| {
+        let numel = shape.iter().product();
+        ParamMeta { name, shape, role, trainable, numel, offset: 0,
+                    t_offset: None }
+    };
+    let (h, ff, r) = (c.hidden, c.ff, c.rank);
+    let mut out = vec![meta("embed".into(), vec![c.vocab, h], Role::Embed,
+                           true)];
+    let push_linear = |out: &mut Vec<ParamMeta>, name: String, m: usize,
+                       n: usize| {
+        out.push(meta(name.clone(), vec![m, n], Role::Base, !lora));
+        if lora {
+            out.push(meta(format!("{name}.a"), vec![r, n], Role::LoraA,
+                          true));
+            out.push(meta(format!("{name}.b"), vec![m, r], Role::LoraB,
+                          true));
+        }
+    };
+    for i in 0..c.layers {
+        out.push(meta(format!("l{i}.attn_norm"), vec![h], Role::Norm, true));
+        for w in ["wq", "wk", "wv", "wo"] {
+            push_linear(&mut out, format!("l{i}.{w}"), h, h);
+        }
+        out.push(meta(format!("l{i}.mlp_norm"), vec![h], Role::Norm, true));
+        push_linear(&mut out, format!("l{i}.w_gate"), ff, h);
+        push_linear(&mut out, format!("l{i}.w_up"), ff, h);
+        push_linear(&mut out, format!("l{i}.w_down"), h, ff);
+    }
+    out.push(meta("final_norm".into(), vec![h], Role::Norm, true));
+    if cls {
+        out.push(meta("cls_head".into(), vec![c.n_cls, h], Role::ClsHead,
+                      true));
+    } else {
+        out.push(meta("lm_head".into(), vec![c.vocab, h], Role::Head, true));
+    }
+    out
+}
+
+fn spec_linears(c: &ModelConfig) -> Vec<LinearMeta> {
+    let mut out = Vec::with_capacity(7 * c.layers);
+    for i in 0..c.layers {
+        for (w, m, n) in [("wq", c.hidden, c.hidden),
+                          ("wk", c.hidden, c.hidden),
+                          ("wv", c.hidden, c.hidden),
+                          ("wo", c.hidden, c.hidden),
+                          ("w_gate", c.ff, c.hidden),
+                          ("w_up", c.ff, c.hidden),
+                          ("w_down", c.hidden, c.ff)] {
+            let name = format!("l{i}.{w}");
+            out.push(LinearMeta {
+                a: format!("{name}.a"),
+                b: format!("{name}.b"),
+                name,
+                m,
+                n,
+            });
+        }
+    }
+    out
+}
+
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let j = Json::parse_file(&dir.join("manifest.json"))
@@ -234,6 +309,55 @@ impl Manifest {
                 None => None,
             },
         })
+    }
+
+    /// Synthesize a manifest directly from a model config — the native
+    /// backend's path when no AOT artifacts exist.  Layouts, linears and
+    /// padding match what `aot.py` would have serialized for this config.
+    pub fn synthesize(config: ModelConfig) -> Manifest {
+        let lora = Layout::from_metas(spec_params(&config, true, false));
+        let full = Layout::from_metas(spec_params(&config, false, false));
+        let cls = Layout::from_metas(spec_params(&config, false, true));
+        let linears = spec_linears(&config);
+        let variants = ["lora_fwdbwd", "lora_eval", "full_fwdbwd",
+                        "full_eval", "cls_fwdbwd", "cls_eval"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        Manifest {
+            dir: PathBuf::from("<builtin>").join(&config.name),
+            variants,
+            adam_padded_lora: adam_pad(lora.n_trainable),
+            adam_padded_full: adam_pad(full.n_trainable),
+            adam_padded_cls: Some(adam_pad(cls.n_trainable)),
+            cls: Some(cls),
+            lora,
+            full,
+            linears,
+            config,
+        }
+    }
+
+    /// The built-in (artifact-free) manifest for a spec name, accepting
+    /// the same `name[_rR]` naming as the AOT pipeline.
+    pub fn builtin(spec: &str) -> Result<Manifest> {
+        let config = ModelConfig::builtin(spec).ok_or_else(|| {
+            anyhow!("unknown spec {spec:?}: no artifacts and no builtin \
+                     preset of that name")
+        })?;
+        Ok(Manifest::synthesize(config))
+    }
+
+    /// Load `artifacts_dir/spec/manifest.json` if it exists, otherwise
+    /// fall back to the synthesized builtin manifest — the resolution
+    /// order every entry point (trainer, CLI, examples, benches) uses.
+    pub fn for_spec(artifacts_dir: &Path, spec: &str) -> Result<Manifest> {
+        let dir = artifacts_dir.join(spec);
+        if dir.join("manifest.json").exists() {
+            Manifest::load(&dir)
+        } else {
+            Manifest::builtin(spec)
+        }
     }
 
     pub fn layout(&self, v: Variant) -> Result<&Layout> {
@@ -376,6 +500,54 @@ mod tests {
         assert_eq!(s.slice("a").unwrap(), &[100., 101., 102.]);
         assert_eq!(s.slice("b").unwrap(), &[103., 104.]);
         assert_eq!(s.slice("w").unwrap(), &[5., 6., 7., 8., 9., 10.]);
+    }
+
+    #[test]
+    fn builtin_manifest_mirrors_python_spec() {
+        let man = Manifest::builtin("tiny").unwrap();
+        assert_eq!(man.config.name, "tiny");
+        assert_eq!(man.linears.len(), 7 * man.config.layers);
+        assert!(man.lora.n_trainable < man.full.n_trainable);
+        assert!(man.adam_padded_lora >= man.lora.n_trainable);
+        // same block size as kernels/adam.py::padded_size
+        assert_eq!(man.adam_padded_lora % 8192, 0);
+        // parameter ordering: embed first, then l0.attn_norm, l0.wq...
+        assert_eq!(man.lora.params[0].name, "embed");
+        assert_eq!(man.lora.params[1].name, "l0.attn_norm");
+        assert_eq!(man.lora.params[2].name, "l0.wq");
+        assert_eq!(man.lora.params[3].name, "l0.wq.a");
+        assert_eq!(man.lora.params[4].name, "l0.wq.b");
+        assert_eq!(man.full.params[2].name, "l0.wq");
+        assert_eq!(man.full.params[3].name, "l0.wk");
+        // roles/shapes per linear, both variants
+        for li in &man.linears {
+            let w = man.lora.meta(&li.name).unwrap();
+            let a = man.lora.meta(&li.a).unwrap();
+            let b = man.lora.meta(&li.b).unwrap();
+            assert_eq!(w.shape, vec![li.m, li.n]);
+            assert_eq!(a.shape, vec![man.config.rank, li.n]);
+            assert_eq!(b.shape, vec![li.m, man.config.rank]);
+            assert!(!w.trainable && a.trainable && b.trainable);
+            assert!(man.full.meta(&li.name).unwrap().trainable);
+            assert!(man.full.meta(&li.a).is_err());
+        }
+        // cls variant swaps the lm head for a class head
+        let cls = man.cls.as_ref().unwrap();
+        assert!(cls.meta("cls_head").is_ok());
+        assert!(cls.meta("lm_head").is_err());
+        assert!(man.full.meta("lm_head").is_ok());
+        // rank-override spec
+        let hr = Manifest::builtin("tiny_r32").unwrap();
+        assert_eq!(hr.config.rank, 32);
+        assert!(hr.lora.n_trainable > man.lora.n_trainable);
+    }
+
+    #[test]
+    fn for_spec_falls_back_to_builtin() {
+        let dir = std::env::temp_dir().join("switchlora_no_artifacts");
+        let man = Manifest::for_spec(&dir, "tiny").unwrap();
+        assert_eq!(man.config.name, "tiny");
+        assert!(Manifest::for_spec(&dir, "not_a_spec").is_err());
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! PJRT client wrapper and executable cache.
+//! PJRT client wrapper and executable cache (`pjrt` feature only).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -13,16 +13,16 @@ use crate::util::logging::Timer;
 /// PJRT handles are not `Send`; the engine lives on the coordinator thread
 /// (on this single-core testbed there is nothing to gain from cross-thread
 /// execution; the data-parallel simulator interleaves workers instead).
-pub struct Engine {
+pub struct PjrtEngine {
     pub client: xla::PjRtClient,
     cache: HashMap<PathBuf, Rc<Executable>>,
 }
 
-impl Engine {
-    pub fn cpu() -> Result<Engine> {
+impl PjrtEngine {
+    pub fn cpu() -> Result<PjrtEngine> {
         let client =
             xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client, cache: HashMap::new() })
+        Ok(PjrtEngine { client, cache: HashMap::new() })
     }
 
     /// Load-and-compile an HLO-text artifact (cached).

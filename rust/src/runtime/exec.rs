@@ -1,6 +1,7 @@
-//! Typed execution interfaces over the AOT artifacts.
+//! Typed execution over the AOT artifacts (`pjrt` feature only): the
+//! PJRT implementation of the [`StepRuntime`] engine trait.
 //!
-//! `ModelRuntime` binds a manifest + variant to its compiled executables
+//! `PjrtRuntime` binds a manifest + variant to its compiled executables
 //! and marshals between the coordinator's host state (`ParamStore`, packed
 //! gradient/optimizer vectors) and XLA literals.  HLO signatures (defined
 //! by `python/compile/model.py` / `aot.py`):
@@ -20,13 +21,14 @@ use std::rc::Rc;
 
 use anyhow::{ensure, Context, Result};
 
-use super::client::{lit_f32, lit_i32, lit_scalar, lit_to_f32, Engine,
-                    Executable};
+use super::client::{lit_f32, lit_i32, lit_scalar, lit_to_f32, Executable,
+                    PjrtEngine};
+use super::StepRuntime;
 use crate::model::layout::{Manifest, ParamStore, Variant};
 use crate::optim::adam::AdamState;
 use crate::optim::AdamHyper;
 
-pub struct ModelRuntime {
+pub struct PjrtRuntime {
     pub manifest: Manifest,
     pub variant: Variant,
     fwdbwd: Rc<Executable>,
@@ -34,32 +36,23 @@ pub struct ModelRuntime {
     adam: Rc<Executable>,
     /// padded trainable size of the fused Adam executable
     pub padded: usize,
-    /// executions counter (for perf accounting)
-    pub n_execs: std::cell::Cell<u64>,
 }
 
-impl ModelRuntime {
+impl PjrtRuntime {
     /// Load the executables of `variant` from `manifest` through `engine`.
-    pub fn load(engine: &mut Engine, manifest: Manifest, variant: Variant)
-        -> Result<ModelRuntime> {
+    pub fn load(engine: &mut PjrtEngine, manifest: Manifest,
+                variant: Variant) -> Result<PjrtRuntime> {
         let key = variant.key();
         let fwdbwd = engine.load(&manifest.hlo_path(&format!(
             "{key}_fwdbwd")))?;
         let eval = engine.load(&manifest.hlo_path(&format!("{key}_eval")))?;
         let padded = manifest.adam_padded(variant)?;
         let adam = engine.load(&manifest.adam_hlo_path(padded))?;
-        Ok(ModelRuntime {
-            manifest,
-            variant,
-            fwdbwd,
-            eval,
-            adam,
-            padded,
-            n_execs: std::cell::Cell::new(0),
-        })
+        Ok(PjrtRuntime { manifest, variant, fwdbwd, eval, adam, padded })
     }
 
-    fn param_literals(&self, store: &ParamStore) -> Result<Vec<xla::Literal>> {
+    fn param_literals(&self, store: &ParamStore)
+        -> Result<Vec<xla::Literal>> {
         let mut lits = Vec::with_capacity(store.layout.params.len() + 2);
         for p in &store.layout.params {
             lits.push(lit_f32(
@@ -68,73 +61,6 @@ impl ModelRuntime {
             )?);
         }
         Ok(lits)
-    }
-
-    fn bump(&self) {
-        self.n_execs.set(self.n_execs.get() + 1);
-    }
-
-    /// One fwd+bwd: returns (loss, grads packed+padded to `self.padded`).
-    pub fn fwdbwd(&self, store: &ParamStore, tokens: &[i32], batch: usize,
-                  seq_plus_1: usize) -> Result<(f32, Vec<f32>)> {
-        let mut inputs = self.param_literals(store)?;
-        inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
-        let out = self.fwdbwd.run(&inputs)?;
-        self.bump();
-        self.pack_grads(store, out)
-    }
-
-    /// Fwd+bwd over several batches with the SAME parameters (the
-    /// data-parallel inner loop): parameter literals are marshaled **once**
-    /// and reused for every worker's execution (§Perf L3 — cuts per-step
-    /// host→literal copies from `workers × |params|` to `|params|`).
-    pub fn fwdbwd_multi(&self, store: &ParamStore,
-                        batches: &[(&[i32], usize, usize)])
-        -> Result<Vec<(f32, Vec<f32>)>> {
-        let mut inputs = self.param_literals(store)?;
-        let mut out = Vec::with_capacity(batches.len());
-        for &(tokens, batch, seq_plus_1) in batches {
-            inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
-            let res = self.fwdbwd.run(&inputs)?;
-            inputs.pop();
-            self.bump();
-            out.push(self.pack_grads(store, res)?);
-        }
-        Ok(out)
-    }
-
-    /// Eval loss over several batches with shared parameter literals.
-    pub fn eval_loss_multi(&self, store: &ParamStore,
-                           batches: &[(&[i32], usize, usize)])
-        -> Result<Vec<f32>> {
-        let mut inputs = self.param_literals(store)?;
-        let mut out = Vec::with_capacity(batches.len());
-        for &(tokens, batch, seq_plus_1) in batches {
-            inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
-            let res = self.eval.run(&inputs)?;
-            inputs.pop();
-            self.bump();
-            out.push(lit_scalar(&res[0])?);
-        }
-        Ok(out)
-    }
-
-    /// Classification fwd+bwd (cls variant only).
-    pub fn cls_fwdbwd(&self, store: &ParamStore, tokens: &[i32],
-                      labels: &[i32], batch: usize, seq: usize)
-        -> Result<(f32, Vec<f32>)> {
-        let mut inputs = self.param_literals(store)?;
-        inputs.push(lit_i32(tokens, &[batch, seq])?);
-        inputs.push(lit_i32(labels, &[batch])?);
-        let out = self.cls_exec()?.run(&inputs)?;
-        self.bump();
-        self.pack_grads(store, out)
-    }
-
-    fn cls_exec(&self) -> Result<&Rc<Executable>> {
-        ensure!(self.variant == Variant::Cls,
-                "cls_fwdbwd requires the cls variant");
-        Ok(&self.fwdbwd)
     }
 
     fn pack_grads(&self, store: &ParamStore, out: Vec<xla::Literal>)
@@ -156,35 +82,81 @@ impl ModelRuntime {
         }
         Ok((loss, flat))
     }
+}
 
-    /// Evaluation loss on one batch.
-    pub fn eval_loss(&self, store: &ParamStore, tokens: &[i32], batch: usize,
-                     seq_plus_1: usize) -> Result<f32> {
+impl StepRuntime for PjrtRuntime {
+    fn fwdbwd(&self, store: &ParamStore, tokens: &[i32], batch: usize,
+              seq_plus_1: usize) -> Result<(f32, Vec<f32>)> {
+        let mut inputs = self.param_literals(store)?;
+        inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
+        let out = self.fwdbwd.run(&inputs)?;
+        self.pack_grads(store, out)
+    }
+
+    /// Parameter literals are marshaled **once** and reused for every
+    /// worker's execution (§Perf L3 — cuts per-step host→literal copies
+    /// from `workers × |params|` to `|params|`).
+    fn fwdbwd_multi(&self, store: &ParamStore,
+                    batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<(f32, Vec<f32>)>> {
+        let mut inputs = self.param_literals(store)?;
+        let mut out = Vec::with_capacity(batches.len());
+        for &(tokens, batch, seq_plus_1) in batches {
+            inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
+            let res = self.fwdbwd.run(&inputs)?;
+            inputs.pop();
+            out.push(self.pack_grads(store, res)?);
+        }
+        Ok(out)
+    }
+
+    fn eval_loss(&self, store: &ParamStore, tokens: &[i32], batch: usize,
+                 seq_plus_1: usize) -> Result<f32> {
         let mut inputs = self.param_literals(store)?;
         inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
         let out = self.eval.run(&inputs)?;
-        self.bump();
         lit_scalar(&out[0])
     }
 
-    /// Classification eval: (mean loss, #correct) on one batch.
-    pub fn cls_eval(&self, store: &ParamStore, tokens: &[i32],
-                    labels: &[i32], batch: usize, seq: usize)
-        -> Result<(f32, f32)> {
+    fn eval_loss_multi(&self, store: &ParamStore,
+                       batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<f32>> {
+        let mut inputs = self.param_literals(store)?;
+        let mut out = Vec::with_capacity(batches.len());
+        for &(tokens, batch, seq_plus_1) in batches {
+            inputs.push(lit_i32(tokens, &[batch, seq_plus_1])?);
+            let res = self.eval.run(&inputs)?;
+            inputs.pop();
+            out.push(lit_scalar(&res[0])?);
+        }
+        Ok(out)
+    }
+
+    fn cls_fwdbwd(&self, store: &ParamStore, tokens: &[i32],
+                  labels: &[i32], batch: usize, seq: usize)
+        -> Result<(f32, Vec<f32>)> {
+        ensure!(self.variant == Variant::Cls,
+                "cls_fwdbwd requires the cls variant");
+        let mut inputs = self.param_literals(store)?;
+        inputs.push(lit_i32(tokens, &[batch, seq])?);
+        inputs.push(lit_i32(labels, &[batch])?);
+        let out = self.fwdbwd.run(&inputs)?;
+        self.pack_grads(store, out)
+    }
+
+    fn cls_eval(&self, store: &ParamStore, tokens: &[i32], labels: &[i32],
+                batch: usize, seq: usize) -> Result<(f32, f32)> {
         ensure!(self.variant == Variant::Cls, "cls_eval needs cls variant");
         let mut inputs = self.param_literals(store)?;
         inputs.push(lit_i32(tokens, &[batch, seq])?);
         inputs.push(lit_i32(labels, &[batch])?);
         let out = self.eval.run(&inputs)?;
-        self.bump();
         Ok((lit_scalar(&out[0])?, lit_scalar(&out[1])?))
     }
 
-    /// Fused AdamW step on the packed trainable vector, via the L1 kernel
-    /// executable.  `params`, `grads`, `opt.{m,v,s}` and `mask` must all be
-    /// padded to `self.padded`.
-    pub fn adam_step(&self, params: &mut [f32], grads: &[f32],
-                     opt: &mut AdamState, mask: &[f32], hyper: &AdamHyper)
+    /// Fused AdamW step via the L1 kernel executable.
+    fn adam_step(&self, params: &mut [f32], grads: &[f32],
+                 opt: &mut AdamState, mask: &[f32], hyper: &AdamHyper)
         -> Result<()> {
         let n = self.padded;
         ensure!(params.len() == n && grads.len() == n && opt.len() == n
@@ -200,7 +172,6 @@ impl ModelRuntime {
             lit_f32(&hyper.to_vec(), &[5])?,
         ];
         let out = self.adam.run(&inputs)?;
-        self.bump();
         ensure!(out.len() == 4, "adam returned {} outputs", out.len());
         params.copy_from_slice(&lit_to_f32(&out[0])?);
         opt.m.copy_from_slice(&lit_to_f32(&out[1])?);

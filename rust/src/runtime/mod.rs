@@ -1,14 +1,237 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts and executes
-//! them from the Rust hot path.  Python is never involved at runtime.
+//! Pluggable execution engine.
 //!
-//! * `client.rs` — PJRT CPU client wrapper + executable cache (HLO text →
-//!   `HloModuleProto::from_text_file` → compile; text is the interchange
-//!   format because xla_extension 0.5.1 rejects jax≥0.5 serialized protos).
-//! * `exec.rs` — literal marshaling and the typed step interfaces
-//!   (`ModelRuntime::fwdbwd`, `eval_loss`, `adam_step`, `cls_*`).
+//! The coordinator talks to the model through two types:
+//!
+//! * [`Engine`] — backend selection.  The default build ships the pure-Rust
+//!   **native** backend (`native.rs`): the tiny/LLaMA-lite decoder with a
+//!   hand-written backward pass, running on any machine with no Python,
+//!   XLA library or AOT artifacts.  The original **PJRT** path (load
+//!   AOT-compiled HLO-text artifacts through the PJRT C API) lives behind
+//!   the `pjrt` cargo feature in `client.rs`/`exec.rs`.
+//! * [`ModelRuntime`] — one model variant bound to a backend; the typed
+//!   step interface (`fwdbwd`, `eval_loss`, `adam_step`, `cls_*`) the
+//!   trainer, evaluator and fine-tuner drive.
+//!
+//! Both backends implement the [`StepRuntime`] trait and share the same
+//! host-side state contract: parameters live in a `ParamStore` laid out by
+//! the manifest, gradients come back packed into the flat trainable vector
+//! (padded to the fused-Adam size), so the optimizer, all-reduce and
+//! switch logic are backend-agnostic.
+//!
+//! Backend selection at run time: `Engine::cpu()` returns the native
+//! backend unless the binary was built with `--features pjrt` *and*
+//! `SWITCHLORA_BACKEND=pjrt` is set.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod exec;
+pub mod native;
 
-pub use client::{Engine, Executable};
-pub use exec::ModelRuntime;
+use std::cell::Cell;
+
+use anyhow::{ensure, Result};
+
+pub use native::NativeModel;
+
+use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::AdamHyper;
+
+/// The engine/runtime contract every backend implements: forward+backward
+/// with loss and packed gradients, eval loss, the classification variants,
+/// and a fused-AdamW step over the padded trainable vector.
+pub trait StepRuntime {
+    /// One fwd+bwd: returns (loss, grads packed+padded).
+    fn fwdbwd(&self, store: &ParamStore, tokens: &[i32], batch: usize,
+              seq_plus_1: usize) -> Result<(f32, Vec<f32>)>;
+
+    /// Evaluation loss on one batch.
+    fn eval_loss(&self, store: &ParamStore, tokens: &[i32], batch: usize,
+                 seq_plus_1: usize) -> Result<f32>;
+
+    /// Classification fwd+bwd (cls variant only).
+    fn cls_fwdbwd(&self, store: &ParamStore, tokens: &[i32],
+                  labels: &[i32], batch: usize, seq: usize)
+        -> Result<(f32, Vec<f32>)>;
+
+    /// Classification eval: (mean loss, #correct) on one batch.
+    fn cls_eval(&self, store: &ParamStore, tokens: &[i32], labels: &[i32],
+                batch: usize, seq: usize) -> Result<(f32, f32)>;
+
+    /// Fused AdamW step on the packed trainable vector.  All buffers must
+    /// be padded to the runtime's padded size.
+    fn adam_step(&self, params: &mut [f32], grads: &[f32],
+                 opt: &mut AdamState, mask: &[f32], hyper: &AdamHyper)
+        -> Result<()>;
+
+    /// Fwd+bwd over several batches with the SAME parameters (the
+    /// data-parallel inner loop).  Backends that marshal parameters into
+    /// device buffers override this to share the marshaling (§Perf L3);
+    /// the native backend reads host memory directly, so the default loop
+    /// is already optimal.
+    fn fwdbwd_multi(&self, store: &ParamStore,
+                    batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<(f32, Vec<f32>)>> {
+        batches
+            .iter()
+            .map(|&(tokens, batch, sp1)| {
+                self.fwdbwd(store, tokens, batch, sp1)
+            })
+            .collect()
+    }
+
+    /// Eval loss over several batches with the same parameters.
+    fn eval_loss_multi(&self, store: &ParamStore,
+                       batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<f32>> {
+        batches
+            .iter()
+            .map(|&(tokens, batch, sp1)| {
+                self.eval_loss(store, tokens, batch, sp1)
+            })
+            .collect()
+    }
+}
+
+/// Backend selector.  Holds whatever per-process state the backend needs
+/// (the PJRT client + executable cache for `pjrt`; nothing for native).
+pub enum Engine {
+    /// Pure-Rust interpreter over the `tensor`-style host buffers.
+    Native,
+    /// PJRT client driving AOT-compiled HLO artifacts.
+    #[cfg(feature = "pjrt")]
+    Pjrt(client::PjrtEngine),
+}
+
+impl Engine {
+    /// The default CPU engine for this build: native, unless the `pjrt`
+    /// feature is compiled in and `SWITCHLORA_BACKEND=pjrt` is set.
+    pub fn cpu() -> Result<Engine> {
+        #[cfg(feature = "pjrt")]
+        if std::env::var("SWITCHLORA_BACKEND").as_deref() == Ok("pjrt") {
+            return Self::pjrt();
+        }
+        Ok(Engine::Native)
+    }
+
+    /// The native backend, unconditionally.
+    pub fn native() -> Engine {
+        Engine::Native
+    }
+
+    /// The PJRT backend (requires `--features pjrt` and AOT artifacts).
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt() -> Result<Engine> {
+        Ok(Engine::Pjrt(client::PjrtEngine::cpu()?))
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Engine::Native => "native",
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(_) => "pjrt",
+        }
+    }
+}
+
+/// One model variant bound to a backend: the object the trainer drives.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    pub variant: Variant,
+    /// padded trainable size of the fused-Adam buffers
+    pub padded: usize,
+    /// executions counter (for perf accounting)
+    pub n_execs: Cell<u64>,
+    inner: Box<dyn StepRuntime>,
+}
+
+impl ModelRuntime {
+    /// Bind `variant` of `manifest` to `engine`'s backend.
+    pub fn load(engine: &mut Engine, manifest: Manifest, variant: Variant)
+        -> Result<ModelRuntime> {
+        let inner: Box<dyn StepRuntime> = match engine {
+            Engine::Native => {
+                Box::new(native::NativeModel::new(manifest.clone(),
+                                                  variant)?)
+            }
+            #[cfg(feature = "pjrt")]
+            Engine::Pjrt(e) => {
+                Box::new(exec::PjrtRuntime::load(e, manifest.clone(),
+                                                 variant)?)
+            }
+        };
+        let padded = manifest.adam_padded(variant)?;
+        Ok(ModelRuntime {
+            manifest,
+            variant,
+            padded,
+            n_execs: Cell::new(0),
+            inner,
+        })
+    }
+
+    fn bump(&self, n: u64) {
+        self.n_execs.set(self.n_execs.get() + n);
+    }
+
+    /// One fwd+bwd: returns (loss, grads packed+padded to `self.padded`).
+    pub fn fwdbwd(&self, store: &ParamStore, tokens: &[i32], batch: usize,
+                  seq_plus_1: usize) -> Result<(f32, Vec<f32>)> {
+        self.bump(1);
+        self.inner.fwdbwd(store, tokens, batch, seq_plus_1)
+    }
+
+    /// Fwd+bwd over several batches with the same parameters.
+    pub fn fwdbwd_multi(&self, store: &ParamStore,
+                        batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<(f32, Vec<f32>)>> {
+        self.bump(batches.len() as u64);
+        self.inner.fwdbwd_multi(store, batches)
+    }
+
+    /// Evaluation loss on one batch.
+    pub fn eval_loss(&self, store: &ParamStore, tokens: &[i32],
+                     batch: usize, seq_plus_1: usize) -> Result<f32> {
+        self.bump(1);
+        self.inner.eval_loss(store, tokens, batch, seq_plus_1)
+    }
+
+    /// Eval loss over several batches with the same parameters.
+    pub fn eval_loss_multi(&self, store: &ParamStore,
+                           batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<f32>> {
+        self.bump(batches.len() as u64);
+        self.inner.eval_loss_multi(store, batches)
+    }
+
+    /// Classification fwd+bwd (cls variant only).
+    pub fn cls_fwdbwd(&self, store: &ParamStore, tokens: &[i32],
+                      labels: &[i32], batch: usize, seq: usize)
+        -> Result<(f32, Vec<f32>)> {
+        ensure!(self.variant == Variant::Cls,
+                "cls_fwdbwd requires the cls variant");
+        self.bump(1);
+        self.inner.cls_fwdbwd(store, tokens, labels, batch, seq)
+    }
+
+    /// Classification eval: (mean loss, #correct) on one batch.
+    pub fn cls_eval(&self, store: &ParamStore, tokens: &[i32],
+                    labels: &[i32], batch: usize, seq: usize)
+        -> Result<(f32, f32)> {
+        ensure!(self.variant == Variant::Cls,
+                "cls_eval needs cls variant");
+        self.bump(1);
+        self.inner.cls_eval(store, tokens, labels, batch, seq)
+    }
+
+    /// Fused AdamW step on the packed trainable vector.  `params`,
+    /// `grads`, `opt.{m,v,s}` and `mask` must all be padded to
+    /// `self.padded`.
+    pub fn adam_step(&self, params: &mut [f32], grads: &[f32],
+                     opt: &mut AdamState, mask: &[f32],
+                     hyper: &AdamHyper) -> Result<()> {
+        self.bump(1);
+        self.inner.adam_step(params, grads, opt, mask, hyper)
+    }
+}

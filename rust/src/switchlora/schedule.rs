@@ -36,12 +36,20 @@ impl SwitchSchedule {
     }
 
     /// Integer draw: ⌊s⌋ + Bernoulli(frac(s)), clamped to r.
+    ///
+    /// The clamp is a hard invariant: the driver feeds this straight into
+    /// `Rng::sample_distinct(r, n)`, which panics for n > r.  Saturating
+    /// schedules (tiny intervals, growing frequency) can push the
+    /// expected count past r or to non-finite values — both short-circuit
+    /// to r before any integer conversion.
     pub fn switch_count(&self, step: u64, r: usize, rng: &mut Rng) -> usize {
         let s = self.expected(step, r);
+        if !s.is_finite() || s >= r as f64 {
+            return r;
+        }
         let base = s.floor();
         let frac = s - base;
-        let n = base as usize + usize::from(rng.bernoulli(frac));
-        n.min(r)
+        (base as usize + usize::from(rng.bernoulli(frac))).min(r)
     }
 }
 

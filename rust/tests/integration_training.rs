@@ -1,5 +1,7 @@
 //! Integration tests over the full training loop: Trainer invariants,
-//! checkpointing, data parallelism, fine-tuning.  Skip without artifacts.
+//! checkpointing, data parallelism, fine-tuning.  These run end-to-end on
+//! the native CPU backend with the builtin `tiny` spec, so `cargo test`
+//! genuinely trains all five methods on a clean machine.
 
 use std::path::PathBuf;
 
@@ -10,8 +12,8 @@ use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
 use switchlora::model::layout::{Manifest, Variant};
 use switchlora::runtime::Engine;
 
-fn have_artifacts() -> bool {
-    default_artifacts_dir().join("tiny/manifest.json").exists()
+fn manifest() -> Manifest {
+    Manifest::for_spec(&default_artifacts_dir(), "tiny").unwrap()
 }
 
 fn quick_cfg(method: Method, steps: u64) -> TrainConfig {
@@ -24,9 +26,6 @@ fn quick_cfg(method: Method, steps: u64) -> TrainConfig {
 
 #[test]
 fn all_methods_train_and_reduce_loss() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     let uniform = (256f64).ln();
     for method in [
@@ -52,9 +51,6 @@ fn all_methods_train_and_reduce_loss() {
 
 #[test]
 fn switchlora_switches_and_ledgers() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     let cfg = quick_cfg(
         Method::SwitchLora(SwitchParams { interval0: 8.0, ratio: 0.5,
@@ -66,16 +62,13 @@ fn switchlora_switches_and_ledgers() {
     assert!(res.offload_bytes > 0);
     // offload accounting: 2 swapped vectors per switch, 2 bytes/elem —
     // bounded by 2 * 2bytes * max(m,n) per switch
-    let man = Manifest::load(&default_artifacts_dir().join("tiny")).unwrap();
+    let man = manifest();
     let max_dim = man.linears.iter().map(|l| l.m.max(l.n)).max().unwrap();
     assert!(res.offload_bytes <= res.total_switches * 2 * 2 * max_dim as u64);
 }
 
 #[test]
 fn data_parallel_traffic_scales_with_trainable() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     let mut run = |method: Method| {
         let mut cfg = quick_cfg(method, 4);
@@ -96,9 +89,6 @@ fn data_parallel_traffic_scales_with_trainable() {
 
 #[test]
 fn checkpoint_roundtrip_preserves_eval() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     let cfg = quick_cfg(Method::Lora, 10);
     let trainer = Trainer::new(cfg).unwrap();
@@ -107,7 +97,7 @@ fn checkpoint_roundtrip_preserves_eval() {
     let path = dir.join("t.ckpt");
     checkpoint::save(&path, "tiny", &store, None).unwrap();
     // reload into a fresh store and re-evaluate
-    let man = Manifest::load(&default_artifacts_dir().join("tiny")).unwrap();
+    let man = manifest();
     let mut fresh = switchlora::model::layout::ParamStore::zeros(
         std::sync::Arc::new(man.lora.clone()));
     let ck = checkpoint::load(&path).unwrap();
@@ -127,9 +117,6 @@ fn checkpoint_roundtrip_preserves_eval() {
 
 #[test]
 fn full_warmup_carries_into_lora_phase() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     let mut cfg = quick_cfg(
         Method::SwitchLora(SwitchParams::default()), 15);
@@ -143,16 +130,13 @@ fn full_warmup_carries_into_lora_phase() {
 
 #[test]
 fn finetune_improves_over_chance() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     // brief pretrain, then fine-tune on the easiest task
     let (_, store) = Trainer::new(quick_cfg(Method::Lora, 15))
         .unwrap()
         .run(&mut engine)
         .unwrap();
-    let man = Manifest::load(&default_artifacts_dir().join("tiny")).unwrap();
+    let man = manifest();
     let results = switchlora::exp::finetune::glue_suite(
         &mut engine, &man, &store, Variant::Lora,
         &[switchlora::data::tasks::Task::Majority], 250, 3e-3, 1).unwrap();
@@ -163,9 +147,6 @@ fn finetune_improves_over_chance() {
 
 #[test]
 fn metrics_csv_is_written() {
-    if !have_artifacts() {
-        return;
-    }
     let mut engine = Engine::cpu().unwrap();
     let dir = std::env::temp_dir().join("switchlora_it_csv");
     let path: PathBuf = dir.join("curve.csv");

@@ -1,0 +1,200 @@
+//! Edge cases of the switch machinery (Algorithm 1/2).
+//!
+//! * `SwitchSchedule::switch_count` must never exceed the LoRA rank — the
+//!   driver feeds it straight into `Rng::sample_distinct(rank, nb)`, which
+//!   panics if asked for more than `rank` distinct indices.
+//! * Switching the same vector index again while its counterpart's freeze
+//!   window is still open must keep preserving the effective weight
+//!   `W + s·BA` (the freeze windows overlap; the merges must still cancel
+//!   exactly).
+
+use std::sync::Arc;
+
+use switchlora::model::layout::{Layout, LinearMeta, ParamMeta, ParamStore,
+                                Role};
+use switchlora::optim::adam::AdamState;
+use switchlora::switchlora::candidates::{LinearCandidates, OffloadLedger};
+use switchlora::switchlora::freeze::FreezeManager;
+use switchlora::switchlora::schedule::SwitchSchedule;
+use switchlora::switchlora::switcher::{switch_a, switch_b, LoraSpans,
+                                       SwitchLora};
+use switchlora::tensor::matmul::matmul;
+use switchlora::tensor::Tensor;
+use switchlora::util::prop::prop_check;
+use switchlora::util::rng::Rng;
+
+const M: usize = 10;
+const N: usize = 6;
+const R: usize = 3;
+
+fn setup(seed: u64) -> (ParamStore, Vec<LinearMeta>, AdamState) {
+    let layout = Layout::from_metas(vec![
+        ParamMeta { name: "w".into(), shape: vec![M, N], role: Role::Base,
+                    trainable: false, numel: M * N, offset: 0,
+                    t_offset: None },
+        ParamMeta { name: "w.a".into(), shape: vec![R, N],
+                    role: Role::LoraA, trainable: true, numel: R * N,
+                    offset: 0, t_offset: None },
+        ParamMeta { name: "w.b".into(), shape: vec![M, R],
+                    role: Role::LoraB, trainable: true, numel: M * R,
+                    offset: 0, t_offset: None },
+    ]);
+    let mut store = ParamStore::zeros(Arc::new(layout));
+    let mut rng = Rng::new(seed);
+    for x in store.data.iter_mut() {
+        *x = rng.normal_f32(0.0, 1.0);
+    }
+    let linears = vec![LinearMeta {
+        name: "w".into(), a: "w.a".into(), b: "w.b".into(), m: M, n: N,
+    }];
+    let opt = AdamState::new(R * N + M * R, R * N + M * R);
+    (store, linears, opt)
+}
+
+/// effective weight W + scale·B·A as a Tensor
+fn effective(store: &ParamStore, scale: f32) -> Tensor {
+    let w = store.tensor("w").unwrap();
+    let a = store.tensor("w.a").unwrap();
+    let b = store.tensor("w.b").unwrap();
+    let mut ba = matmul(&b, &a);
+    ba.scale(scale);
+    let mut e = w.clone();
+    e.axpy(1.0, &ba);
+    e
+}
+
+#[test]
+fn switch_count_never_exceeds_rank() {
+    prop_check("switch_count <= rank for any schedule/step", 200, |rng| {
+        // absurdly frequent schedules included: interval0 down to 0.001
+        // pushes the expected count far past r, growing-frequency
+        // (theta < 0) included too
+        let interval0 = 10f64.powf(rng.uniform_range(-3.0, 2.0) as f64);
+        let theta = rng.uniform_range(-0.05, 0.05) as f64;
+        let sched = SwitchSchedule::new(interval0, theta);
+        let rank = 1 + rng.below(64);
+        let step = rng.below(10_000) as u64;
+        let nb = sched.switch_count(step, rank, rng);
+        if nb > rank {
+            return Err(format!(
+                "switch_count {nb} > rank {rank} \
+                 (interval0={interval0}, theta={theta}, step={step})"));
+        }
+        // must also be a valid sample_distinct request
+        let picked = rng.sample_distinct(rank, nb);
+        if picked.len() != nb {
+            return Err("sample_distinct returned wrong count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn apply_step_survives_saturating_schedule() {
+    // Drive Algorithm 2 with an interval so small that the expected count
+    // is ≫ rank every step: the clamp must hold and the effective weight
+    // must still be preserved.
+    let (mut store, linears, mut opt) = setup(21);
+    let sched = SwitchSchedule::new(0.01, 0.0); // expected = 100·r
+    let mut sl = SwitchLora::new(&linears, R, 1.0, sched, 3, 5);
+    let before = effective(&store, 1.0);
+    for step in 0..6 {
+        sl.apply_step(step, &mut store, &mut opt, &linears);
+    }
+    let after = effective(&store, 1.0);
+    assert!(before.max_abs_diff(&after) < 1e-3,
+            "drift {}", before.max_abs_diff(&after));
+    // fully saturated: exactly r switches per side per matrix per step
+    assert_eq!(sl.total_switches, 6 * 2 * R as u64);
+}
+
+#[test]
+fn double_switch_b_same_index_with_overlapping_freeze() {
+    let (mut store, linears, mut opt) = setup(7);
+    let li = &linears[0];
+    let spans = LoraSpans::from_layout(&store, li, R);
+    let mut rng = Rng::new(1);
+    let mut cands = LinearCandidates::init(li, R, &mut rng);
+    let mut ledger = OffloadLedger::default();
+    let mut freeze = FreezeManager::new();
+    // give the counterpart non-trivial optimizer state
+    for x in opt.m.iter_mut() {
+        *x = 1.0;
+    }
+    let before = effective(&store, 0.5);
+    // first switch of B column 1 at step 0, freeze a_1 for steps < 6
+    switch_b(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+             li, &spans, 1, 0, 0.5, 6);
+    // second switch of the SAME column while the freeze window is open
+    // (step 3, freeze until 9) — windows overlap
+    switch_b(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+             li, &spans, 1, 2, 0.5, 9);
+    let after = effective(&store, 0.5);
+    assert!(before.max_abs_diff(&after) < 1e-4,
+            "effective weight drifted by {}",
+            before.max_abs_diff(&after));
+    // counterpart state zeroed by both switches
+    for i in spans.a_row(1).indices() {
+        assert_eq!(opt.m[i], 0.0);
+    }
+    // overlapping windows: still frozen between the two expiries...
+    let mut mask = vec![1.0f32; opt.len()];
+    freeze.apply(7, &mut mask);
+    for i in spans.a_row(1).indices() {
+        assert_eq!(mask[i], 0.0, "freeze must extend to the later window");
+    }
+    // ...and released once the later window expires
+    let mut mask = vec![1.0f32; opt.len()];
+    freeze.apply(9, &mut mask);
+    for i in spans.a_row(1).indices() {
+        assert_eq!(mask[i], 1.0, "freeze must expire at the later window");
+    }
+}
+
+#[test]
+fn double_switch_a_same_index_with_overlapping_freeze() {
+    let (mut store, linears, mut opt) = setup(8);
+    let li = &linears[0];
+    let spans = LoraSpans::from_layout(&store, li, R);
+    let mut rng = Rng::new(2);
+    let mut cands = LinearCandidates::init(li, R, &mut rng);
+    let mut ledger = OffloadLedger::default();
+    let mut freeze = FreezeManager::new();
+    let before = effective(&store, 1.0);
+    switch_a(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+             li, &spans, 0, 1, 1.0, 6);
+    switch_a(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+             li, &spans, 0, 4, 1.0, 9);
+    let after = effective(&store, 1.0);
+    assert!(before.max_abs_diff(&after) < 1e-4,
+            "effective weight drifted by {}",
+            before.max_abs_diff(&after));
+    let mut mask = vec![1.0f32; opt.len()];
+    freeze.apply(7, &mut mask);
+    for i in spans.b_col(0).indices() {
+        assert_eq!(mask[i], 0.0);
+    }
+}
+
+#[test]
+fn switch_back_and_forth_returns_original_vector() {
+    // Swapping with the same pool slot twice must return the original
+    // column exactly (the pool conserves the vector population).
+    let (mut store, linears, mut opt) = setup(9);
+    let li = &linears[0];
+    let spans = LoraSpans::from_layout(&store, li, R);
+    let mut rng = Rng::new(3);
+    let mut cands = LinearCandidates::init(li, R, &mut rng);
+    let mut ledger = OffloadLedger::default();
+    let mut freeze = FreezeManager::new();
+    let b0 = store.tensor("w.b").unwrap();
+    switch_b(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+             li, &spans, 2, 4, 1.0, 5);
+    assert!(b0.max_abs_diff(&store.tensor("w.b").unwrap()) > 1e-4);
+    switch_b(&mut store, &mut opt, &mut freeze, &mut cands, &mut ledger,
+             li, &spans, 2, 4, 1.0, 5);
+    let b2 = store.tensor("w.b").unwrap();
+    assert!(b0.max_abs_diff(&b2) < 1e-6,
+            "double swap with one slot must restore the column");
+    assert_eq!(ledger.swaps, 2);
+}
