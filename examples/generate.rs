@@ -1,0 +1,106 @@
+//! Generation demo: load a checkpoint (or seed a random init), run
+//! KV-cached batched generation with greedy and sampled decoding, and
+//! show the adapter-merge deployment path producing identical greedy
+//! output with zero adapter overhead.
+//!
+//! ```bash
+//! cargo run --release --example generate -- \
+//!     [--spec tiny] [--ckpt results/quickstart.ckpt] [--max-new 48]
+//! ```
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use switchlora::cli::Args;
+use switchlora::coordinator::checkpoint;
+use switchlora::data::tokenizer::{ByteTokenizer, Tokenizer};
+use switchlora::infer::{generate, merged_full_store, GenConfig, Sampler};
+use switchlora::model::init::seeded_store;
+use switchlora::model::layout::{Manifest, Variant};
+use switchlora::runtime::NativeModel;
+use switchlora::util::printable;
+
+fn main() -> Result<()> {
+    switchlora::util::logging::init();
+    let args = Args::parse(std::env::args().skip(1));
+    let spec = args.get_or("spec", "tiny");
+    let max_new = args.parse_num("max-new", 48usize)?;
+    let manifest = Manifest::for_spec(
+        &switchlora::coordinator::trainer::default_artifacts_dir(), &spec)?;
+    let mc = manifest.config.clone();
+
+    let mut store = seeded_store(&manifest, Variant::Lora, 0)?;
+    if let Some(ckpt) = args.get("ckpt") {
+        let ck = checkpoint::load(std::path::Path::new(ckpt))?;
+        let (loaded, missing) = ck.restore_into(&mut store);
+        println!("checkpoint {ckpt}: {loaded} params loaded, {missing} \
+                  skipped");
+    } else {
+        println!("no --ckpt: generating from a seeded random init \
+                  (train one with `cargo run --example quickstart`)");
+    }
+
+    let model = NativeModel::new(manifest.clone(), Variant::Lora)?;
+    let tok = ByteTokenizer::new(mc.vocab);
+    let prompts: Vec<Vec<i32>> = ["The switch", "Low-rank ada", "Full-rank"]
+        .iter()
+        .map(|p| tok.encode(p))
+        .collect();
+
+    // ---- batched greedy decode on the LoRA store ----
+    let cfg = GenConfig::greedy(max_new);
+    let t0 = Instant::now();
+    let out = generate(&model, &store, &prompts, &cfg)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\n== greedy, unmerged LoRA ({} sequences) ==", prompts.len());
+    for (s, seq) in out.sequences.iter().enumerate() {
+        println!("  [{s}] {:?}", printable(&tok.decode(&seq[..])));
+    }
+    let total: usize = out.n_generated.iter().sum();
+    println!("  prefill {} tok, {} decode steps, {:.1} tok/s",
+             out.prefill_tokens, out.decode_steps,
+             total as f64 / dt.max(1e-9));
+
+    // ---- merged deployment path: same function, dense-only decode ----
+    let merged = merged_full_store(&manifest, &store)?;
+    let dense = NativeModel::new(manifest.clone(), Variant::Full)?;
+    let t1 = Instant::now();
+    let out_m = generate(&dense, &merged, &prompts, &cfg)?;
+    let dt_m = t1.elapsed().as_secs_f64();
+    // the in-place merge (adapters folded, B zeroed) computes the exact
+    // same dense weights as the export, so its streams must be identical
+    let mut inplace = store.clone();
+    switchlora::infer::merge_adapters(&mut inplace, &manifest)?;
+    let out_i = generate(&model, &inplace, &prompts, &cfg)?;
+    assert_eq!(out_m.sequences, out_i.sequences,
+               "export and in-place merge must agree exactly");
+    let agree = out
+        .sequences
+        .iter()
+        .zip(&out_m.sequences)
+        .filter(|(a, b)| a == b)
+        .count();
+    println!("\n== greedy, merged W + s·B·A (zero adapter overhead) ==");
+    println!("  export == in-place merge ✓   unmerged streams matched \
+              {agree}/{} (argmax near-ties may flip under float \
+              reassociation)", prompts.len());
+    println!("  merged {:.1} tok/s   unmerged {:.1} tok/s",
+             total as f64 / dt_m.max(1e-9), total as f64 / dt.max(1e-9));
+
+    // ---- sampled decode: top-k + temperature, seeded ----
+    let cfg_s = GenConfig {
+        max_new,
+        sampler: Sampler::top_k(32, 0.9),
+        stop_tokens: vec![0],
+        seed: 7,
+    };
+    let out_s = generate(&model, &store, &prompts, &cfg_s)?;
+    println!("\n== sampled (top-k 32, temperature 0.9, seed 7) ==");
+    for (s, seq) in out_s.sequences.iter().enumerate() {
+        println!("  [{s}] {} new tokens: {:?}", out_s.n_generated[s],
+                 printable(&tok.decode(&seq[prompts[s].len()..])));
+    }
+    Ok(())
+}
+

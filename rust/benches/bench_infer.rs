@@ -1,0 +1,121 @@
+//! Inference benchmarks (`harness = false`): prefill throughput, and the
+//! headline table — KV-cached decode vs uncached full re-forward per
+//! generated token.  The cached path is O(T) per token where the
+//! uncached path is O(T²), so the gap must widen as context grows; the
+//! acceptance check in ISSUE 2 reads off exactly that.  A second table
+//! measures the adapter-merge claim: merged dense decode vs unmerged
+//! LoRA decode at the same context.
+
+use std::time::Instant;
+
+use switchlora::coordinator::trainer::default_artifacts_dir;
+use switchlora::infer::merged_full_store;
+use switchlora::model::init::seeded_store;
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::runtime::{InferRuntime, NativeModel};
+use switchlora::util::rng::Rng;
+
+fn lora_setup(spec: &str) -> Option<(Manifest, ParamStore, NativeModel)> {
+    let man = Manifest::for_spec(&default_artifacts_dir(), spec).ok()?;
+    let store = seeded_store(&man, Variant::Lora, 0).ok()?;
+    let model = NativeModel::new(man.clone(), Variant::Lora).ok()?;
+    Some((man, store, model))
+}
+
+fn prompt(vocab: usize, len: usize) -> Vec<i32> {
+    let mut rng = Rng::new(9);
+    (0..len).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// ms per generated token with the KV cache: prefill once, then time
+/// `n_new` decode steps.
+fn cached_ms_per_tok(model: &NativeModel, store: &ParamStore,
+                     ctx: &[i32], n_new: usize) -> f64 {
+    let mut cache = model.new_cache(1, ctx.len() + n_new + 1);
+    let logits = model.prefill(store, &mut cache, 0, ctx).unwrap();
+    let mut tok = switchlora::infer::argmax(&logits) as i32;
+    let t0 = Instant::now();
+    for _ in 0..n_new {
+        let logits =
+            model.decode(store, &mut cache, &[0], &[tok]).unwrap();
+        tok = switchlora::infer::argmax(&logits) as i32;
+    }
+    1e3 * t0.elapsed().as_secs_f64() / n_new as f64
+}
+
+/// ms per generated token without cache reuse: every new token re-runs
+/// the whole (growing) context through a fresh throwaway cache — the
+/// same inference kernels as the cached path, none of the reuse, so the
+/// table isolates exactly what the KV cache buys.
+fn uncached_ms_per_tok(model: &NativeModel, store: &ParamStore,
+                       ctx: &[i32], n_new: usize) -> f64 {
+    let mut toks = ctx.to_vec();
+    let t0 = Instant::now();
+    for _ in 0..n_new {
+        let mut cache = model.new_cache(1, toks.len());
+        let logits =
+            model.prefill(store, &mut cache, 0, &toks).unwrap();
+        let next = switchlora::infer::argmax(&logits) as i32;
+        toks.push(next);
+    }
+    1e3 * t0.elapsed().as_secs_f64() / n_new as f64
+}
+
+fn bench_cached_vs_uncached(spec: &str) {
+    let Some((man, store, model)) = lora_setup(spec) else {
+        println!("({spec} spec unavailable)");
+        return;
+    };
+    let vocab = man.config.vocab;
+    println!("\n-- {spec}: decode ms/token, cached vs full re-forward --");
+    println!("{:>8} {:>14} {:>14} {:>10}", "context", "uncached",
+             "kv-cached", "speedup");
+    let n_new = 8;
+    for ctx_len in [16usize, 32, 64, 128] {
+        let ctx = prompt(vocab, ctx_len);
+        let cached = cached_ms_per_tok(&model, &store, &ctx, n_new);
+        let uncached = uncached_ms_per_tok(&model, &store, &ctx, n_new);
+        println!("{:>8} {:>12.3}ms {:>12.3}ms {:>9.1}x", ctx_len,
+                 uncached, cached, uncached / cached.max(1e-9));
+    }
+}
+
+fn bench_prefill(spec: &str) {
+    let Some((man, store, model)) = lora_setup(spec) else { return };
+    let vocab = man.config.vocab;
+    println!("\n-- {spec}: prefill throughput --");
+    for len in [32usize, 128] {
+        let ctx = prompt(vocab, len);
+        let mut cache = model.new_cache(1, len + 1);
+        let t0 = Instant::now();
+        model.prefill(&store, &mut cache, 0, &ctx).unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        println!("   prefill {len:>4} tokens: {:>8.2}ms  \
+                  ({:>7.0} tok/s)", 1e3 * dt, len as f64 / dt.max(1e-9));
+    }
+}
+
+fn bench_merge_overhead(spec: &str) {
+    let Some((man, store, model)) = lora_setup(spec) else { return };
+    let vocab = man.config.vocab;
+    let merged = merged_full_store(&man, &store).unwrap();
+    let dense = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    println!("\n-- {spec}: adapter overhead at decode (merge claim) --");
+    let ctx = prompt(vocab, 64);
+    let n_new = 16;
+    let lora_ms = cached_ms_per_tok(&model, &store, &ctx, n_new);
+    let dense_ms = cached_ms_per_tok(&dense, &merged, &ctx, n_new);
+    println!("   unmerged LoRA {lora_ms:.3}ms/tok   merged dense \
+              {dense_ms:.3}ms/tok   adapter overhead {:.1}%",
+             100.0 * (lora_ms - dense_ms) / dense_ms.max(1e-9));
+}
+
+fn main() {
+    switchlora::util::logging::init();
+    for spec in ["tiny", "s1m"] {
+        bench_cached_vs_uncached(spec);
+        bench_prefill(spec);
+        bench_merge_overhead(spec);
+    }
+    println!("\nbench_infer complete");
+}

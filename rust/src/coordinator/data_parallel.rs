@@ -94,17 +94,15 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
 }
 
 /// Theoretical ring volume: 2·(w−1)/w of the buffer per worker, summed.
+/// Chunks are n/w ± 1, so the accounting mirrors the implementation's
+/// exact chunk boundaries instead of approximating.
 pub fn expected_ring_bytes(n_elems: usize, w: usize) -> u64 {
     if w <= 1 {
         return 0;
     }
-    // per round, every worker sends one chunk; 2(w-1) rounds total
-    let mut total = 0u64;
-    for t in 0..2 * (w - 1) {
-        let _ = t;
-    }
-    // chunks are n/w ± 1; exact accounting mirrors the implementation
     let starts: Vec<usize> = (0..=w).map(|c| c * n_elems / w).collect();
+    // reduce-scatter: (w−1) rounds, every worker sends one chunk per round
+    let mut total = 0u64;
     for t in 0..(w - 1) {
         for i in 0..w {
             let c = (i + w - t) % w;

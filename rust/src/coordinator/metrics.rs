@@ -1,11 +1,15 @@
 //! Metrics: CSV loss-curve writers (the Figure 2/3/4/6/8/9 data files) and
-//! run summaries.
+//! run summaries, including the measured all-reduce traffic the paper's
+//! 54%-less-communication claim is about.
 
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+use super::data_parallel::CommLedger;
+use crate::util::human_bytes;
 
 /// Streaming CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -69,6 +73,16 @@ pub fn perplexity(mean_nll: f64) -> f64 {
     mean_nll.exp()
 }
 
+/// One-line per-step communication summary for run reports and the CLI
+/// — the visible form of the paper's claim that all-reduce traffic is
+/// proportional to trainable parameters.
+pub fn comm_summary(comm: &CommLedger, steps: u64) -> String {
+    let per_step = if steps == 0 { 0 } else { comm.bytes / steps };
+    format!("{}/step measured all-reduce traffic ({} total over {} \
+             rounds)",
+            human_bytes(per_step), human_bytes(comm.bytes), comm.rounds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +118,14 @@ mod tests {
     fn perplexity_of_uniform() {
         let v: f64 = 256.0;
         assert!((perplexity(v.ln()) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn comm_summary_reports_per_step_rate() {
+        let comm = CommLedger { bytes: 4096 * 100, rounds: 100 };
+        let s = comm_summary(&comm, 100);
+        assert!(s.contains("4.0KB/step"), "{s}");
+        assert!(s.contains("100 rounds"), "{s}");
+        assert!(comm_summary(&comm, 0).contains("0B/step"));
     }
 }

@@ -286,7 +286,8 @@ impl Trainer {
         // ---- metrics ----
         let mut csv = match &cfg.metrics_csv {
             Some(p) => Some(CsvWriter::create(
-                p, &["step", "loss", "ema", "lr", "eval_loss"])?),
+                p, &["step", "loss", "ema", "lr", "eval_loss",
+                     "comm_bytes"])?),
             None => None,
         };
         let mut ema = Ema::new(0.05);
@@ -332,7 +333,11 @@ impl Trainer {
                 grads.push(g);
             }
             let loss = losses / cfg.workers as f64;
+            // measured all-reduce traffic for THIS step (the ledger is
+            // cumulative): what the comm_bytes CSV column logs
+            let bytes_before = comm.bytes;
             ring_all_reduce(&mut grads, &mut comm);
+            let step_comm_bytes = comm.bytes - bytes_before;
             let grad = &grads[0];
 
             // ---- optimizer ----
@@ -376,14 +381,16 @@ impl Trainer {
                 eval_s = format!("{el:.4}");
                 crate::info!(
                     "[{}/{}] step {step} loss {loss:.4} ema {e:.4} \
-                     eval {el:.4} ppl {:.2} lr {lr:.2e}",
-                    cfg.method.name(), cfg.spec, perplexity(el));
+                     eval {el:.4} ppl {:.2} lr {lr:.2e} comm {}/step",
+                    cfg.method.name(), cfg.spec, perplexity(el),
+                    crate::util::human_bytes(comm.bytes / (step + 1)));
             } else if step % cfg.log_every == 0 {
                 crate::debuglog!("step {step} loss {loss:.4} ema {e:.4}");
             }
             if let Some(c) = csv.as_mut() {
                 c.row(&[step.to_string(), format!("{loss:.6}"),
-                        format!("{e:.6}"), format!("{lr:.6e}"), eval_s])?;
+                        format!("{e:.6}"), format!("{lr:.6e}"), eval_s,
+                        step_comm_bytes.to_string()])?;
             }
         }
         if let Some(c) = csv.as_mut() {

@@ -7,10 +7,14 @@
 
 use std::collections::HashMap;
 
-/// Common interface for the data pipeline.
+/// Common interface for the data pipeline (and the generation CLI's
+/// token streaming).
 pub trait Tokenizer {
     fn vocab_size(&self) -> usize;
     fn encode(&self, text: &str) -> Vec<i32>;
+    /// Decode ids back to text (lossy where the byte stream is not valid
+    /// UTF-8 — generated tokens are arbitrary bytes).
+    fn decode(&self, ids: &[i32]) -> String;
 }
 
 /// Identity over raw bytes, clamped into the model vocab.
@@ -32,6 +36,17 @@ impl Tokenizer for ByteTokenizer {
 
     fn encode(&self, text: &str) -> Vec<i32> {
         text.bytes().map(|b| (b as usize % self.vocab) as i32).collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        // ids beyond the byte range (vocab > 256 presets) have no byte
+        // identity — skip them rather than alias via wraparound
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&i| i >= 0 && (i as usize) < self.vocab.min(256))
+            .map(|&i| i as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
     }
 }
 
@@ -97,6 +112,17 @@ impl BpeTokenizer {
     pub fn n_merges(&self) -> usize {
         self.merges.len()
     }
+
+    /// Expand one id to its byte sequence (recursing through merges).
+    fn expand(&self, id: u32, out: &mut Vec<u8>) {
+        if id < 256 {
+            out.push(id as u8);
+        } else {
+            let (l, r) = self.merges[(id - 256) as usize];
+            self.expand(l, out);
+            self.expand(r, out);
+        }
+    }
 }
 
 impl Tokenizer for BpeTokenizer {
@@ -121,6 +147,17 @@ impl Tokenizer for BpeTokenizer {
             ids = Self::apply_merge(&ids, pair, 256 + r);
         }
         ids.into_iter().map(|x| x as i32).collect()
+    }
+
+    fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::with_capacity(ids.len() * 2);
+        // ids past the learned merges (vocab was not filled) are skipped
+        for &id in ids {
+            if id >= 0 && (id as usize) < 256 + self.n_merges() {
+                self.expand(id as u32, &mut bytes);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
     }
 }
 
@@ -168,5 +205,27 @@ mod tests {
         let t = BpeTokenizer::train("aaaa bbbb", 258);
         let ids = t.encode("zzzz");
         assert_eq!(ids, vec![b'z' as i32; 4]);
+    }
+
+    #[test]
+    fn byte_decode_roundtrips() {
+        let t = ByteTokenizer::new(256);
+        let text = "hello, generation!";
+        assert_eq!(t.decode(&t.encode(text)), text);
+        // ids with no byte identity are skipped, not wrapped
+        let wide = ByteTokenizer::new(512);
+        assert_eq!(wide.decode(&[300, b'A' as i32, -1]), "A");
+    }
+
+    #[test]
+    fn bpe_decode_roundtrips_through_merges() {
+        let text: String = "the quick brown fox jumps over the lazy dog. "
+            .repeat(30);
+        let t = BpeTokenizer::train(&text, 300);
+        let ids = t.encode(&text);
+        assert!(ids.len() < text.len());
+        assert_eq!(t.decode(&ids), text);
+        // out-of-range ids are skipped, not panicked on
+        assert_eq!(t.decode(&[-1, 30_000, b'a' as i32]), "a");
     }
 }

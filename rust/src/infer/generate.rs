@@ -1,0 +1,132 @@
+//! The batched autoregressive generation loop.
+//!
+//! Drives an [`InferRuntime`]: ragged prompts prefill one sequence at a
+//! time into a shared [`KvCache`], then every decode step advances *all*
+//! unfinished sequences by one token (each at its own absolute
+//! position).  Stop handling is per sequence — a finished sequence
+//! leaves the decode batch entirely, so it costs no further compute and
+//! its cache rows stop growing while the rest keep generating.
+//!
+//! Sampling randomness is a fresh stream per `(seed, sequence index)`,
+//! so a sequence's continuation does not depend on what else shares its
+//! batch — batched and single-sequence generation agree token-for-token,
+//! and the same seed always reproduces the same streams.
+
+use anyhow::{ensure, Result};
+
+use super::sampler::Sampler;
+use crate::model::layout::ParamStore;
+use crate::runtime::InferRuntime;
+use crate::util::rng::Rng;
+
+/// Generation-loop configuration.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// tokens to generate per sequence (counting a terminating stop)
+    pub max_new: usize,
+    pub sampler: Sampler,
+    /// token ids that end a sequence (emitted, then the sequence stops)
+    pub stop_tokens: Vec<i32>,
+    pub seed: u64,
+}
+
+impl GenConfig {
+    pub fn greedy(max_new: usize) -> GenConfig {
+        GenConfig {
+            max_new,
+            sampler: Sampler::greedy(),
+            stop_tokens: Vec::new(),
+            seed: 42,
+        }
+    }
+}
+
+/// A finished generation: prompts with their continuations, plus the
+/// counters the throughput benches and the CLI report.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    /// per sequence: prompt followed by generated tokens
+    pub sequences: Vec<Vec<i32>>,
+    /// generated-token count per sequence (≤ `max_new`)
+    pub n_generated: Vec<usize>,
+    pub prefill_tokens: usize,
+    pub decode_steps: usize,
+}
+
+/// Generate continuations for a batch of (possibly ragged) prompts.
+pub fn generate(rt: &dyn InferRuntime, store: &ParamStore,
+                prompts: &[Vec<i32>], cfg: &GenConfig)
+    -> Result<Generation> {
+    generate_stream(rt, store, prompts, cfg, |_, _| {})
+}
+
+/// [`generate`] with a streaming callback: `on_token(seq, token)` fires
+/// for every emitted token, in emission order (the CLI's live output).
+pub fn generate_stream(rt: &dyn InferRuntime, store: &ParamStore,
+                       prompts: &[Vec<i32>], cfg: &GenConfig,
+                       mut on_token: impl FnMut(usize, i32))
+    -> Result<Generation> {
+    ensure!(!prompts.is_empty(), "no prompts to generate from");
+    ensure!(prompts.iter().all(|p| !p.is_empty()),
+            "every prompt needs at least one token");
+    let b = prompts.len();
+    let mut sequences: Vec<Vec<i32>> = prompts.to_vec();
+    if cfg.max_new == 0 {
+        return Ok(Generation {
+            sequences,
+            n_generated: vec![0; b],
+            prefill_tokens: 0,
+            decode_steps: 0,
+        });
+    }
+    let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+    let mut cache = rt.new_cache(b, max_prompt + cfg.max_new);
+    // one independent sampling stream per (seed, sequence index)
+    let mut rngs: Vec<Rng> = (0..b)
+        .map(|s| Rng::new(cfg.seed).fork(s as u64))
+        .collect();
+    // sequences still generating; stopped ones leave the decode batch
+    // entirely (no compute, no further cache growth)
+    let mut active: Vec<usize> = Vec::with_capacity(b);
+    let mut last = vec![0i32; b];
+    let mut prefill_tokens = 0usize;
+    for (s, prompt) in prompts.iter().enumerate() {
+        let logits = rt.prefill(store, &mut cache, s, prompt)?;
+        prefill_tokens += prompt.len();
+        let tok = cfg.sampler.sample(&logits, &mut rngs[s]) as i32;
+        sequences[s].push(tok);
+        on_token(s, tok);
+        last[s] = tok;
+        if !cfg.stop_tokens.contains(&tok) {
+            active.push(s);
+        }
+    }
+    let v = rt.vocab_out();
+    let mut decode_steps = 0usize;
+    for _ in 1..cfg.max_new {
+        if active.is_empty() {
+            break;
+        }
+        let toks: Vec<i32> = active.iter().map(|&s| last[s]).collect();
+        let logits = rt.decode(store, &mut cache, &active, &toks)?;
+        decode_steps += 1;
+        let mut still = Vec::with_capacity(active.len());
+        for (i, &s) in active.iter().enumerate() {
+            let row = &logits[i * v..(i + 1) * v];
+            let tok = cfg.sampler.sample(row, &mut rngs[s]) as i32;
+            sequences[s].push(tok);
+            on_token(s, tok);
+            last[s] = tok;
+            if !cfg.stop_tokens.contains(&tok) {
+                still.push(s);
+            }
+        }
+        active = still;
+    }
+    let n_generated = sequences
+        .iter()
+        .zip(prompts)
+        .map(|(s, p)| s.len() - p.len())
+        .collect();
+    Ok(Generation { sequences, n_generated, prefill_tokens, decode_steps })
+}

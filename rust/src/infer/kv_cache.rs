@@ -1,0 +1,287 @@
+//! Per-layer key/value cache for incremental autoregressive decoding.
+//!
+//! During generation each new token only needs its *own* q/k/v plus the
+//! keys and values of every earlier position — which never change once
+//! computed (RoPE is applied at the absolute position before caching).
+//! Caching them turns per-token decode cost from O(T²) re-forward work
+//! into O(T): one attention sweep over the cache per layer.
+//!
+//! Layout: one `[batch·heads, capacity, head_dim]` f32 buffer per layer
+//! for K and for V.  Sequences advance independently (`lens` is
+//! per-sequence), so ragged prompts and per-sequence stop handling in a
+//! batched decode loop need no padding or masking: attention for
+//! sequence `s` simply sweeps `0..lens[s]`.
+//!
+//! The attention kernel here mirrors `runtime::native::
+//! causal_attention_fwd` operation-for-operation (same dot-product,
+//! max-subtraction and normalization order), so cached decode reproduces
+//! the full re-forward logits bit-for-bit — the property
+//! `rust/tests/inference.rs` pins down.
+
+/// Key/value cache over `layers × batch` independent sequences.
+pub struct KvCache {
+    pub layers: usize,
+    pub batch: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// maximum positions per sequence
+    pub capacity: usize,
+    /// tokens currently cached, per sequence
+    lens: Vec<usize>,
+    /// per layer: `[batch·heads, capacity, head_dim]`
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// score-row scratch reused across `attend` calls (the per-layer
+    /// decode hot path would otherwise heap-allocate per call)
+    scratch: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, batch: usize, heads: usize, head_dim: usize,
+               capacity: usize) -> KvCache {
+        assert!(layers > 0 && batch > 0 && heads > 0 && head_dim > 0
+                && capacity > 0, "degenerate KV cache shape");
+        let per_layer = batch * heads * capacity * head_dim;
+        KvCache {
+            layers,
+            batch,
+            heads,
+            head_dim,
+            capacity,
+            lens: vec![0; batch],
+            k: (0..layers).map(|_| vec![0.0; per_layer]).collect(),
+            v: (0..layers).map(|_| vec![0.0; per_layer]).collect(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Tokens cached so far for sequence `seq`.
+    pub fn len(&self, seq: usize) -> usize {
+        self.lens[seq]
+    }
+
+    /// Forget all cached positions (reuse the allocation for a new batch).
+    pub fn reset(&mut self) {
+        self.lens.fill(0);
+    }
+
+    /// Cache memory footprint in bytes (serving-capacity accounting).
+    pub fn bytes(&self) -> usize {
+        2 * self.layers * self.batch * self.heads * self.capacity
+            * self.head_dim * std::mem::size_of::<f32>()
+    }
+
+    /// Flat offset of `(seq, head, pos)` in a layer buffer.
+    #[inline]
+    fn at(&self, seq: usize, head: usize, pos: usize) -> usize {
+        ((seq * self.heads + head) * self.capacity + pos) * self.head_dim
+    }
+
+    /// Append `t_new` RoPE'd key rows and value rows for sequence `seq`
+    /// at its current length.  `k_new`/`v_new` are `[heads, t_new,
+    /// head_dim]` (the `to_heads` layout of one sequence's chunk).  The
+    /// sequence length is NOT advanced — every layer appends at the same
+    /// base position; call [`KvCache::bump`] once after the last layer.
+    pub fn append(&mut self, layer: usize, seq: usize, k_new: &[f32],
+                  v_new: &[f32], t_new: usize) {
+        let (nh, hd) = (self.heads, self.head_dim);
+        let base = self.lens[seq];
+        assert!(base + t_new <= self.capacity,
+                "KV cache overflow: {base}+{t_new} > {}", self.capacity);
+        assert_eq!(k_new.len(), nh * t_new * hd, "k chunk shape");
+        assert_eq!(v_new.len(), nh * t_new * hd, "v chunk shape");
+        for h in 0..nh {
+            let src = h * t_new * hd;
+            let dst = self.at(seq, h, base);
+            self.k[layer][dst..dst + t_new * hd]
+                .copy_from_slice(&k_new[src..src + t_new * hd]);
+            self.v[layer][dst..dst + t_new * hd]
+                .copy_from_slice(&v_new[src..src + t_new * hd]);
+        }
+    }
+
+    /// Advance sequence `seq` by `t_new` cached positions (once per
+    /// appended chunk, after all layers have run).
+    pub fn bump(&mut self, seq: usize, t_new: usize) {
+        self.lens[seq] += t_new;
+        debug_assert!(self.lens[seq] <= self.capacity);
+    }
+
+    /// Causal softmax attention of a freshly-appended chunk's queries
+    /// over this sequence's cache: `q` is `[heads, t_new, head_dim]`
+    /// (RoPE'd at absolute positions `len..len+t_new`), its K/V already
+    /// appended via [`KvCache::append`].  Chunk row `i` attends to cached
+    /// positions `0..len+i+1`, which is exactly full causal attention.
+    /// Returns `[heads, t_new, head_dim]`.
+    pub fn attend(&mut self, layer: usize, seq: usize, q: &[f32],
+                  t_new: usize) -> Vec<f32> {
+        let (nh, hd, cap) = (self.heads, self.head_dim, self.capacity);
+        let base = self.lens[seq];
+        assert_eq!(q.len(), nh * t_new * hd, "q chunk shape");
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut o = vec![0.0f32; nh * t_new * hd];
+        let mut zrow = std::mem::take(&mut self.scratch);
+        zrow.resize(base + t_new, 0.0);
+        for h in 0..nh {
+            let kg = &self.k[layer][self.at(seq, h, 0)..][..cap * hd];
+            let vg = &self.v[layer][self.at(seq, h, 0)..][..cap * hd];
+            for i in 0..t_new {
+                let qi = &q[(h * t_new + i) * hd..(h * t_new + i + 1) * hd];
+                let ctx = base + i + 1;
+                let mut zmax = f32::NEG_INFINITY;
+                for (j, zj) in zrow.iter_mut().take(ctx).enumerate() {
+                    let kj = &kg[j * hd..(j + 1) * hd];
+                    let mut z = 0.0f32;
+                    for (a, b) in qi.iter().zip(kj) {
+                        z += a * b;
+                    }
+                    let z = z * scale;
+                    *zj = z;
+                    zmax = zmax.max(z);
+                }
+                let mut denom = 0.0f32;
+                for zj in zrow.iter_mut().take(ctx) {
+                    *zj = (*zj - zmax).exp();
+                    denom += *zj;
+                }
+                let orow =
+                    &mut o[(h * t_new + i) * hd..(h * t_new + i + 1) * hd];
+                for (j, zj) in zrow.iter().take(ctx).enumerate() {
+                    let p = zj / denom;
+                    let vj = &vg[j * hd..(j + 1) * hd];
+                    for (od, vd) in orow.iter_mut().zip(vj) {
+                        *od += p * vd;
+                    }
+                }
+            }
+        }
+        self.scratch = zrow;
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::causal_attention_fwd;
+    use crate::util::prop::{assert_close, prop_check};
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 0.7)).collect()
+    }
+
+    #[test]
+    fn append_then_attend_matches_full_causal_attention() {
+        prop_check("cache attend == causal_attention_fwd", 20, |rng| {
+            let nh = 1 + rng.below(3);
+            let hd = 2 * (1 + rng.below(4));
+            let t = 2 + rng.below(6);
+            let q = randv(nh * t * hd, rng);
+            let k = randv(nh * t * hd, rng);
+            let v = randv(nh * t * hd, rng);
+            let (want, _) = causal_attention_fwd(&q, &k, &v, nh, t, hd);
+            // feed the same q/k/v through the cache one token at a time
+            let mut cache = KvCache::new(1, 1, nh, hd, t);
+            let mut got = vec![0.0f32; nh * t * hd];
+            for i in 0..t {
+                let pick = |x: &[f32]| -> Vec<f32> {
+                    (0..nh)
+                        .flat_map(|h| {
+                            x[(h * t + i) * hd..(h * t + i + 1) * hd]
+                                .to_vec()
+                        })
+                        .collect()
+                };
+                let (qi, ki, vi) = (pick(&q), pick(&k), pick(&v));
+                cache.append(0, 0, &ki, &vi, 1);
+                let oi = cache.attend(0, 0, &qi, 1);
+                cache.bump(0, 1);
+                for h in 0..nh {
+                    got[(h * t + i) * hd..(h * t + i + 1) * hd]
+                        .copy_from_slice(&oi[h * hd..(h + 1) * hd]);
+                }
+            }
+            assert_close(&got, &want, 1e-5, 1e-6)
+        });
+    }
+
+    #[test]
+    fn chunked_append_equals_one_shot() {
+        let mut rng = Rng::new(5);
+        let (nh, hd, t) = (2, 4, 6);
+        let q = randv(nh * t * hd, &mut rng);
+        let k = randv(nh * t * hd, &mut rng);
+        let v = randv(nh * t * hd, &mut rng);
+        let mut one = KvCache::new(1, 1, nh, hd, t);
+        one.append(0, 0, &k, &v, t);
+        let want = one.attend(0, 0, &q, t);
+        // split the chunk 4 + 2
+        let split = 4;
+        let part = |x: &[f32], lo: usize, hi: usize| -> Vec<f32> {
+            (0..nh)
+                .flat_map(|h| {
+                    x[(h * t + lo) * hd..(h * t + hi) * hd].to_vec()
+                })
+                .collect()
+        };
+        let mut two = KvCache::new(1, 1, nh, hd, t);
+        two.append(0, 0, &part(&k, 0, split), &part(&v, 0, split), split);
+        let o1 = two.attend(0, 0, &part(&q, 0, split), split);
+        two.bump(0, split);
+        two.append(0, 0, &part(&k, split, t), &part(&v, split, t),
+                   t - split);
+        let o2 = two.attend(0, 0, &part(&q, split, t), t - split);
+        two.bump(0, t - split);
+        assert_eq!(two.len(0), t);
+        for h in 0..nh {
+            for i in 0..t {
+                let w = &want[(h * t + i) * hd..(h * t + i + 1) * hd];
+                let g = if i < split {
+                    &o1[(h * split + i) * hd..(h * split + i + 1) * hd]
+                } else {
+                    let ii = i - split;
+                    let tn = t - split;
+                    &o2[(h * tn + ii) * hd..(h * tn + ii + 1) * hd]
+                };
+                assert_close(g, w, 1e-6, 1e-7).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn sequences_are_independent() {
+        let mut rng = Rng::new(9);
+        let (nh, hd) = (2, 4);
+        let mut cache = KvCache::new(1, 3, nh, hd, 8);
+        let k0 = randv(nh * hd, &mut rng);
+        let v0 = randv(nh * hd, &mut rng);
+        cache.append(0, 0, &k0, &v0, 1);
+        cache.bump(0, 1);
+        cache.append(0, 2, &k0, &v0, 1);
+        cache.bump(2, 1);
+        cache.append(0, 2, &k0, &v0, 1);
+        cache.bump(2, 1);
+        assert_eq!((cache.len(0), cache.len(1), cache.len(2)), (1, 0, 2));
+        cache.reset();
+        assert_eq!((cache.len(0), cache.len(1), cache.len(2)), (0, 0, 0));
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let c = KvCache::new(2, 3, 4, 8, 16);
+        assert_eq!(c.bytes(), 2 * 2 * 3 * 4 * 16 * 8 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut c = KvCache::new(1, 1, 1, 2, 2);
+        let kv = vec![0.0; 2];
+        c.append(0, 0, &kv, &kv, 1);
+        c.bump(0, 1);
+        c.append(0, 0, &kv, &kv, 1);
+        c.bump(0, 1);
+        c.append(0, 0, &kv, &kv, 1);
+    }
+}

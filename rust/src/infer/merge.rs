@@ -1,0 +1,204 @@
+//! Adapter merging: fold `W ← W + s·B·A` into dense base weights.
+//!
+//! LoRA's headline deployment property (Hu et al. 2021) is that the
+//! adapter product can be folded into the frozen base weight, so a
+//! served model pays **zero added inference latency** over the dense
+//! baseline.  SwitchLoRA inherits it unchanged: switching only permutes
+//! which candidate vectors sit in A/B during training, the final
+//! adapters are ordinary LoRA factors.
+//!
+//! Two paths:
+//!
+//! * [`merge_adapters`] — in place on a LoRA-layout store: adds `s·B·A`
+//!   to every base `W` and zeroes `B`, so the unchanged LoRA forward
+//!   computes the merged dense function (`x·A` is still evaluated but
+//!   contributes exactly zero).  Returns a [`MergeState`] whose
+//!   [`unmerge_adapters`] restores the pre-merge store *bitwise* (it
+//!   keeps the original bytes rather than subtracting the delta back,
+//!   which would re-round).
+//! * [`merged_full_store`] — exports a LoRA store as a **full-variant**
+//!   store with adapters folded in: the zero-overhead serving artifact,
+//!   checkpointable via `coordinator::checkpoint` and loadable by any
+//!   full-variant runtime.
+//!
+//! Every path composes the dense delta with [`adapter_delta`] (fixed
+//! j-ascending summation), so merged weights agree bitwise between the
+//! in-place and export paths.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::model::layout::{Manifest, ParamStore, Variant};
+
+/// Dense `s·B·A` in `[m, n]` row-major, with a fixed summation order
+/// (rank index ascending) shared by all merge paths and their tests.
+pub fn adapter_delta(a: &[f32], b: &[f32], m: usize, n: usize, r: usize,
+                     scale: f32) -> Vec<f32> {
+    debug_assert_eq!(a.len(), r * n);
+    debug_assert_eq!(b.len(), m * r);
+    let mut d = vec![0.0f32; m * n];
+    for o in 0..m {
+        let dr = &mut d[o * n..(o + 1) * n];
+        for j in 0..r {
+            let s = scale * b[o * r + j];
+            if s == 0.0 {
+                continue;
+            }
+            let ar = &a[j * n..(j + 1) * n];
+            for (dv, av) in dr.iter_mut().zip(ar) {
+                *dv += s * av;
+            }
+        }
+    }
+    d
+}
+
+/// Saved pre-merge bytes; the receipt `unmerge_adapters` redeems.
+pub struct MergeState {
+    saved: Vec<(String, Vec<f32>)>,
+}
+
+impl MergeState {
+    /// Number of linears that were merged.
+    pub fn n_merged(&self) -> usize {
+        self.saved.len() / 2
+    }
+}
+
+/// Fold every adapter of a LoRA-layout store into its base weight in
+/// place and zero the `B` factors.  After this, the store's LoRA forward
+/// equals the merged dense forward exactly.
+pub fn merge_adapters(store: &mut ParamStore, manifest: &Manifest)
+    -> Result<MergeState> {
+    let scale = manifest.config.lora_scale() as f32;
+    let mut saved = Vec::with_capacity(2 * manifest.linears.len());
+    for li in &manifest.linears {
+        let Some((a, b)) = store.lora_pair(li) else {
+            bail!("store layout has no adapters for {:?} (already merged, \
+                   or a full/cls store?)", li.name);
+        };
+        let r = store.layout.meta(&li.a)?.rows();
+        let delta = adapter_delta(a, b, li.m, li.n, r, scale);
+        saved.push((li.name.clone(), store.slice(&li.name)?.to_vec()));
+        saved.push((li.b.clone(), store.slice(&li.b)?.to_vec()));
+        for (w, d) in store.slice_mut(&li.name)?.iter_mut().zip(&delta) {
+            *w += d;
+        }
+        store.slice_mut(&li.b)?.fill(0.0);
+    }
+    Ok(MergeState { saved })
+}
+
+/// Restore the exact pre-merge parameters saved by [`merge_adapters`].
+pub fn unmerge_adapters(store: &mut ParamStore, state: &MergeState)
+    -> Result<()> {
+    for (name, data) in &state.saved {
+        let dst = store.slice_mut(name)?;
+        ensure!(dst.len() == data.len(),
+                "unmerge shape drift for {name:?}");
+        dst.copy_from_slice(data);
+    }
+    Ok(())
+}
+
+/// Export a LoRA-variant store as a full-variant store with every
+/// adapter folded into its dense weight — the deployment artifact.
+pub fn merged_full_store(manifest: &Manifest, lora_store: &ParamStore)
+    -> Result<ParamStore> {
+    let scale = manifest.config.lora_scale() as f32;
+    let layout =
+        std::sync::Arc::new(manifest.layout(Variant::Full)?.clone());
+    let mut full = ParamStore::zeros(layout);
+    // embeddings, norms, head and the base W's share names and shapes
+    let copied = crate::model::init::copy_shared(lora_store, &mut full);
+    ensure!(copied == full.layout.params.len(),
+            "merged export copied {copied} of {} full-variant params",
+            full.layout.params.len());
+    for li in &manifest.linears {
+        let Some((a, b)) = lora_store.lora_pair(li) else {
+            bail!("store layout has no adapters for {:?}", li.name);
+        };
+        let r = lora_store.layout.meta(&li.a)?.rows();
+        let delta = adapter_delta(a, b, li.m, li.n, r, scale);
+        for (w, d) in full.slice_mut(&li.name)?.iter_mut().zip(&delta) {
+            *w += d;
+        }
+    }
+    Ok(full)
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::model::init::seeded_store;
+    use crate::util::rng::Rng;
+
+    fn lora_store(man: &Manifest, seed: u64) -> ParamStore {
+        seeded_store(man, Variant::Lora, seed).unwrap()
+    }
+
+    #[test]
+    fn adapter_delta_matches_naive_triple_loop() {
+        let (m, n, r) = (5, 7, 3);
+        let mut rng = Rng::new(1);
+        let a: Vec<f32> =
+            (0..r * n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let b: Vec<f32> =
+            (0..m * r).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let s = 0.37f32;
+        let d = adapter_delta(&a, &b, m, n, r, s);
+        for o in 0..m {
+            for kk in 0..n {
+                let mut acc = 0.0f64;
+                for j in 0..r {
+                    acc += (b[o * r + j] as f64) * (a[j * n + kk] as f64);
+                }
+                let want = s as f64 * acc;
+                let got = d[o * n + kk] as f64;
+                assert!((got - want).abs() < 1e-5,
+                        "delta[{o},{kk}]: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_merge_roundtrip_is_bitwise() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let mut store = lora_store(&man, 7);
+        let before = store.data.clone();
+        let state = merge_adapters(&mut store, &man).unwrap();
+        assert_eq!(state.n_merged(), man.linears.len());
+        // merged base weights moved, B factors are zero, A untouched
+        let li = &man.linears[0];
+        assert_ne!(store.slice(&li.name).unwrap(),
+                   &before[store.layout.meta(&li.name).unwrap().offset..]
+                       [..li.m * li.n]);
+        assert!(store.slice(&li.b).unwrap().iter().all(|&x| x == 0.0));
+        unmerge_adapters(&mut store, &state).unwrap();
+        assert_eq!(store.data, before);
+    }
+
+    #[test]
+    fn merge_rejects_full_layout() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let mut full = ParamStore::zeros(Arc::new(man.full.clone()));
+        assert!(merge_adapters(&mut full, &man).is_err());
+        assert!(merged_full_store(&man, &full).is_err());
+    }
+
+    #[test]
+    fn export_matches_in_place_merge_bitwise() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let store = lora_store(&man, 11);
+        let full = merged_full_store(&man, &store).unwrap();
+        let mut merged = store.clone();
+        merge_adapters(&mut merged, &man).unwrap();
+        for p in &full.layout.params {
+            assert_eq!(full.slice(&p.name).unwrap(),
+                       merged.slice(&p.name).unwrap(),
+                       "param {} differs between export and in-place \
+                        merge", p.name);
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Inference subsystem: KV-cached autoregressive generation.
+//!
+//! Training produced checkpoints nobody could *run*; this module is the
+//! serving half of the system:
+//!
+//! * [`kv_cache`] — per-layer K/V cache making per-token decode cost
+//!   O(context) instead of the O(context²) full re-forward.
+//! * [`merge`] — fold `W + s·B·A` adapters into dense weights (LoRA's
+//!   zero-added-latency deployment claim), with an exact unmerge.
+//! * [`sampler`] — greedy / temperature / top-k sampling, seeded.
+//! * [`generate`] — the batched generation loop with ragged prompts and
+//!   per-sequence stop handling.
+//!
+//! The model side lives behind `runtime::InferRuntime` (implemented by
+//! the native backend); entry points are the `generate` CLI subcommand,
+//! `examples/generate.rs` and `benches/bench_infer.rs`.
+
+pub mod generate;
+pub mod kv_cache;
+pub mod merge;
+pub mod sampler;
+
+pub use generate::{generate, generate_stream, GenConfig, Generation};
+pub use kv_cache::KvCache;
+pub use merge::{adapter_delta, merge_adapters, merged_full_store,
+                unmerge_adapters, MergeState};
+pub use sampler::{argmax, Sampler};

@@ -1,0 +1,155 @@
+//! Token sampling: greedy argmax, temperature softmax, top-k filtering.
+//!
+//! All stochastic choices draw from an explicit `util::rng::Rng`, so a
+//! generation run is bit-reproducible from `(seed, sampling params)` —
+//! the determinism contract `rust/tests/inference.rs` pins down.
+
+use crate::util::rng::Rng;
+
+/// Sampling policy for one decode step.
+///
+/// * `temperature <= 0` — greedy argmax (ties break to the lowest id),
+///   `top_k` is ignored.
+/// * otherwise — softmax over `logits / temperature`, restricted to the
+///   `top_k` highest logits when `top_k > 0` (0 means no truncation).
+#[derive(Clone, Copy, Debug)]
+pub struct Sampler {
+    pub temperature: f32,
+    pub top_k: usize,
+}
+
+impl Sampler {
+    pub fn greedy() -> Sampler {
+        Sampler { temperature: 0.0, top_k: 0 }
+    }
+
+    pub fn top_k(k: usize, temperature: f32) -> Sampler {
+        Sampler { temperature, top_k: k }
+    }
+
+    /// Draw one token id from a logit row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> usize {
+        assert!(!logits.is_empty(), "empty logit row");
+        if self.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        let n = logits.len();
+        if self.top_k == 0 || self.top_k >= n {
+            // full softmax: two O(V) passes over ascending ids, no
+            // sort and no candidate allocation
+            let zmax = logits.iter().fold(f32::NEG_INFINITY,
+                                          |m, &z| m.max(z));
+            let inv_t = 1.0 / self.temperature;
+            let w = |z: f32| (((z - zmax) * inv_t) as f64).exp();
+            let total: f64 = logits.iter().map(|&z| w(z)).sum();
+            let mut u = rng.uniform() * total;
+            for (i, &z) in logits.iter().enumerate() {
+                u -= w(z);
+                if u <= 0.0 {
+                    return i;
+                }
+            }
+            return n - 1;
+        }
+        // top-k: O(V) partial selection of the k largest (total_cmp
+        // keeps the comparator a total order even on NaN logits, which
+        // would make the selection panic since Rust 1.81), then a
+        // softmax-CDF walk in canonical ascending-id order so the draw
+        // does not depend on select_nth's internal ordering
+        let mut idx: Vec<usize> = (0..n).collect();
+        let k = self.top_k;
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.sort_unstable();
+        let zmax = idx
+            .iter()
+            .fold(f32::NEG_INFINITY, |m, &i| m.max(logits[i]));
+        let inv_t = 1.0 / self.temperature;
+        let w = |i: usize| (((logits[i] - zmax) * inv_t) as f64).exp();
+        let total: f64 = idx.iter().map(|&i| w(i)).sum();
+        let mut u = rng.uniform() * total;
+        for &i in &idx {
+            u -= w(i);
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        *idx.last().expect("non-empty candidate set")
+    }
+}
+
+/// First-max argmax (deterministic tie-break to the lowest id).
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &z) in logits.iter().enumerate() {
+        if z > bv {
+            bv = z;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax_with_low_tie() {
+        let mut rng = Rng::new(0);
+        let s = Sampler::greedy();
+        assert_eq!(s.sample(&[0.1, 2.0, -1.0, 2.0], &mut rng), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let logits = [0.0, 3.0, 1.0, 2.0, -4.0];
+        let s = Sampler::top_k(2, 1.0);
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 1 || t == 3, "sampled outside top-2: {t}");
+        }
+    }
+
+    #[test]
+    fn temperature_softmax_covers_support() {
+        // at high temperature every id should eventually appear
+        let logits = [0.0, 0.5, -0.5, 0.2];
+        let s = Sampler { temperature: 5.0, top_k: 0 };
+        let mut rng = Rng::new(3);
+        let mut seen = [false; 4];
+        for _ in 0..500 {
+            seen[s.sample(&logits, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&x| x), "support not covered: {seen:?}");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_from_rng_state() {
+        let logits: Vec<f32> = (0..32).map(|i| (i as f32 * 0.37).sin())
+            .collect();
+        let s = Sampler::top_k(8, 0.9);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..50).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        assert_eq!(draw(42), draw(42));
+        assert_ne!(draw(42), draw(43));
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_argmax() {
+        let logits = [0.0, 4.0, 1.0];
+        let s = Sampler { temperature: 0.05, top_k: 0 };
+        let mut rng = Rng::new(11);
+        let hits = (0..200)
+            .filter(|_| s.sample(&logits, &mut rng) == 1)
+            .count();
+        assert!(hits > 190, "only {hits}/200 on the mode");
+    }
+}

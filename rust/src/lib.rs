@@ -6,7 +6,9 @@
 //! Alg. 1/2), optimizer-state resets and freezes, candidate-vector
 //! management with offload accounting, a simulated data-parallel runtime
 //! with ring all-reduce, baselines (full-rank, LoRA, ReLoRA, GaLore),
-//! evaluation, checkpointing, metrics and the CLI.
+//! evaluation, checkpointing, metrics, the CLI, and an inference
+//! subsystem (`infer`): KV-cached autoregressive generation with adapter
+//! merging and batched decode.
 //!
 //! Model execution is pluggable (`runtime::Engine`):
 //!
@@ -31,6 +33,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod exp;
+pub mod infer;
 pub mod model;
 pub mod optim;
 pub mod runtime;

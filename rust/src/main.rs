@@ -9,6 +9,9 @@
 //!            [--tasks majority,contains,...] [--steps 150] [--lr 1e-3]
 //! switchlora eval --spec s1m --ckpt ckpt.bin --variant lora
 //! switchlora rank --spec s1m --ckpt ckpt.bin --variant lora
+//! switchlora generate --spec tiny [--ckpt ckpt.bin] [--variant lora]
+//!            [--merge] [--prompt "text"] [--max-new 64] [--batch 4]
+//!            [--temperature 0.8] [--top-k 40] [--stop 0,10] [--seed 42]
 //! switchlora tables            # analytic Tables 4/5 + App. D/F
 //! switchlora info              # list available artifact specs
 //! ```
@@ -19,16 +22,20 @@ use anyhow::{bail, Result};
 
 use switchlora::cli::{check_spec, csv_list, Args};
 use switchlora::coordinator::checkpoint;
+use switchlora::coordinator::metrics::comm_summary;
 use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
                                        TrainConfig};
 use switchlora::data::tasks::Task;
+use switchlora::data::tokenizer::{ByteTokenizer, Tokenizer};
 use switchlora::exp;
+use switchlora::infer::{generate_stream, merged_full_store, GenConfig,
+                        Sampler};
 use switchlora::model::analytics as an;
 use switchlora::model::config::ModelConfig;
-use switchlora::model::init::InitMode;
+use switchlora::model::init::{seeded_store, InitMode};
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
-use switchlora::runtime::Engine;
-use switchlora::util::{human_bytes, human_params};
+use switchlora::runtime::{load_infer, Engine};
+use switchlora::util::{human_bytes, human_params, printable};
 
 fn main() {
     switchlora::util::logging::init();
@@ -45,6 +52,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "finetune" => cmd_finetune(args),
         "eval" => cmd_eval(args),
         "rank" => cmd_rank(args),
+        "generate" => cmd_generate(args),
         "tables" => cmd_tables(),
         "info" => cmd_info(),
         _ => {
@@ -55,7 +63,7 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "switchlora — switched low-rank adaptation pre-training\n\
-subcommands: pretrain finetune eval rank tables info\n\
+subcommands: pretrain finetune eval rank generate tables info\n\
 backend: native CPU by default (no artifacts needed); build with\n\
 `--features pjrt` and set SWITCHLORA_BACKEND=pjrt for the AOT/PJRT path\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
@@ -109,8 +117,8 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     switchlora::info!("execution backend: {}", engine.backend_name());
     let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
     print!("{}", exp::results_table("pretrain", &[res.clone()]));
-    println!("comm bytes/step: {}  offload bytes/step: {}  switches: {}",
-             human_bytes((res.comm.bytes as f64 / steps as f64) as u64),
+    println!("comm: {}", comm_summary(&res.comm, steps));
+    println!("offload bytes/step: {}  switches: {}",
              human_bytes((res.offload_bytes as f64 / steps as f64) as u64),
              res.total_switches);
     if let Some(out) = args.get("out") {
@@ -206,6 +214,146 @@ fn cmd_rank(args: &Args) -> Result<()> {
     let rows = exp::rank::analyze(&store, &manifest, variant)?;
     println!("singular-value spectra ({} variant):\n{}", variant.key(),
              exp::rank::table(&rows));
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "tiny");
+    let artifacts = default_artifacts_dir();
+    check_spec(&artifacts, &spec)?;
+    let manifest = Manifest::for_spec(&artifacts, &spec)?;
+    let mc = manifest.config.clone();
+    let mut variant = match args.get_or("variant", "lora").as_str() {
+        "lora" => Variant::Lora,
+        "full" => Variant::Full,
+        other => bail!("--variant must be lora|full for generation, \
+                        got {other:?}"),
+    };
+    let seed = args.parse_num("seed", 42u64)?;
+    let mut store = match args.get("ckpt") {
+        Some(ckpt) => load_store(&manifest, variant, ckpt)?,
+        None => {
+            // no checkpoint: a seeded random init still drives the whole
+            // generation pipeline end to end
+            switchlora::info!("no --ckpt given: generating from a seeded \
+                               random init");
+            seeded_store(&manifest, variant, seed)?
+        }
+    };
+    if args.flag("merge") {
+        if variant != Variant::Lora {
+            bail!("--merge folds LoRA adapters into dense weights: \
+                   use --variant lora");
+        }
+        store = merged_full_store(&manifest, &store)?;
+        variant = Variant::Full;
+        switchlora::info!("adapters merged (W ← W + s·B·A): decoding \
+                           with zero adapter overhead");
+    }
+    let engine = Engine::cpu()?;
+    let rt = load_infer(&engine, manifest.clone(), variant)?;
+    let tok = ByteTokenizer::new(mc.vocab);
+    let prompt = tok.encode(&args.get_or("prompt", "The quick brown fox"));
+    if prompt.is_empty() {
+        bail!("--prompt must encode to at least one token");
+    }
+    let batch = args.parse_num("batch", 1usize)?.max(1);
+    let prompts = vec![prompt; batch];
+    let stop_tokens: Vec<i32> = csv_list(&args.get_or("stop", ""))
+        .iter()
+        .map(|s| s.parse().map_err(|e| anyhow::anyhow!("--stop {s:?}: {e}")))
+        .collect::<Result<_>>()?;
+    let cfg = GenConfig {
+        max_new: args.parse_num("max-new", 64usize)?,
+        sampler: Sampler {
+            temperature: args.parse_num("temperature", 0.0f32)?,
+            top_k: args.parse_num("top-k", 0usize)?,
+        },
+        stop_tokens,
+        seed,
+    };
+    println!("spec {spec} [{}]: {} sequence(s), prompt {} tokens, \
+              max-new {}, temperature {}, top-k {}",
+             variant.key(), batch, prompts[0].len(), cfg.max_new,
+             cfg.sampler.temperature, cfg.sampler.top_k);
+    // ids above 255 have no byte identity, so wide-vocab specs
+    // (s1m/s4m/s8m) stream raw token ids instead of decoded text
+    let as_text = mc.vocab <= 256;
+    let render = |ids: &[i32]| -> String {
+        if as_text {
+            printable(&tok.decode(ids))
+        } else {
+            ids.iter()
+                .map(|i| i.to_string())
+                .collect::<Vec<_>>()
+                .join(" ")
+        }
+    };
+    let t0 = std::time::Instant::now();
+    print!("[seq 0] ");
+    // stream the first sequence's tokens as they are decoded; byte
+    // tokens buffer until they complete a UTF-8 sequence so multi-byte
+    // characters stream the same way the summary line renders them
+    let mut pending: Vec<u8> = Vec::new();
+    let gen = generate_stream(rt.as_ref(), &store, &prompts, &cfg,
+                              |s, t| {
+        if s != 0 {
+            return;
+        }
+        if as_text {
+            if (0..256).contains(&t) {
+                pending.push(t as u8);
+            }
+            loop {
+                match std::str::from_utf8(&pending) {
+                    Ok(valid) => {
+                        print!("{}", printable(valid));
+                        pending.clear();
+                        break;
+                    }
+                    Err(e) => {
+                        let n = e.valid_up_to();
+                        if n > 0 {
+                            let valid = std::str::from_utf8(&pending[..n])
+                                .expect("validated prefix");
+                            print!("{}", printable(valid));
+                        }
+                        match e.error_len() {
+                            Some(bad) => {
+                                // invalid sequence: replacement char
+                                print!("\u{FFFD}");
+                                pending.drain(..n + bad);
+                            }
+                            None => {
+                                // incomplete: wait for the next token
+                                pending.drain(..n);
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        } else {
+            print!("{} ", t);
+        }
+        use std::io::Write;
+        let _ = std::io::stdout().flush();
+    })?;
+    if as_text && !pending.is_empty() {
+        // generation ended mid multi-byte sequence
+        print!("\u{FFFD}");
+    }
+    println!();
+    let dt = t0.elapsed().as_secs_f64();
+    for (s, seq) in gen.sequences.iter().enumerate() {
+        let new = &seq[prompts[s].len()..];
+        println!("[seq {s}] {:>3} tokens | {}", new.len(), render(new));
+    }
+    let total: usize = gen.n_generated.iter().sum();
+    println!("prefill {} tokens, {} batched decode steps, {} tokens \
+              generated in {dt:.2}s ({:.1} tok/s)",
+             gen.prefill_tokens, gen.decode_steps, total,
+             total as f64 / dt.max(1e-9));
     Ok(())
 }
 

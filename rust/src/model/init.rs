@@ -12,7 +12,9 @@
 
 use std::collections::HashMap;
 
-use super::layout::{LinearMeta, ParamStore, Role};
+use anyhow::Result;
+
+use super::layout::{LinearMeta, Manifest, ParamStore, Role, Variant};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -98,6 +100,20 @@ pub fn init_store(store: &mut ParamStore, linears: &[LinearMeta], rank: usize,
             }
         }
     }
+}
+
+/// Fresh store for one variant of a manifest, seeded with the standard
+/// SwitchLoRA init — the shared setup of the generate CLI, examples,
+/// benches and tests.
+pub fn seeded_store(manifest: &Manifest, variant: Variant, seed: u64)
+    -> Result<ParamStore> {
+    let layout =
+        std::sync::Arc::new(manifest.layout(variant)?.clone());
+    let mut store = ParamStore::zeros(layout);
+    let mut rng = Rng::new(seed);
+    init_store(&mut store, &manifest.linears, manifest.config.rank,
+               InitMode::SwitchLora, &mut rng);
+    Ok(store)
 }
 
 /// Copy shared parameters between two stores by name (e.g. pre-trained LoRA

@@ -427,6 +427,18 @@ impl ParamStore {
         ))
     }
 
+    /// Merge-aware view of one adapted linear: the `(A, B)` factor
+    /// slices, or `None` when this store's layout carries no adapters
+    /// for it (full/cls variants, or an already-exported merged store).
+    pub fn lora_pair(&self, li: &LinearMeta) -> Option<(&[f32], &[f32])> {
+        let a = self.layout.meta(&li.a).ok()?;
+        let b = self.layout.meta(&li.b).ok()?;
+        Some((
+            &self.data[a.offset..a.offset + a.numel],
+            &self.data[b.offset..b.offset + b.numel],
+        ))
+    }
+
     /// Gather the packed trainable vector (padded to `padded` with zeros).
     /// Because trainable params are packed first (offset == t_offset) this
     /// is a single memcpy of the store prefix.
@@ -540,6 +552,19 @@ mod tests {
         let hr = Manifest::builtin("tiny_r32").unwrap();
         assert_eq!(hr.config.rank, 32);
         assert!(hr.lora.n_trainable > man.lora.n_trainable);
+    }
+
+    #[test]
+    fn lora_pair_views_follow_the_layout() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let li = &man.linears[0];
+        assert!(man.lora.meta(&li.a).is_ok() && man.full.meta(&li.a).is_err());
+        let store = ParamStore::zeros(Arc::new(man.lora.clone()));
+        let (a, b) = store.lora_pair(li).unwrap();
+        assert_eq!(a.len(), man.config.rank * li.n);
+        assert_eq!(b.len(), li.m * man.config.rank);
+        let full = ParamStore::zeros(Arc::new(man.full.clone()));
+        assert!(full.lora_pair(li).is_none());
     }
 
     #[test]

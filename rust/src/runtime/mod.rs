@@ -11,6 +11,9 @@
 //! * [`ModelRuntime`] — one model variant bound to a backend; the typed
 //!   step interface (`fwdbwd`, `eval_loss`, `adam_step`, `cls_*`) the
 //!   trainer, evaluator and fine-tuner drive.
+//! * [`InferRuntime`] — the inference surface: KV-cached prefill/decode
+//!   for autoregressive generation (`infer::generate` drives it; native
+//!   backend only).
 //!
 //! Both backends implement the [`StepRuntime`] trait and share the same
 //! host-side state contract: parameters live in a `ParamStore` laid out by
@@ -34,6 +37,7 @@ use anyhow::{ensure, Result};
 
 pub use native::NativeModel;
 
+use crate::infer::kv_cache::KvCache;
 use crate::model::layout::{Manifest, ParamStore, Variant};
 use crate::optim::adam::AdamState;
 use crate::optim::AdamHyper;
@@ -91,6 +95,54 @@ pub trait StepRuntime {
                 self.eval_loss(store, tokens, batch, sp1)
             })
             .collect()
+    }
+}
+
+/// The inference surface alongside [`StepRuntime`]: KV-cached
+/// autoregressive decoding.  A cache produced by `new_cache` is threaded
+/// through `prefill` (whole-prompt chunks, one sequence at a time — the
+/// prompts may be ragged) and `decode` (one token for *every* sequence
+/// per step, each at its own absolute position).  Per-token decode cost
+/// is O(context) instead of the O(context²) of re-running the full
+/// forward; `infer::generate` drives this loop, and adapter merging
+/// (`infer::merge`) removes even the LoRA adapter arithmetic from the
+/// decode path.
+pub trait InferRuntime {
+    /// Run a prompt chunk for sequence `seq`, extending its cache.
+    /// Returns the last position's LM logits `[vocab]`.
+    fn prefill(&self, store: &ParamStore, cache: &mut KvCache, seq: usize,
+               tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// One KV-cached decode step over the listed sequences (`seqs`
+    /// strictly increasing, one token each).  Finished sequences are
+    /// simply left off the list — they pay no compute and their cache
+    /// rows stop growing.  Returns logits `[seqs.len(), vocab]` in list
+    /// order.
+    fn decode(&self, store: &ParamStore, cache: &mut KvCache,
+              seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// An empty cache shaped for this model: `batch` sequences of up to
+    /// `capacity` positions.
+    fn new_cache(&self, batch: usize, capacity: usize) -> KvCache;
+
+    /// Width of the LM head (the sampler's domain).
+    fn vocab_out(&self) -> usize;
+}
+
+/// Bind `variant` of `manifest` to an inference runtime on `engine`'s
+/// backend.  KV-cached generation is native-only today: the PJRT
+/// artifacts are training-shaped (fixed `[batch, seq+1]` executables
+/// with no incremental entry point).
+pub fn load_infer(engine: &Engine, manifest: Manifest, variant: Variant)
+    -> Result<Box<dyn InferRuntime>> {
+    match engine {
+        Engine::Native => {
+            Ok(Box::new(NativeModel::new(manifest, variant)?))
+        }
+        #[cfg(feature = "pjrt")]
+        Engine::Pjrt(_) => anyhow::bail!(
+            "KV-cached inference requires the native backend \
+             (unset SWITCHLORA_BACKEND)"),
     }
 }
 

@@ -20,7 +20,8 @@
 
 use anyhow::{bail, ensure, Result};
 
-use super::StepRuntime;
+use super::{InferRuntime, StepRuntime};
+use crate::infer::kv_cache::KvCache;
 use crate::model::layout::{Layout, Manifest, ParamStore, Variant};
 use crate::optim::adam::{host_step, AdamState};
 use crate::optim::AdamHyper;
@@ -213,15 +214,24 @@ pub fn rms_norm_bwd(dy: &[f32], x: &[f32], inv: &[f32], g: &[f32],
 /// In-place rotary embedding on `[bh, t, hd]` (pairs `(j, j+hd/2)`,
 /// position = the middle index — mirrors `model.py::_rope`).
 pub fn rope_fwd(x: &mut [f32], bh: usize, t: usize, hd: usize) {
-    rope_apply(x, bh, t, hd, false);
+    rope_apply(x, bh, t, hd, 0, false);
+}
+
+/// Forward rotation at absolute positions `pos0..pos0+t` — the KV-cached
+/// incremental path, where a chunk's rows sit at an offset into the
+/// sequence.  `rope_fwd` is the `pos0 = 0` special case, so cached and
+/// full-context forwards rotate identically.
+pub fn rope_fwd_at(x: &mut [f32], bh: usize, t: usize, hd: usize,
+                   pos0: usize) {
+    rope_apply(x, bh, t, hd, pos0, false);
 }
 
 /// Backward (= inverse rotation: RoPE is orthogonal per pair).
 pub fn rope_bwd(dx: &mut [f32], bh: usize, t: usize, hd: usize) {
-    rope_apply(dx, bh, t, hd, true);
+    rope_apply(dx, bh, t, hd, 0, true);
 }
 
-fn rope_apply(x: &mut [f32], bh: usize, t: usize, hd: usize,
+fn rope_apply(x: &mut [f32], bh: usize, t: usize, hd: usize, pos0: usize,
               inverse: bool) {
     let half = hd / 2;
     debug_assert_eq!(half * 2, hd, "RoPE needs even head dim");
@@ -230,7 +240,7 @@ fn rope_apply(x: &mut [f32], bh: usize, t: usize, hd: usize,
     for p in 0..t {
         for f in 0..half {
             let freq = 1.0 / 10000.0f32.powf(f as f32 / half as f32);
-            let ang = p as f32 * freq;
+            let ang = (pos0 + p) as f32 * freq;
             let (s, c) = ang.sin_cos();
             cs[p * half + f] = (c, if inverse { -s } else { s });
         }
@@ -890,6 +900,219 @@ impl StepRuntime for NativeModel {
                 "adam buffers must be padded to {n}");
         host_step(params, grads, opt, mask, hyper);
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Inference: KV-cached incremental forward (prefill + batched decode).
+// ---------------------------------------------------------------------
+
+impl NativeModel {
+    fn ensure_lm(&self) -> Result<()> {
+        if self.variant == Variant::Cls {
+            bail!("generation requires an LM head (lora/full variant)");
+        }
+        Ok(())
+    }
+
+    /// Full-context forward returning LM logits `[b·t, vocab]` at every
+    /// position (no loss) — the all-positions reference the adapter-merge
+    /// tests compare against.
+    pub fn forward_logits(&self, store: &ParamStore, inp: &[i32],
+                          b: usize, t: usize) -> Result<Vec<f32>> {
+        self.ensure_lm()?;
+        ensure!(inp.len() == b * t, "tokens len {} != {b}x{t}", inp.len());
+        let (xf, _, _, _) = self.forward(store, inp, b, t)?;
+        let h = self.manifest.config.hidden;
+        let v_out = self.layout().meta("lm_head")?.rows();
+        Ok(linear_fwd(&xf, store.slice("lm_head")?, b * t, h, v_out))
+    }
+
+    /// Last-position LM logits `[b, vocab]` of a full-context forward
+    /// through the *training* code path — the independent reference the
+    /// per-step KV-cache parity test diffs the cached decode against.
+    pub fn forward_last_logits(&self, store: &ParamStore, inp: &[i32],
+                               b: usize, t: usize) -> Result<Vec<f32>> {
+        self.ensure_lm()?;
+        ensure!(inp.len() == b * t, "tokens len {} != {b}x{t}", inp.len());
+        let (xf, _, _, _) = self.forward(store, inp, b, t)?;
+        let h = self.manifest.config.hidden;
+        let v_out = self.layout().meta("lm_head")?.rows();
+        let mut last = vec![0.0f32; b * h];
+        for bi in 0..b {
+            let src = (bi * t + t - 1) * h;
+            last[bi * h..(bi + 1) * h].copy_from_slice(&xf[src..src + h]);
+        }
+        Ok(linear_fwd(&last, store.slice("lm_head")?, b, h, v_out))
+    }
+
+    /// One decoder-stack pass over a chunk of `t_new` new tokens of
+    /// sequence `seq`, reusing (and extending) the KV cache.  Returns the
+    /// final-norm hidden rows `[t_new, h]`; the caller applies the head.
+    ///
+    /// Row-for-row this is the same arithmetic as `forward`: every
+    /// position's activations depend only on its own row and on earlier
+    /// K/V (which the cache holds already RoPE'd at their absolute
+    /// positions), so cached and full-context logits agree — the
+    /// invariant `rust/tests/inference.rs` checks at every decode step.
+    fn forward_cached(&self, store: &ParamStore, cache: &mut KvCache,
+                      seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        let mc = &self.manifest.config;
+        let (h, nh) = (mc.hidden, mc.heads);
+        let hd = mc.head_dim();
+        let scale = mc.lora_scale() as f32;
+        let t = tokens.len();
+        ensure!(t > 0, "empty decode chunk");
+        ensure!(seq < cache.batch,
+                "sequence {seq} out of cache batch {}", cache.batch);
+        let base = cache.len(seq);
+        ensure!(base + t <= cache.capacity,
+                "KV cache capacity {} exceeded by {base}+{t}",
+                cache.capacity);
+        let embed = store.slice("embed")?;
+        let mut x = vec![0.0f32; t * h];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            ensure!(tok < mc.vocab, "token {tok} out of vocab {}", mc.vocab);
+            x[i * h..(i + 1) * h]
+                .copy_from_slice(&embed[tok * h..(tok + 1) * h]);
+        }
+        for li in 0..mc.layers {
+            let (xn1, _) = rms_norm_fwd(
+                &x, store.slice(&format!("l{li}.attn_norm"))?, t, h);
+            let (yq, _) = self.lin_fwd(store, li, 0, &xn1, t, scale)?;
+            let (yk, _) = self.lin_fwd(store, li, 1, &xn1, t, scale)?;
+            let (yv, _) = self.lin_fwd(store, li, 2, &xn1, t, scale)?;
+            let mut q = to_heads(&yq, 1, t, nh, hd);
+            let mut k = to_heads(&yk, 1, t, nh, hd);
+            let v = to_heads(&yv, 1, t, nh, hd);
+            rope_fwd_at(&mut q, nh, t, hd, base);
+            rope_fwd_at(&mut k, nh, t, hd, base);
+            cache.append(li, seq, &k, &v, t);
+            let o = cache.attend(li, seq, &q, t);
+            let o2 = from_heads(&o, 1, t, nh, hd);
+            let (yo, _) = self.lin_fwd(store, li, 3, &o2, t, scale)?;
+            for (xi, yi) in x.iter_mut().zip(&yo) {
+                *xi += yi;
+            }
+            let (xn2, _) = rms_norm_fwd(
+                &x, store.slice(&format!("l{li}.mlp_norm"))?, t, h);
+            let (gate, _) = self.lin_fwd(store, li, 4, &xn2, t, scale)?;
+            let (up, _) = self.lin_fwd(store, li, 5, &xn2, t, scale)?;
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(&up)
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let (ydown, _) = self.lin_fwd(store, li, 6, &act, t, scale)?;
+            for (xi, yi) in x.iter_mut().zip(&ydown) {
+                *xi += yi;
+            }
+        }
+        cache.bump(seq, t);
+        let (xf, _) = rms_norm_fwd(&x, store.slice("final_norm")?, t, h);
+        Ok(xf)
+    }
+}
+
+impl InferRuntime for NativeModel {
+    fn prefill(&self, store: &ParamStore, cache: &mut KvCache,
+               seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.ensure_lm()?;
+        let h = self.manifest.config.hidden;
+        let xf = self.forward_cached(store, cache, seq, tokens)?;
+        let v_out = self.layout().meta("lm_head")?.rows();
+        let last = &xf[(tokens.len() - 1) * h..];
+        Ok(linear_fwd(last, store.slice("lm_head")?, 1, h, v_out))
+    }
+
+    // NOTE: this body deliberately mirrors `forward`/`forward_cached`
+    // per layer (batched rows=len(seqs), t=1 head-layout identity); any
+    // model-definition change must land in all three, and the per-step
+    // parity tests in `rust/tests/inference.rs` pin the invariant.
+    fn decode(&self, store: &ParamStore, cache: &mut KvCache,
+              seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>> {
+        self.ensure_lm()?;
+        let mc = &self.manifest.config;
+        let (h, nh) = (mc.hidden, mc.heads);
+        let hd = mc.head_dim();
+        let scale = mc.lora_scale() as f32;
+        let b = seqs.len();
+        ensure!(b > 0, "decode with no active sequences");
+        ensure!(tokens.len() == b,
+                "decode step wants one token per listed sequence \
+                 ({} != {b})", tokens.len());
+        ensure!(seqs.windows(2).all(|w| w[0] < w[1]),
+                "decode sequence list must be strictly increasing");
+        // per-sequence absolute positions, read before any append
+        for &s in seqs {
+            ensure!(s < cache.batch,
+                    "sequence {s} out of cache batch {}", cache.batch);
+            let l = cache.len(s);
+            ensure!(l < cache.capacity,
+                    "KV cache capacity {} exhausted for sequence {s}",
+                    cache.capacity);
+            ensure!(l > 0, "decode before prefill for sequence {s}");
+        }
+        let lens: Vec<usize> = seqs.iter().map(|&s| cache.len(s)).collect();
+        let embed = store.slice("embed")?;
+        let mut x = vec![0.0f32; b * h];
+        for (i, &tok) in tokens.iter().enumerate() {
+            let tok = tok as usize;
+            ensure!(tok < mc.vocab, "token {tok} out of vocab {}", mc.vocab);
+            x[i * h..(i + 1) * h]
+                .copy_from_slice(&embed[tok * h..(tok + 1) * h]);
+        }
+        for li in 0..mc.layers {
+            let (xn1, _) = rms_norm_fwd(
+                &x, store.slice(&format!("l{li}.attn_norm"))?, b, h);
+            let (mut q, _) = self.lin_fwd(store, li, 0, &xn1, b, scale)?;
+            let (mut k, _) = self.lin_fwd(store, li, 1, &xn1, b, scale)?;
+            let (v, _) = self.lin_fwd(store, li, 2, &xn1, b, scale)?;
+            // for t = 1 the `[1, nh·hd]` row IS the `[nh, 1, hd]` head
+            // layout, so no to_heads/from_heads transposition is needed
+            let mut o2 = vec![0.0f32; b * h];
+            for (i, &s) in seqs.iter().enumerate() {
+                let row = i * h..(i + 1) * h;
+                rope_fwd_at(&mut q[row.clone()], nh, 1, hd, lens[i]);
+                rope_fwd_at(&mut k[row.clone()], nh, 1, hd, lens[i]);
+                cache.append(li, s, &k[row.clone()], &v[row.clone()], 1);
+                let os = cache.attend(li, s, &q[row.clone()], 1);
+                o2[row].copy_from_slice(&os);
+            }
+            let (yo, _) = self.lin_fwd(store, li, 3, &o2, b, scale)?;
+            for (xi, yi) in x.iter_mut().zip(&yo) {
+                *xi += yi;
+            }
+            let (xn2, _) = rms_norm_fwd(
+                &x, store.slice(&format!("l{li}.mlp_norm"))?, b, h);
+            let (gate, _) = self.lin_fwd(store, li, 4, &xn2, b, scale)?;
+            let (up, _) = self.lin_fwd(store, li, 5, &xn2, b, scale)?;
+            let act: Vec<f32> = gate
+                .iter()
+                .zip(&up)
+                .map(|(&g, &u)| silu(g) * u)
+                .collect();
+            let (ydown, _) = self.lin_fwd(store, li, 6, &act, b, scale)?;
+            for (xi, yi) in x.iter_mut().zip(&ydown) {
+                *xi += yi;
+            }
+        }
+        for &s in seqs {
+            cache.bump(s, 1);
+        }
+        let (xf, _) = rms_norm_fwd(&x, store.slice("final_norm")?, b, h);
+        let v_out = self.layout().meta("lm_head")?.rows();
+        Ok(linear_fwd(&xf, store.slice("lm_head")?, b, h, v_out))
+    }
+
+    fn new_cache(&self, batch: usize, capacity: usize) -> KvCache {
+        let mc = &self.manifest.config;
+        KvCache::new(mc.layers, batch, mc.heads, mc.head_dim(), capacity)
+    }
+
+    fn vocab_out(&self) -> usize {
+        self.manifest.config.vocab
     }
 }
 

@@ -21,6 +21,14 @@ pub fn human_bytes(b: u64) -> String {
     }
 }
 
+/// Replace control characters with `·` so decoded model output (arbitrary
+/// bytes under a random or half-trained checkpoint) stays terminal-safe.
+pub fn printable(s: &str) -> String {
+    s.chars()
+        .map(|c| if c.is_control() { '·' } else { c })
+        .collect()
+}
+
 /// Format a parameter count with M/B suffixes (paper-table style).
 pub fn human_params(n: u64) -> String {
     if n >= 1_000_000_000 {
@@ -43,6 +51,12 @@ mod tests {
         assert_eq!(human_bytes(512), "512B");
         assert_eq!(human_bytes(2048), "2.0KB");
         assert_eq!(human_bytes(95_600_000), "91.2MB");
+    }
+
+    #[test]
+    fn printable_scrubs_control_chars() {
+        assert_eq!(printable("a\nb\u{7}c"), "a·b·c");
+        assert_eq!(printable("plain text"), "plain text");
     }
 
     #[test]

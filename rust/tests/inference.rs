@@ -1,0 +1,250 @@
+//! Integration tests of the inference subsystem (ISSUE 2 acceptance):
+//!
+//! * KV-cached incremental decode reproduces a full-context re-forward's
+//!   logits at EVERY step (≤1e-5, both adapter variants);
+//! * adapter merging: merged forward matches the dense `W + s·B·A`
+//!   composition, the in-place and export merge paths agree bitwise, and
+//!   unmerge restores the original store bitwise;
+//! * batched ragged-prompt generation matches single-sequence runs
+//!   token-for-token, with per-sequence stop handling;
+//! * determinism: same seed + same sampling params ⇒ identical streams.
+
+use switchlora::infer::{argmax, generate, merge_adapters,
+                        merged_full_store, unmerge_adapters, GenConfig,
+                        Sampler};
+use switchlora::model::init::seeded_store;
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::runtime::{InferRuntime, NativeModel};
+use switchlora::util::prop::assert_close;
+use switchlora::util::rng::Rng;
+
+fn manifest() -> Manifest {
+    Manifest::builtin("tiny").unwrap()
+}
+
+fn init(man: &Manifest, variant: Variant, seed: u64) -> ParamStore {
+    seeded_store(man, variant, seed).unwrap()
+}
+
+fn rand_prompt(vocab: usize, len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab) as i32).collect()
+}
+
+#[test]
+fn cached_decode_matches_full_reforward_at_every_step() {
+    let man = manifest();
+    let vocab = man.config.vocab;
+    for (variant, seed) in [(Variant::Lora, 3), (Variant::Full, 4)] {
+        let store = init(&man, variant, seed);
+        let model = NativeModel::new(man.clone(), variant).unwrap();
+        let prompt = rand_prompt(vocab, 9, seed);
+        let n_steps = 16;
+        let mut cache = model.new_cache(1, prompt.len() + n_steps + 1);
+        let mut cached = model
+            .prefill(&store, &mut cache, 0, &prompt)
+            .unwrap();
+        let mut toks = prompt.clone();
+        for step in 0..n_steps {
+            // reference: full re-forward over the whole context
+            let t = toks.len();
+            let full =
+                model.forward_last_logits(&store, &toks, 1, t).unwrap();
+            assert_eq!(full.len(), vocab);
+            assert_close(&cached, &full, 1e-5, 1e-5).unwrap_or_else(
+                |e| panic!("{:?} step {step} (ctx {t}): {e}", variant));
+            let next = argmax(&cached) as i32;
+            toks.push(next);
+            cached = model
+                .decode(&store, &mut cache, &[0], &[next])
+                .unwrap();
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_one_shot_prefill() {
+    // continuation chunks (prefill called twice) must land at the right
+    // absolute RoPE positions
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 5);
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let prompt = rand_prompt(man.config.vocab, 12, 5);
+    let mut one = model.new_cache(1, 16);
+    let logits_one =
+        model.prefill(&store, &mut one, 0, &prompt).unwrap();
+    let mut two = model.new_cache(1, 16);
+    model.prefill(&store, &mut two, 0, &prompt[..7]).unwrap();
+    let logits_two =
+        model.prefill(&store, &mut two, 0, &prompt[7..]).unwrap();
+    assert_eq!(one.len(0), two.len(0));
+    assert_close(&logits_two, &logits_one, 1e-5, 1e-6).unwrap();
+}
+
+#[test]
+fn merged_forward_matches_adapter_composition() {
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 7);
+    let lora = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let dense = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    let toks = rand_prompt(man.config.vocab, 2 * 12, 7);
+    let (b, t) = (2, 12);
+
+    // unmerged LoRA forward vs the merged dense function: same math
+    // modulo float reassociation of the W·x + s·B·A·x split
+    let y_lora = lora.forward_logits(&store, &toks, b, t).unwrap();
+    let merged = merged_full_store(&man, &store).unwrap();
+    let y_merged = dense.forward_logits(&merged, &toks, b, t).unwrap();
+    assert_close(&y_merged, &y_lora, 1e-4, 1e-4).unwrap();
+
+    // in-place merge (B zeroed) through the LoRA forward is the same
+    // dense function exactly
+    let mut inplace = store.clone();
+    let state = merge_adapters(&mut inplace, &man).unwrap();
+    assert_eq!(state.n_merged(), man.linears.len());
+    let y_inplace = lora.forward_logits(&inplace, &toks, b, t).unwrap();
+    assert_close(&y_inplace, &y_merged, 0.0, 0.0).unwrap();
+
+    // unmerge restores the original store bitwise
+    unmerge_adapters(&mut inplace, &state).unwrap();
+    assert_eq!(inplace.data, store.data);
+}
+
+#[test]
+fn batched_ragged_generation_matches_single_runs() {
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 9);
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let vocab = man.config.vocab;
+    let prompts = vec![
+        rand_prompt(vocab, 3, 21),
+        rand_prompt(vocab, 7, 22),
+        rand_prompt(vocab, 5, 23),
+    ];
+    let cfg = GenConfig {
+        max_new: 10,
+        sampler: Sampler::top_k(16, 0.8),
+        stop_tokens: Vec::new(),
+        seed: 31,
+    };
+    let batched = generate(&model, &store, &prompts, &cfg).unwrap();
+    assert_eq!(batched.prefill_tokens, 3 + 7 + 5);
+    assert_eq!(batched.decode_steps, cfg.max_new - 1);
+    for (s, prompt) in prompts.iter().enumerate() {
+        // per-(seed, index) sampling streams: a sequence's continuation
+        // must not depend on what else shares the batch, so a solo run
+        // at the same index-0 slot only matches for s == 0...
+        assert_eq!(batched.n_generated[s], cfg.max_new);
+        assert_eq!(&batched.sequences[s][..prompt.len()], &prompt[..]);
+    }
+    // ...so check slot 0 exactly, and greedy (sampler-independent) for
+    // the full batch
+    let solo = generate(&model, &store, &prompts[..1], &cfg).unwrap();
+    assert_eq!(solo.sequences[0], batched.sequences[0]);
+    let gcfg = GenConfig::greedy(8);
+    let gb = generate(&model, &store, &prompts, &gcfg).unwrap();
+    for (s, prompt) in prompts.iter().enumerate() {
+        let gs = generate(&model, &store,
+                          std::slice::from_ref(prompt), &gcfg).unwrap();
+        assert_eq!(gs.sequences[0], gb.sequences[s],
+                   "greedy batched vs solo diverged for sequence {s}");
+    }
+}
+
+#[test]
+fn per_sequence_stop_handling() {
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 13);
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let vocab = man.config.vocab;
+    let prompts =
+        vec![rand_prompt(vocab, 4, 41), rand_prompt(vocab, 6, 42)];
+    // probe run: find what greedy emits, then stop on a token that
+    // appears mid-stream for at least one sequence
+    let probe =
+        generate(&model, &store, &prompts, &GenConfig::greedy(12))
+            .unwrap();
+    let stream0 = &probe.sequences[0][prompts[0].len()..];
+    let stop = stream0[2];
+    let mut cfg = GenConfig::greedy(12);
+    cfg.stop_tokens = vec![stop];
+    let out = generate(&model, &store, &prompts, &cfg).unwrap();
+    for s in 0..prompts.len() {
+        let stream = &probe.sequences[s][prompts[s].len()..];
+        let expect = stream
+            .iter()
+            .position(|&t| t == stop)
+            .map(|i| i + 1)
+            .unwrap_or(cfg.max_new);
+        assert_eq!(out.n_generated[s], expect,
+                   "sequence {s}: stop handling diverged");
+        // a stopped sequence ends with the stop token
+        if expect < cfg.max_new {
+            assert_eq!(*out.sequences[s].last().unwrap(), stop);
+        }
+    }
+    // stop was taken from within seq 0's first three generated tokens,
+    // so that sequence must have stopped early
+    assert!(out.n_generated[0] <= 3,
+            "seq 0 generated {} tokens past its stop", out.n_generated[0]);
+}
+
+#[test]
+fn same_seed_same_stream_across_runs() {
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 17);
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let prompts = vec![rand_prompt(man.config.vocab, 5, 51)];
+    let cfg = GenConfig {
+        max_new: 32,
+        sampler: Sampler { temperature: 1.0, top_k: 0 },
+        stop_tokens: Vec::new(),
+        seed: 99,
+    };
+    let a = generate(&model, &store, &prompts, &cfg).unwrap();
+    let b = generate(&model, &store, &prompts, &cfg).unwrap();
+    assert_eq!(a.sequences, b.sequences,
+               "same seed must reproduce the stream exactly");
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 100;
+    let c = generate(&model, &store, &prompts, &cfg2).unwrap();
+    assert_ne!(a.sequences, c.sequences,
+               "different seeds should diverge (vocab-256 stream of 32 \
+                sampled tokens)");
+}
+
+#[test]
+fn inference_rejects_misuse() {
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 19);
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    // cls variant has no LM head
+    let cls = NativeModel::new(man.clone(), Variant::Cls).unwrap();
+    let cls_store = init(&man, Variant::Cls, 19);
+    let mut cache = cls.new_cache(1, 8);
+    assert!(cls.prefill(&cls_store, &mut cache, 0, &[1, 2]).is_err());
+    // decode before prefill, malformed sequence lists, token out of
+    // vocab — all rejected without corrupting the cache
+    let mut cache = model.new_cache(2, 8);
+    assert!(model.decode(&store, &mut cache, &[0, 1], &[1, 2]).is_err());
+    model.prefill(&store, &mut cache, 0, &[1, 2, 3]).unwrap();
+    model.prefill(&store, &mut cache, 1, &[4]).unwrap();
+    assert!(model.decode(&store, &mut cache, &[0, 1], &[1]).is_err());
+    assert!(model.decode(&store, &mut cache, &[1, 0], &[1, 2]).is_err());
+    assert!(model.decode(&store, &mut cache, &[0, 0], &[1, 2]).is_err());
+    assert!(model.decode(&store, &mut cache, &[2], &[1]).is_err());
+    assert!(model.decode(&store, &mut cache, &[], &[]).is_err());
+    assert!(model
+        .decode(&store, &mut cache, &[0, 1],
+                &[1, man.config.vocab as i32])
+        .is_err());
+    assert!(model.decode(&store, &mut cache, &[0, 1], &[1, 2]).is_ok());
+    // a partial active set only advances the listed sequence
+    let (l0, l1) = (cache.len(0), cache.len(1));
+    assert!(model.decode(&store, &mut cache, &[1], &[5]).is_ok());
+    assert_eq!((cache.len(0), cache.len(1)), (l0, l1 + 1));
+    // empty prompts are rejected by the generation loop
+    assert!(generate(&model, &store, &[vec![]], &GenConfig::greedy(4))
+        .is_err());
+    assert!(generate(&model, &store, &[], &GenConfig::greedy(4)).is_err());
+}
