@@ -16,7 +16,8 @@
 use anyhow::Result;
 
 use switchlora::cli::Args;
-use switchlora::coordinator::trainer::{Method, SwitchParams, TrainConfig};
+use switchlora::coordinator::trainer::{Method, TrainConfig};
+use switchlora::methods::SwitchParams;
 use switchlora::exp;
 use switchlora::model::init::InitMode;
 use switchlora::runtime::Engine;
@@ -29,7 +30,7 @@ struct Row {
 
 fn run(engine: &mut Engine, spec: &str, steps: u64, label: &str,
        p: SwitchParams, init: InitMode) -> Result<Row> {
-    let mut cfg = TrainConfig::new(spec, Method::SwitchLora(p), steps);
+    let mut cfg = TrainConfig::new(spec, Method::switchlora(p), steps);
     cfg.init = init;
     cfg.metrics_csv = Some(
         format!("results/ablation_{spec}_{label}.csv").into());

@@ -40,8 +40,8 @@ fn main() -> Result<()> {
     let mut all = Vec::new();
     for spec in &specs {
         let methods = [
-            Method::Full,
-            Method::Lora,
+            Method::full(),
+            Method::lora(),
             Method::parse("switchlora").unwrap(),
         ];
         let mut rows = exp::compare_methods(&mut engine, spec, steps,

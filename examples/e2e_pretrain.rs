@@ -60,8 +60,9 @@ fn main() -> Result<()> {
              human_bytes(measured_comm as u64),
              human_bytes(model_comm as u64),
              measured_comm / model_comm.max(1.0));
-    if res.offload_bytes > 0 {
-        let measured_off = res.offload_bytes as f64 / steps as f64;
+    if res.counter("offload_bytes") > 0 {
+        let measured_off = res.counter("offload_bytes") as f64
+            / steps as f64;
         println!("offload/step: measured {}  (Appendix D formula scales \
                   with switch frequency; see bench_tables for the model)",
                  human_bytes(measured_off as u64));

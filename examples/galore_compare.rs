@@ -23,7 +23,8 @@
 use anyhow::Result;
 
 use switchlora::cli::Args;
-use switchlora::coordinator::trainer::{GaloreParams, Method, TrainConfig};
+use switchlora::coordinator::trainer::{Method, TrainConfig};
+use switchlora::methods::GaloreParams;
 use switchlora::exp;
 use switchlora::runtime::Engine;
 
@@ -47,7 +48,7 @@ fn main() -> Result<()> {
     for (cell, spec) in &cells {
         // GaLore: project to the spec's LoRA rank, refresh every 50 steps
         // (paper: 1/200 of 40k ≈ steps/200; at our scale steps/6 ≈ 50)
-        let galore = Method::Galore(GaloreParams {
+        let galore = Method::galore(GaloreParams {
             rank: 0,
             update_freq: (steps / 6).max(10),
             scale: 0.25,

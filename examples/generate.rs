@@ -33,9 +33,9 @@ fn main() -> Result<()> {
     let mut store = seeded_store(&manifest, Variant::Lora, 0)?;
     if let Some(ckpt) = args.get("ckpt") {
         let ck = checkpoint::load(std::path::Path::new(ckpt))?;
-        let (loaded, missing) = ck.restore_into(&mut store);
-        println!("checkpoint {ckpt}: {loaded} params loaded, {missing} \
-                  skipped");
+        let rep = ck.restore_into(&mut store);
+        println!("checkpoint {ckpt}: {} params loaded, {} skipped",
+                 rep.loaded, rep.missing + rep.mismatched);
     } else {
         println!("no --ckpt: generating from a seeded random init \
                   (train one with `cargo run --example quickstart`)");

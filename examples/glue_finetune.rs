@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let arms: Vec<(&str, Method, Variant, f32)> = vec![
         // fine-tune lr per arm follows the paper's Table 10 pattern:
         // SwitchLoRA-pretrained tolerates a slightly higher ft lr.
-        ("full-rank", Method::Full, Variant::Full, 1e-3),
+        ("full-rank", Method::full(), Variant::Full, 1e-3),
         ("switchlora", Method::parse("switchlora").unwrap(), Variant::Lora,
          2e-3),
         ("galore", Method::parse("galore").unwrap(), Variant::Full, 1e-3),

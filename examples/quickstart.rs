@@ -10,7 +10,8 @@ use anyhow::Result;
 
 use switchlora::cli::Args;
 use switchlora::coordinator::checkpoint;
-use switchlora::coordinator::trainer::{Method, SwitchParams, TrainConfig};
+use switchlora::coordinator::trainer::{Method, TrainConfig};
+use switchlora::methods::SwitchParams;
 use switchlora::exp;
 use switchlora::runtime::Engine;
 use switchlora::util::human_bytes;
@@ -23,7 +24,7 @@ fn main() -> Result<()> {
 
     let mut cfg = TrainConfig::new(
         &spec,
-        Method::SwitchLora(SwitchParams::default()),
+        Method::switchlora(SwitchParams::default()),
         steps,
     );
     cfg.metrics_csv = Some("results/quickstart.csv".into());
@@ -34,7 +35,8 @@ fn main() -> Result<()> {
 
     print!("{}", exp::results_table("quickstart", &[res.clone()]));
     println!("switches performed: {}   candidate offload traffic: {}",
-             res.total_switches, human_bytes(res.offload_bytes));
+             res.counter("switches"),
+             human_bytes(res.counter("offload_bytes")));
     println!("loss curve written to results/quickstart.csv");
 
     checkpoint::save(std::path::Path::new("results/quickstart.ckpt"),

@@ -18,7 +18,7 @@ use switchlora::cli::Args;
 use switchlora::coordinator::trainer::{Method, TrainConfig};
 use switchlora::exp;
 use switchlora::exp::rank::{analyze, table};
-use switchlora::model::layout::Manifest;
+use switchlora::model::layout::{Manifest, Variant};
 use switchlora::runtime::Engine;
 
 fn main() -> Result<()> {
@@ -32,10 +32,12 @@ fn main() -> Result<()> {
         &spec)?;
 
     let mut spreads = Vec::new();
-    for method in [Method::Full, Method::Lora,
-                   Method::parse("switchlora").unwrap()] {
+    for (method, variant) in [
+        (Method::full(), Variant::Full),
+        (Method::lora(), Variant::Lora),
+        (Method::parse("switchlora").unwrap(), Variant::Lora),
+    ] {
         let name = method.name().to_string();
-        let variant = method.variant();
         let cfg = TrainConfig::new(&spec, method, steps);
         let (res, store) = exp::pretrain(&mut engine, cfg)?;
         let rows = analyze(&store, &man, variant)?;

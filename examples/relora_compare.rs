@@ -15,8 +15,8 @@
 use anyhow::Result;
 
 use switchlora::cli::Args;
-use switchlora::coordinator::trainer::{Method, ReLoraParams, SwitchParams,
-                                       TrainConfig};
+use switchlora::coordinator::trainer::{Method, TrainConfig};
+use switchlora::methods::{ReLoraParams, SwitchParams};
 use switchlora::exp;
 use switchlora::runtime::Engine;
 
@@ -34,15 +34,15 @@ fn main() -> Result<()> {
     let reset = (steps / 4).max(10); // ReLoRA resets 1/4 of total, as paper
     let runs: Vec<(String, Method, u64)> = vec![
         ("relora_warmL".into(),
-         Method::ReLora(ReLoraParams { reset_interval: reset, rewarm: 20 }),
+         Method::relora(ReLoraParams { reset_interval: reset, rewarm: 20 }),
          steps / 4),
         ("switchlora_warmS".into(),
-         Method::SwitchLora(SwitchParams::default()), steps / 100),
+         Method::switchlora(SwitchParams::default()), steps / 100),
         ("relora_warmE".into(),
-         Method::ReLora(ReLoraParams { reset_interval: reset, rewarm: 20 }),
+         Method::relora(ReLoraParams { reset_interval: reset, rewarm: 20 }),
          steps / 20),
         ("switchlora_warmE".into(),
-         Method::SwitchLora(SwitchParams::default()), steps / 20),
+         Method::switchlora(SwitchParams::default()), steps / 20),
     ];
     for (label, method, warm) in runs {
         let mut cfg = TrainConfig::new(&spec, method, steps);

@@ -66,7 +66,7 @@ fn table5_measured(engine: &mut Engine) {
     let spec = "s1m";
     println!("{:<12} {:>10} {:>12} {:>14}", "method", "step_ms",
              "trainable", "offload/step");
-    for m in [Method::Full, Method::Lora,
+    for m in [Method::full(), Method::lora(),
               Method::parse("switchlora").unwrap()] {
         let mut cfg = TrainConfig::new(spec, m, 30);
         cfg.eval_every = 30;
@@ -75,7 +75,8 @@ fn table5_measured(engine: &mut Engine) {
         println!("{:<12} {:>10.1} {:>12} {:>14}", res.method,
                  res.mean_step_ms,
                  human_params(res.n_trainable as u64),
-                 human_bytes((res.offload_bytes as f64 / 30.0) as u64));
+                 human_bytes((res.counter("offload_bytes") as f64 / 30.0)
+                             as u64));
     }
     println!("(claim under test: lora ≈ switchlora step time; full-rank \
               pays the larger optimizer+comm)");
@@ -102,7 +103,7 @@ fn appendix_d(engine: &mut Engine) {
         let mc = &man.config;
         // Appendix D formula applied to this config, summed over the decay
         // schedule ≈ freq(avg) * r/h * params * 2B * 2 (both pools swap)
-        let measured = res.offload_bytes as f64 / 40.0;
+        let measured = res.counter("offload_bytes") as f64 / 40.0;
         let freq0 = 1.0 / 40.0;
         let formula = 2.0 * freq0 * (mc.rank as f64 / mc.hidden as f64)
             * an::full_params(mc) as f64 * 2.0;

@@ -1,21 +1,39 @@
 //! Checkpoints: binary save/load of a `ParamStore` (+ optional optimizer
-//! state), keyed by parameter name so stores with different layouts (e.g.
-//! LoRA pre-train → merged full fine-tune) can exchange weights.
+//! state, method state and trainer state), keyed by parameter name so
+//! stores with different layouts (e.g. LoRA pre-train → merged full
+//! fine-tune) can exchange weights.
 //!
-//! Format (little-endian):
-//!   magic "SWLORA1\0" | config-name len+bytes | n_params
-//!   then per param: name len+bytes | numel u64 | f32 data
-//!   then opt flag u8; if 1: n u64 | m | v | s  (f32 arrays of length n)
+//! Format v2 (little-endian, magic `SWLORA2`):
+//! ```text
+//! magic "SWLORA2\0" | config-name len+bytes | n_params
+//! per param: name len+bytes | numel u64 | f32 data
+//! opt flag u8;     if 1: n u64 | m | v | s      (f32 arrays of length n)
+//! method flag u8;  if 1: name | version u32 | payload len u64 + bytes
+//! trainer flag u8; if 1: len u64 + `util::bytes` payload of
+//!                  (next_step u64 | rng | ema f64 + primed u8 |
+//!                   comm bytes + rounds u64)
+//! ```
+//!
+//! The method/trainer sections make a run resumable mid-schedule
+//! (`--ckpt-every` / `--resume`): the method payload is whatever the
+//! `TrainingMethod::save_state` hook wrote (freeze timers, candidate
+//! pools, projection state, ...), and the trainer section carries the
+//! step clock, the loss EMA, the leader RNG and the comm ledger.
+//! Version-1 files (magic `SWLORA1`, weights + optimizer only) still
+//! load; their method/trainer sections read as absent.
 
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::model::layout::ParamStore;
 use crate::optim::adam::AdamState;
+use crate::util::bytes;
+use crate::util::rng::RngState;
 
-const MAGIC: &[u8; 8] = b"SWLORA1\0";
+const MAGIC_V2: &[u8; 8] = b"SWLORA2\0";
+const MAGIC_V1: &[u8; 8] = b"SWLORA1\0";
 
 fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
     w.write_all(&(s.len() as u32).to_le_bytes())?;
@@ -31,8 +49,25 @@ fn read_str(r: &mut impl Read) -> Result<String> {
     String::from_utf8(buf).context("non-utf8 string in checkpoint")
 }
 
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    write_u64(w, xs.len() as u64)?;
     // bulk copy via bytemuck-free manual chunking
     let mut buf = Vec::with_capacity(xs.len() * 4);
     for x in xs {
@@ -43,9 +78,7 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
 }
 
 fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
-    let mut len = [0u8; 8];
-    r.read_exact(&mut len)?;
-    let n = u64::from_le_bytes(len) as usize;
+    let n = read_u64(r)? as usize;
     let mut buf = vec![0u8; n * 4];
     r.read_exact(&mut buf)?;
     Ok(buf
@@ -54,17 +87,59 @@ fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
         .collect())
 }
 
+/// The resumable state of a training method, as written by
+/// `TrainingMethod::save_state`: the registry name it must match on
+/// resume, a payload version, and the opaque payload bytes.
+#[derive(Clone, Debug)]
+pub struct MethodState {
+    /// method name (must equal the resuming run's method)
+    pub name: String,
+    /// payload schema version (must equal the method's `state_version`)
+    pub version: u32,
+    /// the method's serialized dynamic state
+    pub payload: Vec<u8>,
+}
+
+/// The trainer's own resumable state: where to pick the loop back up and
+/// the cross-step accumulators that are not derivable from the config.
+#[derive(Clone, Debug)]
+pub struct TrainerState {
+    /// first step the resumed loop runs (== steps already completed)
+    pub next_step: u64,
+    /// leader RNG (init draws + any method draws already consumed)
+    pub rng: RngState,
+    /// training-loss EMA value
+    pub ema_value: f64,
+    /// whether the EMA has seen at least one sample
+    pub ema_primed: bool,
+    /// cumulative all-reduce traffic so far
+    pub comm_bytes: u64,
+    /// cumulative all-reduce rounds so far
+    pub comm_rounds: u64,
+}
+
+/// Save weights only (plus optional optimizer state) — the plain
+/// `--out` checkpoint path.
 pub fn save(path: &Path, config_name: &str, store: &ParamStore,
             opt: Option<&AdamState>) -> Result<()> {
+    save_full(path, config_name, store, opt, None, None)
+}
+
+/// Save a full (optionally resumable) checkpoint.  `method` and
+/// `trainer` are present for `--ckpt-every` mid-run snapshots and absent
+/// for final weight exports.
+pub fn save_full(path: &Path, config_name: &str, store: &ParamStore,
+                 opt: Option<&AdamState>, method: Option<&MethodState>,
+                 trainer: Option<&TrainerState>) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
+    w.write_all(MAGIC_V2)?;
     write_str(&mut w, config_name)?;
-    w.write_all(&(store.layout.params.len() as u64).to_le_bytes())?;
+    write_u64(&mut w, store.layout.params.len() as u64)?;
     for p in &store.layout.params {
         write_str(&mut w, &p.name)?;
         write_f32s(&mut w, &store.data[p.offset..p.offset + p.numel])?;
@@ -78,6 +153,31 @@ pub fn save(path: &Path, config_name: &str, store: &ParamStore,
         }
         None => w.write_all(&[0u8])?,
     }
+    match method {
+        Some(m) => {
+            w.write_all(&[1u8])?;
+            write_str(&mut w, &m.name)?;
+            w.write_all(&m.version.to_le_bytes())?;
+            write_u64(&mut w, m.payload.len() as u64)?;
+            w.write_all(&m.payload)?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
+    match trainer {
+        Some(t) => {
+            w.write_all(&[1u8])?;
+            let mut payload = Vec::new();
+            bytes::put_u64(&mut payload, t.next_step);
+            bytes::put_rng(&mut payload, &t.rng);
+            bytes::put_f64(&mut payload, t.ema_value);
+            bytes::put_u8(&mut payload, u8::from(t.ema_primed));
+            bytes::put_u64(&mut payload, t.comm_bytes);
+            bytes::put_u64(&mut payload, t.comm_rounds);
+            write_u64(&mut w, payload.len() as u64)?;
+            w.write_all(&payload)?;
+        }
+        None => w.write_all(&[0u8])?,
+    }
     w.flush()?;
     Ok(())
 }
@@ -87,6 +187,10 @@ pub struct Checkpoint {
     pub config_name: String,
     pub params: Vec<(String, Vec<f32>)>,
     pub opt: Option<AdamState>,
+    /// resumable method state (v2 mid-run checkpoints only)
+    pub method: Option<MethodState>,
+    /// resumable trainer state (v2 mid-run checkpoints only)
+    pub trainer: Option<TrainerState>,
 }
 
 pub fn load(path: &Path) -> Result<Checkpoint> {
@@ -95,22 +199,19 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+    let v2 = &magic == MAGIC_V2;
+    if !v2 && &magic != MAGIC_V1 {
         bail!("{} is not a switchlora checkpoint", path.display());
     }
     let config_name = read_str(&mut r)?;
-    let mut nbuf = [0u8; 8];
-    r.read_exact(&mut nbuf)?;
-    let n = u64::from_le_bytes(nbuf) as usize;
+    let n = read_u64(&mut r)? as usize;
     let mut params = Vec::with_capacity(n);
     for _ in 0..n {
         let name = read_str(&mut r)?;
         let data = read_f32s(&mut r)?;
         params.push((name, data));
     }
-    let mut flag = [0u8; 1];
-    r.read_exact(&mut flag)?;
-    let opt = if flag[0] == 1 {
+    let opt = if read_u8(&mut r)? == 1 {
         let m = read_f32s(&mut r)?;
         let v = read_f32s(&mut r)?;
         let s = read_f32s(&mut r)?;
@@ -118,25 +219,107 @@ pub fn load(path: &Path) -> Result<Checkpoint> {
     } else {
         None
     };
-    Ok(Checkpoint { config_name, params, opt })
+    let (method, trainer) = if v2 {
+        let method = if read_u8(&mut r)? == 1 {
+            let name = read_str(&mut r)?;
+            let mut vb = [0u8; 4];
+            r.read_exact(&mut vb)?;
+            let len = read_u64(&mut r)? as usize;
+            let mut payload = vec![0u8; len];
+            r.read_exact(&mut payload)?;
+            Some(MethodState {
+                name,
+                version: u32::from_le_bytes(vb),
+                payload,
+            })
+        } else {
+            None
+        };
+        let trainer = if read_u8(&mut r)? == 1 {
+            let len = read_u64(&mut r)? as usize;
+            let mut payload = vec![0u8; len];
+            r.read_exact(&mut payload)?;
+            let mut b = bytes::ByteReader::new(&payload);
+            let ts = TrainerState {
+                next_step: b.u64()?,
+                rng: b.rng()?,
+                ema_value: b.f64()?,
+                ema_primed: b.u8()? == 1,
+                comm_bytes: b.u64()?,
+                comm_rounds: b.u64()?,
+            };
+            b.finish()?;
+            Some(ts)
+        } else {
+            None
+        };
+        (method, trainer)
+    } else {
+        (None, None)
+    };
+    Ok(Checkpoint { config_name, params, opt, method, trainer })
+}
+
+/// Outcome of [`Checkpoint::restore_into`]: how many checkpointed params
+/// were copied, how many the target layout does not name at all, and how
+/// many exist under the same name but with a different element count
+/// (each mismatch is also logged with the offending parameter's name).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RestoreReport {
+    /// params copied into the store
+    pub loaded: usize,
+    /// params absent from the target layout
+    pub missing: usize,
+    /// params present by name but with a different numel — skipped
+    pub mismatched: usize,
 }
 
 impl Checkpoint {
-    /// Copy parameters into a store by name; returns (#loaded, #missing).
-    pub fn restore_into(&self, store: &mut ParamStore) -> (usize, usize) {
-        let mut loaded = 0;
-        let mut missing = 0;
+    /// Copy parameters into a store by name.  A parameter whose name the
+    /// layout knows but whose size disagrees is *not* silently treated as
+    /// missing: it is counted separately and a warning names it, since it
+    /// usually means the checkpoint came from a different spec/rank.
+    pub fn restore_into(&self, store: &mut ParamStore) -> RestoreReport {
+        let mut rep = RestoreReport::default();
         for (name, data) in &self.params {
             match store.layout.meta(name) {
                 Ok(meta) if meta.numel == data.len() => {
                     let (off, n) = (meta.offset, meta.numel);
                     store.data[off..off + n].copy_from_slice(data);
-                    loaded += 1;
+                    rep.loaded += 1;
                 }
-                _ => missing += 1,
+                Ok(meta) => {
+                    crate::warnlog!(
+                        "checkpoint param {name:?}: {} elements but the \
+                         target layout expects {} — skipped (different \
+                         spec or rank?)", data.len(), meta.numel);
+                    rep.mismatched += 1;
+                }
+                Err(_) => rep.missing += 1,
             }
         }
-        (loaded, missing)
+        rep
+    }
+
+    /// Return the checkpointed optimizer state after validating it
+    /// against the runtime's buffer sizes: the fused-Adam kernel requires
+    /// all moment arrays padded to exactly `padded` (>= `n_trainable`).
+    /// A checkpoint written under a different padding would otherwise
+    /// scatter moments to the wrong lanes and silently corrupt the run.
+    pub fn opt_validated(&self, n_trainable: usize, padded: usize)
+        -> Result<Option<AdamState>> {
+        let Some(o) = &self.opt else { return Ok(None) };
+        ensure!(o.m.len() == o.v.len() && o.m.len() == o.s.len(),
+                "checkpoint optimizer state is internally inconsistent: \
+                 m/v/s lengths {}/{}/{}", o.m.len(), o.v.len(),
+                o.s.len());
+        ensure!(o.m.len() == padded,
+                "checkpoint optimizer state has {} elements but this \
+                 runtime pads the fused-Adam buffers to {padded} \
+                 (trainable {n_trainable}); it was written under a \
+                 different padding and cannot be resumed safely",
+                o.m.len());
+        Ok(Some(o.clone()))
     }
 }
 
@@ -173,28 +356,120 @@ mod tests {
         let ck = load(&path).unwrap();
         assert_eq!(ck.config_name, "tiny");
         assert_eq!(ck.params.len(), 2);
+        assert!(ck.method.is_none() && ck.trainer.is_none());
         let o = ck.opt.as_ref().unwrap();
         assert_eq!(o.m.len(), 16);
         assert_eq!(o.m[3], 0.5);
         let mut dst = toy_store(0.0);
-        let (loaded, missing) = ck.restore_into(&mut dst);
-        assert_eq!((loaded, missing), (2, 0));
+        let rep = ck.restore_into(&mut dst);
+        assert_eq!(rep, RestoreReport { loaded: 2, missing: 0,
+                                        mismatched: 0 });
         assert_eq!(dst.data, store.data);
         std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn partial_restore_counts_missing() {
+    fn resumable_sections_roundtrip() {
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt_v2");
+        let path = dir.join("r.ckpt");
+        let store = toy_store(1.0);
+        let opt = AdamState::new(10, 16);
+        let ms = MethodState {
+            name: "switchlora".into(),
+            version: 3,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        let ts = TrainerState {
+            next_step: 77,
+            rng: RngState { s: [1, 2, 3, 4], spare_normal: Some(-0.25) },
+            ema_value: 5.5,
+            ema_primed: true,
+            comm_bytes: 999,
+            comm_rounds: 12,
+        };
+        save_full(&path, "tiny", &store, Some(&opt), Some(&ms), Some(&ts))
+            .unwrap();
+        let ck = load(&path).unwrap();
+        let m = ck.method.as_ref().unwrap();
+        assert_eq!((m.name.as_str(), m.version), ("switchlora", 3));
+        assert_eq!(m.payload, vec![1, 2, 3, 4, 5]);
+        let t = ck.trainer.as_ref().unwrap();
+        assert_eq!(t.next_step, 77);
+        assert_eq!(t.rng, ts.rng);
+        assert_eq!((t.ema_value, t.ema_primed), (5.5, true));
+        assert_eq!((t.comm_bytes, t.comm_rounds), (999, 12));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_legacy_v1_files() {
+        // hand-write a v1 (SWLORA1) file with the old layout
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.ckpt");
+        let store = toy_store(3.0);
+        {
+            let f = std::fs::File::create(&path).unwrap();
+            let mut w = BufWriter::new(f);
+            w.write_all(b"SWLORA1\0").unwrap();
+            write_str(&mut w, "tiny").unwrap();
+            write_u64(&mut w, store.layout.params.len() as u64).unwrap();
+            for p in &store.layout.params {
+                write_str(&mut w, &p.name).unwrap();
+                write_f32s(&mut w,
+                           &store.data[p.offset..p.offset + p.numel])
+                    .unwrap();
+            }
+            w.write_all(&[0u8]).unwrap(); // no optimizer state
+            w.flush().unwrap();
+        }
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.config_name, "tiny");
+        assert!(ck.opt.is_none());
+        assert!(ck.method.is_none() && ck.trainer.is_none());
+        let mut dst = toy_store(0.0);
+        let rep = ck.restore_into(&mut dst);
+        assert_eq!(rep.loaded, 2);
+        assert_eq!(dst.data, store.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partial_restore_distinguishes_missing_from_mismatch() {
         let dir = std::env::temp_dir().join("switchlora_test_ckpt2");
         let path = dir.join("b.ckpt");
         let store = toy_store(1.0);
         save(&path, "x", &store, None).unwrap();
         let mut ck = load(&path).unwrap();
-        ck.params.push(("ghost".into(), vec![1.0]));
+        ck.params.push(("ghost".into(), vec![1.0])); // absent from layout
+        ck.params.push(("n".into(), vec![1.0, 2.0])); // wrong numel (4)
         let mut dst = toy_store(0.0);
-        let (loaded, missing) = ck.restore_into(&mut dst);
-        assert_eq!((loaded, missing), (2, 1));
+        let rep = ck.restore_into(&mut dst);
+        assert_eq!(rep, RestoreReport { loaded: 2, missing: 1,
+                                        mismatched: 1 });
+        // the mismatched param was NOT partially copied
+        assert_eq!(dst.slice("n").unwrap(), store.slice("n").unwrap());
         assert!(ck.opt.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn opt_validation_rejects_foreign_padding() {
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt3b");
+        let path = dir.join("p.ckpt");
+        let store = toy_store(0.0);
+        let opt = AdamState::new(10, 16);
+        save(&path, "x", &store, Some(&opt)).unwrap();
+        let ck = load(&path).unwrap();
+        // matching padding: accepted
+        assert!(ck.opt_validated(10, 16).unwrap().is_some());
+        // a runtime that pads to a different size: rejected loudly
+        let err = ck.opt_validated(10, 8192).unwrap_err().to_string();
+        assert!(err.contains("8192"), "{err}");
+        // no optimizer state at all is fine (weights-only checkpoint)
+        let ck2 = Checkpoint { config_name: "x".into(), params: vec![],
+                               opt: None, method: None, trainer: None };
+        assert!(ck2.opt_validated(10, 16).unwrap().is_none());
         std::fs::remove_dir_all(&dir).ok();
     }
 

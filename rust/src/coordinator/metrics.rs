@@ -30,6 +30,27 @@ impl CsvWriter {
         Ok(CsvWriter { out, cols: header.len(), rows: 0 })
     }
 
+    /// Open for appending — the resume path: existing rows (the curve up
+    /// to the checkpoint) are kept, and the header is written only when
+    /// the file is new or empty.
+    pub fn append(path: &Path, header: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let existing =
+            std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        let f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("appending to {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        if existing == 0 {
+            writeln!(out, "{}", header.join(","))?;
+        }
+        Ok(CsvWriter { out, cols: header.len(), rows: 0 })
+    }
+
     pub fn row(&mut self, values: &[String]) -> Result<()> {
         anyhow::ensure!(values.len() == self.cols,
                         "row has {} cols, header has {}", values.len(),
@@ -65,6 +86,18 @@ impl Ema {
             self.value = self.alpha * x + (1.0 - self.alpha) * self.value;
         }
         self.value
+    }
+
+    /// Snapshot `(value, primed)` for checkpoint/resume.
+    pub fn state(&self) -> (f64, bool) {
+        (self.value, self.primed)
+    }
+
+    /// Restore a snapshot taken with [`Ema::state`]; the next `update`
+    /// continues the average exactly where the saved run left off.
+    pub fn restore(&mut self, value: f64, primed: bool) {
+        self.value = value;
+        self.primed = primed;
     }
 }
 
@@ -103,6 +136,34 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 3);
         assert!(text.starts_with("step,loss\n"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn append_keeps_existing_rows() {
+        let dir = std::env::temp_dir().join("switchlora_test_metrics_app");
+        let path = dir.join("resume.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["step", "loss"]).unwrap();
+            w.row(&["0".into(), "5.0".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        {
+            // resume: append without truncating or re-writing the header
+            let mut w = CsvWriter::append(&path, &["step", "loss"]).unwrap();
+            w.row(&["1".into(), "4.0".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "step,loss\n0,5.0\n1,4.0\n");
+        // appending to a fresh file still writes the header
+        let p2 = dir.join("fresh.csv");
+        let mut w = CsvWriter::append(&p2, &["a"]).unwrap();
+        w.row(&["1".into()]).unwrap();
+        w.flush().unwrap();
+        assert!(std::fs::read_to_string(&p2)
+            .unwrap()
+            .starts_with("a\n"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,116 +1,51 @@
 //! Training orchestrator: the leader loop tying together data, runtime,
-//! optimizer, and the method-specific machinery (SwitchLoRA switching,
-//! ReLoRA resets, GaLore projection, plain LoRA / full-rank baselines).
+//! optimizer, and the pluggable training method.
 //!
 //! One `Trainer::run` executes the paper's Algorithm 2 end to end:
 //! ```text
+//! method.pre_run                             (warm-start protocols)
 //! for step:                                  (Alg. 2 line 1)
-//!   lr ← schedule(step)
+//!   lr ← method.lr_adjust(schedule(step))
 //!   per-worker fwd+bwd on its shard          (data-parallel sim)
 //!   ring all-reduce of gradients             (measured comm bytes)
-//!   fused AdamW with freeze mask             (Alg. 2 line 2 + freezes)
-//!   method post-step:
-//!     SwitchLoRA: switch vectors             (Alg. 2 lines 3–15)
-//!     ReLoRA: merge-and-reset when due
+//!   method.optim_step                        (default: fused AdamW with
+//!                                             the method's freeze mask;
+//!                                             GaLore: host SVD optimizer)
+//!   method.post_step                         (SwitchLoRA switching,
+//!                                             ReLoRA merge-and-reset)
 //! ```
-//! plus periodic fixed-set evaluation, CSV metrics and a final report.
+//! plus periodic fixed-set evaluation, CSV metrics, optional periodic
+//! resumable checkpoints (`ckpt_every`/`resume`) and a final report.
+//!
+//! The loop knows nothing about any concrete method: every
+//! method-specific behavior — variant selection, default learning rate,
+//! gradient masking, the optimizer update itself, post-step mutation,
+//! counters and resumable state — goes through the
+//! [`TrainingMethod`](crate::methods::TrainingMethod) trait, and methods
+//! are instantiated by name through the
+//! [`methods`](crate::methods) registry.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 
+use crate::coordinator::checkpoint::{self, MethodState, TrainerState};
 use crate::coordinator::data_parallel::{ring_all_reduce, CommLedger};
 use crate::coordinator::eval::eval_loss;
 use crate::coordinator::metrics::{perplexity, CsvWriter, Ema};
 use crate::data::dataset::{synth_batches, BatchIter, EvalSet};
 use crate::data::synth::CorpusGen;
-use crate::model::init::{copy_shared, init_store, InitMode};
-use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::methods::{self, MethodCtx, TrainingMethod};
+use crate::model::init::{init_store, InitMode};
+use crate::model::layout::{Manifest, ParamStore};
 use crate::optim::adam::AdamState;
-use crate::optim::galore::Galore;
 use crate::optim::schedule::LrSchedule;
 use crate::optim::AdamHyper;
 use crate::runtime::{Engine, ModelRuntime};
-use crate::switchlora::relora::ReLora;
-use crate::switchlora::schedule::SwitchSchedule;
-use crate::switchlora::switcher::SwitchLora;
 use crate::util::rng::Rng;
 
-#[derive(Clone, Debug)]
-pub struct SwitchParams {
-    /// initial switching interval (paper: 40)
-    pub interval0: f64,
-    /// fraction of total steps at which frequency reaches 1/3 (paper: 0.1)
-    pub ratio: f64,
-    /// freeze length N after a switch (paper: 5)
-    pub n_freeze: u64,
-}
-
-impl Default for SwitchParams {
-    fn default() -> Self {
-        SwitchParams { interval0: 40.0, ratio: 0.1, n_freeze: 5 }
-    }
-}
-
-#[derive(Clone, Debug)]
-pub struct ReLoraParams {
-    pub reset_interval: u64,
-    pub rewarm: u64,
-}
-
-#[derive(Clone, Debug)]
-pub struct GaloreParams {
-    pub rank: usize,
-    pub update_freq: u64,
-    pub scale: f32,
-}
-
-#[derive(Clone, Debug)]
-pub enum Method {
-    Full,
-    Lora,
-    SwitchLora(SwitchParams),
-    ReLora(ReLoraParams),
-    Galore(GaloreParams),
-}
-
-impl Method {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Method::Full => "full",
-            Method::Lora => "lora",
-            Method::SwitchLora(_) => "switchlora",
-            Method::ReLora(_) => "relora",
-            Method::Galore(_) => "galore",
-        }
-    }
-
-    pub fn variant(&self) -> Variant {
-        match self {
-            Method::Full | Method::Galore(_) => Variant::Full,
-            _ => Variant::Lora,
-        }
-    }
-
-    pub fn parse(s: &str) -> Option<Method> {
-        Some(match s {
-            "full" => Method::Full,
-            "lora" => Method::Lora,
-            "switchlora" => Method::SwitchLora(SwitchParams::default()),
-            "relora" => Method::ReLora(ReLoraParams {
-                reset_interval: 500,
-                rewarm: 50,
-            }),
-            "galore" => Method::Galore(GaloreParams {
-                rank: 0, // 0 ⇒ use the config's LoRA rank
-                update_freq: 200,
-                scale: 0.25,
-            }),
-            _ => return None,
-        })
-    }
-}
+pub use crate::methods::Method;
 
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -128,12 +63,24 @@ pub struct TrainConfig {
     pub eval_every: u64,
     pub eval_batches: usize,
     pub init: InitMode,
-    /// full-rank warm-start steps before low-rank training (Figure 4)
+    /// full-rank warm-start steps before low-rank training (Figure 4);
+    /// realized by wrapping the method in the `warmstart` plugin
     pub full_warmup_steps: u64,
     /// optional CSV path for the per-step loss curve
     pub metrics_csv: Option<PathBuf>,
     /// log every k steps
     pub log_every: u64,
+    /// write a resumable checkpoint every k steps (0 = off); requires
+    /// `ckpt_path`
+    pub ckpt_every: u64,
+    /// where periodic checkpoints go; a literal `{step}` in the file
+    /// name is replaced with the step count at save time (otherwise the
+    /// latest snapshot overwrites the previous one)
+    pub ckpt_path: Option<PathBuf>,
+    /// resume from this checkpoint: weights, optimizer state, method
+    /// state and the step clock are restored, then training continues to
+    /// `steps` (the config must otherwise match the original run)
+    pub resume: Option<PathBuf>,
 }
 
 impl TrainConfig {
@@ -143,7 +90,7 @@ impl TrainConfig {
             artifacts_dir: default_artifacts_dir(),
             method,
             steps,
-            peak_lr: 0.0, // 0 ⇒ method default below
+            peak_lr: 0.0, // 0 ⇒ the method's default lr
             warmup: 100.min(steps / 10).max(1),
             weight_decay: 0.0,
             seed: 42,
@@ -154,18 +101,9 @@ impl TrainConfig {
             full_warmup_steps: 0,
             metrics_csv: None,
             log_every: 50,
-        }
-    }
-
-    /// Paper Section 4.1 learning rates: full 1e-3, LoRA 1e-2,
-    /// SwitchLoRA 2e-2 (GaLore appendix C.3: 1e-2).
-    pub fn method_default_lr(method: &Method) -> f32 {
-        match method {
-            Method::Full => 1e-3,
-            Method::Lora => 1e-2,
-            Method::SwitchLora(_) => 2e-2,
-            Method::ReLora(_) => 1e-2,
-            Method::Galore(_) => 1e-2,
+            ckpt_every: 0,
+            ckpt_path: None,
+            resume: None,
         }
     }
 }
@@ -192,9 +130,21 @@ pub struct RunResult {
     pub elapsed_secs: f64,
     pub mean_step_ms: f64,
     pub comm: CommLedger,
-    pub offload_bytes: u64,
-    pub total_switches: u64,
+    /// method-reported named counters (e.g. `switches`,
+    /// `offload_bytes`, `resets`, `projected_matrices`)
+    pub counters: Vec<(String, u64)>,
     pub n_trainable: usize,
+}
+
+impl RunResult {
+    /// A method counter by name (0 when the method does not report it).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
 }
 
 /// The training driver.
@@ -218,16 +168,32 @@ impl Trainer {
         -> Result<(RunResult, ParamStore)> {
         let cfg = &self.cfg;
         let mc = &self.manifest.config;
-        let variant = cfg.method.variant();
+
+        // ---- method (via the registry) ----
+        let mspec = if cfg.full_warmup_steps > 0 {
+            cfg.method.clone().warm_started(cfg.full_warmup_steps)
+        } else {
+            cfg.method.clone()
+        };
+        let ctx = MethodCtx {
+            manifest: &self.manifest,
+            steps: cfg.steps,
+            seed: cfg.seed,
+        };
+        let mut method = methods::build(&mspec, &ctx)?;
+        // methods may substitute their own manifest (layerwise hybrids)
+        let manifest =
+            method.manifest().unwrap_or(&self.manifest).clone();
+        let variant = method.variant();
         let layout = std::sync::Arc::new(
-            self.manifest.layout(variant)?.clone());
+            manifest.layout(variant)?.clone());
         let mut rng = Rng::new(cfg.seed);
 
         // ---- state ----
         let mut store = ParamStore::zeros(layout.clone());
-        init_store(&mut store, &self.manifest.linears, mc.rank, cfg.init,
+        init_store(&mut store, &manifest.linears, mc.rank, cfg.init,
                    &mut rng);
-        let rt = ModelRuntime::load(engine, self.manifest.clone(), variant)?;
+        let rt = ModelRuntime::load(engine, manifest.clone(), variant)?;
         let padded = rt.padded;
         let mut opt = AdamState::new(layout.n_trainable, padded);
         let mut base_mask = vec![0.0f32; padded];
@@ -235,63 +201,57 @@ impl Trainer {
             *x = 1.0;
         }
 
-        // ---- method machinery ----
         let peak_lr = if cfg.peak_lr > 0.0 {
             cfg.peak_lr
         } else {
-            TrainConfig::method_default_lr(&cfg.method)
+            method.default_lr()
         };
         let sched = LrSchedule::cosine(peak_lr, cfg.warmup, cfg.steps);
-        let mut switcher = match &cfg.method {
-            Method::SwitchLora(p) => Some(SwitchLora::new(
-                &self.manifest.linears,
-                mc.rank,
-                mc.lora_scale() as f32,
-                SwitchSchedule::with_third_at(p.interval0, p.ratio,
-                                              cfg.steps),
-                p.n_freeze,
-                cfg.seed,
-            )),
-            _ => None,
-        };
-        let mut relora = match &cfg.method {
-            Method::ReLora(p) => Some(ReLora::new(p.reset_interval,
-                                                  p.rewarm)),
-            _ => None,
-        };
-        let mut galore = match &cfg.method {
-            Method::Galore(p) => {
-                let rank = if p.rank == 0 { mc.rank } else { p.rank };
-                Some(Galore::new(&layout, rank, p.update_freq, p.scale))
-            }
-            _ => None,
-        };
+        ensure!(cfg.ckpt_every == 0 || cfg.ckpt_path.is_some(),
+                "ckpt_every > 0 requires a ckpt_path");
 
-        // ---- full-rank warm start (Figure 4 protocol) ----
-        if cfg.full_warmup_steps > 0 && variant == Variant::Lora {
-            let warm = self.full_warm_start(engine, cfg.full_warmup_steps)?;
-            let copied = copy_shared(&warm, &mut store);
-            crate::info!("full-rank warm start: {} steps, {} params carried",
-                         cfg.full_warmup_steps, copied);
-        }
+        // ---- resume or pre-run (warm start) ----
+        let mut ema = Ema::new(0.05);
+        let mut comm = CommLedger::default();
+        let start_step = match &cfg.resume {
+            Some(path) => self.restore(path, method.as_mut(), &mut store,
+                                       &mut opt, &mut ema, &mut comm,
+                                       &mut rng, padded)?,
+            None => {
+                method.pre_run(cfg, &self.manifest, engine, &mut store)?;
+                0
+            }
+        };
+        ensure!(start_step <= cfg.steps,
+                "checkpoint is {start_step} steps in, but this run is \
+                 configured for only {} steps", cfg.steps);
 
         // ---- data ----
         let mut workers: Vec<BatchIter<CorpusGen>> = (0..cfg.workers)
             .map(|w| synth_batches(mc.vocab, cfg.seed, w as u64, mc.batch,
                                    mc.seq))
             .collect();
+        // fast-forward the data streams past the batches the original
+        // run already consumed, so resumed steps see identical data
+        for w in workers.iter_mut() {
+            for _ in 0..start_step {
+                w.next_batch();
+            }
+        }
         let eval_set = EvalSet::synth(mc.vocab, cfg.seed, mc.batch, mc.seq,
                                       cfg.eval_batches);
 
         // ---- metrics ----
+        const CSV_COLS: [&str; 6] =
+            ["step", "loss", "ema", "lr", "eval_loss", "comm_bytes"];
         let mut csv = match &cfg.metrics_csv {
-            Some(p) => Some(CsvWriter::create(
-                p, &["step", "loss", "ema", "lr", "eval_loss",
-                     "comm_bytes"])?),
+            // resuming mid-run: append, keeping the pre-kill curve rows
+            Some(p) if start_step > 0 => {
+                Some(CsvWriter::append(p, &CSV_COLS)?)
+            }
+            Some(p) => Some(CsvWriter::create(p, &CSV_COLS)?),
             None => None,
         };
-        let mut ema = Ema::new(0.05);
-        let mut comm = CommLedger::default();
         let mut train_curve = Vec::new();
         let mut eval_curve = Vec::new();
         let eval_every = if cfg.eval_every > 0 {
@@ -305,14 +265,9 @@ impl Trainer {
         };
 
         let t0 = Instant::now();
-        for step in 0..cfg.steps {
-            // learning rate (with ReLoRA local re-warm after resets)
-            let mut lr = sched.lr(step);
-            if let Some(rl) = &relora {
-                if rl.n_resets > 0 {
-                    lr = sched.with_restart(step, rl.last_reset, rl.rewarm);
-                }
-            }
+        for step in start_step..cfg.steps {
+            // learning rate (method hook: e.g. ReLoRA local re-warm)
+            let lr = method.lr_adjust(step, sched.lr(step), &sched);
             let hyper = hyper0.with_lr(lr);
 
             // ---- gradients (data-parallel) ----
@@ -340,36 +295,12 @@ impl Trainer {
             let step_comm_bytes = comm.bytes - bytes_before;
             let grad = &grads[0];
 
-            // ---- optimizer ----
-            if let Some(gl) = galore.as_mut() {
-                // host optimizer (needs SVD between grad and update)
-                let mut flat = store.gather_trainable(padded);
-                gl.step(step, &mut flat[..layout.n_trainable],
-                        &grad[..layout.n_trainable], &hyper);
-                store.scatter_trainable(&flat);
-            } else {
-                let mut mask = base_mask.clone();
-                if let Some(sw) = switcher.as_mut() {
-                    sw.freeze.apply(step, &mut mask);
-                }
-                let mut flat = store.gather_trainable(padded);
-                rt.adam_step(&mut flat, grad, &mut opt, &mask, &hyper)?;
-                store.scatter_trainable(&flat);
-            }
+            // ---- optimizer (method hook) ----
+            method.optim_step(step, &rt, &mut store, grad, &mut opt,
+                              &base_mask, &hyper)?;
 
             // ---- method post-step ----
-            if let Some(sw) = switcher.as_mut() {
-                sw.apply_step(step, &mut store, &mut opt,
-                              &self.manifest.linears);
-            }
-            if let Some(rl) = relora.as_mut() {
-                if rl.due(step) {
-                    let n = rl.reset(step, &mut store, &mut opt,
-                                     &self.manifest.linears, mc.rank,
-                                     mc.lora_scale() as f32, &mut rng);
-                    crate::info!("step {step}: ReLoRA reset {n} adapters");
-                }
-            }
+            method.post_step(step, &mut store, &mut opt, &mut rng)?;
 
             // ---- metrics / eval ----
             let e = ema.update(loss);
@@ -392,12 +323,23 @@ impl Trainer {
                         format!("{e:.6}"), format!("{lr:.6e}"), eval_s,
                         step_comm_bytes.to_string()])?;
             }
+
+            // ---- periodic resumable checkpoint ----
+            if cfg.ckpt_every > 0
+                && ((step + 1) % cfg.ckpt_every == 0
+                    || step + 1 == cfg.steps)
+            {
+                let path = cfg.ckpt_path.as_ref().expect("checked above");
+                self.save_resumable(path, method.as_ref(), &store, &opt,
+                                    step + 1, &ema, &comm, &rng)?;
+            }
         }
         if let Some(c) = csv.as_mut() {
             c.flush()?;
         }
 
         let elapsed = t0.elapsed().as_secs_f64();
+        let steps_run = cfg.steps - start_step;
         let final_eval = eval_curve
             .last()
             .map(|&(_, l)| l)
@@ -410,34 +352,120 @@ impl Trainer {
             final_eval_loss: final_eval,
             final_ppl: perplexity(final_eval),
             elapsed_secs: elapsed,
-            mean_step_ms: 1e3 * elapsed / cfg.steps.max(1) as f64,
+            mean_step_ms: 1e3 * elapsed / steps_run.max(1) as f64,
             comm,
-            offload_bytes: switcher
-                .as_ref()
-                .map(|s| s.ledger.total_bytes())
-                .unwrap_or(0),
-            total_switches: switcher
-                .as_ref()
-                .map(|s| s.total_switches)
-                .unwrap_or(0),
+            counters: method.counters(),
             n_trainable: layout.n_trainable,
         };
         Ok((result, store))
     }
 
-    /// Short full-rank run used as warm start (Figure 4 protocol); returns
-    /// its parameter store for transplanting into the LoRA store.
-    fn full_warm_start(&self, engine: &mut Engine, steps: u64)
-        -> Result<ParamStore> {
-        let mut sub = self.cfg.clone();
-        sub.method = Method::Full;
-        sub.steps = steps;
-        sub.full_warmup_steps = 0;
-        sub.peak_lr = 0.0;
-        sub.metrics_csv = None;
-        sub.eval_every = steps; // single eval at the end
-        let t = Trainer { cfg: sub, manifest: self.manifest.clone() };
-        let (_, store) = t.run(engine)?;
-        Ok(store)
+    /// Restore a resumable checkpoint into the freshly initialized run
+    /// state; returns the step to resume from.
+    #[allow(clippy::too_many_arguments)]
+    fn restore(&self, path: &Path, method: &mut dyn TrainingMethod,
+               store: &mut ParamStore, opt: &mut AdamState,
+               ema: &mut Ema, comm: &mut CommLedger, rng: &mut Rng,
+               padded: usize) -> Result<u64> {
+        let ck = checkpoint::load(path)
+            .with_context(|| format!("resuming from {}", path.display()))?;
+        let rep = ck.restore_into(store);
+        ensure!(rep.loaded > 0,
+                "checkpoint {} shares no parameters with this run \
+                 ({} missing, {} shape-mismatched)", path.display(),
+                rep.missing, rep.mismatched);
+        // validate the optimizer moments against the runtime's padded
+        // fused-Adam buffer size before accepting them (a checkpoint
+        // from a different padding would corrupt the update otherwise)
+        if let Some(o) =
+            ck.opt_validated(store.layout.n_trainable, padded)?
+        {
+            *opt = o;
+        }
+        if let Some(ms) = &ck.method {
+            ensure!(ms.name == method.name(),
+                    "checkpoint {} was written by method {:?}; this run \
+                     trains {:?}", path.display(), ms.name,
+                    method.name());
+            ensure!(ms.version == method.state_version(),
+                    "method state version {} in {} (current: {})",
+                    ms.version, path.display(), method.state_version());
+            method.load_state(&ms.payload)?;
+        }
+        let start = match &ck.trainer {
+            Some(ts) => {
+                // a mid-run checkpoint came from this exact run shape:
+                // every parameter must restore, and every store
+                // parameter must be covered — partial matches mean a
+                // different spec/rank/method, and the validated
+                // optimizer-moment length alone cannot catch layouts
+                // that share a fused-Adam padding bucket
+                ensure!(rep.missing == 0 && rep.mismatched == 0
+                            && rep.loaded == store.layout.params.len(),
+                        "mid-run checkpoint {} does not match this run's \
+                         layout ({} loaded of {} expected, {} missing, \
+                         {} mismatched) — was it written by a different \
+                         spec or rank?", path.display(), rep.loaded,
+                        store.layout.params.len(), rep.missing,
+                        rep.mismatched);
+                ensure!(ck.opt.is_some(),
+                        "mid-run checkpoint {} lacks optimizer state",
+                        path.display());
+                ensure!(ck.method.is_some(),
+                        "mid-run checkpoint {} lacks method state",
+                        path.display());
+                ema.restore(ts.ema_value, ts.ema_primed);
+                comm.bytes = ts.comm_bytes;
+                comm.rounds = ts.comm_rounds;
+                *rng = Rng::from_state(ts.rng);
+                ts.next_step
+            }
+            // weights-only checkpoint: warm initialization, fresh clock
+            None => 0,
+        };
+        crate::info!(
+            "resumed {} from {}: step {start}, {} params loaded \
+             ({} missing, {} mismatched), optimizer {}",
+            method.name(), path.display(), rep.loaded, rep.missing,
+            rep.mismatched,
+            if ck.opt.is_some() { "restored" } else { "fresh" });
+        Ok(start)
+    }
+
+    /// Write a resumable checkpoint: weights + optimizer + method state
+    /// + trainer state.  A literal `{step}` in the file name is replaced
+    /// with `next_step` so periodic snapshots can be kept side by side.
+    #[allow(clippy::too_many_arguments)]
+    fn save_resumable(&self, path: &Path, method: &dyn TrainingMethod,
+                      store: &ParamStore, opt: &AdamState,
+                      next_step: u64, ema: &Ema, comm: &CommLedger,
+                      rng: &Rng) -> Result<()> {
+        let mut payload = Vec::new();
+        method.save_state(&mut payload)?;
+        let ms = MethodState {
+            name: method.name().to_string(),
+            version: method.state_version(),
+            payload,
+        };
+        let (ema_value, ema_primed) = ema.state();
+        let ts = TrainerState {
+            next_step,
+            rng: rng.state(),
+            ema_value,
+            ema_primed,
+            comm_bytes: comm.bytes,
+            comm_rounds: comm.rounds,
+        };
+        let p = path.to_string_lossy();
+        let path = if p.contains("{step}") {
+            PathBuf::from(p.replace("{step}", &next_step.to_string()))
+        } else {
+            path.to_path_buf()
+        };
+        checkpoint::save_full(&path, &self.cfg.spec, store, Some(opt),
+                              Some(&ms), Some(&ts))?;
+        crate::debuglog!("checkpoint at step {next_step}: {}",
+                         path.display());
+        Ok(())
     }
 }

@@ -79,7 +79,7 @@ impl TaskGen {
         }
     }
 
-    /// A batch of examples: (tokens [n, seq] row-major, labels [n]).
+    /// A batch of examples: (tokens `[n, seq]` row-major, labels `[n]`).
     pub fn batch(&mut self, n: usize) -> (Vec<i32>, Vec<i32>) {
         let mut toks = Vec::with_capacity(n * self.seq);
         let mut labels = Vec::with_capacity(n);

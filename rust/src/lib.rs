@@ -6,9 +6,15 @@
 //! Alg. 1/2), optimizer-state resets and freezes, candidate-vector
 //! management with offload accounting, a simulated data-parallel runtime
 //! with ring all-reduce, baselines (full-rank, LoRA, ReLoRA, GaLore),
-//! evaluation, checkpointing, metrics, the CLI, and an inference
-//! subsystem (`infer`): KV-cached autoregressive generation with adapter
-//! merging and batched decode.
+//! evaluation, resumable checkpointing, metrics, the CLI, and an
+//! inference subsystem (`infer`): KV-cached autoregressive generation
+//! with adapter merging and batched decode.
+//!
+//! Training methods are first-class plugins ([`methods`]): the trainer
+//! drives only the [`methods::TrainingMethod`] trait, and every method —
+//! the paper's SwitchLoRA, the baselines, the composable warm-start
+//! wrapper and the PreLoRA-style layerwise hybrid — registers by name.
+//! See the README's "Adding a training method" walkthrough.
 //!
 //! Model execution is pluggable (`runtime::Engine`):
 //!
@@ -34,6 +40,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod infer;
+pub mod methods;
 pub mod model;
 pub mod optim;
 pub mod runtime;

@@ -2,9 +2,22 @@
 //!
 //! ```text
 //! switchlora pretrain --spec s1m --method switchlora --steps 400
-//!            [--lr 2e-2] [--workers 4] [--interval0 40] [--ratio 0.1]
-//!            [--nfreeze 5] [--full-warmup 0] [--out ckpt.bin]
+//!            [--lr 2e-2] [--workers 4] [--full-warmup 0] [--out ckpt.bin]
 //!            [--csv curve.csv] [--init switchlora|lora_default]
+//!            [--ckpt-every 100 [--ckpt-path resume.ckpt]]
+//!            [--resume resume.ckpt]
+//!   methods (see `switchlora info` for the live registry):
+//!     full | lora
+//!     switchlora  [--interval0 40] [--ratio 0.1] [--nfreeze 5]
+//!     relora      [--reset-interval 500] [--rewarm 50]
+//!     galore      [--galore-rank 0] [--update-freq 200]
+//!                 [--galore-scale 0.25]
+//!     prelora     [--full-layers K]      # first K layers full-rank
+//!     warmstart   [--inner lora] [--warm-steps 100] + inner's flags
+//!   `--ckpt-every N` writes a resumable checkpoint (weights + optimizer
+//!   + method state + step clock) every N steps; `--resume` continues a
+//!   killed run mid-schedule with identical losses.  A literal `{step}`
+//!   in --ckpt-path keeps every snapshot instead of overwriting.
 //! switchlora finetune --spec s1m --ckpt ckpt.bin --from lora
 //!            [--tasks majority,contains,...] [--steps 150] [--lr 1e-3]
 //! switchlora eval --spec s1m --ckpt ckpt.bin --variant lora
@@ -13,7 +26,7 @@
 //!            [--merge] [--prompt "text"] [--max-new 64] [--batch 4]
 //!            [--temperature 0.8] [--top-k 40] [--stop 0,10] [--seed 42]
 //! switchlora tables            # analytic Tables 4/5 + App. D/F
-//! switchlora info              # list available artifact specs
+//! switchlora info              # list specs + the method registry
 //! ```
 
 use std::path::PathBuf;
@@ -23,8 +36,7 @@ use anyhow::{bail, Result};
 use switchlora::cli::{check_spec, csv_list, Args};
 use switchlora::coordinator::checkpoint;
 use switchlora::coordinator::metrics::comm_summary;
-use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
-                                       TrainConfig};
+use switchlora::coordinator::trainer::{default_artifacts_dir, TrainConfig};
 use switchlora::data::tasks::Task;
 use switchlora::data::tokenizer::{ByteTokenizer, Tokenizer};
 use switchlora::exp;
@@ -64,40 +76,17 @@ fn dispatch(args: &Args) -> Result<()> {
 
 const HELP: &str = "switchlora — switched low-rank adaptation pre-training\n\
 subcommands: pretrain finetune eval rank generate tables info\n\
+training methods are pluggable: `switchlora info` lists the registry,\n\
+and `pretrain --method NAME` + per-method flags select one\n\
 backend: native CPU by default (no artifacts needed); build with\n\
 `--features pjrt` and set SWITCHLORA_BACKEND=pjrt for the AOT/PJRT path\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
-
-fn method_from_args(args: &Args) -> Result<Method> {
-    let name = args.get_or("method", "switchlora");
-    let mut m = Method::parse(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown method {name:?}"))?;
-    match &mut m {
-        Method::SwitchLora(p) => {
-            p.interval0 = args.parse_num("interval0", p.interval0)?;
-            p.ratio = args.parse_num("ratio", p.ratio)?;
-            p.n_freeze = args.parse_num("nfreeze", p.n_freeze)?;
-        }
-        Method::ReLora(p) => {
-            p.reset_interval =
-                args.parse_num("reset-interval", p.reset_interval)?;
-            p.rewarm = args.parse_num("rewarm", p.rewarm)?;
-        }
-        Method::Galore(p) => {
-            p.rank = args.parse_num("galore-rank", p.rank)?;
-            p.update_freq = args.parse_num("update-freq", p.update_freq)?;
-            p.scale = args.parse_num("galore-scale", p.scale)?;
-        }
-        _ => {}
-    }
-    Ok(m)
-}
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let spec = args.get_or("spec", "tiny");
     let artifacts = default_artifacts_dir();
     check_spec(&artifacts, &spec)?;
-    let method = method_from_args(args)?;
+    let method = switchlora::methods::from_args(args)?;
     let steps = args.parse_num("steps", 200u64)?;
     let mut cfg = TrainConfig::new(&spec, method, steps);
     cfg.peak_lr = args.parse_num("lr", 0.0f32)?;
@@ -113,14 +102,31 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
         other => bail!("unknown --init {other:?}"),
     };
     cfg.metrics_csv = args.get("csv").map(PathBuf::from);
+    cfg.ckpt_every = args.parse_num("ckpt-every", 0u64)?;
+    cfg.ckpt_path = args.get("ckpt-path").map(PathBuf::from);
+    if cfg.ckpt_every > 0 && cfg.ckpt_path.is_none() {
+        cfg.ckpt_path = Some(PathBuf::from(format!(
+            "{spec}_{}_resume.ckpt", cfg.method.name())));
+    }
+    cfg.resume = args.get("resume").map(PathBuf::from);
     let mut engine = Engine::cpu()?;
     switchlora::info!("execution backend: {}", engine.backend_name());
     let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
     print!("{}", exp::results_table("pretrain", &[res.clone()]));
     println!("comm: {}", comm_summary(&res.comm, steps));
+    if !res.counters.is_empty() {
+        let line = res
+            .counters
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join("  ");
+        println!("method counters: {line}");
+    }
     println!("offload bytes/step: {}  switches: {}",
-             human_bytes((res.offload_bytes as f64 / steps as f64) as u64),
-             res.total_switches);
+             human_bytes((res.counter("offload_bytes") as f64
+                          / steps as f64) as u64),
+             res.counter("switches"));
     if let Some(out) = args.get("out") {
         checkpoint::save(&PathBuf::from(out), &spec, &store, None)?;
         println!("checkpoint written to {out}");
@@ -134,9 +140,10 @@ fn load_store(manifest: &Manifest, variant: Variant, ckpt: &str)
         std::sync::Arc::new(manifest.layout(variant)?.clone());
     let mut store = ParamStore::zeros(layout);
     let ck = checkpoint::load(&PathBuf::from(ckpt))?;
-    let (loaded, missing) = ck.restore_into(&mut store);
-    switchlora::info!("checkpoint: {loaded} params loaded, {missing} \
-                       skipped");
+    let rep = ck.restore_into(&mut store);
+    switchlora::info!("checkpoint: {} params loaded, {} absent, {} \
+                       shape-mismatched", rep.loaded, rep.missing,
+                      rep.mismatched);
     Ok(store)
 }
 
@@ -402,8 +409,17 @@ fn cmd_tables() -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
+    println!("training methods (--method NAME):");
+    for m in switchlora::methods::registry() {
+        let opts = if m.option_keys.is_empty() {
+            String::new()
+        } else {
+            format!("  [--{}]", m.option_keys.join(" --"))
+        };
+        println!("  {:<11} {}{opts}", m.name, m.summary);
+    }
     let artifacts = default_artifacts_dir();
-    println!("artifacts dir: {}", artifacts.display());
+    println!("\nartifacts dir: {}", artifacts.display());
     let mut specs: Vec<String> = std::fs::read_dir(&artifacts)
         .map(|rd| {
             rd.filter_map(|e| e.ok())

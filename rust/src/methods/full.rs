@@ -1,0 +1,30 @@
+//! Full-rank AdamW baseline: every parameter trainable, no adapters.
+
+use anyhow::Result;
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::model::layout::Variant;
+
+/// The full-rank baseline method (the paper's reference arm).
+pub struct FullRank;
+
+impl TrainingMethod for FullRank {
+    fn name(&self) -> &str {
+        "full"
+    }
+
+    fn variant(&self) -> Variant {
+        Variant::Full
+    }
+
+    fn default_lr(&self) -> f32 {
+        // paper Section 4.1
+        1e-3
+    }
+}
+
+/// Registry factory.
+pub(super) fn build(_spec: &Method, _ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    Ok(Box::new(FullRank))
+}

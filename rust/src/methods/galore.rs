@@ -1,0 +1,102 @@
+//! GaLore as a [`TrainingMethod`] plugin (Zhao et al. 2024b): the method
+//! that demonstrates the overridable `optim_step` hook — instead of the
+//! fused AdamW it runs the host optimizer, which needs SVD control
+//! between gradient and update to project onto a low-rank subspace.
+
+use anyhow::Result;
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::model::layout::{ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::galore::Galore;
+use crate::optim::AdamHyper;
+use crate::runtime::ModelRuntime;
+use crate::util::bytes::ByteReader;
+
+/// GaLore hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct GaloreParams {
+    /// projection rank; 0 means "use the config's LoRA rank"
+    pub rank: usize,
+    /// steps between SVD projection refreshes
+    pub update_freq: u64,
+    /// GaLore's update scale α (their default 0.25)
+    pub scale: f32,
+}
+
+impl Default for GaloreParams {
+    fn default() -> Self {
+        GaloreParams { rank: 0, update_freq: 200, scale: 0.25 }
+    }
+}
+
+/// The GaLore method: a host projector-optimizer over the full-rank
+/// layout (the shared fused-Adam state stays untouched).
+pub struct GaloreMethod {
+    g: Galore,
+}
+
+impl TrainingMethod for GaloreMethod {
+    fn name(&self) -> &str {
+        "galore"
+    }
+
+    fn variant(&self) -> Variant {
+        Variant::Full
+    }
+
+    fn default_lr(&self) -> f32 {
+        // GaLore appendix C.3
+        1e-2
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn optim_step(&mut self, step: u64, rt: &ModelRuntime,
+                  store: &mut ParamStore, grad: &[f32],
+                  _opt: &mut AdamState, _base_mask: &[f32],
+                  hyper: &AdamHyper) -> Result<()> {
+        let n = store.layout.n_trainable;
+        let mut flat = store.gather_trainable(rt.padded);
+        self.g.step(step, &mut flat[..n], &grad[..n], hyper);
+        store.scatter_trainable(&flat);
+        Ok(())
+    }
+
+    fn counters(&self) -> Vec<(String, u64)> {
+        vec![
+            ("projected_matrices".into(),
+             self.g.n_projected_matrices() as u64),
+            ("opt_state_elems".into(),
+             self.g.optimizer_state_elems() as u64),
+        ]
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<()> {
+        self.g.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.g.load_state(&mut r)?;
+        r.finish()
+    }
+}
+
+/// Registry factory: parse `galore-rank` / `update-freq` /
+/// `galore-scale` options and size the projector from the full layout.
+pub(super) fn build(spec: &Method, ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    let d = GaloreParams::default();
+    let p = GaloreParams {
+        rank: spec.opt_num("galore-rank", d.rank)?,
+        update_freq: spec.opt_num("update-freq", d.update_freq)?,
+        scale: spec.opt_num("galore-scale", d.scale)?,
+    };
+    let mc = &ctx.manifest.config;
+    let rank = if p.rank == 0 { mc.rank } else { p.rank };
+    let layout = ctx.manifest.layout(Variant::Full)?;
+    Ok(Box::new(GaloreMethod {
+        g: Galore::new(layout, rank, p.update_freq, p.scale),
+    }))
+}

@@ -1,0 +1,30 @@
+//! Plain-LoRA baseline: fixed adapters, frozen base weights (Hu et al.).
+
+use anyhow::Result;
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::model::layout::Variant;
+
+/// The plain-LoRA baseline method (the paper's Figure 2 low arm).
+pub struct PlainLora;
+
+impl TrainingMethod for PlainLora {
+    fn name(&self) -> &str {
+        "lora"
+    }
+
+    fn variant(&self) -> Variant {
+        Variant::Lora
+    }
+
+    fn default_lr(&self) -> f32 {
+        // paper Section 4.1
+        1e-2
+    }
+}
+
+/// Registry factory.
+pub(super) fn build(_spec: &Method, _ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    Ok(Box::new(PlainLora))
+}

@@ -1,0 +1,459 @@
+//! The training-method plugin API.
+//!
+//! The paper's contribution is a *method* — a post-step hook that
+//! switches LoRA vectors while keeping optimizer state consistent — and
+//! this module makes methods first-class plugins instead of special
+//! cases inside the trainer: the leader loop in `coordinator/trainer.rs`
+//! drives only the [`TrainingMethod`] trait, and every method (the
+//! paper's SwitchLoRA, the full-rank / LoRA / ReLoRA / GaLore baselines,
+//! the composable [`warmstart::WarmStart`] wrapper and the PreLoRA-style
+//! layerwise hybrid) registers here by name.
+//!
+//! A method is configured by a [`Method`] spec — a registry name plus a
+//! string option map (the CLI's `--interval0 40`-style flags land there
+//! verbatim) — and instantiated through [`build`], which resolves the
+//! name in [`registry`] and hands the factory a [`MethodCtx`] with the
+//! manifest, total steps and seed.  The trait's hooks cover the whole
+//! per-step surface: learning-rate adjustment, gradient masking, the
+//! optimizer update itself (GaLore substitutes its host SVD optimizer
+//! for the fused AdamW), the post-step mutation (switching, merge-and-
+//! reset), named systems counters for the run report, and
+//! `save_state`/`load_state` for mid-schedule checkpoint/resume.
+//!
+//! Adding a method means: implement the trait in a new submodule, add a
+//! `MethodInfo` row to [`registry`] — nothing in the trainer changes.
+
+pub mod full;
+pub mod galore;
+pub mod lora;
+pub mod prelora;
+pub mod relora;
+pub mod switchlora;
+pub mod warmstart;
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+pub use self::galore::GaloreParams;
+pub use self::prelora::PreLoraParams;
+pub use self::relora::ReLoraParams;
+pub use self::switchlora::SwitchParams;
+
+use crate::coordinator::trainer::TrainConfig;
+use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::schedule::LrSchedule;
+use crate::optim::AdamHyper;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::util::rng::Rng;
+
+/// Everything a method factory may consult when instantiating: the
+/// (original) manifest, the run length and the run seed.
+pub struct MethodCtx<'a> {
+    /// the spec's manifest (layouts, linears, model config)
+    pub manifest: &'a Manifest,
+    /// total training steps (switch schedules are parameterized on it)
+    pub steps: u64,
+    /// run seed (methods derive their own independent streams from it)
+    pub seed: u64,
+}
+
+/// A training method plugged into the leader loop.
+///
+/// The loop calls, in order per step: [`lr_adjust`](Self::lr_adjust) →
+/// (gradients + all-reduce, method-agnostic) →
+/// [`optim_step`](Self::optim_step) (whose default applies
+/// [`grad_mask`](Self::grad_mask) and runs the fused AdamW) →
+/// [`post_step`](Self::post_step).  Around the loop:
+/// [`pre_run`](Self::pre_run) before step 0 (skipped on `--resume`), and
+/// [`counters`](Self::counters) for the final report.  State that must
+/// survive a kill-and-resume goes through
+/// [`save_state`](Self::save_state) / [`load_state`](Self::load_state).
+pub trait TrainingMethod {
+    /// Registry name (plus configuration suffix for wrappers); matched
+    /// against the checkpointed method state on resume.
+    fn name(&self) -> &str;
+
+    /// Which model variant's layout this method trains.
+    fn variant(&self) -> Variant;
+
+    /// Paper-default peak learning rate, used when the user sets none.
+    fn default_lr(&self) -> f32;
+
+    /// The manifest to train with.  Methods that rewrite layouts (the
+    /// layerwise hybrid) return their own; `None` keeps the spec's.
+    fn manifest(&self) -> Option<&Manifest> {
+        None
+    }
+
+    /// Hook before step 0 — warm-start protocols run here.  Skipped
+    /// entirely when the run resumes from a checkpoint (the checkpoint
+    /// already contains the warm-started weights).
+    fn pre_run(&mut self, _cfg: &TrainConfig, _manifest: &Manifest,
+               _engine: &mut Engine, _store: &mut ParamStore)
+        -> Result<()> {
+        Ok(())
+    }
+
+    /// Adjust the scheduled learning rate for `step` (ReLoRA re-warms
+    /// locally after each reset).
+    fn lr_adjust(&self, _step: u64, lr: f32, _sched: &LrSchedule) -> f32 {
+        lr
+    }
+
+    /// Zero mask lanes that must not update at `step` (freeze windows of
+    /// freshly switched vectors).  May prune expired internal state.
+    fn grad_mask(&mut self, _step: u64, _mask: &mut [f32]) {}
+
+    /// The optimizer update for one step.  The default clones the base
+    /// mask, applies [`grad_mask`](Self::grad_mask) and runs the fused
+    /// AdamW over the packed trainable vector; methods that need host
+    /// control between gradient and update (GaLore's SVD projection)
+    /// override the whole hook.
+    #[allow(clippy::too_many_arguments)]
+    fn optim_step(&mut self, step: u64, rt: &ModelRuntime,
+                  store: &mut ParamStore, grad: &[f32],
+                  opt: &mut AdamState, base_mask: &[f32],
+                  hyper: &AdamHyper) -> Result<()> {
+        let mut mask = base_mask.to_vec();
+        self.grad_mask(step, &mut mask);
+        let mut flat = store.gather_trainable(rt.padded);
+        rt.adam_step(&mut flat, grad, opt, &mask, hyper)?;
+        store.scatter_trainable(&flat);
+        Ok(())
+    }
+
+    /// Post-optimizer hook — the paper's Algorithm 2 switching, ReLoRA's
+    /// merge-and-reset.  `rng` is the leader RNG (checkpointed with the
+    /// trainer, so resumed draws continue the same stream).
+    fn post_step(&mut self, _step: u64, _store: &mut ParamStore,
+                 _opt: &mut AdamState, _rng: &mut Rng) -> Result<()> {
+        Ok(())
+    }
+
+    /// Named systems counters for the run report (replaces the old
+    /// hard-coded `offload_bytes`/`total_switches` result fields).
+    fn counters(&self) -> Vec<(String, u64)> {
+        Vec::new()
+    }
+
+    /// Serialize resumable state into `out`.  Stateless methods write
+    /// nothing.
+    fn save_state(&self, _out: &mut Vec<u8>) -> Result<()> {
+        Ok(())
+    }
+
+    /// Restore state written by [`save_state`](Self::save_state).
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        ensure!(bytes.is_empty(),
+                "method {:?} carries no resumable state but the \
+                 checkpoint holds {} bytes of it", self.name(),
+                bytes.len());
+        Ok(())
+    }
+
+    /// Schema version of the `save_state` payload; bump on layout
+    /// changes so stale checkpoints fail loudly.
+    fn state_version(&self) -> u32 {
+        1
+    }
+}
+
+/// A method *specification*: registry name + string options.  This is
+/// what lives in `TrainConfig`, what the CLI builds from `--method` and
+/// the per-method flags, and what [`build`] instantiates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Method {
+    name: String,
+    opts: BTreeMap<String, String>,
+}
+
+impl Method {
+    /// A spec with no options (the method's defaults apply).
+    pub fn new(name: impl Into<String>) -> Method {
+        Method { name: name.into(), opts: BTreeMap::new() }
+    }
+
+    /// The registry name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Set an option (stringly, exactly as the CLI would).
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.opts.insert(key.to_string(), value.to_string());
+    }
+
+    /// Builder-style [`set`](Self::set).
+    pub fn with(mut self, key: &str, value: impl ToString) -> Method {
+        self.set(key, value);
+        self
+    }
+
+    /// Raw option lookup.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Parse an option as a number, with a default when absent.
+    pub fn opt_num<T: std::str::FromStr>(&self, key: &str, default: T)
+        -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow!("method option {key}={v:?}: {e}")),
+        }
+    }
+
+    /// Parse a bare method name against the registry (defaults for every
+    /// option).  Returns `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Method> {
+        lookup(s).map(|info| Method::new(info.name))
+    }
+
+    /// The full-rank baseline.
+    pub fn full() -> Method {
+        Method::new("full")
+    }
+
+    /// The plain-LoRA baseline.
+    pub fn lora() -> Method {
+        Method::new("lora")
+    }
+
+    /// The paper's SwitchLoRA with explicit parameters.
+    pub fn switchlora(p: SwitchParams) -> Method {
+        Method::new("switchlora")
+            .with("interval0", p.interval0)
+            .with("ratio", p.ratio)
+            .with("nfreeze", p.n_freeze)
+    }
+
+    /// The ReLoRA baseline with explicit parameters.
+    pub fn relora(p: ReLoraParams) -> Method {
+        Method::new("relora")
+            .with("reset-interval", p.reset_interval)
+            .with("rewarm", p.rewarm)
+    }
+
+    /// The GaLore baseline with explicit parameters.
+    pub fn galore(p: GaloreParams) -> Method {
+        Method::new("galore")
+            .with("galore-rank", p.rank)
+            .with("update-freq", p.update_freq)
+            .with("galore-scale", p.scale)
+    }
+
+    /// The PreLoRA-style layerwise full+LoRA hybrid.
+    pub fn prelora(p: PreLoraParams) -> Method {
+        Method::new("prelora").with("full-layers", p.full_layers)
+    }
+
+    /// Wrap this spec in a full-rank warm start of `steps` steps (the
+    /// Figure 4 protocol).  Wrapping a warm start only updates its
+    /// length.
+    pub fn warm_started(mut self, steps: u64) -> Method {
+        if self.name == "warmstart" {
+            self.set("warm-steps", steps);
+            return self;
+        }
+        let mut m = Method { name: "warmstart".into(), opts: self.opts };
+        m.set("inner", &self.name);
+        m.set("warm-steps", steps);
+        m
+    }
+}
+
+type BuildFn = fn(&Method, &MethodCtx) -> Result<Box<dyn TrainingMethod>>;
+
+/// One registry row: the name [`build`] resolves, a summary for
+/// `switchlora info`, and the CLI option keys the method understands.
+pub struct MethodInfo {
+    /// registry name (`--method <name>`)
+    pub name: &'static str,
+    /// one-line description for help/info output
+    pub summary: &'static str,
+    /// CLI option keys copied from the arg map into the spec
+    pub option_keys: &'static [&'static str],
+    build: BuildFn,
+}
+
+static REGISTRY: &[MethodInfo] = &[
+    MethodInfo {
+        name: "full",
+        summary: "full-rank AdamW baseline (paper lr 1e-3)",
+        option_keys: &[],
+        build: full::build,
+    },
+    MethodInfo {
+        name: "lora",
+        summary: "plain LoRA, fixed adapters (paper lr 1e-2)",
+        option_keys: &[],
+        build: lora::build,
+    },
+    MethodInfo {
+        name: "switchlora",
+        summary: "the paper's switched LoRA (Algorithms 1+2)",
+        option_keys: &["interval0", "ratio", "nfreeze"],
+        build: switchlora::build,
+    },
+    MethodInfo {
+        name: "relora",
+        summary: "ReLoRA merge-and-reset baseline (Lialin et al.)",
+        option_keys: &["reset-interval", "rewarm"],
+        build: relora::build,
+    },
+    MethodInfo {
+        name: "galore",
+        summary: "GaLore gradient low-rank projection (Zhao et al.)",
+        option_keys: &["galore-rank", "update-freq", "galore-scale"],
+        build: galore::build,
+    },
+    MethodInfo {
+        name: "prelora",
+        summary: "PreLoRA-style layerwise hybrid: first K layers \
+                  full-rank, the rest LoRA",
+        option_keys: &["full-layers"],
+        build: prelora::build,
+    },
+    MethodInfo {
+        name: "warmstart",
+        summary: "composable full-rank warm start around any low-rank \
+                  method (Figure 4 protocol)",
+        option_keys: &["inner", "warm-steps"],
+        build: warmstart::build,
+    },
+];
+
+/// All registered methods, in registry order.
+pub fn registry() -> &'static [MethodInfo] {
+    REGISTRY
+}
+
+/// Look a method up by name.
+pub fn lookup(name: &str) -> Option<&'static MethodInfo> {
+    REGISTRY.iter().find(|m| m.name == name)
+}
+
+/// Comma-separated registry names (for error messages and help output).
+pub fn known_names() -> String {
+    REGISTRY
+        .iter()
+        .map(|m| m.name)
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Instantiate a method spec against a run context.
+pub fn build(spec: &Method, ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    let info = lookup(spec.name()).ok_or_else(|| {
+        anyhow!("unknown method {:?} (known: {})", spec.name(),
+                known_names())
+    })?;
+    (info.build)(spec, ctx)
+}
+
+/// Build a method spec from parsed CLI args: `--method NAME` plus the
+/// method's registered option keys (and, for wrappers that declare an
+/// `inner` key, the inner method's keys as well).
+pub fn from_args(args: &crate::cli::Args) -> Result<Method> {
+    let name = args.get_or("method", "switchlora");
+    let info = lookup(&name).ok_or_else(|| {
+        anyhow!("unknown method {name:?} (known: {})", known_names())
+    })?;
+    let mut spec = Method::new(info.name);
+    let mut keys: Vec<&'static str> = info.option_keys.to_vec();
+    if info.option_keys.contains(&"inner") {
+        let inner = args.get("inner").unwrap_or(warmstart::DEFAULT_INNER);
+        match lookup(inner) {
+            Some(ii) => keys.extend_from_slice(ii.option_keys),
+            None => bail!("unknown inner method {inner:?} (known: {})",
+                          known_names()),
+        }
+    }
+    for key in keys {
+        if let Some(v) = args.get(key) {
+            spec.set(key, v);
+        }
+    }
+    Ok(spec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_resolve() {
+        for m in registry() {
+            assert!(Method::parse(m.name).is_some(), "{}", m.name);
+        }
+        assert!(Method::parse("nope").is_none());
+        assert!(known_names().contains("switchlora"));
+    }
+
+    #[test]
+    fn builds_every_method_with_defaults() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let ctx = MethodCtx { manifest: &man, steps: 100, seed: 1 };
+        for info in registry() {
+            let m = build(&Method::new(info.name), &ctx).unwrap();
+            assert!(m.default_lr() > 0.0, "{}", info.name);
+            // every method resolves to a real layout
+            let manifest = m.manifest().unwrap_or(&man);
+            assert!(manifest.layout(m.variant()).is_ok(), "{}",
+                    info.name);
+        }
+    }
+
+    #[test]
+    fn typed_constructors_set_options() {
+        let m = Method::switchlora(SwitchParams {
+            interval0: 8.0, ratio: 0.5, n_freeze: 2,
+        });
+        assert_eq!(m.name(), "switchlora");
+        assert_eq!(m.opt("interval0"), Some("8"));
+        assert_eq!(m.opt_num("nfreeze", 0u64).unwrap(), 2);
+        // absent key falls back to the default
+        assert_eq!(m.opt_num("missing", 7u64).unwrap(), 7);
+    }
+
+    #[test]
+    fn warm_start_wraps_and_rewraps() {
+        let m = Method::switchlora(SwitchParams::default())
+            .warm_started(50);
+        assert_eq!(m.name(), "warmstart");
+        assert_eq!(m.opt("inner"), Some("switchlora"));
+        assert_eq!(m.opt("warm-steps"), Some("50"));
+        // inner options survive the wrap
+        assert_eq!(m.opt("interval0"), Some("40"));
+        // re-wrapping only updates the length
+        let m2 = m.warm_started(80);
+        assert_eq!(m2.name(), "warmstart");
+        assert_eq!(m2.opt("inner"), Some("switchlora"));
+        assert_eq!(m2.opt("warm-steps"), Some("80"));
+    }
+
+    #[test]
+    fn from_args_copies_registered_keys_only() {
+        let args = crate::cli::Args::parse(
+            "pretrain --method switchlora --interval0 9 --ratio 0.2 \
+             --rewarm 33"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let m = from_args(&args).unwrap();
+        assert_eq!(m.opt("interval0"), Some("9"));
+        assert_eq!(m.opt("ratio"), Some("0.2"));
+        assert_eq!(m.opt("rewarm"), None); // not a switchlora key
+        let bad = crate::cli::Args::parse(
+            "pretrain --method bogus".split_whitespace().map(String::from));
+        assert!(from_args(&bad).is_err());
+    }
+}

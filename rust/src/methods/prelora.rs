@@ -1,0 +1,177 @@
+//! PreLoRA-style layerwise full+LoRA hybrid (Thapa et al.): the first
+//! `full_layers` transformer layers train their linears full-rank while
+//! the remaining layers keep frozen bases with LoRA adapters.
+//!
+//! This is the proof that the plugin API generalizes beyond the seed
+//! methods: the hybrid provides its *own manifest* — the lora-variant
+//! layout rewritten so selected linears drop their adapters and become
+//! trainable — and the native backend decides adapter-vs-dense per
+//! linear from that layout, so no trainer or backend special cases are
+//! needed.
+
+use std::collections::HashSet;
+
+use anyhow::{ensure, Result};
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::model::layout::{adam_pad, Layout, Manifest, Role, Variant};
+
+/// Layerwise-hybrid hyper-parameters.
+#[derive(Clone, Debug, Default)]
+pub struct PreLoraParams {
+    /// number of leading layers trained full-rank (the rest are LoRA)
+    pub full_layers: usize,
+}
+
+/// The layerwise hybrid method.  Stateless per step — all the work is in
+/// the rewritten manifest it hands the trainer.
+pub struct PreLora {
+    manifest: Manifest,
+    full_layers: usize,
+    n_dense: usize,
+    n_adapted: usize,
+}
+
+/// Layer index of a parameter/linear named `l<i>.<...>`.
+fn layer_of(name: &str) -> Option<usize> {
+    let rest = name.strip_prefix('l')?;
+    let digits: String =
+        rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.is_empty() || !rest[digits.len()..].starts_with('.') {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Rewrite the manifest's lora-variant layout: linears of layers below
+/// `full_layers` lose their adapters and train their base weights
+/// directly; everything else is unchanged.  The fused-Adam padding is
+/// recomputed for the new trainable count.
+fn hybrid_manifest(man: &Manifest, full_layers: usize) -> Result<Manifest> {
+    let dense: HashSet<&str> = man
+        .linears
+        .iter()
+        .filter(|li| layer_of(&li.name).is_some_and(|l| l < full_layers))
+        .map(|li| li.name.as_str())
+        .collect();
+    let mut metas = Vec::with_capacity(man.lora.params.len());
+    for p in &man.lora.params {
+        let adapter_base = p
+            .name
+            .strip_suffix(".a")
+            .or_else(|| p.name.strip_suffix(".b"));
+        match p.role {
+            Role::LoraA | Role::LoraB
+                if adapter_base.is_some_and(|b| dense.contains(b)) =>
+            {
+                // adapters of a dense layer: dropped from the layout
+            }
+            Role::Base if dense.contains(p.name.as_str()) => {
+                let mut m = p.clone();
+                m.trainable = true;
+                metas.push(m);
+            }
+            _ => metas.push(p.clone()),
+        }
+    }
+    let lora = Layout::from_metas(metas);
+    ensure!(lora.n_trainable > 0, "hybrid layout has no trainable params");
+    Ok(Manifest {
+        adam_padded_lora: adam_pad(lora.n_trainable),
+        lora,
+        ..man.clone()
+    })
+}
+
+impl TrainingMethod for PreLora {
+    fn name(&self) -> &str {
+        "prelora"
+    }
+
+    fn variant(&self) -> Variant {
+        // the hybrid layout lives in the manifest's lora slot
+        Variant::Lora
+    }
+
+    fn default_lr(&self) -> f32 {
+        // full-rank layers dominate the trainable mass; use the
+        // full-rank lr for stability
+        1e-3
+    }
+
+    fn manifest(&self) -> Option<&Manifest> {
+        Some(&self.manifest)
+    }
+
+    fn counters(&self) -> Vec<(String, u64)> {
+        vec![
+            ("full_layers".into(), self.full_layers as u64),
+            ("dense_linears".into(), self.n_dense as u64),
+            ("adapted_linears".into(), self.n_adapted as u64),
+        ]
+    }
+}
+
+/// Registry factory: parse `full-layers` (default: the first half of the
+/// stack) and rewrite the layout.
+pub(super) fn build(spec: &Method, ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    let layers = ctx.manifest.config.layers;
+    let full_layers =
+        spec.opt_num("full-layers", ((layers + 1) / 2) as u64)? as usize;
+    ensure!(full_layers <= layers,
+            "--full-layers {full_layers} exceeds the model's {layers} \
+             layers");
+    let manifest = hybrid_manifest(ctx.manifest, full_layers)?;
+    let n_dense = manifest
+        .linears
+        .iter()
+        .filter(|li| layer_of(&li.name).is_some_and(|l| l < full_layers))
+        .count();
+    let n_adapted = manifest.linears.len() - n_dense;
+    Ok(Box::new(PreLora { manifest, full_layers, n_dense, n_adapted }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_parse() {
+        assert_eq!(layer_of("l0.wq"), Some(0));
+        assert_eq!(layer_of("l12.w_down"), Some(12));
+        assert_eq!(layer_of("embed"), None);
+        assert_eq!(layer_of("lm_head"), None);
+        assert_eq!(layer_of("final_norm"), None);
+    }
+
+    #[test]
+    fn hybrid_layout_mixes_dense_and_adapted() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let hy = hybrid_manifest(&man, 1).unwrap();
+        // layer 0 linears: dense trainable base, no adapters
+        let w0 = hy.lora.meta("l0.wq").unwrap();
+        assert!(w0.trainable && w0.t_offset.is_some());
+        assert!(hy.lora.meta("l0.wq.a").is_err());
+        // later layers keep frozen base + adapters
+        let last = man.config.layers - 1;
+        let wl = hy.lora.meta(&format!("l{last}.wq")).unwrap();
+        assert!(!wl.trainable);
+        assert!(hy.lora.meta(&format!("l{last}.wq.a")).unwrap().trainable);
+        // trainable mass sits strictly between pure lora and full
+        assert!(hy.lora.n_trainable > man.lora.n_trainable);
+        assert!(hy.lora.n_trainable < man.full.n_trainable);
+        assert_eq!(hy.adam_padded_lora % 8192, 0);
+        assert!(hy.adam_padded_lora >= hy.lora.n_trainable);
+    }
+
+    #[test]
+    fn hybrid_extremes_match_pure_variants() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let all_lora = hybrid_manifest(&man, 0).unwrap();
+        assert_eq!(all_lora.lora.n_trainable, man.lora.n_trainable);
+        let all_full =
+            hybrid_manifest(&man, man.config.layers).unwrap();
+        assert_eq!(all_full.lora.n_trainable, man.full.n_trainable);
+    }
+}

@@ -1,0 +1,103 @@
+//! ReLoRA as a [`TrainingMethod`] plugin (Lialin et al. 2023): periodic
+//! merge-and-reset of every adapter plus a local learning-rate re-warm —
+//! the restart-scheduled contrast arm to SwitchLoRA's smooth switching.
+
+use anyhow::Result;
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::model::layout::{LinearMeta, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::schedule::LrSchedule;
+use crate::switchlora::relora::ReLora;
+use crate::util::bytes::{put_u64, ByteReader};
+use crate::util::rng::Rng;
+
+/// ReLoRA hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct ReLoraParams {
+    /// steps between merge-and-reset events
+    pub reset_interval: u64,
+    /// lr re-warm length after each reset (ReLoRA's scheduler quirk)
+    pub rewarm: u64,
+}
+
+impl Default for ReLoraParams {
+    fn default() -> Self {
+        ReLoraParams { reset_interval: 500, rewarm: 50 }
+    }
+}
+
+/// The ReLoRA method: the resetter plus the layer/scale context the
+/// reset needs.
+pub struct ReLoraMethod {
+    rl: ReLora,
+    linears: Vec<LinearMeta>,
+    rank: usize,
+    scale: f32,
+}
+
+impl TrainingMethod for ReLoraMethod {
+    fn name(&self) -> &str {
+        "relora"
+    }
+
+    fn variant(&self) -> Variant {
+        Variant::Lora
+    }
+
+    fn default_lr(&self) -> f32 {
+        1e-2
+    }
+
+    fn lr_adjust(&self, step: u64, lr: f32, sched: &LrSchedule) -> f32 {
+        if self.rl.n_resets > 0 {
+            sched.with_restart(step, self.rl.last_reset, self.rl.rewarm)
+        } else {
+            lr
+        }
+    }
+
+    fn post_step(&mut self, step: u64, store: &mut ParamStore,
+                 opt: &mut AdamState, rng: &mut Rng) -> Result<()> {
+        if self.rl.due(step) {
+            let n = self.rl.reset(step, store, opt, &self.linears,
+                                  self.rank, self.scale, rng);
+            crate::info!("step {step}: ReLoRA reset {n} adapters");
+        }
+        Ok(())
+    }
+
+    fn counters(&self) -> Vec<(String, u64)> {
+        vec![("resets".into(), self.rl.n_resets)]
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<()> {
+        put_u64(out, self.rl.last_reset);
+        put_u64(out, self.rl.n_resets);
+        Ok(())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.rl.last_reset = r.u64()?;
+        self.rl.n_resets = r.u64()?;
+        r.finish()
+    }
+}
+
+/// Registry factory: parse `reset-interval` / `rewarm` options.
+pub(super) fn build(spec: &Method, ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    let d = ReLoraParams::default();
+    let p = ReLoraParams {
+        reset_interval: spec.opt_num("reset-interval", d.reset_interval)?,
+        rewarm: spec.opt_num("rewarm", d.rewarm)?,
+    };
+    let mc = &ctx.manifest.config;
+    Ok(Box::new(ReLoraMethod {
+        rl: ReLora::new(p.reset_interval, p.rewarm),
+        linears: ctx.manifest.linears.clone(),
+        rank: mc.rank,
+        scale: mc.lora_scale() as f32,
+    }))
+}

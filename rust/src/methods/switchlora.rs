@@ -1,0 +1,109 @@
+//! SwitchLoRA as a [`TrainingMethod`] plugin: the paper's Algorithms 1+2
+//! (candidate switching with counterpart optimizer-state resets and
+//! freeze windows), driven entirely through the trait hooks —
+//! `grad_mask` applies the freeze mask, `post_step` runs the switching,
+//! and `save_state`/`load_state` make a run resumable mid-schedule with
+//! its freeze timers, candidate pools and switch RNG intact.
+
+use anyhow::Result;
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::model::layout::{LinearMeta, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::switchlora::schedule::SwitchSchedule;
+use crate::switchlora::switcher::SwitchLora;
+use crate::util::bytes::ByteReader;
+use crate::util::rng::Rng;
+
+/// SwitchLoRA hyper-parameters (paper Section 4.1 defaults).
+#[derive(Clone, Debug)]
+pub struct SwitchParams {
+    /// initial switching interval (paper: 40)
+    pub interval0: f64,
+    /// fraction of total steps at which frequency reaches 1/3 (paper: 0.1)
+    pub ratio: f64,
+    /// freeze length N after a switch (paper: 5)
+    pub n_freeze: u64,
+}
+
+impl Default for SwitchParams {
+    fn default() -> Self {
+        SwitchParams { interval0: 40.0, ratio: 0.1, n_freeze: 5 }
+    }
+}
+
+/// The SwitchLoRA method: owns the switch machinery and the linear list
+/// it operates on.
+pub struct SwitchLoraMethod {
+    sl: SwitchLora,
+    linears: Vec<LinearMeta>,
+}
+
+impl TrainingMethod for SwitchLoraMethod {
+    fn name(&self) -> &str {
+        "switchlora"
+    }
+
+    fn variant(&self) -> Variant {
+        Variant::Lora
+    }
+
+    fn default_lr(&self) -> f32 {
+        // paper Section 4.1
+        2e-2
+    }
+
+    fn grad_mask(&mut self, step: u64, mask: &mut [f32]) {
+        self.sl.freeze.apply(step, mask);
+    }
+
+    fn post_step(&mut self, step: u64, store: &mut ParamStore,
+                 opt: &mut AdamState, _rng: &mut Rng) -> Result<()> {
+        self.sl.apply_step(step, store, opt, &self.linears);
+        Ok(())
+    }
+
+    fn counters(&self) -> Vec<(String, u64)> {
+        vec![
+            ("switches".into(), self.sl.total_switches),
+            ("offload_bytes".into(), self.sl.ledger.total_bytes()),
+            ("pool_resident_bytes".into(), self.sl.resident_bytes()),
+        ]
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<()> {
+        self.sl.save_state(out);
+        Ok(())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        self.sl.load_state(&mut r)?;
+        r.finish()
+    }
+}
+
+/// Registry factory: parse `interval0` / `ratio` / `nfreeze` options and
+/// build the switch machinery for the manifest's linears.
+pub(super) fn build(spec: &Method, ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    let d = SwitchParams::default();
+    let p = SwitchParams {
+        interval0: spec.opt_num("interval0", d.interval0)?,
+        ratio: spec.opt_num("ratio", d.ratio)?,
+        n_freeze: spec.opt_num("nfreeze", d.n_freeze)?,
+    };
+    let mc = &ctx.manifest.config;
+    let sl = SwitchLora::new(
+        &ctx.manifest.linears,
+        mc.rank,
+        mc.lora_scale() as f32,
+        SwitchSchedule::with_third_at(p.interval0, p.ratio, ctx.steps),
+        p.n_freeze,
+        ctx.seed,
+    );
+    Ok(Box::new(SwitchLoraMethod {
+        sl,
+        linears: ctx.manifest.linears.clone(),
+    }))
+}

@@ -1,0 +1,135 @@
+//! Composable full-rank warm start (the paper's Figure 4 protocol):
+//! wrap any low-rank method in a short full-rank pre-phase whose weights
+//! are transplanted into the wrapped method's store before step 0.
+//!
+//! This replaces the old recursive `full_warm_start` special case inside
+//! the trainer: the wrapper is itself a [`TrainingMethod`] that runs the
+//! warm phase in [`TrainingMethod::pre_run`] and delegates every other
+//! hook to the inner method, so `--full-warmup` composes with *any*
+//! registered method (and resumed runs skip the warm phase entirely —
+//! the checkpoint already contains warm-started weights).
+
+use anyhow::{bail, Result};
+
+use super::{Method, MethodCtx, TrainingMethod};
+use crate::coordinator::trainer::{TrainConfig, Trainer};
+use crate::model::init::copy_shared;
+use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::optim::adam::AdamState;
+use crate::optim::schedule::LrSchedule;
+use crate::optim::AdamHyper;
+use crate::runtime::{Engine, ModelRuntime};
+use crate::util::rng::Rng;
+
+/// Inner method used when `--method warmstart` gives no `--inner`.
+pub const DEFAULT_INNER: &str = "lora";
+
+/// Warm-start wrapper: `steps` of full-rank training, then the inner
+/// method takes over on the transplanted weights.
+pub struct WarmStart {
+    inner: Box<dyn TrainingMethod>,
+    steps: u64,
+    label: String,
+}
+
+impl TrainingMethod for WarmStart {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn variant(&self) -> Variant {
+        self.inner.variant()
+    }
+
+    fn default_lr(&self) -> f32 {
+        self.inner.default_lr()
+    }
+
+    fn manifest(&self) -> Option<&Manifest> {
+        self.inner.manifest()
+    }
+
+    fn pre_run(&mut self, cfg: &TrainConfig, manifest: &Manifest,
+               engine: &mut Engine, store: &mut ParamStore)
+        -> Result<()> {
+        if self.steps == 0 || self.inner.variant() != Variant::Lora {
+            // full-variant methods are already full-rank; nothing to warm
+            return Ok(());
+        }
+        let mut sub = cfg.clone();
+        sub.method = Method::full();
+        sub.steps = self.steps;
+        sub.full_warmup_steps = 0;
+        sub.peak_lr = 0.0; // 0 => the full method's default lr
+        sub.metrics_csv = None;
+        sub.eval_every = self.steps; // single eval at the end
+        sub.ckpt_every = 0;
+        sub.ckpt_path = None;
+        sub.resume = None;
+        let t = Trainer { cfg: sub, manifest: manifest.clone() };
+        let (_, warm) = t.run(engine)?;
+        let copied = copy_shared(&warm, store);
+        crate::info!("full-rank warm start: {} steps, {} params carried",
+                     self.steps, copied);
+        self.inner.pre_run(cfg, manifest, engine, store)
+    }
+
+    fn lr_adjust(&self, step: u64, lr: f32, sched: &LrSchedule) -> f32 {
+        self.inner.lr_adjust(step, lr, sched)
+    }
+
+    fn grad_mask(&mut self, step: u64, mask: &mut [f32]) {
+        self.inner.grad_mask(step, mask);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn optim_step(&mut self, step: u64, rt: &ModelRuntime,
+                  store: &mut ParamStore, grad: &[f32],
+                  opt: &mut AdamState, base_mask: &[f32],
+                  hyper: &AdamHyper) -> Result<()> {
+        self.inner
+            .optim_step(step, rt, store, grad, opt, base_mask, hyper)
+    }
+
+    fn post_step(&mut self, step: u64, store: &mut ParamStore,
+                 opt: &mut AdamState, rng: &mut Rng) -> Result<()> {
+        self.inner.post_step(step, store, opt, rng)
+    }
+
+    fn counters(&self) -> Vec<(String, u64)> {
+        let mut c = self.inner.counters();
+        c.push(("warm_steps".into(), self.steps));
+        c
+    }
+
+    fn save_state(&self, out: &mut Vec<u8>) -> Result<()> {
+        self.inner.save_state(out)
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.inner.load_state(bytes)
+    }
+
+    fn state_version(&self) -> u32 {
+        self.inner.state_version()
+    }
+}
+
+/// Registry factory: build the inner method from the same option map
+/// (minus the wrapper's own `inner` / `warm-steps` keys).
+pub(super) fn build(spec: &Method, ctx: &MethodCtx)
+    -> Result<Box<dyn TrainingMethod>> {
+    let inner_name =
+        spec.opt("inner").unwrap_or(DEFAULT_INNER).to_string();
+    if inner_name == "warmstart" {
+        bail!("warmstart cannot wrap itself");
+    }
+    let mut inner_spec = spec.clone();
+    inner_spec.name = inner_name;
+    inner_spec.opts.remove("inner");
+    inner_spec.opts.remove("warm-steps");
+    let inner = super::build(&inner_spec, ctx)?;
+    let steps = spec.opt_num("warm-steps", 100u64)?;
+    let label = format!("warmstart+{}", inner.name());
+    Ok(Box::new(WarmStart { inner, steps, label }))
+}

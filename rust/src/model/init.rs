@@ -2,8 +2,8 @@
 //!
 //! * `SwitchLora` — the paper's init: both A and B (and every candidate
 //!   vector) drawn uniform with std from Eq. (3):
-//!     std[B] = (r/√(mn))^(1/4) · gain^(1/2)
-//!     std[A] = (√(mr)/(n√n))^(1/4) · gain^(1/2)
+//!   `std[B] = (r/√(mn))^(1/4) · gain^(1/2)` and
+//!   `std[A] = (√(mr)/(n√n))^(1/4) · gain^(1/2)`
 //! * `LoraDefault` — Hu et al. 2022: A Kaiming-uniform, B = 0 (the Figure 9
 //!   ablation baseline).
 //!

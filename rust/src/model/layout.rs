@@ -196,8 +196,9 @@ pub struct Manifest {
 /// BLOCK = 8192).  Must match exactly: a builtin manifest and an on-disk
 /// one for the same spec have to agree on buffer sizes, or optimizer
 /// state checkpointed under one fails `adam_step`'s padding check under
-/// the other.
-fn adam_pad(n: usize) -> usize {
+/// the other.  Public so methods that rewrite layouts (the layerwise
+/// hybrid) can recompute the padding for their trainable count.
+pub fn adam_pad(n: usize) -> usize {
     n.div_ceil(8192) * 8192
 }
 

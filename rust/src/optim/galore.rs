@@ -17,10 +17,32 @@ use crate::tensor::linalg::svd;
 use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
 
+/// Serialize one Adam state (moments + step counts).
+fn put_adam(out: &mut Vec<u8>, st: &AdamState) {
+    crate::util::bytes::put_f32s(out, &st.m);
+    crate::util::bytes::put_f32s(out, &st.v);
+    crate::util::bytes::put_f32s(out, &st.s);
+}
+
+/// Restore an Adam state of the exact same size.
+fn get_adam(r: &mut crate::util::bytes::ByteReader, st: &mut AdamState)
+    -> anyhow::Result<()> {
+    let m = r.f32s()?;
+    let v = r.f32s()?;
+    let s = r.f32s()?;
+    anyhow::ensure!(m.len() == st.m.len() && v.len() == st.v.len()
+                        && s.len() == st.s.len(),
+                    "optimizer-moment length mismatch: {} vs {}",
+                    m.len(), st.m.len());
+    st.m = m;
+    st.v = v;
+    st.s = s;
+    Ok(())
+}
+
 /// Projection state for one matrix parameter.
 struct MatState {
-    /// parameter name (for debugging)
-    #[allow(dead_code)]
+    /// parameter name (for state-restore diagnostics)
     name: String,
     /// t_offset of the parameter in the packed trainable vector
     t_offset: usize,
@@ -92,6 +114,53 @@ impl Galore {
             .filter(|&&x| x == 1.0)
             .count();
         proj + dense
+    }
+
+    /// Serialize the dynamic state — per-matrix projections and Adam
+    /// moments plus the dense moments — for checkpoint/resume.
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::*;
+        put_adam(out, &self.dense);
+        put_u64(out, self.mats.len() as u64);
+        for ms in &self.mats {
+            match &ms.p {
+                Some(p) => {
+                    put_u8(out, 1);
+                    put_u64(out, p.rows as u64);
+                    put_u64(out, p.cols as u64);
+                    put_f32s(out, &p.data);
+                }
+                None => put_u8(out, 0),
+            }
+            put_adam(out, &ms.adam);
+        }
+    }
+
+    /// Restore state written by [`Self::save_state`] into a freshly
+    /// constructed instance of the same configuration.
+    pub fn load_state(&mut self, r: &mut crate::util::bytes::ByteReader)
+        -> anyhow::Result<()> {
+        use anyhow::ensure;
+        get_adam(r, &mut self.dense)?;
+        let n = r.u64()? as usize;
+        ensure!(n == self.mats.len(),
+                "galore state has {n} projected matrices, model has {}",
+                self.mats.len());
+        for ms in self.mats.iter_mut() {
+            ms.p = if r.u8()? == 1 {
+                let rows = r.u64()? as usize;
+                let cols = r.u64()? as usize;
+                let data = r.f32s()?;
+                ensure!(data.len() == rows * cols,
+                        "galore projection for {}: {} elements vs shape \
+                         {rows}x{cols}", ms.name, data.len());
+                Some(Tensor::from_vec(rows, cols, data))
+            } else {
+                None
+            };
+            get_adam(r, &mut ms.adam)?;
+        }
+        Ok(())
     }
 
     /// One optimizer step: `params` and `grads` are packed trainable

@@ -490,7 +490,6 @@ pub struct NativeModel {
     pub manifest: Manifest,
     pub variant: Variant,
     pub padded: usize,
-    lora: bool,
 }
 
 impl NativeModel {
@@ -509,18 +508,21 @@ impl NativeModel {
         }
         layout.meta(if variant == Variant::Cls { "cls_head" }
                     else { "lm_head" })?;
-        Ok(NativeModel {
-            lora: variant == Variant::Lora,
-            manifest,
-            variant,
-            padded,
-        })
+        Ok(NativeModel { manifest, variant, padded })
     }
 
     fn layout(&self) -> &Layout {
         self.manifest
             .layout(self.variant)
             .expect("variant validated in new()")
+    }
+
+    /// Whether linear `name` carries LoRA adapters, decided *per linear*
+    /// from the layout rather than globally from the variant: the pure
+    /// lora layout adapts every linear, full/cls none, and hybrid
+    /// layouts (layerwise full+LoRA methods) mix both in one model.
+    fn adapted(&self, name: &str) -> bool {
+        self.layout().by_name.contains_key(&format!("{name}.a"))
     }
 
     /// Forward through the decoder stack.  Returns
@@ -601,7 +603,7 @@ impl NativeModel {
         -> Result<(Vec<f32>, Vec<f32>)> {
         let (name, m, n_in) = self.lin_dims(li, lin_idx);
         let w = store.slice(&name)?;
-        if self.lora {
+        if self.adapted(&name) {
             let a = store.slice(&format!("{name}.a"))?;
             let bb = store.slice(&format!("{name}.b"))?;
             let r = self.manifest.config.rank;
@@ -633,7 +635,7 @@ impl NativeModel {
         let (name, m, n_in) = self.lin_dims(li, lin_idx);
         let w = store.slice(&name)?;
         let layout = self.layout();
-        if self.lora {
+        if self.adapted(&name) {
             let a = store.slice(&format!("{name}.a"))?;
             let bb = store.slice(&format!("{name}.b"))?;
             let r = self.manifest.config.rank;

@@ -31,6 +31,23 @@ impl FreezeManager {
         self.entries.len()
     }
 
+    /// Snapshot the live freeze windows as `(expire_step, span)` pairs
+    /// (checkpoint/resume).
+    pub fn snapshot(&self) -> Vec<(u64, Span)> {
+        self.entries
+            .iter()
+            .map(|e| (e.expire_step, e.span))
+            .collect()
+    }
+
+    /// Replace the live windows with a snapshot from [`Self::snapshot`].
+    pub fn restore(&mut self, entries: Vec<(u64, Span)>) {
+        self.entries = entries
+            .into_iter()
+            .map(|(expire_step, span)| Entry { expire_step, span })
+            .collect();
+    }
+
     /// Write the freeze mask for `step`: `mask` must come in as the base
     /// mask (normally all ones over live elements, zeros over padding);
     /// active freezes zero their spans.  Expired entries are pruned.

@@ -100,6 +100,76 @@ impl SwitchLora {
         self.cands.iter().map(|c| c.resident_bytes()).sum()
     }
 
+    /// Serialize the dynamic state — switch RNG, freeze windows, candidate
+    /// pools and cursors, counters — so a run resumes mid-schedule exactly
+    /// (the static configuration is rebuilt from the training config).
+    pub fn save_state(&self, out: &mut Vec<u8>) {
+        use crate::util::bytes::*;
+        put_u64(out, self.total_switches);
+        put_u64(out, self.ledger.bytes_to_gpu);
+        put_u64(out, self.ledger.bytes_to_cpu);
+        put_u64(out, self.ledger.swaps);
+        put_rng(out, &self.rng.state());
+        let frz = self.freeze.snapshot();
+        put_u64(out, frz.len() as u64);
+        for (expire, span) in frz {
+            put_u64(out, expire);
+            put_u64(out, span.offset as u64);
+            put_u64(out, span.stride as u64);
+            put_u64(out, span.count as u64);
+        }
+        put_u64(out, self.cands.len() as u64);
+        for c in &self.cands {
+            put_u64(out, c.next_b as u64);
+            put_u64(out, c.next_a as u64);
+            put_f32s(out, &c.cb.data);
+            put_f32s(out, &c.ca.data);
+        }
+    }
+
+    /// Restore state written by [`Self::save_state`].  The receiver must
+    /// have been freshly constructed with the same model configuration;
+    /// mismatched pool shapes are rejected.
+    pub fn load_state(&mut self, r: &mut crate::util::bytes::ByteReader)
+        -> anyhow::Result<()> {
+        use anyhow::ensure;
+        self.total_switches = r.u64()?;
+        self.ledger.bytes_to_gpu = r.u64()?;
+        self.ledger.bytes_to_cpu = r.u64()?;
+        self.ledger.swaps = r.u64()?;
+        self.rng = Rng::from_state(r.rng()?);
+        let n_frz = r.u64()? as usize;
+        let mut frz = Vec::with_capacity(n_frz);
+        for _ in 0..n_frz {
+            let expire = r.u64()?;
+            let span = Span {
+                offset: r.u64()? as usize,
+                stride: r.u64()? as usize,
+                count: r.u64()? as usize,
+            };
+            frz.push((expire, span));
+        }
+        self.freeze.restore(frz);
+        let n_cands = r.u64()? as usize;
+        ensure!(n_cands == self.cands.len(),
+                "switchlora state has {n_cands} candidate pools, model \
+                 has {}", self.cands.len());
+        for c in self.cands.iter_mut() {
+            c.next_b = r.u64()? as usize;
+            c.next_a = r.u64()? as usize;
+            let cb = r.f32s()?;
+            let ca = r.f32s()?;
+            ensure!(cb.len() == c.cb.data.len()
+                        && ca.len() == c.ca.data.len(),
+                    "switchlora candidate pool shape mismatch \
+                     ({}/{} vs {}/{})", cb.len(), ca.len(),
+                    c.cb.data.len(), c.ca.data.len());
+            c.cb.data.copy_from_slice(&cb);
+            c.ca.data.copy_from_slice(&ca);
+        }
+        Ok(())
+    }
+
     /// Algorithm 2 for one step (call *after* the optimizer update of
     /// `step`): for every linear, switch `switch_num` B-columns and
     /// `switch_num` A-rows against their pools.
@@ -357,6 +427,34 @@ mod tests {
         assert!(sl.total_switches >= 5 * 2, "{}", sl.total_switches);
         assert_eq!(sl.ledger.swaps, sl.total_switches);
         assert!(sl.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn state_roundtrip_continues_identically() {
+        // save mid-run, load into a fresh same-config instance, and the
+        // two must produce bitwise-identical switching from there on
+        let (mut store, linears, mut opt) = setup();
+        let sched = SwitchSchedule::new(2.0, 0.0);
+        let mut sl = SwitchLora::new(&linears, R, 1.0, sched.clone(), 5, 7);
+        for step in 0..4 {
+            sl.apply_step(step, &mut store, &mut opt, &linears);
+        }
+        let mut blob = Vec::new();
+        sl.save_state(&mut blob);
+        let mut sl2 = SwitchLora::new(&linears, R, 1.0, sched, 5, 7);
+        let mut r = crate::util::bytes::ByteReader::new(&blob);
+        sl2.load_state(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(sl2.total_switches, sl.total_switches);
+        let mut store2 = store.clone();
+        let mut opt2 = opt.clone();
+        for step in 4..10 {
+            sl.apply_step(step, &mut store, &mut opt, &linears);
+            sl2.apply_step(step, &mut store2, &mut opt2, &linears);
+        }
+        assert_eq!(store.data, store2.data);
+        assert_eq!(opt.m, opt2.m);
+        assert_eq!(sl.total_switches, sl2.total_switches);
     }
 
     #[test]

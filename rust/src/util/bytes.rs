@@ -1,0 +1,234 @@
+//! Little-endian byte (de)serialization helpers for resumable state.
+//!
+//! Method state (`TrainingMethod::save_state`) and the trainer's own
+//! resume section are packed into flat byte payloads embedded in the
+//! checkpoint file.  These helpers keep every payload in one dialect:
+//! length-prefixed arrays/strings, fixed-width little-endian scalars,
+//! and a cursor-style reader that errors (instead of panicking) on
+//! truncated input so a corrupt checkpoint surfaces as a clean error.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::rng::RngState;
+
+/// Append a `u8`.
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+/// Append a little-endian `u32`.
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `f64`.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed `f32` array.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Append a full RNG snapshot (the one encoding every resumable
+/// component shares: four state words + the optional Box-Muller spare).
+pub fn put_rng(out: &mut Vec<u8>, st: &RngState) {
+    for w in st.s {
+        put_u64(out, w);
+    }
+    match st.spare_normal {
+        Some(z) => {
+            put_u8(out, 1);
+            put_f64(out, z);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+/// Cursor over a byte payload; every read is bounds-checked.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Start reading `buf` from the beginning.
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // checked: a corrupt length prefix must error, never wrap
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow!("truncated state payload: wanted {n} bytes at \
+                         offset {}, have {}", self.pos,
+                        self.buf.len() - self.pos)
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Read a `u8`.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    /// Read a little-endian `f64`.
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.take(8)?;
+        Ok(f64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    /// Read a length-prefixed `f32` array.
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let nbytes = n.checked_mul(4).ok_or_else(|| {
+            anyhow!("corrupt f32-array length {n} in state payload")
+        })?;
+        let b = self.take(nbytes)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Read a length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.u64()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).context("non-utf8 string in state")
+    }
+
+    /// Read an RNG snapshot written by [`put_rng`].
+    pub fn rng(&mut self) -> Result<RngState> {
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = self.u64()?;
+        }
+        let spare_normal = if self.u8()? == 1 {
+            Some(self.f64()?)
+        } else {
+            None
+        };
+        Ok(RngState { s, spare_normal })
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the whole payload was consumed (trailing garbage means a
+    /// version mismatch the length prefix didn't catch).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("state payload has {} unread trailing bytes",
+                  self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut out = Vec::new();
+        put_u8(&mut out, 7);
+        put_u32(&mut out, 0xDEAD);
+        put_u64(&mut out, u64::MAX - 3);
+        put_f64(&mut out, -0.5);
+        put_f32s(&mut out, &[1.0, -2.5, 3.25]);
+        put_str(&mut out, "switchlora");
+        let mut r = ByteReader::new(&out);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xDEAD);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f64().unwrap(), -0.5);
+        assert_eq!(r.f32s().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(r.str().unwrap(), "switchlora");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_errors_cleanly() {
+        let mut out = Vec::new();
+        put_u64(&mut out, 100); // claims a 100-element array follows
+        let mut r = ByteReader::new(&out);
+        assert!(r.f32s().is_err());
+    }
+
+    #[test]
+    fn corrupt_length_prefixes_error_not_wrap() {
+        // a near-usize::MAX length must error, not overflow into a tiny
+        // read (n * 4 wraps) or an out-of-bounds panic (pos + n wraps)
+        let mut out = Vec::new();
+        put_u64(&mut out, u64::MAX - 2);
+        out.extend_from_slice(&[0u8; 16]);
+        let mut r = ByteReader::new(&out);
+        assert!(r.f32s().is_err());
+        let mut out2 = Vec::new();
+        put_u64(&mut out2, u64::MAX - 2);
+        let mut r2 = ByteReader::new(&out2);
+        assert!(r2.str().is_err());
+    }
+
+    #[test]
+    fn rng_state_roundtrip() {
+        use crate::util::rng::RngState;
+        for st in [
+            RngState { s: [1, 2, 3, u64::MAX], spare_normal: Some(0.75) },
+            RngState { s: [9, 8, 7, 6], spare_normal: None },
+        ] {
+            let mut out = Vec::new();
+            put_rng(&mut out, &st);
+            let mut r = ByteReader::new(&out);
+            assert_eq!(r.rng().unwrap(), st);
+            r.finish().unwrap();
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut out = Vec::new();
+        put_u32(&mut out, 1);
+        put_u8(&mut out, 9);
+        let mut r = ByteReader::new(&out);
+        r.u32().unwrap();
+        assert_eq!(r.remaining(), 1);
+        assert!(r.finish().is_err());
+    }
+}

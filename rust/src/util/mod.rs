@@ -1,5 +1,7 @@
-//! Shared utilities: RNG, JSON, logging/timing, property-test harness.
+//! Shared utilities: RNG, JSON, logging/timing, property-test harness,
+//! byte (de)serialization for resumable state.
 
+pub mod bytes;
 pub mod json;
 pub mod logging;
 pub mod prop;

@@ -7,8 +7,8 @@ use std::path::PathBuf;
 
 use switchlora::coordinator::checkpoint;
 use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
-                                       ReLoraParams, SwitchParams,
                                        TrainConfig, Trainer};
+use switchlora::methods::{ReLoraParams, SwitchParams};
 use switchlora::model::layout::{Manifest, Variant};
 use switchlora::runtime::Engine;
 
@@ -29,14 +29,14 @@ fn all_methods_train_and_reduce_loss() {
     let mut engine = Engine::cpu().unwrap();
     let uniform = (256f64).ln();
     for method in [
-        Method::Full,
-        Method::Lora,
-        Method::SwitchLora(SwitchParams { interval0: 10.0, ratio: 0.3,
+        Method::full(),
+        Method::lora(),
+        Method::switchlora(SwitchParams { interval0: 10.0, ratio: 0.3,
                                           n_freeze: 3 }),
-        Method::ReLora(ReLoraParams { reset_interval: 15, rewarm: 5 }),
+        Method::relora(ReLoraParams { reset_interval: 15, rewarm: 5 }),
         Method::parse("galore").unwrap(),
     ] {
-        let name = method.name();
+        let name = method.name().to_string();
         let (res, _) = Trainer::new(quick_cfg(method, 40))
             .unwrap()
             .run(&mut engine)
@@ -53,18 +53,20 @@ fn all_methods_train_and_reduce_loss() {
 fn switchlora_switches_and_ledgers() {
     let mut engine = Engine::cpu().unwrap();
     let cfg = quick_cfg(
-        Method::SwitchLora(SwitchParams { interval0: 8.0, ratio: 0.5,
+        Method::switchlora(SwitchParams { interval0: 8.0, ratio: 0.5,
                                           n_freeze: 2 }),
         20,
     );
     let (res, _) = Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
-    assert!(res.total_switches > 0);
-    assert!(res.offload_bytes > 0);
+    let switches = res.counter("switches");
+    let offload = res.counter("offload_bytes");
+    assert!(switches > 0);
+    assert!(offload > 0);
     // offload accounting: 2 swapped vectors per switch, 2 bytes/elem —
     // bounded by 2 * 2bytes * max(m,n) per switch
     let man = manifest();
     let max_dim = man.linears.iter().map(|l| l.m.max(l.n)).max().unwrap();
-    assert!(res.offload_bytes <= res.total_switches * 2 * 2 * max_dim as u64);
+    assert!(offload <= switches * 2 * 2 * max_dim as u64);
 }
 
 #[test]
@@ -77,8 +79,8 @@ fn data_parallel_traffic_scales_with_trainable() {
             Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
         res
     };
-    let full = run(Method::Full);
-    let lora = run(Method::Lora);
+    let full = run(Method::full());
+    let lora = run(Method::lora());
     assert!(full.comm.bytes > 0 && lora.comm.bytes > 0);
     let ratio = lora.comm.bytes as f64 / full.comm.bytes as f64;
     let want = lora.n_trainable as f64 / full.n_trainable as f64;
@@ -90,7 +92,7 @@ fn data_parallel_traffic_scales_with_trainable() {
 #[test]
 fn checkpoint_roundtrip_preserves_eval() {
     let mut engine = Engine::cpu().unwrap();
-    let cfg = quick_cfg(Method::Lora, 10);
+    let cfg = quick_cfg(Method::lora(), 10);
     let trainer = Trainer::new(cfg).unwrap();
     let (res, store) = trainer.run(&mut engine).unwrap();
     let dir = std::env::temp_dir().join("switchlora_it_ckpt");
@@ -101,9 +103,10 @@ fn checkpoint_roundtrip_preserves_eval() {
     let mut fresh = switchlora::model::layout::ParamStore::zeros(
         std::sync::Arc::new(man.lora.clone()));
     let ck = checkpoint::load(&path).unwrap();
-    let (loaded, missing) = ck.restore_into(&mut fresh);
-    assert_eq!(missing, 0);
-    assert_eq!(loaded, man.lora.params.len());
+    let rep = ck.restore_into(&mut fresh);
+    assert_eq!(rep.missing, 0);
+    assert_eq!(rep.mismatched, 0);
+    assert_eq!(rep.loaded, man.lora.params.len());
     let rt = switchlora::runtime::ModelRuntime::load(
         &mut engine, man.clone(), Variant::Lora).unwrap();
     let set = switchlora::data::dataset::EvalSet::synth(
@@ -119,7 +122,7 @@ fn checkpoint_roundtrip_preserves_eval() {
 fn full_warmup_carries_into_lora_phase() {
     let mut engine = Engine::cpu().unwrap();
     let mut cfg = quick_cfg(
-        Method::SwitchLora(SwitchParams::default()), 15);
+        Method::switchlora(SwitchParams::default()), 15);
     cfg.full_warmup_steps = 10;
     let (res, _) = Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
     assert!(res.final_eval_loss.is_finite());
@@ -132,7 +135,7 @@ fn full_warmup_carries_into_lora_phase() {
 fn finetune_improves_over_chance() {
     let mut engine = Engine::cpu().unwrap();
     // brief pretrain, then fine-tune on the easiest task
-    let (_, store) = Trainer::new(quick_cfg(Method::Lora, 15))
+    let (_, store) = Trainer::new(quick_cfg(Method::lora(), 15))
         .unwrap()
         .run(&mut engine)
         .unwrap();
@@ -150,7 +153,7 @@ fn metrics_csv_is_written() {
     let mut engine = Engine::cpu().unwrap();
     let dir = std::env::temp_dir().join("switchlora_it_csv");
     let path: PathBuf = dir.join("curve.csv");
-    let mut cfg = quick_cfg(Method::Lora, 6);
+    let mut cfg = quick_cfg(Method::lora(), 6);
     cfg.metrics_csv = Some(path.clone());
     Trainer::new(cfg).unwrap().run(&mut engine).unwrap();
     let text = std::fs::read_to_string(&path).unwrap();

@@ -1,0 +1,143 @@
+//! The `TrainingMethod` plugin API end to end: every registered method
+//! trains through the same generic leader loop, the layerwise hybrid
+//! proves the API generalizes past the seed methods, and the warm-start
+//! wrapper composes with arbitrary inner methods.
+
+use switchlora::coordinator::trainer::{Method, TrainConfig, Trainer};
+use switchlora::methods::{self, MethodCtx, PreLoraParams, SwitchParams};
+use switchlora::model::layout::Manifest;
+use switchlora::runtime::Engine;
+
+fn manifest() -> Manifest {
+    Manifest::for_spec(
+        &switchlora::coordinator::trainer::default_artifacts_dir(),
+        "tiny")
+        .unwrap()
+}
+
+fn quick_cfg(method: Method, steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny", method, steps);
+    cfg.eval_every = steps;
+    cfg.eval_batches = 2;
+    cfg.warmup = 5;
+    cfg
+}
+
+#[test]
+fn registry_covers_all_seed_methods_and_hybrids() {
+    let names: Vec<&str> =
+        methods::registry().iter().map(|m| m.name).collect();
+    for want in ["full", "lora", "switchlora", "relora", "galore",
+                 "prelora", "warmstart"] {
+        assert!(names.contains(&want), "{want} missing from registry");
+    }
+    assert!(Method::parse("definitely-not-a-method").is_none());
+}
+
+#[test]
+fn prelora_hybrid_trains_end_to_end() {
+    let mut engine = Engine::cpu().unwrap();
+    let uniform = (256f64).ln();
+    let (res, store) = Trainer::new(quick_cfg(
+        Method::prelora(PreLoraParams { full_layers: 1 }), 40))
+        .unwrap()
+        .run(&mut engine)
+        .unwrap();
+    assert!(res.final_eval_loss.is_finite(), "prelora diverged");
+    assert!(res.final_eval_loss < uniform - 0.2,
+            "prelora eval {} not below uniform", res.final_eval_loss);
+    // hybrid trainable mass sits strictly between pure lora and full
+    let man = manifest();
+    assert!(res.n_trainable > man.lora.n_trainable);
+    assert!(res.n_trainable < man.full.n_trainable);
+    // counters report the layer split (7 linears per layer)
+    assert_eq!(res.counter("full_layers"), 1);
+    assert_eq!(res.counter("dense_linears"), 7);
+    assert_eq!(res.counter("adapted_linears"),
+               (man.linears.len() - 7) as u64);
+    // the store mixes dense trainable linears (no adapters) with
+    // adapted ones (frozen base)
+    assert!(store.layout.meta("l0.wq").unwrap().trainable);
+    assert!(store.layout.meta("l0.wq.a").is_err());
+    let last = man.config.layers - 1;
+    assert!(!store.layout.meta(&format!("l{last}.wq")).unwrap().trainable);
+    assert!(store.layout.meta(&format!("l{last}.wq.a")).is_ok());
+}
+
+#[test]
+fn warmstart_composes_with_any_inner_method() {
+    let mut engine = Engine::cpu().unwrap();
+    // explicit spec: warmstart wrapping switchlora with inner options
+    let method = Method::switchlora(SwitchParams {
+        interval0: 8.0,
+        ratio: 0.5,
+        n_freeze: 2,
+    })
+    .warm_started(6);
+    let (res, _) = Trainer::new(quick_cfg(method, 15))
+        .unwrap()
+        .run(&mut engine)
+        .unwrap();
+    assert!(res.final_eval_loss.is_finite());
+    assert!(res.final_eval_loss < (256f64).ln() - 0.3,
+            "warm-started eval {}", res.final_eval_loss);
+    // the inner method ran (switching happened) and the wrapper
+    // reported its warm phase
+    assert!(res.counter("switches") > 0);
+    assert_eq!(res.counter("warm_steps"), 6);
+}
+
+#[test]
+fn warmstart_parses_from_registry_with_default_inner() {
+    let mut engine = Engine::cpu().unwrap();
+    let method = Method::parse("warmstart").unwrap().with("warm-steps", 5);
+    let (res, _) = Trainer::new(quick_cfg(method, 12))
+        .unwrap()
+        .run(&mut engine)
+        .unwrap();
+    assert!(res.final_eval_loss.is_finite());
+    assert_eq!(res.counter("warm_steps"), 5);
+}
+
+#[test]
+fn default_lrs_follow_the_paper() {
+    let man = manifest();
+    let ctx = MethodCtx { manifest: &man, steps: 100, seed: 0 };
+    let lr = |name: &str| {
+        methods::build(&Method::new(name), &ctx).unwrap().default_lr()
+    };
+    assert_eq!(lr("full"), 1e-3);
+    assert_eq!(lr("lora"), 1e-2);
+    assert_eq!(lr("switchlora"), 2e-2);
+    assert_eq!(lr("relora"), 1e-2);
+    assert_eq!(lr("galore"), 1e-2);
+    // the warm-start wrapper inherits its inner method's lr
+    let ws = methods::build(
+        &Method::switchlora(SwitchParams::default()).warm_started(10),
+        &ctx)
+        .unwrap();
+    assert_eq!(ws.default_lr(), 2e-2);
+    assert_eq!(ws.name(), "warmstart+switchlora");
+}
+
+#[test]
+fn cli_spec_roundtrip_through_registry() {
+    // the CLI path: --method switchlora --interval0 4 --nfreeze 1
+    let args = switchlora::cli::Args::parse(
+        "pretrain --method switchlora --interval0 4 --nfreeze 1"
+            .split_whitespace()
+            .map(String::from),
+    );
+    let spec = methods::from_args(&args).unwrap();
+    let man = manifest();
+    let ctx = MethodCtx { manifest: &man, steps: 50, seed: 0 };
+    let method = methods::build(&spec, &ctx).unwrap();
+    assert_eq!(method.name(), "switchlora");
+    // and it actually trains
+    let mut engine = Engine::cpu().unwrap();
+    let (res, _) = Trainer::new(quick_cfg(spec, 10))
+        .unwrap()
+        .run(&mut engine)
+        .unwrap();
+    assert!(res.counter("switches") > 0);
+}

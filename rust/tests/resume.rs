@@ -1,0 +1,203 @@
+//! Resume-equivalence tests: a run killed at step N and resumed from a
+//! `--ckpt-every` checkpoint must reproduce the uninterrupted run's
+//! losses *step for step* — for the methods with internal cross-step
+//! state (SwitchLoRA's freeze timers / candidate pools / switch RNG,
+//! ReLoRA's reset clock and the leader RNG its re-inits draw from),
+//! this exercises the whole `save_state`/`load_state` surface.
+//!
+//! The trick for testing without actually killing a process: run the
+//! full 2N steps once with `ckpt_every = N` and a `{step}`-templated
+//! checkpoint path (so the step-N snapshot survives), then resume a
+//! second run from that snapshot with the *same* config and compare the
+//! overlapping curve tails exactly.
+
+use std::path::PathBuf;
+
+use switchlora::coordinator::checkpoint::{self, MethodState, TrainerState};
+use switchlora::coordinator::trainer::{Method, RunResult, TrainConfig,
+                                       Trainer};
+use switchlora::methods::{ReLoraParams, SwitchParams};
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::optim::adam::AdamState;
+use switchlora::runtime::Engine;
+use switchlora::util::rng::RngState;
+
+const STEPS: u64 = 16;
+const HALF: u64 = 8;
+
+fn base_cfg(method: Method, dir: &std::path::Path) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny", method, STEPS);
+    cfg.warmup = 4;
+    cfg.eval_every = 4;
+    cfg.eval_batches = 2;
+    cfg.ckpt_every = HALF;
+    cfg.ckpt_path = Some(dir.join("snap_{step}.ckpt"));
+    cfg
+}
+
+fn run(engine: &mut Engine, cfg: TrainConfig) -> (RunResult, ParamStore) {
+    Trainer::new(cfg).unwrap().run(engine).unwrap()
+}
+
+/// Train 2N uninterrupted (checkpointing at N), resume from the step-N
+/// snapshot, and demand bitwise-equal train/eval curves on the tail.
+fn assert_resume_equivalent(method: Method, tag: &str) {
+    let mut engine = Engine::cpu().unwrap();
+    let dir = std::env::temp_dir().join(format!("switchlora_resume_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = base_cfg(method, &dir);
+
+    let (full, full_store) = run(&mut engine, cfg.clone());
+    assert_eq!(full.train_curve.len() as u64, STEPS);
+
+    let mut rcfg = cfg.clone();
+    rcfg.resume = Some(dir.join(format!("snap_{HALF}.ckpt")));
+    rcfg.ckpt_path = Some(dir.join("resnap_{step}.ckpt"));
+    let (res, res_store) = run(&mut engine, rcfg);
+
+    // the resumed run covers exactly the tail
+    assert_eq!(res.train_curve.len() as u64, STEPS - HALF, "{tag}");
+    assert_eq!(res.train_curve.first().unwrap().0, HALF, "{tag}");
+    // per-step EMA losses must match the uninterrupted run bit for bit
+    // (the EMA folds in every post-resume raw loss, so equality here
+    // implies the raw losses match too)
+    for (a, b) in full.train_curve[HALF as usize..]
+        .iter()
+        .zip(&res.train_curve)
+    {
+        assert_eq!(a, b, "{tag}: train curve diverged at step {}", a.0);
+    }
+    // eval losses of the overlap match exactly
+    let full_tail: Vec<_> = full
+        .eval_curve
+        .iter()
+        .filter(|&&(s, _)| s >= HALF)
+        .collect();
+    let res_tail: Vec<_> = res.eval_curve.iter().collect();
+    assert_eq!(full_tail, res_tail, "{tag}: eval curves diverged");
+    assert_eq!(full.final_eval_loss, res.final_eval_loss, "{tag}");
+    // final weights identical
+    assert_eq!(full_store.data, res_store.data, "{tag}: weights diverged");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn switchlora_resume_matches_uninterrupted() {
+    // aggressive switching so plenty of freeze windows and pool swaps
+    // straddle the kill point
+    assert_resume_equivalent(
+        Method::switchlora(SwitchParams {
+            interval0: 2.0,
+            ratio: 0.5,
+            n_freeze: 3,
+        }),
+        "switchlora",
+    );
+}
+
+#[test]
+fn relora_resume_matches_uninterrupted() {
+    // resets at 6 and 12: one before the kill point, one after — the
+    // second draws re-init values from the restored leader RNG
+    assert_resume_equivalent(
+        Method::relora(ReLoraParams { reset_interval: 6, rewarm: 3 }),
+        "relora",
+    );
+}
+
+#[test]
+fn galore_resume_matches_uninterrupted() {
+    // projection refresh at step 6 lands before the kill point, so the
+    // restored run must carry the projection + projected moments over
+    assert_resume_equivalent(
+        Method::parse("galore").unwrap().with("update-freq", 6),
+        "galore",
+    );
+}
+
+#[test]
+fn resume_rejects_wrong_method() {
+    let mut engine = Engine::cpu().unwrap();
+    let dir = std::env::temp_dir().join("switchlora_resume_wrongm");
+    std::fs::remove_dir_all(&dir).ok();
+    let cfg = base_cfg(Method::lora(), &dir);
+    run(&mut engine, cfg.clone());
+    let mut rcfg = base_cfg(
+        Method::switchlora(SwitchParams::default()), &dir);
+    rcfg.resume = Some(dir.join(format!("snap_{HALF}.ckpt")));
+    rcfg.ckpt_every = 0;
+    rcfg.ckpt_path = None;
+    let err = Trainer::new(rcfg)
+        .unwrap()
+        .run(&mut engine)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("lora") && err.contains("switchlora"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_foreign_optimizer_padding() {
+    // a mid-run checkpoint whose fused-Adam buffers were padded for a
+    // different runtime must be refused, not silently scattered
+    let mut engine = Engine::cpu().unwrap();
+    let dir = std::env::temp_dir().join("switchlora_resume_pad");
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::create_dir_all(&dir).unwrap();
+    let man = Manifest::for_spec(
+        &switchlora::coordinator::trainer::default_artifacts_dir(),
+        "tiny")
+        .unwrap();
+    let store = switchlora::model::init::seeded_store(
+        &man, Variant::Lora, 0).unwrap();
+    let bad_opt = AdamState::new(4, 16); // nothing like the real padding
+    let ms = MethodState {
+        name: "lora".into(),
+        version: 1,
+        payload: Vec::new(),
+    };
+    let ts = TrainerState {
+        next_step: 2,
+        rng: RngState { s: [1, 2, 3, 4], spare_normal: None },
+        ema_value: 0.0,
+        ema_primed: false,
+        comm_bytes: 0,
+        comm_rounds: 0,
+    };
+    let path: PathBuf = dir.join("bad.ckpt");
+    checkpoint::save_full(&path, "tiny", &store, Some(&bad_opt),
+                          Some(&ms), Some(&ts))
+        .unwrap();
+    let mut cfg = TrainConfig::new("tiny", Method::lora(), 4);
+    cfg.resume = Some(path);
+    let err = Trainer::new(cfg)
+        .unwrap()
+        .run(&mut engine)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("padd"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn weights_only_checkpoint_resumes_as_warm_init() {
+    // resuming from a plain (v2, sections-absent) weights checkpoint
+    // starts at step 0 with a fresh optimizer — a warm initialization,
+    // not a mid-run continuation
+    let mut engine = Engine::cpu().unwrap();
+    let dir = std::env::temp_dir().join("switchlora_resume_weights");
+    std::fs::remove_dir_all(&dir).ok();
+    let mut cfg = TrainConfig::new("tiny", Method::lora(), 6);
+    cfg.eval_every = 6;
+    cfg.eval_batches = 2;
+    cfg.warmup = 2;
+    let (_, store) = run(&mut engine, cfg.clone());
+    let path = dir.join("weights.ckpt");
+    checkpoint::save(&path, "tiny", &store, None).unwrap();
+    let mut rcfg = cfg.clone();
+    rcfg.resume = Some(path);
+    let (res, _) = run(&mut engine, rcfg);
+    assert_eq!(res.train_curve.len(), 6); // full run, from step 0
+    assert!(res.final_eval_loss.is_finite());
+    std::fs::remove_dir_all(&dir).ok();
+}
