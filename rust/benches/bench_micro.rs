@@ -1,12 +1,15 @@
 //! Micro-benchmarks of the coordinator hot paths (`harness = false`):
 //! switch op, freeze-mask application, ring all-reduce, host vs fused-HLO
-//! Adam, SVD (the GaLore per-refresh cost), and literal marshaling.
+//! Adam, SVD (the GaLore per-refresh cost), literal marshaling, and the
+//! kernel pool's thread-scaling table (1/2/4/8 threads ×
+//! matmul/attention/full training step).
 //!
 //! These are the L3 profile the §Perf iteration worked from.
 
 use switchlora::bench::{bench, bench_budget};
 use switchlora::coordinator::data_parallel::{ring_all_reduce, CommLedger};
 use switchlora::coordinator::trainer::default_artifacts_dir;
+use switchlora::kernels;
 use switchlora::model::init::{init_store, InitMode};
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
 use switchlora::optim::adam::{host_step, AdamState};
@@ -129,6 +132,80 @@ fn bench_exec(engine: &mut Engine) {
     }
 }
 
+/// Thread-scaling table for the shared kernel layer: the same
+/// matmul / attention / full-training-step work at 1/2/4/8 pool threads,
+/// with speedups versus the single-thread row.  Results are bitwise
+/// identical across rows (the determinism suite proves it); only the
+/// wall-clock moves.
+fn bench_thread_scaling(engine: &mut Engine) {
+    println!("\n-- kernel thread scaling (detected parallelism: {}) --",
+             kernels::detected_parallelism());
+    let prev_threads = kernels::threads();
+    let mut rng = Rng::new(11);
+    // matmul: an s1m-shaped linear (rows = batch·seq = 4·256, 512x512)
+    let (rows, kd, m) = (1024usize, 512usize, 512usize);
+    let x: Vec<f32> = (0..rows * kd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let w: Vec<f32> = (0..m * kd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let mut y = vec![0.0f32; rows * m];
+    // attention: s1m-shaped heads (b·nh = 4·4, t = 256, hd = 32)
+    let (bh, t, hd) = (16usize, 256usize, 32usize);
+    let q: Vec<f32> = (0..bh * t * hd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let kk: Vec<f32> = (0..bh * t * hd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let v: Vec<f32> = (0..bh * t * hd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    // full step: one s1m lora fwd+bwd
+    let step_setup = Manifest::for_spec(&default_artifacts_dir(), "s1m")
+        .ok()
+        .and_then(|man| {
+            let layout = std::sync::Arc::new(man.lora.clone());
+            let mut store = ParamStore::zeros(layout);
+            let mut srng = Rng::new(0);
+            init_store(&mut store, &man.linears, man.config.rank,
+                       InitMode::SwitchLora, &mut srng);
+            let mc = man.config.clone();
+            let rt = ModelRuntime::load(engine, man, Variant::Lora).ok()?;
+            let mut it = switchlora::data::dataset::synth_batches(
+                mc.vocab, 1, 0, mc.batch, mc.seq);
+            let b = it.next_batch();
+            Some((rt, store, b))
+        });
+    println!("{:<8} {:>12} {:>7} {:>12} {:>7} {:>12} {:>7}", "threads",
+             "matmul ms", "x", "attn ms", "x", "step ms", "x");
+    let mut base: Option<(f64, f64, f64)> = None;
+    for nt in [1usize, 2, 4, 8] {
+        kernels::set_threads(nt);
+        let rm = bench(&format!("addmm_nt t={nt}"), 2, 15, || {
+            y.fill(0.0);
+            kernels::addmm_nt(&mut y, &x, &w, rows, kd, m);
+        });
+        let ra = bench(&format!("attention t={nt}"), 2, 10, || {
+            let (o, att) =
+                kernels::causal_attention_fwd(&q, &kk, &v, bh, t, hd);
+            std::hint::black_box((o, att));
+        });
+        let rs = match &step_setup {
+            Some((rt, store, b)) => {
+                bench_budget(&format!("fwdbwd t={nt}"), 1500.0, || {
+                    rt.fwdbwd(store, &b.tokens, b.batch, b.seq_plus_1)
+                        .unwrap();
+                })
+                .mean_ms
+            }
+            None => f64::NAN,
+        };
+        let b0 = *base.get_or_insert((rm.mean_ms, ra.mean_ms, rs));
+        println!("{:<8} {:>12.3} {:>7.2} {:>12.3} {:>7.2} {:>12.3} \
+                  {:>7.2}",
+                 nt, rm.mean_ms, b0.0 / rm.mean_ms, ra.mean_ms,
+                 b0.1 / ra.mean_ms, rs, b0.2 / rs);
+    }
+    kernels::set_threads(prev_threads);
+}
+
 fn main() {
     switchlora::util::logging::init();
     let mut engine = Engine::cpu().expect("engine");
@@ -137,5 +214,6 @@ fn main() {
     bench_adam(&mut engine);
     bench_svd();
     bench_exec(&mut engine);
+    bench_thread_scaling(&mut engine);
     println!("\nbench_micro complete");
 }

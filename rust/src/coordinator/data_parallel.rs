@@ -1,4 +1,5 @@
-//! Simulated data-parallel runtime with a real ring all-reduce.
+//! Data-parallel runtime: real per-worker OS threads, real ring
+//! all-reduce, measured bytes.
 //!
 //! The paper's communication claim (Appendix F, the abstract's "54% less
 //! communication") is about data-parallel gradient synchronization, whose
@@ -6,9 +7,15 @@
 //! module makes that measurable: `w` workers each produce a gradient vector
 //! for their shard; `ring_all_reduce` then runs the standard two-phase ring
 //! (reduce-scatter + all-gather) over the actual buffers, counting every
-//! byte that crosses a "link".  On this single-core testbed workers are
-//! interleaved on one thread — the communication *pattern and volume* are
-//! exactly those of the real algorithm, which is the quantity under test.
+//! byte that crosses a "link".
+//!
+//! Workers are no longer interleaved on one thread: the native backend's
+//! `fwdbwd_multi` fans each shard's fwd/bwd onto its own OS thread
+//! (`kernels::scoped_map`, capped by `--threads`) before the all-reduce,
+//! so `--workers W` scales wall-clock.  Per-shard arithmetic is
+//! unchanged and the ring still runs on the leader after all shards
+//! finish, so losses and the byte ledger are bitwise identical to the
+//! interleaved schedule (`rust/tests/determinism_threads.rs` pins this).
 //!
 //! Byte accounting uses bf16-equivalents (2 bytes/element), matching the
 //! paper's bf16 gradient wire format.

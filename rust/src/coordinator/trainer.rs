@@ -6,7 +6,7 @@
 //! method.pre_run                             (warm-start protocols)
 //! for step:                                  (Alg. 2 line 1)
 //!   lr ← method.lr_adjust(schedule(step))
-//!   per-worker fwd+bwd on its shard          (data-parallel sim)
+//!   per-worker fwd+bwd on its shard          (one OS thread per shard)
 //!   ring all-reduce of gradients             (measured comm bytes)
 //!   method.optim_step                        (default: fused AdamW with
 //!                                             the method's freeze mask;
@@ -271,8 +271,9 @@ impl Trainer {
             let hyper = hyper0.with_lr(lr);
 
             // ---- gradients (data-parallel) ----
-            // One batch per worker; parameter literals marshaled once for
-            // all workers (fwdbwd_multi, §Perf L3).
+            // One batch per worker; fwdbwd_multi runs each shard on its
+            // own OS thread (native backend, kernel pool) or shares the
+            // marshaled parameter literals (PJRT, §Perf L3).
             let batches: Vec<_> =
                 workers.iter_mut().map(|w| w.next_batch()).collect();
             let views: Vec<(&[i32], usize, usize)> = batches

@@ -12,11 +12,13 @@
 //! batched decode loop need no padding or masking: attention for
 //! sequence `s` simply sweeps `0..lens[s]`.
 //!
-//! The attention kernel here mirrors `runtime::native::
-//! causal_attention_fwd` operation-for-operation (same dot-product,
-//! max-subtraction and normalization order), so cached decode reproduces
-//! the full re-forward logits bit-for-bit — the property
-//! `rust/tests/inference.rs` pins down.
+//! Attention over the cache runs on the shared kernel layer
+//! ([`crate::kernels::cached_attend`]), which mirrors
+//! `kernels::causal_attention_fwd` operation-for-operation (same
+//! dot-product, max-subtraction and normalization order), so cached
+//! decode reproduces the full re-forward logits bit-for-bit — the
+//! property `rust/tests/inference.rs` pins down — while long-context
+//! prefill chunks parallelize over heads.
 
 /// Key/value cache over `layers × batch` independent sequences.
 pub struct KvCache {
@@ -118,44 +120,14 @@ impl KvCache {
         let (nh, hd, cap) = (self.heads, self.head_dim, self.capacity);
         let base = self.lens[seq];
         assert_eq!(q.len(), nh * t_new * hd, "q chunk shape");
-        let scale = 1.0 / (hd as f32).sqrt();
-        let mut o = vec![0.0f32; nh * t_new * hd];
-        let mut zrow = std::mem::take(&mut self.scratch);
-        zrow.resize(base + t_new, 0.0);
-        for h in 0..nh {
-            let kg = &self.k[layer][self.at(seq, h, 0)..][..cap * hd];
-            let vg = &self.v[layer][self.at(seq, h, 0)..][..cap * hd];
-            for i in 0..t_new {
-                let qi = &q[(h * t_new + i) * hd..(h * t_new + i + 1) * hd];
-                let ctx = base + i + 1;
-                let mut zmax = f32::NEG_INFINITY;
-                for (j, zj) in zrow.iter_mut().take(ctx).enumerate() {
-                    let kj = &kg[j * hd..(j + 1) * hd];
-                    let mut z = 0.0f32;
-                    for (a, b) in qi.iter().zip(kj) {
-                        z += a * b;
-                    }
-                    let z = z * scale;
-                    *zj = z;
-                    zmax = zmax.max(z);
-                }
-                let mut denom = 0.0f32;
-                for zj in zrow.iter_mut().take(ctx) {
-                    *zj = (*zj - zmax).exp();
-                    denom += *zj;
-                }
-                let orow =
-                    &mut o[(h * t_new + i) * hd..(h * t_new + i + 1) * hd];
-                for (j, zj) in zrow.iter().take(ctx).enumerate() {
-                    let p = zj / denom;
-                    let vj = &vg[j * hd..(j + 1) * hd];
-                    for (od, vd) in orow.iter_mut().zip(vj) {
-                        *od += p * vd;
-                    }
-                }
-            }
-        }
-        self.scratch = zrow;
+        // the heads of one sequence are contiguous: [nh, cap, hd]
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let lo = self.at(seq, 0, 0);
+        let kc = &self.k[layer][lo..lo + nh * cap * hd];
+        let vc = &self.v[layer][lo..lo + nh * cap * hd];
+        let o = crate::kernels::cached_attend(q, kc, vc, nh, t_new, base,
+                                              cap, hd, &mut scratch);
+        self.scratch = scratch;
         o
     }
 }

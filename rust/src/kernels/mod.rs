@@ -1,0 +1,695 @@
+//! Shared compute kernels: one cache-blocked, multi-threaded
+//! matmul/attention substrate for the whole system.
+//!
+//! Before this layer existed the tree carried three divergent matmul
+//! copies (`runtime/native.rs::addmm_*`, `tensor/matmul.rs`, and the
+//! attention inner loops) plus a fourth attention loop in the KV cache.
+//! Every consumer now calls through here: the native training fwd/bwd,
+//! KV-cached prefill/decode, GaLore's projection math, the `Tensor`
+//! wrappers, rank analysis and the Jacobi SVD's rotation sweeps — so one
+//! optimization (or one thread pool) reaches all of them.
+//!
+//! **Determinism contract.**  Parallelism only ever partitions *output
+//! rows* across tasks; each output element is computed by exactly one
+//! task with the same inner accumulation order as the serial loop.  No
+//! cross-thread reduction exists anywhere, so every kernel is bitwise
+//! identical at any thread count — threaded training reproduces the
+//! serial loss curves exactly, and the resume guarantees of the
+//! checkpoint subsystem survive unchanged
+//! (`rust/tests/determinism_threads.rs`).
+//!
+//! Thread control: `--threads N` / `SWITCHLORA_THREADS` / detected
+//! parallelism — see [`pool`].  Kernels stay inline below a minimum task
+//! size, so tiny shapes (single-token decode, 2×2 tests) never pay the
+//! dispatch cost.
+
+pub mod pool;
+
+pub use pool::{detected_parallelism, in_serial, serial, set_threads,
+               threads};
+
+/// Minimum useful task size in multiply-adds: below roughly this much
+/// work per task, pool dispatch costs more than it saves, so kernels run
+/// inline.  A threshold never affects results (see the determinism
+/// contract above), only where the work runs.
+const MIN_TASK_WORK: usize = 1 << 14;
+
+/// Raw mutable base pointer that may cross into pool tasks.  Each task
+/// reborrows a *disjoint* row range, which is what makes the aliasing
+/// sound; the `unsafe impl`s only assert that shipping the pointer to
+/// another thread is fine (f32 buffers have no thread affinity).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Reborrow rows `lo..hi` of the row-major `[_, row_len]` buffer.
+    /// The returned lifetime is unbounded by construction; every use
+    /// here keeps it inside one pool task.
+    ///
+    /// SAFETY: the caller must hand every task a disjoint `lo..hi`
+    /// range, and the buffer must outlive the pool job (guaranteed by
+    /// `pool::run` returning only after all tasks finish).
+    unsafe fn rows<'a>(self, lo: usize, hi: usize, row_len: usize)
+        -> &'a mut [f32] {
+        std::slice::from_raw_parts_mut(self.0.add(lo * row_len),
+                                       (hi - lo) * row_len)
+    }
+}
+
+/// Partition `0..rows` into contiguous chunks sized from `work_per_row`
+/// (multiply-adds) and run `f(lo, hi)` per chunk on the pool; small jobs
+/// run as one inline `f(0, rows)` call.  Chunks oversplit ~4× past the
+/// thread count so the pool's atomic index claiming load-balances ragged
+/// work (e.g. causal attention rows).
+fn par_rows(rows: usize, work_per_row: usize,
+            f: impl Fn(usize, usize) + Sync) {
+    if rows == 0 {
+        return;
+    }
+    let nt = pool::threads();
+    if nt <= 1
+        || pool::in_serial()
+        || rows.saturating_mul(work_per_row) < 2 * MIN_TASK_WORK
+    {
+        f(0, rows);
+        return;
+    }
+    let min_rows = MIN_TASK_WORK.div_ceil(work_per_row.max(1)).max(1);
+    let chunks = rows.div_ceil(min_rows).min(4 * nt).max(1);
+    let per = rows.div_ceil(chunks);
+    pool::run(chunks, &|c| {
+        let lo = c * per;
+        let hi = ((c + 1) * per).min(rows);
+        if lo < hi {
+            f(lo, hi);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Matmul family on row-major flat buffers.
+// ---------------------------------------------------------------------
+
+/// `y[rows,m] += x[rows,k] @ w[m,k]ᵀ` — the linear-layer orientation
+/// (`W` stored `[out, in]`).  Parallel over rows of `y`.
+pub fn addmm_nt(y: &mut [f32], x: &[f32], w: &[f32], rows: usize,
+                k: usize, m: usize) {
+    debug_assert_eq!(y.len(), rows * m, "addmm_nt y shape");
+    debug_assert_eq!(x.len(), rows * k, "addmm_nt x shape");
+    debug_assert_eq!(w.len(), m * k, "addmm_nt w shape");
+    let yp = SendPtr(y.as_mut_ptr());
+    par_rows(rows, k * m, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `y`
+        let yc = unsafe { yp.rows(lo, hi, m) };
+        for (i, yr) in yc.chunks_exact_mut(m).enumerate() {
+            let xr = &x[(lo + i) * k..(lo + i + 1) * k];
+            for (o, yo) in yr.iter_mut().enumerate() {
+                let wr = &w[o * k..(o + 1) * k];
+                let mut acc = 0.0f32;
+                for (a, b) in xr.iter().zip(wr) {
+                    acc += a * b;
+                }
+                *yo += acc;
+            }
+        }
+    });
+}
+
+/// `y[rows,k] += x[rows,m] @ w[m,k]` (no transpose).  Parallel over rows
+/// of `y`.
+pub fn addmm_nn(y: &mut [f32], x: &[f32], w: &[f32], rows: usize,
+                m: usize, k: usize) {
+    debug_assert_eq!(y.len(), rows * k, "addmm_nn y shape");
+    debug_assert_eq!(x.len(), rows * m, "addmm_nn x shape");
+    debug_assert_eq!(w.len(), m * k, "addmm_nn w shape");
+    let yp = SendPtr(y.as_mut_ptr());
+    par_rows(rows, m * k, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `y`
+        let yc = unsafe { yp.rows(lo, hi, k) };
+        for (i, yr) in yc.chunks_exact_mut(k).enumerate() {
+            let xr = &x[(lo + i) * m..(lo + i + 1) * m];
+            for (o, &s) in xr.iter().enumerate() {
+                if s == 0.0 {
+                    continue;
+                }
+                let wr = &w[o * k..(o + 1) * k];
+                for (yj, wj) in yr.iter_mut().zip(wr) {
+                    *yj += s * wj;
+                }
+            }
+        }
+    });
+}
+
+/// `wg[m,k] += dy[rows,m]ᵀ @ x[rows,k]` — weight-gradient accumulation.
+/// Parallel over rows of `wg` (the `m` outputs); each element still
+/// accumulates over `i = 0..rows` in ascending order, exactly like the
+/// serial loop.
+pub fn addmm_tn(wg: &mut [f32], dy: &[f32], x: &[f32], rows: usize,
+                m: usize, k: usize) {
+    debug_assert_eq!(wg.len(), m * k, "addmm_tn wg shape");
+    debug_assert_eq!(dy.len(), rows * m, "addmm_tn dy shape");
+    debug_assert_eq!(x.len(), rows * k, "addmm_tn x shape");
+    let wp = SendPtr(wg.as_mut_ptr());
+    par_rows(m, rows * k, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `wg`
+        let wc = unsafe { wp.rows(lo, hi, k) };
+        for i in 0..rows {
+            let dyr = &dy[i * m..(i + 1) * m];
+            let xr = &x[i * k..(i + 1) * k];
+            for o in lo..hi {
+                let s = dyr[o];
+                if s == 0.0 {
+                    continue;
+                }
+                let wr = &mut wc[(o - lo) * k..(o - lo + 1) * k];
+                for (wj, xj) in wr.iter_mut().zip(xr) {
+                    *wj += s * xj;
+                }
+            }
+        }
+    });
+}
+
+/// `c[m,n] += a[m,k] @ b[k,n]`, cache-blocked over `k` with an i-k-j
+/// inner order (streams `b` rows, accumulates into `c` rows).  Parallel
+/// over rows of `c`.
+pub fn matmul_nn(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
+                 n: usize) {
+    debug_assert_eq!(c.len(), m * n, "matmul_nn c shape");
+    debug_assert_eq!(a.len(), m * k, "matmul_nn a shape");
+    debug_assert_eq!(b.len(), k * n, "matmul_nn b shape");
+    const BK: usize = 64;
+    let cp = SendPtr(c.as_mut_ptr());
+    par_rows(m, k * n, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `c`
+        let cc = unsafe { cp.rows(lo, hi, n) };
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for (i, c_row) in cc.chunks_exact_mut(n).enumerate() {
+                let a_row = &a[(lo + i) * k..(lo + i + 1) * k];
+                for kk in k0..k1 {
+                    let aik = a_row[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b[kk * n..(kk + 1) * n];
+                    for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `g[n,n] += a[rows,n]ᵀ @ a[rows,n]` (Gram matrix — the SVD substrate's
+/// workhorse).  Parallel over rows of `g`; per-element accumulation over
+/// the data rows stays in ascending order.
+pub fn gram(g: &mut [f32], a: &[f32], rows: usize, n: usize) {
+    debug_assert_eq!(g.len(), n * n, "gram g shape");
+    debug_assert_eq!(a.len(), rows * n, "gram a shape");
+    let gp = SendPtr(g.as_mut_ptr());
+    par_rows(n, rows * n, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `g`
+        let gc = unsafe { gp.rows(lo, hi, n) };
+        for i in 0..rows {
+            let row = &a[i * n..(i + 1) * n];
+            for p in lo..hi {
+                let rp = row[p];
+                if rp == 0.0 {
+                    continue;
+                }
+                let g_row = &mut gc[(p - lo) * n..(p - lo + 1) * n];
+                for (gq, aq) in g_row.iter_mut().zip(row) {
+                    *gq += rp * aq;
+                }
+            }
+        }
+    });
+}
+
+/// Apply a two-column Jacobi/Givens rotation to columns `p`, `q` of the
+/// row-major `a[rows, cols]` (the inner loop of the one-sided Jacobi
+/// SVD).  Elementwise over rows, so bitwise thread-count independent.
+pub fn rotate_columns(a: &mut [f32], rows: usize, cols: usize, p: usize,
+                      q: usize, c: f64, s: f64) {
+    debug_assert_eq!(a.len(), rows * cols, "rotate_columns shape");
+    debug_assert!(p < cols && q < cols, "rotate_columns column index");
+    let ap = SendPtr(a.as_mut_ptr());
+    par_rows(rows, 8, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `a`
+        let ac = unsafe { ap.rows(lo, hi, cols) };
+        for r in ac.chunks_exact_mut(cols) {
+            let xp = r[p] as f64;
+            let xq = r[q] as f64;
+            r[p] = (c * xp - s * xq) as f32;
+            r[q] = (s * xp + c * xq) as f32;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Attention primitives.
+// ---------------------------------------------------------------------
+
+/// Causal softmax attention over `[bh, t, hd]` q/k/v (q/k already
+/// RoPE-rotated).  Returns `(o, att)` with the probability rows saved
+/// for the backward pass.  Parallel over the `bh·t` query rows; each
+/// row's score/softmax/weighted-sum runs in the serial order.
+pub fn causal_attention_fwd(q: &[f32], k: &[f32], v: &[f32], bh: usize,
+                            t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut o = vec![0.0; bh * t * hd];
+    let mut att = vec![0.0; bh * t * t];
+    let op = SendPtr(o.as_mut_ptr());
+    let ap = SendPtr(att.as_mut_ptr());
+    par_rows(bh * t, t * hd, |lo, hi| {
+        // SAFETY: tasks receive disjoint (group, position) row ranges of
+        // both `o` and `att`
+        let oc = unsafe { op.rows(lo, hi, hd) };
+        let ac = unsafe { ap.rows(lo, hi, t) };
+        for r in lo..hi {
+            let (g, i) = (r / t, r % t);
+            let kg = &k[g * t * hd..(g + 1) * t * hd];
+            let vg = &v[g * t * hd..(g + 1) * t * hd];
+            let qi = &q[r * hd..(r + 1) * hd];
+            let arow = &mut ac[(r - lo) * t..(r - lo + 1) * t];
+            let mut zmax = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let kj = &kg[j * hd..(j + 1) * hd];
+                let mut z = 0.0f32;
+                for d in 0..hd {
+                    z += qi[d] * kj[d];
+                }
+                let z = z * scale;
+                arow[j] = z;
+                zmax = zmax.max(z);
+            }
+            let mut denom = 0.0f32;
+            for aj in arow.iter_mut().take(i + 1) {
+                *aj = (*aj - zmax).exp();
+                denom += *aj;
+            }
+            let orow = &mut oc[(r - lo) * hd..(r - lo + 1) * hd];
+            for j in 0..=i {
+                arow[j] /= denom;
+                let p = arow[j];
+                let vj = &vg[j * hd..(j + 1) * hd];
+                for d in 0..hd {
+                    orow[d] += p * vj[d];
+                }
+            }
+        }
+    });
+    (o, att)
+}
+
+/// Backward of [`causal_attention_fwd`]: returns `(dq, dk, dv)` (dq/dk
+/// still RoPE-rotated — the caller unrotates).  Parallel over the `bh`
+/// groups only: `dk`/`dv` rows accumulate contributions from every query
+/// position of their group, and that sum must keep the serial (ascending
+/// `i`) order to stay bitwise deterministic.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_bwd(dout: &[f32], q: &[f32], k: &[f32],
+                            v: &[f32], att: &[f32], bh: usize, t: usize,
+                            hd: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dq = vec![0.0; bh * t * hd];
+    let mut dk = vec![0.0; bh * t * hd];
+    let mut dv = vec![0.0; bh * t * hd];
+    let dqp = SendPtr(dq.as_mut_ptr());
+    let dkp = SendPtr(dk.as_mut_ptr());
+    let dvp = SendPtr(dv.as_mut_ptr());
+    par_rows(bh, 3 * t * t * hd, |lo, hi| {
+        // SAFETY: tasks receive disjoint group ranges of dq/dk/dv
+        let dqc = unsafe { dqp.rows(lo, hi, t * hd) };
+        let dkc = unsafe { dkp.rows(lo, hi, t * hd) };
+        let dvc = unsafe { dvp.rows(lo, hi, t * hd) };
+        let mut datt = vec![0.0f32; t];
+        for g in lo..hi {
+            let base = g * t * hd;
+            let qg = &q[base..base + t * hd];
+            let kg = &k[base..base + t * hd];
+            let vg = &v[base..base + t * hd];
+            let goff = (g - lo) * t * hd;
+            for i in 0..t {
+                let doi = &dout[base + i * hd..base + (i + 1) * hd];
+                let arow = &att[(g * t + i) * t..(g * t + i + 1) * t];
+                // dV[j] += a_ij·dO_i ; datt_ij = dO_i·v_j
+                let mut row_dot = 0.0f32;
+                for j in 0..=i {
+                    let p = arow[j];
+                    let vj = &vg[j * hd..(j + 1) * hd];
+                    let dvj = &mut dvc[goff + j * hd..goff + (j + 1) * hd];
+                    let mut d = 0.0f32;
+                    for t_ in 0..hd {
+                        dvj[t_] += p * doi[t_];
+                        d += doi[t_] * vj[t_];
+                    }
+                    datt[j] = d;
+                    row_dot += p * d;
+                }
+                // dz = a·(datt − Σ a·datt); dq_i += dz·k_j·s;
+                // dk_j += dz·q_i·s
+                let qi = &qg[i * hd..(i + 1) * hd];
+                for j in 0..=i {
+                    let dz = arow[j] * (datt[j] - row_dot) * scale;
+                    if dz == 0.0 {
+                        continue;
+                    }
+                    let kj = &kg[j * hd..(j + 1) * hd];
+                    let dkj =
+                        &mut dkc[goff + j * hd..goff + (j + 1) * hd];
+                    let dqi =
+                        &mut dqc[goff + i * hd..goff + (i + 1) * hd];
+                    for d in 0..hd {
+                        dqi[d] += dz * kj[d];
+                        dkj[d] += dz * qi[d];
+                    }
+                }
+            }
+        }
+    });
+    (dq, dk, dv)
+}
+
+/// Causal attention of a `[heads, t_new, hd]` query chunk over one
+/// sequence's KV cache (layout `[heads, capacity, hd]`, the per-sequence
+/// slice of a cache layer).  Query row `i` sits at absolute position
+/// `base + i` and attends to cached positions `0..base + i + 1`.
+/// Parallel over heads; `scratch` backs the score row on the serial
+/// path so the single-token decode loop stays allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub fn cached_attend(q: &[f32], kc: &[f32], vc: &[f32], nh: usize,
+                     t_new: usize, base: usize, cap: usize, hd: usize,
+                     scratch: &mut Vec<f32>) -> Vec<f32> {
+    debug_assert_eq!(q.len(), nh * t_new * hd, "cached_attend q shape");
+    debug_assert_eq!(kc.len(), nh * cap * hd, "cached_attend k shape");
+    debug_assert_eq!(vc.len(), nh * cap * hd, "cached_attend v shape");
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut o = vec![0.0f32; nh * t_new * hd];
+    let work_per_head = t_new * (base + t_new) * hd;
+    if nh <= 1
+        || pool::threads() <= 1
+        || pool::in_serial()
+        || nh.saturating_mul(work_per_head) < 2 * MIN_TASK_WORK
+    {
+        scratch.resize(base + t_new, 0.0);
+        attend_heads(&mut o, q, kc, vc, 0, nh, t_new, base, cap, hd,
+                     scale, scratch);
+        return o;
+    }
+    let op = SendPtr(o.as_mut_ptr());
+    par_rows(nh, work_per_head, |lo, hi| {
+        // SAFETY: tasks receive disjoint head ranges of `o`
+        let oc = unsafe { op.rows(lo, hi, t_new * hd) };
+        let mut zrow = vec![0.0f32; base + t_new];
+        attend_heads(oc, q, kc, vc, lo, hi, t_new, base, cap, hd, scale,
+                     &mut zrow);
+    });
+    o
+}
+
+/// Serial body of [`cached_attend`] for heads `lo..hi`, writing into the
+/// head-sliced output `o` (`[hi-lo, t_new, hd]`).  Mirrors
+/// [`causal_attention_fwd`] operation-for-operation (same dot-product,
+/// max-subtraction and normalization order) so cached decode reproduces
+/// the full re-forward logits bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+fn attend_heads(o: &mut [f32], q: &[f32], kc: &[f32], vc: &[f32],
+                lo: usize, hi: usize, t_new: usize, base: usize,
+                cap: usize, hd: usize, scale: f32, zrow: &mut [f32]) {
+    for h in lo..hi {
+        let kg = &kc[h * cap * hd..(h + 1) * cap * hd];
+        let vg = &vc[h * cap * hd..(h + 1) * cap * hd];
+        for i in 0..t_new {
+            let qi = &q[(h * t_new + i) * hd..(h * t_new + i + 1) * hd];
+            let ctx = base + i + 1;
+            let mut zmax = f32::NEG_INFINITY;
+            for (j, zj) in zrow.iter_mut().take(ctx).enumerate() {
+                let kj = &kg[j * hd..(j + 1) * hd];
+                let mut z = 0.0f32;
+                for (a, b) in qi.iter().zip(kj) {
+                    z += a * b;
+                }
+                let z = z * scale;
+                *zj = z;
+                zmax = zmax.max(z);
+            }
+            let mut denom = 0.0f32;
+            for zj in zrow.iter_mut().take(ctx) {
+                *zj = (*zj - zmax).exp();
+                denom += *zj;
+            }
+            let orow = &mut o[((h - lo) * t_new + i) * hd
+                              ..((h - lo) * t_new + i + 1) * hd];
+            for (j, zj) in zrow.iter().take(ctx).enumerate() {
+                let p = zj / denom;
+                let vj = &vg[j * hd..(j + 1) * hd];
+                for (od, vd) in orow.iter_mut().zip(vj) {
+                    *od += p * vd;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard fan-out (data-parallel workers).
+// ---------------------------------------------------------------------
+
+/// Map `f` over `items` with one contiguous chunk per pool thread — the
+/// data-parallel shard fan-out.  Chunks run as tasks on the persistent
+/// pool (no per-call thread spawns on the training hot path), and pool
+/// participants always execute tasks inside a serial scope, so per-item
+/// kernel calls stay inline on their shard's thread instead of
+/// re-entering the pool.  Results come back in input order, and
+/// per-item work is identical to the serial path, so losses/gradients
+/// match the interleaved schedule bitwise.  Falls back to a plain
+/// serial map for one item, one thread, or when already inside a
+/// serial/pool scope.
+pub fn scoped_map<I: Sync, T: Send>(items: &[I],
+                                    f: impl Fn(&I) -> T + Sync)
+    -> Vec<T> {
+    let nt = pool::threads();
+    if items.len() <= 1 || nt <= 1 || pool::in_serial() {
+        return items.iter().map(f).collect();
+    }
+    let n_chunks = nt.min(items.len());
+    // balanced boundaries lo = c·len/n: every chunk non-empty
+    let bound = |c: usize| c * items.len() / n_chunks;
+    let slots: Vec<std::sync::Mutex<Option<Vec<T>>>> =
+        (0..n_chunks).map(|_| std::sync::Mutex::new(None)).collect();
+    pool::run(n_chunks, &|c| {
+        let out: Vec<T> =
+            items[bound(c)..bound(c + 1)].iter().map(&f).collect();
+        *slots[c].lock().unwrap_or_else(|e| e.into_inner()) = Some(out);
+    });
+    slots
+        .into_iter()
+        .flat_map(|m| {
+            m.into_inner()
+                .unwrap_or_else(|e| e.into_inner())
+                .expect("every pool task fills its slot")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 0.8)).collect()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Compute `f` once on the pool (4 threads) and once forced serial;
+    /// the results must be bitwise identical.  Restores the prior
+    /// (CLI/env/detected) thread configuration afterwards.
+    fn assert_thread_invariant<R>(f: impl Fn() -> R, key: impl Fn(&R)
+        -> Vec<u32>) {
+        let _t = pool::TEST_SERIALIZE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let prev = threads();
+        set_threads(4);
+        let par = f();
+        let ser = serial(&f);
+        set_threads(prev);
+        assert_eq!(key(&par), key(&ser),
+                   "threaded result differs from serial");
+    }
+
+    #[test]
+    fn addmm_nt_threaded_matches_serial_bitwise() {
+        let mut rng = Rng::new(1);
+        let (rows, k, m) = (37, 53, 41);
+        let x = randv(rows * k, &mut rng);
+        let w = randv(m * k, &mut rng);
+        let y0 = randv(rows * m, &mut rng);
+        assert_thread_invariant(
+            || {
+                let mut y = y0.clone();
+                addmm_nt(&mut y, &x, &w, rows, k, m);
+                y
+            },
+            |y| bits(y));
+    }
+
+    #[test]
+    fn addmm_nn_and_tn_threaded_match_serial_bitwise() {
+        let mut rng = Rng::new(2);
+        let (rows, m, k) = (33, 47, 29);
+        let x = randv(rows * m, &mut rng);
+        let w = randv(m * k, &mut rng);
+        let dy = randv(rows * m, &mut rng);
+        let xs = randv(rows * k, &mut rng);
+        assert_thread_invariant(
+            || {
+                let mut y = vec![0.0; rows * k];
+                addmm_nn(&mut y, &x, &w, rows, m, k);
+                let mut wg = vec![0.0; m * k];
+                addmm_tn(&mut wg, &dy, &xs, rows, m, k);
+                (y, wg)
+            },
+            |(y, wg)| {
+                let mut b = bits(y);
+                b.extend(bits(wg));
+                b
+            });
+    }
+
+    #[test]
+    fn matmul_nn_matches_naive_and_is_thread_invariant() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (23, 130, 19);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let naive: Vec<f32> = (0..m * n)
+            .map(|idx| {
+                let (i, j) = (idx / n, idx % n);
+                (0..k).map(|kk| a[i * k + kk] * b[kk * n + j])
+                    .sum::<f32>()
+            })
+            .collect();
+        assert_thread_invariant(
+            || {
+                let mut c = vec![0.0; m * n];
+                matmul_nn(&mut c, &a, &b, m, k, n);
+                c
+            },
+            |c| bits(c));
+        let mut c = vec![0.0; m * n];
+        serial(|| matmul_nn(&mut c, &a, &b, m, k, n));
+        for (x, y) in c.iter().zip(&naive) {
+            assert!((x - y).abs() <= 1e-4 + 1e-4 * y.abs(),
+                    "matmul {x} vs naive {y}");
+        }
+    }
+
+    #[test]
+    fn gram_threaded_matches_serial_bitwise() {
+        let mut rng = Rng::new(4);
+        let (rows, n) = (61, 43);
+        let a = randv(rows * n, &mut rng);
+        assert_thread_invariant(
+            || {
+                let mut g = vec![0.0; n * n];
+                gram(&mut g, &a, rows, n);
+                g
+            },
+            |g| bits(g));
+    }
+
+    #[test]
+    fn attention_fwd_bwd_threaded_match_serial_bitwise() {
+        let mut rng = Rng::new(5);
+        let (bh, t, hd) = (6, 33, 8);
+        let q = randv(bh * t * hd, &mut rng);
+        let k = randv(bh * t * hd, &mut rng);
+        let v = randv(bh * t * hd, &mut rng);
+        let dout = randv(bh * t * hd, &mut rng);
+        assert_thread_invariant(
+            || {
+                let (o, att) = causal_attention_fwd(&q, &k, &v, bh, t, hd);
+                let (dq, dk, dv) =
+                    causal_attention_bwd(&dout, &q, &k, &v, &att, bh, t,
+                                         hd);
+                (o, att, dq, dk, dv)
+            },
+            |(o, att, dq, dk, dv)| {
+                let mut b = bits(o);
+                for part in [att, dq, dk, dv] {
+                    b.extend(bits(part));
+                }
+                b
+            });
+    }
+
+    #[test]
+    fn cached_attend_threaded_matches_serial_bitwise() {
+        let mut rng = Rng::new(6);
+        let (nh, t_new, base, cap, hd) = (5, 6, 120, 128, 16);
+        let q = randv(nh * t_new * hd, &mut rng);
+        let kc = randv(nh * cap * hd, &mut rng);
+        let vc = randv(nh * cap * hd, &mut rng);
+        assert_thread_invariant(
+            || {
+                let mut scratch = Vec::new();
+                cached_attend(&q, &kc, &vc, nh, t_new, base, cap, hd,
+                              &mut scratch)
+            },
+            |o| bits(o));
+    }
+
+    #[test]
+    fn rotate_columns_matches_scalar_reference() {
+        let mut rng = Rng::new(7);
+        // large enough that the parallel path engages (8 madds/row)
+        let (rows, cols) = (4501, 6);
+        let a0 = randv(rows * cols, &mut rng);
+        let (c, s) = (0.8f64, 0.6f64);
+        let mut want = a0.clone();
+        for r in want.chunks_exact_mut(cols) {
+            let (xp, xq) = (r[1] as f64, r[4] as f64);
+            r[1] = (c * xp - s * xq) as f32;
+            r[4] = (s * xp + c * xq) as f32;
+        }
+        assert_thread_invariant(
+            || {
+                let mut a = a0.clone();
+                rotate_columns(&mut a, rows, cols, 1, 4, c, s);
+                a
+            },
+            |a| bits(a));
+        let mut a = a0;
+        serial(|| rotate_columns(&mut a, rows, cols, 1, 4, c, s));
+        assert_eq!(bits(&a), bits(&want));
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_and_values() {
+        let items: Vec<usize> = (0..23).collect();
+        let _t = pool::TEST_SERIALIZE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let prev = threads();
+        set_threads(4);
+        let par = scoped_map(&items, |&i| i * i);
+        set_threads(1);
+        let ser = scoped_map(&items, |&i| i * i);
+        set_threads(prev);
+        let want: Vec<usize> = items.iter().map(|&i| i * i).collect();
+        assert_eq!(par, want);
+        assert_eq!(ser, want);
+    }
+}

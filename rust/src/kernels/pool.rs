@@ -1,0 +1,363 @@
+//! Persistent scoped thread pool for the kernel layer — std-only (no
+//! rayon/crossbeam in the offline vendor set).
+//!
+//! One process-global pool backs every threaded kernel.  A job is a
+//! borrowed `Fn(usize)` task closure plus a task count; worker threads
+//! (spawned lazily, up to the configured thread count) claim task
+//! indices from a shared atomic counter, so each index runs on exactly
+//! one thread.  The posting call participates itself and does not return
+//! until every claimed task has finished, which is what makes borrowing
+//! stack data from the closure sound (see the SAFETY notes in [`run`]).
+//!
+//! Thread count resolution, in priority order:
+//! 1. [`set_threads`] (the `--threads N` CLI flag calls this),
+//! 2. the `SWITCHLORA_THREADS` environment variable,
+//! 3. detected hardware parallelism
+//!    ([`std::thread::available_parallelism`]).
+//!
+//! Determinism contract: the pool only *distributes* task indices; it
+//! never splits or reorders the work inside a task.  Kernels built on it
+//! give every output element a single owning task with the same
+//! accumulation order as their serial loop, so results are bitwise
+//! identical for any thread count — the property
+//! `rust/tests/determinism_threads.rs` pins down.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+/// Hard cap on the pool size (sanity bound for `--threads`; oversplitting
+/// past this many OS threads never helps the kernels here).
+pub const MAX_THREADS: usize = 64;
+
+/// Configured thread count; 0 = not yet resolved.
+static CONFIG: AtomicUsize = AtomicUsize::new(0);
+
+/// Ignore mutex poisoning: pool state stays consistent because every
+/// transition happens under the lock before any panic can propagate.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Hardware parallelism as detected at run time (1 when unknown).
+pub fn detected_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Override the kernel thread count (clamped to `1..=MAX_THREADS`).
+/// Takes effect for every subsequent kernel call; 1 forces all kernels
+/// inline (the serial reference path).
+pub fn set_threads(n: usize) {
+    CONFIG.store(n.clamp(1, MAX_THREADS), Ordering::SeqCst);
+}
+
+/// The active kernel thread count, resolving `SWITCHLORA_THREADS` or the
+/// detected parallelism on first use.  Like [`set_threads`], an env
+/// value of `0` clamps to 1 (the serial reference path) rather than
+/// silently meaning "all cores"; unparsable values fall back to the
+/// detected parallelism.
+pub fn threads() -> usize {
+    let c = CONFIG.load(Ordering::SeqCst);
+    if c != 0 {
+        return c;
+    }
+    let n = std::env::var("SWITCHLORA_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or_else(detected_parallelism)
+        .min(MAX_THREADS);
+    // first-wins, so a concurrent explicit `set_threads` is not clobbered
+    let _ = CONFIG.compare_exchange(0, n, Ordering::SeqCst,
+                                    Ordering::SeqCst);
+    CONFIG.load(Ordering::SeqCst)
+}
+
+thread_local! {
+    /// Depth of serial scopes on this thread.  Pool workers and
+    /// data-parallel shard threads run with this raised so nested kernel
+    /// calls stay inline instead of re-entering (and deadlocking on) the
+    /// single-job pool.
+    static SERIAL_DEPTH: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Whether this thread is inside a serial scope (kernels stay inline).
+pub fn in_serial() -> bool {
+    SERIAL_DEPTH.with(|c| c.get() > 0)
+}
+
+struct SerialGuard;
+
+impl Drop for SerialGuard {
+    fn drop(&mut self) {
+        SERIAL_DEPTH.with(|c| c.set(c.get() - 1));
+    }
+}
+
+fn serial_guard() -> SerialGuard {
+    SERIAL_DEPTH.with(|c| c.set(c.get() + 1));
+    SerialGuard
+}
+
+/// Run `f` with every kernel call on this thread forced inline — the
+/// per-shard mode of data-parallel worker threads (each shard owns one
+/// OS thread; its kernels must not contend for the shared pool).
+pub fn serial<R>(f: impl FnOnce() -> R) -> R {
+    let _g = serial_guard();
+    f()
+}
+
+/// One posted job: the lifetime-erased task closure plus its shared
+/// index counter.  Copies of this exist only while the posting [`run`]
+/// call is on the stack — `run` returns only after every participant has
+/// checked out — so the erased references never outlive their frame.
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    next: &'static AtomicUsize,
+    n_tasks: usize,
+}
+
+struct PoolState {
+    /// bumped per job; lets sleeping workers distinguish "new job" from
+    /// spurious wakeups
+    epoch: u64,
+    job: Option<Job>,
+    /// participants (caller + joined workers) still executing
+    running: usize,
+    /// participants that claimed the current job
+    joined: usize,
+    /// participant cap for the current job (= requested thread count)
+    max_join: usize,
+    /// worker threads spawned so far (they live for the process)
+    spawned: usize,
+    /// a worker's task closure panicked
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+static POOL: OnceLock<Arc<Shared>> = OnceLock::new();
+
+/// Serializes unit tests that toggle the process-global thread count
+/// (cargo runs tests concurrently; results would still match — that is
+/// the determinism contract — but tests asserting exact `threads()`
+/// values would race).
+#[cfg(test)]
+pub(crate) static TEST_SERIALIZE: Mutex<()> = Mutex::new(());
+
+/// Serializes job submission: the pool runs one job at a time.  Nested
+/// submissions cannot deadlock because every participant executes tasks
+/// inside a serial scope, which routes inner kernel calls inline.
+static SUBMIT: Mutex<()> = Mutex::new(());
+
+fn run_tasks(job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            break;
+        }
+        (job.f)(i);
+    }
+}
+
+fn worker(shared: Arc<Shared>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&shared.state);
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(j) = st.job {
+                        if st.joined < st.max_join {
+                            st.joined += 1;
+                            st.running += 1;
+                            break j;
+                        }
+                    }
+                    // job already finished or fully staffed: sleep on
+                }
+                st = shared
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let _g = serial_guard();
+        let ok = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| run_tasks(&job)))
+            .is_ok();
+        let mut st = lock(&shared.state);
+        if !ok {
+            st.panicked = true;
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `f(0) .. f(n_tasks - 1)` across the pool and wait for all of
+/// them.  Every index is claimed by exactly one thread, so kernels that
+/// give each task a disjoint output region with a fixed internal order
+/// produce bitwise-identical results at any thread count.  Falls back to
+/// an inline loop when the pool is configured for one thread, when
+/// called inside a serial scope (pool workers, data-parallel shard
+/// threads), or when there is at most one task.
+pub fn run(n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
+    let want = threads();
+    if n_tasks <= 1 || want <= 1 || in_serial() {
+        let _g = serial_guard();
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let shared = POOL.get_or_init(|| {
+        Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                running: 0,
+                joined: 0,
+                max_join: 0,
+                spawned: 0,
+                panicked: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        })
+    });
+    let _submit = lock(&SUBMIT);
+    let next = AtomicUsize::new(0);
+    // SAFETY: pure lifetime erasure.  The erased references point into
+    // this stack frame; `run` does not return (even on panic — see the
+    // catch_unwind below) until `running` has dropped to zero, i.e. no
+    // worker can still hold or reach them.
+    let job = unsafe {
+        Job {
+            f: std::mem::transmute::<&(dyn Fn(usize) + Sync),
+                                     &'static (dyn Fn(usize) + Sync)>(f),
+            next: std::mem::transmute::<&AtomicUsize,
+                                        &'static AtomicUsize>(&next),
+            n_tasks,
+        }
+    };
+    {
+        let mut st = lock(&shared.state);
+        while st.spawned < want - 1 {
+            st.spawned += 1;
+            let sh = Arc::clone(shared);
+            std::thread::Builder::new()
+                .name(format!("swl-kernel-{}", st.spawned))
+                .spawn(move || worker(sh))
+                .expect("spawning kernel pool worker");
+        }
+        st.epoch += 1;
+        st.job = Some(job);
+        st.joined = 1; // the caller participates
+        st.running = 1;
+        st.max_join = want;
+        st.panicked = false;
+        shared.work_cv.notify_all();
+    }
+    // participate; the serial scope keeps nested kernel calls inline
+    let caller_res = {
+        let _g = serial_guard();
+        std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| run_tasks(&job)))
+    };
+    let mut st = lock(&shared.state);
+    st.running -= 1;
+    while st.running > 0 {
+        st = shared.done_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+    }
+    st.job = None;
+    let worker_panicked = st.panicked;
+    drop(st);
+    if let Err(p) = caller_res {
+        std::panic::resume_unwind(p);
+    }
+    if worker_panicked {
+        panic!("kernel pool worker task panicked");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        let _t = lock(&TEST_SERIALIZE);
+        let prev = threads();
+        set_threads(4);
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicU32> =
+                (0..n).map(|_| AtomicU32::new(0)).collect();
+            run(n, &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+            }
+        }
+        set_threads(prev);
+    }
+
+    #[test]
+    fn serial_scope_forces_inline() {
+        let _t = lock(&TEST_SERIALIZE);
+        let prev = threads();
+        set_threads(4);
+        serial(|| {
+            assert!(in_serial());
+            let main_id = std::thread::current().id();
+            run(32, &|_| {
+                assert_eq!(std::thread::current().id(), main_id,
+                           "serial scope must not fan out");
+            });
+        });
+        assert!(!in_serial());
+        set_threads(prev);
+    }
+
+    #[test]
+    fn set_threads_clamps() {
+        let _t = lock(&TEST_SERIALIZE);
+        let prev = threads();
+        set_threads(0);
+        assert_eq!(threads(), 1);
+        set_threads(MAX_THREADS + 100);
+        assert_eq!(threads(), MAX_THREADS);
+        set_threads(prev);
+    }
+
+    #[test]
+    fn nested_run_inside_task_stays_inline() {
+        let _t = lock(&TEST_SERIALIZE);
+        let prev = threads();
+        set_threads(4);
+        let outer = AtomicU32::new(0);
+        let inner = AtomicU32::new(0);
+        run(8, &|_| {
+            outer.fetch_add(1, Ordering::Relaxed);
+            // a kernel calling a kernel: must inline, not deadlock
+            run(4, &|_| {
+                inner.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(outer.load(Ordering::Relaxed), 8);
+        assert_eq!(inner.load(Ordering::Relaxed), 32);
+        set_threads(prev);
+    }
+}

@@ -31,6 +31,14 @@
 //! synthesized in-process from the builtin configs, so the coordinator is
 //! backend-agnostic.
 //!
+//! All hot-path math — training fwd/bwd, KV-cached decode, GaLore's
+//! projections, the Jacobi SVD sweeps — runs on one shared, cache-blocked,
+//! multi-threaded kernel layer ([`kernels`]): a persistent std-only
+//! thread pool (`--threads N` / `SWITCHLORA_THREADS`, default = detected
+//! parallelism) whose kernels are bitwise deterministic at any thread
+//! count, and which also fans data-parallel workers out onto real OS
+//! threads so `--workers W` scales wall-clock.
+//!
 //! See the top-level `README.md` for backend selection, the experiment
 //! drivers under `examples/`, and `ROADMAP.md` for where this is headed.
 
@@ -40,6 +48,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod infer;
+pub mod kernels;
 pub mod methods;
 pub mod model;
 pub mod optim;

@@ -6,6 +6,11 @@
 //!            [--csv curve.csv] [--init switchlora|lora_default]
 //!            [--ckpt-every 100 [--ckpt-path resume.ckpt]]
 //!            [--resume resume.ckpt]
+//!   `--threads N` (any subcommand; or SWITCHLORA_THREADS=N) sizes the
+//!   kernel thread pool — default is the detected hardware parallelism,
+//!   1 forces the serial reference path; results are bitwise identical
+//!   either way.  `--workers W` shards each step across W data-parallel
+//!   workers, each on its own OS thread.
 //!   methods (see `switchlora info` for the live registry):
 //!     full | lora
 //!     switchlora  [--interval0 40] [--ratio 0.1] [--nfreeze 5]
@@ -59,6 +64,14 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // global: size the kernel thread pool before any compute runs
+    if args.get("threads").is_some() {
+        let n = args.parse_num("threads", 0usize)?;
+        if n == 0 {
+            bail!("--threads must be >= 1 (1 = serial reference path)");
+        }
+        switchlora::kernels::set_threads(n);
+    }
     match args.subcommand().unwrap_or("help") {
         "pretrain" => cmd_pretrain(args),
         "finetune" => cmd_finetune(args),
@@ -80,6 +93,8 @@ training methods are pluggable: `switchlora info` lists the registry,\n\
 and `pretrain --method NAME` + per-method flags select one\n\
 backend: native CPU by default (no artifacts needed); build with\n\
 `--features pjrt` and set SWITCHLORA_BACKEND=pjrt for the AOT/PJRT path\n\
+threading: `--threads N` / SWITCHLORA_THREADS=N size the kernel pool\n\
+(default: detected parallelism; results are bitwise thread-invariant)\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
@@ -110,7 +125,10 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     }
     cfg.resume = args.get("resume").map(PathBuf::from);
     let mut engine = Engine::cpu()?;
-    switchlora::info!("execution backend: {}", engine.backend_name());
+    switchlora::info!("execution backend: {} ({} kernel thread(s), {} \
+                       detected)", engine.backend_name(),
+                      switchlora::kernels::threads(),
+                      switchlora::kernels::detected_parallelism());
     let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
     print!("{}", exp::results_table("pretrain", &[res.clone()]));
     println!("comm: {}", comm_summary(&res.comm, steps));
@@ -418,6 +436,10 @@ fn cmd_info() -> Result<()> {
         };
         println!("  {:<11} {}{opts}", m.name, m.summary);
     }
+    println!("\nparallelism: {} detected, {} active kernel thread(s) \
+              (override: --threads N or SWITCHLORA_THREADS=N)",
+             switchlora::kernels::detected_parallelism(),
+             switchlora::kernels::threads());
     let artifacts = default_artifacts_dir();
     println!("\nartifacts dir: {}", artifacts.display());
     let mut specs: Vec<String> = std::fs::read_dir(&artifacts)

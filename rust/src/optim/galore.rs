@@ -14,7 +14,6 @@ use crate::model::layout::{Layout, Role};
 use crate::optim::adam::{host_step, AdamState};
 use crate::optim::AdamHyper;
 use crate::tensor::linalg::svd;
-use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
 
 /// Serialize one Adam state (moments + step counts).
@@ -170,8 +169,6 @@ impl Galore {
         // 1) dense Adam for the non-projected parameters
         host_step(params, grads, &mut self.dense, &self.dense_mask, h);
         // 2) projected Adam per matrix
-        let ones_cache: Vec<f32> = Vec::new(); // placate borrowck pattern
-        let _ = ones_cache;
         for ms in self.mats.iter_mut() {
             let (m, n) = (ms.m, ms.n);
             let g = Tensor::from_vec(
@@ -196,11 +193,22 @@ impl Galore {
                 });
             }
             let p = ms.p.as_ref().unwrap();
-            // project gradient
+            // project gradient on the shared kernels: the transposed
+            // orientations go straight to addmm_tn/addmm_nt instead of
+            // materializing `p.transpose()` first
+            let r_c = p.cols;
             let proj = if m <= n {
-                matmul(&p.transpose(), &g) // [r, n]
+                // [r, n] = pᵀ[r,m] @ g[m,n]
+                let mut c = Tensor::zeros(r_c, n);
+                crate::kernels::addmm_tn(&mut c.data, &p.data, &g.data,
+                                         m, r_c, n);
+                c
             } else {
-                matmul(&g, p) // [m, r]
+                // [m, r] = g[m,n] @ p[n,r]
+                let mut c = Tensor::zeros(m, r_c);
+                crate::kernels::matmul_nn(&mut c.data, &g.data, &p.data,
+                                          m, n, r_c);
+                c
             };
             // Adam in projected space (moments persist across steps; the
             // projection refresh is the inconsistency the paper points at)
@@ -211,11 +219,16 @@ impl Galore {
             // upd now holds -normalized_update; project back and apply with
             // lr * scale
             let upd_t = Tensor::from_vec(proj.rows, proj.cols, upd);
-            let full = if m <= n {
-                matmul(p, &upd_t) // [m, n]
+            let mut full = Tensor::zeros(m, n);
+            if m <= n {
+                // [m, n] = p[m,r] @ upd[r,n]
+                crate::kernels::matmul_nn(&mut full.data, &p.data,
+                                          &upd_t.data, m, r_c, n);
             } else {
-                matmul(&upd_t, &p.transpose())
-            };
+                // [m, n] = upd[m,r] @ p[n,r]ᵀ
+                crate::kernels::addmm_nt(&mut full.data, &upd_t.data,
+                                         &p.data, m, r_c, n);
+            }
             let dst = &mut params[ms.t_offset..ms.t_offset + m * n];
             for (d, u) in dst.iter_mut().zip(&full.data) {
                 // `full` holds the *negative* update (host_step subtracted

@@ -24,6 +24,10 @@
 //! Backend selection at run time: `Engine::cpu()` returns the native
 //! backend unless the binary was built with `--features pjrt` *and*
 //! `SWITCHLORA_BACKEND=pjrt` is set.
+//!
+//! Native compute runs on the shared threaded kernel layer
+//! ([`crate::kernels`]): `--threads N` / `SWITCHLORA_THREADS` size the
+//! pool, and results are bitwise identical at any thread count.
 
 #[cfg(feature = "pjrt")]
 pub mod client;
@@ -70,10 +74,13 @@ pub trait StepRuntime {
         -> Result<()>;
 
     /// Fwd+bwd over several batches with the SAME parameters (the
-    /// data-parallel inner loop).  Backends that marshal parameters into
-    /// device buffers override this to share the marshaling (§Perf L3);
-    /// the native backend reads host memory directly, so the default loop
-    /// is already optimal.
+    /// data-parallel inner loop).  The default is a sequential
+    /// (interleaved-worker) loop; backends override it — PJRT to share
+    /// parameter marshaling across executions (§Perf L3), native to run
+    /// each shard on its own OS thread via the kernel pool
+    /// (`kernels::scoped_map`), which keeps losses and gradients bitwise
+    /// identical to this default while letting `--workers W` scale
+    /// wall-clock.
     fn fwdbwd_multi(&self, store: &ParamStore,
                     batches: &[(&[i32], usize, usize)])
         -> Result<Vec<(f32, Vec<f32>)>> {

@@ -14,77 +14,31 @@
 //! are cross-checked against each other with zeroed adapters
 //! (`rust/tests/integration_runtime.rs`).
 //!
-//! All loops are sequential with a fixed iteration order, so runs are
-//! bitwise deterministic from a seed — a property the trainer's
-//! determinism test pins down.
+//! All math runs on the shared kernel layer ([`crate::kernels`]): the
+//! matmul family and the attention primitives are cache-blocked and
+//! multi-threaded there, with a determinism contract — every output
+//! element is owned by exactly one task with a fixed accumulation order
+//! — so runs are bitwise deterministic from a seed *at any thread
+//! count*, a property the trainer's determinism tests pin down.  Multi-
+//! batch entry points (`fwdbwd_multi`/`eval_loss_multi`) additionally
+//! fan shards out onto real OS threads, which is what makes the
+//! coordinator's `--workers W` scale wall-clock.
 
 use anyhow::{bail, ensure, Result};
 
 use super::{InferRuntime, StepRuntime};
 use crate::infer::kv_cache::KvCache;
+use crate::kernels::{self, addmm_nn, addmm_nt, addmm_tn};
 use crate::model::layout::{Layout, Manifest, ParamStore, Variant};
 use crate::optim::adam::{host_step, AdamState};
 use crate::optim::AdamHyper;
 
+// The attention primitives live in the shared kernel layer; re-exported
+// here so gradient tests and the KV cache keep addressing them as part
+// of the native backend's op set.
+pub use crate::kernels::{causal_attention_bwd, causal_attention_fwd};
+
 const RMS_EPS: f32 = 1e-5;
-
-// ---------------------------------------------------------------------
-// Matmul primitives on row-major flat buffers.
-// ---------------------------------------------------------------------
-
-/// `y[rows,m] += x[rows,k] @ w[m,k]ᵀ` — the linear-layer orientation
-/// (`W` stored `[out, in]`, matching `kernels/ref.py::ref_linear`).
-fn addmm_nt(y: &mut [f32], x: &[f32], w: &[f32], rows: usize, k: usize,
-            m: usize) {
-    for i in 0..rows {
-        let xr = &x[i * k..(i + 1) * k];
-        let yr = &mut y[i * m..(i + 1) * m];
-        for (o, yo) in yr.iter_mut().enumerate() {
-            let wr = &w[o * k..(o + 1) * k];
-            let mut acc = 0.0f32;
-            for (a, b) in xr.iter().zip(wr) {
-                acc += a * b;
-            }
-            *yo += acc;
-        }
-    }
-}
-
-/// `y[rows,k] += x[rows,m] @ w[m,k]` (no transpose).
-fn addmm_nn(y: &mut [f32], x: &[f32], w: &[f32], rows: usize, m: usize,
-            k: usize) {
-    for i in 0..rows {
-        let xr = &x[i * m..(i + 1) * m];
-        let yr = &mut y[i * k..(i + 1) * k];
-        for (o, &s) in xr.iter().enumerate() {
-            if s == 0.0 {
-                continue;
-            }
-            let wr = &w[o * k..(o + 1) * k];
-            for (yj, wj) in yr.iter_mut().zip(wr) {
-                *yj += s * wj;
-            }
-        }
-    }
-}
-
-/// `wg[m,k] += dy[rows,m]ᵀ @ x[rows,k]` — weight-gradient accumulation.
-fn addmm_tn(wg: &mut [f32], dy: &[f32], x: &[f32], rows: usize, m: usize,
-            k: usize) {
-    for i in 0..rows {
-        let dyr = &dy[i * m..(i + 1) * m];
-        let xr = &x[i * k..(i + 1) * k];
-        for (o, &s) in dyr.iter().enumerate() {
-            if s == 0.0 {
-                continue;
-            }
-            let wr = &mut wg[o * k..(o + 1) * k];
-            for (wj, xj) in wr.iter_mut().zip(xr) {
-                *wj += s * xj;
-            }
-        }
-    }
-}
 
 // ---------------------------------------------------------------------
 // Ops: each with an explicit backward, unit-testable in isolation.
@@ -256,103 +210,6 @@ fn rope_apply(x: &mut [f32], bh: usize, t: usize, hd: usize, pos0: usize,
             }
         }
     }
-}
-
-/// Causal softmax attention over `[bh, t, hd]` q/k/v (q/k already
-/// RoPE-rotated).  Returns `(o, att)` with the probabilities saved.
-pub fn causal_attention_fwd(q: &[f32], k: &[f32], v: &[f32], bh: usize,
-                            t: usize, hd: usize) -> (Vec<f32>, Vec<f32>) {
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut o = vec![0.0; bh * t * hd];
-    let mut att = vec![0.0; bh * t * t];
-    for g in 0..bh {
-        let qg = &q[g * t * hd..(g + 1) * t * hd];
-        let kg = &k[g * t * hd..(g + 1) * t * hd];
-        let vg = &v[g * t * hd..(g + 1) * t * hd];
-        for i in 0..t {
-            let qi = &qg[i * hd..(i + 1) * hd];
-            let arow = &mut att[(g * t + i) * t..(g * t + i + 1) * t];
-            let mut zmax = f32::NEG_INFINITY;
-            for j in 0..=i {
-                let kj = &kg[j * hd..(j + 1) * hd];
-                let mut z = 0.0f32;
-                for d in 0..hd {
-                    z += qi[d] * kj[d];
-                }
-                let z = z * scale;
-                arow[j] = z;
-                zmax = zmax.max(z);
-            }
-            let mut denom = 0.0f32;
-            for aj in arow.iter_mut().take(i + 1) {
-                *aj = (*aj - zmax).exp();
-                denom += *aj;
-            }
-            let orow = &mut o[(g * t + i) * hd..(g * t + i + 1) * hd];
-            for j in 0..=i {
-                arow[j] /= denom;
-                let p = arow[j];
-                let vj = &vg[j * hd..(j + 1) * hd];
-                for d in 0..hd {
-                    orow[d] += p * vj[d];
-                }
-            }
-        }
-    }
-    (o, att)
-}
-
-/// Backward of `causal_attention_fwd`: returns `(dq, dk, dv)` (dq/dk
-/// still RoPE-rotated — the caller unrotates).
-#[allow(clippy::too_many_arguments)]
-pub fn causal_attention_bwd(dout: &[f32], q: &[f32], k: &[f32], v: &[f32],
-                            att: &[f32], bh: usize, t: usize, hd: usize)
-    -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let scale = 1.0 / (hd as f32).sqrt();
-    let mut dq = vec![0.0; bh * t * hd];
-    let mut dk = vec![0.0; bh * t * hd];
-    let mut dv = vec![0.0; bh * t * hd];
-    let mut datt = vec![0.0f32; t];
-    for g in 0..bh {
-        let base = g * t * hd;
-        let qg = &q[base..base + t * hd];
-        let kg = &k[base..base + t * hd];
-        let vg = &v[base..base + t * hd];
-        for i in 0..t {
-            let doi = &dout[base + i * hd..base + (i + 1) * hd];
-            let arow = &att[(g * t + i) * t..(g * t + i + 1) * t];
-            // dV[j] += a_ij·dO_i ; datt_ij = dO_i·v_j
-            let mut row_dot = 0.0f32;
-            for j in 0..=i {
-                let p = arow[j];
-                let vj = &vg[j * hd..(j + 1) * hd];
-                let dvj = &mut dv[base + j * hd..base + (j + 1) * hd];
-                let mut d = 0.0f32;
-                for t_ in 0..hd {
-                    dvj[t_] += p * doi[t_];
-                    d += doi[t_] * vj[t_];
-                }
-                datt[j] = d;
-                row_dot += p * d;
-            }
-            // dz = a·(datt − Σ a·datt); dq_i += dz·k_j·s; dk_j += dz·q_i·s
-            let qi = &qg[i * hd..(i + 1) * hd];
-            for j in 0..=i {
-                let dz = arow[j] * (datt[j] - row_dot) * scale;
-                if dz == 0.0 {
-                    continue;
-                }
-                let kj = &kg[j * hd..(j + 1) * hd];
-                let dkj = &mut dk[base + j * hd..base + (j + 1) * hd];
-                let dqi = &mut dq[base + i * hd..base + (i + 1) * hd];
-                for d in 0..hd {
-                    dqi[d] += dz * kj[d];
-                    dkj[d] += dz * qi[d];
-                }
-            }
-        }
-    }
-    (dq, dk, dv)
 }
 
 /// Mean softmax cross-entropy over `[rows, v]` logits with integer
@@ -902,6 +759,33 @@ impl StepRuntime for NativeModel {
                 "adam buffers must be padded to {n}");
         host_step(params, grads, opt, mask, hyper);
         Ok(())
+    }
+
+    /// Data-parallel inner loop: one OS thread per shard (up to the
+    /// configured kernel thread count), each computing its batch with
+    /// in-shard kernels forced serial so shards don't contend for the
+    /// pool.  Per-shard arithmetic is identical to the interleaved
+    /// schedule, so losses and gradients match it bitwise — only the
+    /// wall-clock changes.
+    fn fwdbwd_multi(&self, store: &ParamStore,
+                    batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<(f32, Vec<f32>)>> {
+        kernels::scoped_map(batches, |&(tokens, batch, sp1)| {
+            self.fwdbwd(store, tokens, batch, sp1)
+        })
+        .into_iter()
+        .collect()
+    }
+
+    /// Eval batches fan out the same way as training shards.
+    fn eval_loss_multi(&self, store: &ParamStore,
+                       batches: &[(&[i32], usize, usize)])
+        -> Result<Vec<f32>> {
+        kernels::scoped_map(batches, |&(tokens, batch, sp1)| {
+            self.eval_loss(store, tokens, batch, sp1)
+        })
+        .into_iter()
+        .collect()
     }
 }
 

@@ -6,6 +6,11 @@
 //!   methods", Zhao et al. 2024b).
 //! * **Rank analysis** (Figures 10/11) needs full singular-value spectra of
 //!   trained weight matrices.
+//!
+//! The Jacobi rotation sweeps apply through the shared kernel layer
+//! ([`crate::kernels::rotate_columns`]), so tall matrices parallelize
+//! over rows on the same pool as everything else; the 2×2 Gram
+//! accumulations stay serial because their f64 sums are order-sensitive.
 
 use super::Tensor;
 
@@ -51,18 +56,10 @@ pub fn svd(a: &Tensor) -> (Tensor, Vec<f32>, Tensor) {
                 let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
                 let c = 1.0 / (1.0 + t * t).sqrt();
                 let s = c * t;
-                for i in 0..m {
-                    let xp = w.at(i, p) as f64;
-                    let xq = w.at(i, q) as f64;
-                    *w.at_mut(i, p) = (c * xp - s * xq) as f32;
-                    *w.at_mut(i, q) = (s * xp + c * xq) as f32;
-                }
-                for i in 0..n {
-                    let vp = v.at(i, p) as f64;
-                    let vq = v.at(i, q) as f64;
-                    *v.at_mut(i, p) = (c * vp - s * vq) as f32;
-                    *v.at_mut(i, q) = (s * vp + c * vq) as f32;
-                }
+                crate::kernels::rotate_columns(&mut w.data, m, n, p, q,
+                                               c, s);
+                crate::kernels::rotate_columns(&mut v.data, n, n, p, q,
+                                               c, s);
             }
         }
         if off < 1e-10 {

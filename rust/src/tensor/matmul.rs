@@ -1,54 +1,28 @@
-//! Blocked host matmul.  Used off the hot path (GaLore projection, rank
-//! analysis, tests); the training-step matmuls run inside the AOT-compiled
-//! XLA executables.
+//! Host matmul on [`Tensor`]s — thin shims over the shared threaded
+//! kernel layer ([`crate::kernels`]).  Since PR 1 the default backend is
+//! the native CPU engine, so these are the *same* kernels the training
+//! step runs on: GaLore's projections, rank analysis and the tests share
+//! one cache-blocked, multi-threaded implementation with the fwd/bwd hot
+//! path instead of keeping a divergent copy here.
 
 use super::Tensor;
 
-/// Cache-blocked `A[m,k] @ B[k,n]` with an i-k-j inner order (streams B rows,
-/// accumulates into C rows — good locality for row-major data).
+/// Cache-blocked `A[m,k] @ B[k,n]` with an i-k-j inner order (streams B
+/// rows, accumulates into C rows — good locality for row-major data),
+/// parallel over rows of C on the kernel pool.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch {}x{} @ {}x{}",
                a.rows, a.cols, b.rows, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let mut c = Tensor::zeros(m, n);
-    const BK: usize = 64;
-    for k0 in (0..k).step_by(BK) {
-        let k1 = (k0 + BK).min(k);
-        for i in 0..m {
-            let a_row = a.row(i);
-            let c_row = c.row_mut(i);
-            for kk in k0..k1 {
-                let aik = a_row[kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let b_row = b.row(kk);
-                for j in 0..n {
-                    c_row[j] += aik * b_row[j];
-                }
-            }
-        }
-    }
+    let mut c = Tensor::zeros(a.rows, b.cols);
+    crate::kernels::matmul_nn(&mut c.data, &a.data, &b.data, a.rows,
+                              a.cols, b.cols);
     c
 }
 
 /// `A^T @ A` (n×n Gram matrix), used by the SVD substrate.
 pub fn gram(a: &Tensor) -> Tensor {
-    let n = a.cols;
-    let mut g = Tensor::zeros(n, n);
-    for i in 0..a.rows {
-        let row = a.row(i);
-        for p in 0..n {
-            let rp = row[p];
-            if rp == 0.0 {
-                continue;
-            }
-            let g_row = g.row_mut(p);
-            for q in 0..n {
-                g_row[q] += rp * row[q];
-            }
-        }
-    }
+    let mut g = Tensor::zeros(a.cols, a.cols);
+    crate::kernels::gram(&mut g.data, &a.data, a.rows, a.cols);
     g
 }
 

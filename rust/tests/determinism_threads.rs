@@ -1,0 +1,179 @@
+//! The kernel layer's determinism contract, end to end: threading only
+//! partitions output rows across tasks and never changes any element's
+//! accumulation order, so every result — gradients, loss curves, final
+//! weights, comm bytes — is bitwise identical at any thread count, and
+//! data-parallel workers on real OS threads reproduce the interleaved
+//! schedule exactly.
+//!
+//! The tests toggle the process-global pool configuration, so they
+//! serialize on a mutex (cargo's in-process test threads would otherwise
+//! interleave `set_threads` calls; results would still match — that is
+//! the point of the contract — but a failure would be confusing).
+
+use std::sync::{Mutex, MutexGuard};
+
+use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
+                                       RunResult, TrainConfig, Trainer};
+use switchlora::data::dataset::synth_batches;
+use switchlora::kernels::{set_threads, threads};
+use switchlora::model::init::seeded_store;
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::runtime::{Engine, NativeModel, StepRuntime};
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    GUARD.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the pool to whatever was configured (CLI/env/detected)
+/// before the test toggled it, pass or fail — so a suite run under
+/// `SWITCHLORA_THREADS=2` keeps exercising the pool after these tests.
+struct Restore(usize);
+
+impl Restore {
+    fn arm() -> Restore {
+        Restore(threads())
+    }
+}
+
+impl Drop for Restore {
+    fn drop(&mut self) {
+        set_threads(self.0);
+    }
+}
+
+fn manifest() -> Manifest {
+    Manifest::for_spec(&default_artifacts_dir(), "tiny").unwrap()
+}
+
+fn bits32(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn curve_bits(c: &[(u64, f64)]) -> Vec<(u64, u64)> {
+    c.iter().map(|&(s, l)| (s, l.to_bits())).collect()
+}
+
+fn assert_runs_match(a: &RunResult, b: &RunResult, what: &str) {
+    assert_eq!(curve_bits(&a.train_curve), curve_bits(&b.train_curve),
+               "{what}: train curves diverge");
+    assert_eq!(curve_bits(&a.eval_curve), curve_bits(&b.eval_curve),
+               "{what}: eval curves diverge");
+    assert_eq!(a.comm.bytes, b.comm.bytes, "{what}: comm bytes diverge");
+    assert_eq!(a.comm.rounds, b.comm.rounds,
+               "{what}: comm rounds diverge");
+    assert_eq!(a.counters, b.counters, "{what}: counters diverge");
+}
+
+fn quick_cfg(method: Method, steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new("tiny", method, steps);
+    cfg.eval_every = steps / 2;
+    cfg.eval_batches = 2;
+    cfg.warmup = 2;
+    cfg
+}
+
+fn run_with_threads(cfg: &TrainConfig, nt: usize)
+    -> (RunResult, ParamStore) {
+    set_threads(nt);
+    let mut engine = Engine::cpu().unwrap();
+    Trainer::new(cfg.clone()).unwrap().run(&mut engine).unwrap()
+}
+
+#[test]
+fn fwdbwd_grads_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    let _r = Restore::arm();
+    let man = manifest();
+    for variant in [Variant::Lora, Variant::Full] {
+        let store = seeded_store(&man, variant, 7).unwrap();
+        let model = NativeModel::new(man.clone(), variant).unwrap();
+        let mut it = synth_batches(man.config.vocab, 3, 0,
+                                   man.config.batch, man.config.seq);
+        let b = it.next_batch();
+        let runs: Vec<(f32, Vec<f32>)> = [1usize, 2, 4]
+            .iter()
+            .map(|&nt| {
+                set_threads(nt);
+                model
+                    .fwdbwd(&store, &b.tokens, b.batch, b.seq_plus_1)
+                    .unwrap()
+            })
+            .collect();
+        let (loss1, ref grads1) = runs[0];
+        for (nt, (loss, grads)) in
+            [2usize, 4].iter().zip(runs.iter().skip(1))
+        {
+            assert_eq!(loss1.to_bits(), loss.to_bits(),
+                       "{variant:?}: loss differs at {nt} threads");
+            assert_eq!(bits32(grads1), bits32(grads),
+                       "{variant:?}: grads differ at {nt} threads");
+        }
+        // eval and full-context logits ride the same kernels
+        set_threads(1);
+        let e1 = model
+            .eval_loss(&store, &b.tokens, b.batch, b.seq_plus_1)
+            .unwrap();
+        set_threads(4);
+        let e4 = model
+            .eval_loss(&store, &b.tokens, b.batch, b.seq_plus_1)
+            .unwrap();
+        assert_eq!(e1.to_bits(), e4.to_bits(),
+                   "{variant:?}: eval loss differs");
+    }
+}
+
+#[test]
+fn inference_logits_bitwise_identical_across_thread_counts() {
+    let _g = lock();
+    let _r = Restore::arm();
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 11).unwrap();
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let (b, t) = (2usize, 24usize);
+    let toks: Vec<i32> =
+        (0..b * t).map(|i| (i * 37 % man.config.vocab) as i32).collect();
+    set_threads(1);
+    let l1 = model.forward_logits(&store, &toks, b, t).unwrap();
+    set_threads(4);
+    let l4 = model.forward_logits(&store, &toks, b, t).unwrap();
+    assert_eq!(bits32(&l1), bits32(&l4), "full-context logits differ");
+}
+
+#[test]
+fn training_curves_bitwise_identical_for_all_five_methods() {
+    let _g = lock();
+    let _r = Restore::arm();
+    for name in ["full", "lora", "switchlora", "relora", "galore"] {
+        let method = Method::parse(name).unwrap();
+        let cfg = quick_cfg(method, 6);
+        let (r1, s1) = run_with_threads(&cfg, 1);
+        let (r2, s2) = run_with_threads(&cfg, 2);
+        assert_runs_match(&r1, &r2, name);
+        assert_eq!(bits32(&s1.data), bits32(&s2.data),
+                   "{name}: final weights diverge between 1 and 2 \
+                    threads");
+    }
+}
+
+#[test]
+fn data_parallel_workers_threaded_matches_interleaved() {
+    let _g = lock();
+    let _r = Restore::arm();
+    let mut cfg = quick_cfg(Method::parse("switchlora").unwrap(), 8);
+    cfg.workers = 2;
+    // threads=1: the interleaved single-thread schedule (the pre-thread
+    // reference); threads=4: one OS thread per shard + threaded kernels
+    let (r1, s1) = run_with_threads(&cfg, 1);
+    let (r4, s4) = run_with_threads(&cfg, 4);
+    assert_runs_match(&r1, &r4, "workers=2");
+    assert_eq!(bits32(&s1.data), bits32(&s4.data),
+               "workers=2: final weights diverge");
+    // the ledger measured real ring traffic: gradients travel as the
+    // fused-Adam-padded vector, once per step
+    let padded = manifest().adam_padded(Variant::Lora).unwrap();
+    let expected = switchlora::coordinator::data_parallel::
+        expected_ring_bytes(padded, 2);
+    assert_eq!(r1.comm.bytes, expected * 8, "ring bytes off for 8 steps");
+}
