@@ -4,15 +4,24 @@
 //! uncached path is O(T²), so the gap must widen as context grows; the
 //! acceptance check in ISSUE 2 reads off exactly that.  A second table
 //! measures the adapter-merge claim: merged dense decode vs unmerged
-//! LoRA decode at the same context.
+//! LoRA decode at the same context; a third measures the
+//! `--quantize-base int8` serving claim — resident bytes ~4x down on
+//! the frozen base, logits within tolerance, decode speed comparable.
+//!
+//! `--json <path>` writes a machine-readable report (the committed
+//! `BENCH_infer.json` accumulates the perf trajectory).
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use switchlora::coordinator::trainer::default_artifacts_dir;
 use switchlora::infer::merged_full_store;
 use switchlora::model::init::seeded_store;
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::model::packed::{PackedStore, ParamSource};
 use switchlora::runtime::{InferRuntime, NativeModel};
+use switchlora::tensor::dtype::DType;
+use switchlora::util::json::Json;
 use switchlora::util::rng::Rng;
 
 fn lora_setup(spec: &str) -> Option<(Manifest, ParamStore, NativeModel)> {
@@ -29,7 +38,7 @@ fn prompt(vocab: usize, len: usize) -> Vec<i32> {
 
 /// ms per generated token with the KV cache: prefill once, then time
 /// `n_new` decode steps.
-fn cached_ms_per_tok(model: &NativeModel, store: &ParamStore,
+fn cached_ms_per_tok(model: &NativeModel, store: &dyn ParamSource,
                      ctx: &[i32], n_new: usize) -> f64 {
     let mut cache = model.new_cache(1, ctx.len() + n_new + 1);
     let logits = model.prefill(store, &mut cache, 0, ctx).unwrap();
@@ -47,7 +56,7 @@ fn cached_ms_per_tok(model: &NativeModel, store: &ParamStore,
 /// the whole (growing) context through a fresh throwaway cache — the
 /// same inference kernels as the cached path, none of the reuse, so the
 /// table isolates exactly what the KV cache buys.
-fn uncached_ms_per_tok(model: &NativeModel, store: &ParamStore,
+fn uncached_ms_per_tok(model: &NativeModel, store: &dyn ParamSource,
                        ctx: &[i32], n_new: usize) -> f64 {
     let mut toks = ctx.to_vec();
     let t0 = Instant::now();
@@ -110,12 +119,77 @@ fn bench_merge_overhead(spec: &str) {
              100.0 * (lora_ms - dense_ms) / dense_ms.max(1e-9));
 }
 
+/// The int8 frozen-base serving table: merged dense f32 vs int8-packed
+/// base — resident bytes, decode speed, and worst-case logit deviation.
+/// Returns the JSON rows for the `--json` report.
+fn bench_quantized_base(spec: &str) -> Vec<Json> {
+    let Some((man, store, _)) = lora_setup(spec) else {
+        return Vec::new();
+    };
+    let vocab = man.config.vocab;
+    let merged = merged_full_store(&man, &store).unwrap();
+    let dense = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    println!("\n-- {spec}: int8 frozen base (QLoRA-style serving) --");
+    let ctx = prompt(vocab, 48);
+    let n_new = 16;
+    let mut rows = Vec::new();
+    let f32_ms = cached_ms_per_tok(&dense, &merged, &ctx, n_new);
+    let f32_bytes = 4 * merged.layout.total;
+    for dtype in [DType::Bf16, DType::I8] {
+        let packed = PackedStore::quantize_base(&merged, dtype);
+        let (bp, bf) = packed.base_bytes();
+        let q_ms = cached_ms_per_tok(&dense, &packed, &ctx, n_new);
+        // worst-case logit deviation vs the f32 reference at the last
+        // prompt position
+        let mut c1 = dense.new_cache(1, ctx.len() + 1);
+        let l_ref = dense.prefill(&merged, &mut c1, 0, &ctx).unwrap();
+        let mut c2 = dense.new_cache(1, ctx.len() + 1);
+        let l_q = dense.prefill(&packed, &mut c2, 0, &ctx).unwrap();
+        let max_abs = l_ref.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let max_diff = l_ref
+            .iter()
+            .zip(&l_q)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        println!("   {:<5} base {:>9}B (f32 {:>9}B, {:.2}x)  \
+                  {q_ms:.3}ms/tok (f32 {f32_ms:.3})  max|Δlogit| \
+                  {max_diff:.4} (|logit|max {max_abs:.2})",
+                 dtype.name(), bp, bf, bf as f64 / bp.max(1) as f64);
+        rows.push(Json::obj(vec![
+            ("spec", Json::str(spec)),
+            ("frozen_base", Json::str(dtype.name())),
+            ("base_bytes", Json::num(bp as f64)),
+            ("base_bytes_f32", Json::num(bf as f64)),
+            ("total_bytes", Json::num(packed.resident_bytes() as f64)),
+            ("total_bytes_f32", Json::num(f32_bytes as f64)),
+            ("ms_per_tok", Json::num(q_ms)),
+            ("ms_per_tok_f32", Json::num(f32_ms)),
+            ("max_logit_diff", Json::num(max_diff as f64)),
+            ("max_logit_abs", Json::num(max_abs as f64)),
+        ]));
+    }
+    rows
+}
+
 fn main() {
     switchlora::util::logging::init();
+    let args = switchlora::cli::Args::parse(std::env::args().skip(1));
+    let json_path = args.get("json").map(PathBuf::from);
+    if json_path.is_some() {
+        switchlora::bench::record_results();
+    }
+    let mut quant_rows = Vec::new();
     for spec in ["tiny", "s1m"] {
         bench_cached_vs_uncached(spec);
         bench_prefill(spec);
         bench_merge_overhead(spec);
+        quant_rows.extend(bench_quantized_base(spec));
+    }
+    if let Some(path) = json_path {
+        switchlora::bench::write_json(&path, "bench_infer", vec![
+            ("quantized_base", Json::Arr(quant_rows)),
+        ])
+        .expect("writing bench json");
+        println!("json report: {}", path.display());
     }
     println!("\nbench_infer complete");
 }

@@ -1,24 +1,34 @@
 //! Micro-benchmarks of the coordinator hot paths (`harness = false`):
 //! switch op, freeze-mask application, ring all-reduce, host vs fused-HLO
-//! Adam, SVD (the GaLore per-refresh cost), literal marshaling, and the
+//! Adam, SVD (the GaLore per-refresh cost), literal marshaling, the
 //! kernel pool's thread-scaling table (1/2/4/8 threads ×
-//! matmul/attention/full training step).
+//! matmul/attention/full training step), and the precision layer
+//! (packed-RHS matmuls; memory/comm tables per dtype).
+//!
+//! `--json <path>` writes a machine-readable report (the committed
+//! `BENCH_kernels.json` accumulates the perf trajectory).
 //!
 //! These are the L3 profile the §Perf iteration worked from.
 
+use std::path::PathBuf;
+
 use switchlora::bench::{bench, bench_budget};
-use switchlora::coordinator::data_parallel::{ring_all_reduce, CommLedger};
+use switchlora::coordinator::data_parallel::{expected_ring_bytes,
+                                             ring_all_reduce, CommLedger};
 use switchlora::coordinator::trainer::default_artifacts_dir;
 use switchlora::kernels;
 use switchlora::model::init::{init_store, InitMode};
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::model::packed::PackedStore;
 use switchlora::optim::adam::{host_step, AdamState};
 use switchlora::optim::AdamHyper;
 use switchlora::runtime::{Engine, ModelRuntime};
 use switchlora::switchlora::schedule::SwitchSchedule;
 use switchlora::switchlora::switcher::SwitchLora;
+use switchlora::tensor::dtype::{DType, PackedBuf};
 use switchlora::tensor::linalg::svd;
 use switchlora::tensor::Tensor;
+use switchlora::util::json::Json;
 use switchlora::util::rng::Rng;
 
 fn bench_switch_op() {
@@ -60,7 +70,7 @@ fn bench_ring() {
         let mut grads = grads0.clone();
         let r = bench(&format!("ring w={w} n={n}"), 1, 10, || {
             grads.clone_from(&grads0);
-            ring_all_reduce(&mut grads, &mut ledger);
+            ring_all_reduce(&mut grads, &mut ledger, DType::F32);
         });
         let gbps = (ledger.bytes_per_round() / 1e9)
             / (r.mean_ms / 1e3);
@@ -206,8 +216,91 @@ fn bench_thread_scaling(engine: &mut Engine) {
     kernels::set_threads(prev_threads);
 }
 
+/// Packed-RHS matmul cost per dtype: the dequant-on-load price of
+/// serving (or training) with bf16/int8 base weights, at an s1m-shaped
+/// linear.
+fn bench_packed_matmul() {
+    println!("\n-- packed-RHS addmm_nt (s1m linear, 1024x512x512) --");
+    let mut rng = Rng::new(13);
+    let (rows, kd, m) = (1024usize, 512usize, 512usize);
+    let x: Vec<f32> = (0..rows * kd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let w: Vec<f32> = (0..m * kd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let mut y = vec![0.0f32; rows * m];
+    for dtype in [DType::F32, DType::Bf16, DType::I8] {
+        let packed = PackedBuf::pack(&w, m, kd, dtype);
+        let r = bench(&format!("addmm_nt_packed {dtype}"), 2, 15, || {
+            y.fill(0.0);
+            kernels::addmm_nt_packed(&mut y, &x, packed.view(), rows, kd,
+                                     m);
+        });
+        println!("{}   (resident {} KB)", r.row(),
+                 packed.resident_bytes() / 1024);
+    }
+}
+
+/// Measured resident model bytes per frozen-base dtype (the
+/// `--quantize-base` serving claim) for each available spec.
+fn precision_memory_table() -> Json {
+    let mut rows = Vec::new();
+    for spec in ["tiny", "s1m"] {
+        let Ok(man) = Manifest::for_spec(&default_artifacts_dir(), spec)
+        else { continue };
+        let Ok(store) = switchlora::model::init::seeded_store(
+            &man, Variant::Lora, 0)
+        else { continue };
+        for dtype in [DType::F32, DType::Bf16, DType::I8] {
+            let packed = PackedStore::quantize_base(&store, dtype);
+            let (bp, bf) = packed.base_bytes();
+            rows.push(Json::obj(vec![
+                ("spec", Json::str(spec)),
+                ("frozen_base", Json::str(dtype.name())),
+                ("base_bytes", Json::num(bp as f64)),
+                ("base_bytes_f32", Json::num(bf as f64)),
+                ("total_bytes", Json::num(packed.resident_bytes()
+                                          as f64)),
+            ]));
+        }
+    }
+    Json::Arr(rows)
+}
+
+/// Ring all-reduce bytes per step at each wire dtype (exact, from the
+/// implementation's own chunk accounting) for lora vs full trainable
+/// vectors.
+fn precision_comm_table() -> Json {
+    let mut rows = Vec::new();
+    for spec in ["tiny", "s1m"] {
+        let Ok(man) = Manifest::for_spec(&default_artifacts_dir(), spec)
+        else { continue };
+        for (variant, padded) in [("lora", man.adam_padded_lora),
+                                  ("full", man.adam_padded_full)] {
+            for wire in [DType::F32, DType::Bf16] {
+                for w in [2usize, 4] {
+                    rows.push(Json::obj(vec![
+                        ("spec", Json::str(spec)),
+                        ("variant", Json::str(variant)),
+                        ("wire", Json::str(wire.name())),
+                        ("workers", Json::num(w as f64)),
+                        ("ring_bytes_per_step",
+                         Json::num(expected_ring_bytes(padded, w, wire)
+                                   as f64)),
+                    ]));
+                }
+            }
+        }
+    }
+    Json::Arr(rows)
+}
+
 fn main() {
     switchlora::util::logging::init();
+    let args = switchlora::cli::Args::parse(std::env::args().skip(1));
+    let json_path = args.get("json").map(PathBuf::from);
+    if json_path.is_some() {
+        switchlora::bench::record_results();
+    }
     let mut engine = Engine::cpu().expect("engine");
     bench_switch_op();
     bench_ring();
@@ -215,5 +308,14 @@ fn main() {
     bench_svd();
     bench_exec(&mut engine);
     bench_thread_scaling(&mut engine);
+    bench_packed_matmul();
+    if let Some(path) = json_path {
+        switchlora::bench::write_json(&path, "bench_micro", vec![
+            ("precision_memory", precision_memory_table()),
+            ("precision_comm", precision_comm_table()),
+        ])
+        .expect("writing bench json");
+        println!("json report: {}", path.display());
+    }
     println!("\nbench_micro complete");
 }

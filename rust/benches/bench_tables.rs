@@ -123,20 +123,23 @@ fn appendix_f() {
              human_bytes(an::dp_comm_bytes_per_step(
                  an::lora_trainable_params(&c, 512), 8)),
              100.0 * an::comm_saving_fraction(&c, 512));
-    // measured ring volume matches the closed form
+    // measured ring volume matches the closed form, at both wire dtypes
     use switchlora::coordinator::data_parallel::{expected_ring_bytes,
                                                  ring_all_reduce,
                                                  CommLedger};
+    use switchlora::tensor::dtype::DType;
     let n = 100_000;
     for w in [2usize, 4, 8] {
-        let mut grads: Vec<Vec<f32>> =
-            (0..w).map(|i| vec![i as f32; n]).collect();
-        let mut ledger = CommLedger::default();
-        let moved = ring_all_reduce(&mut grads, &mut ledger);
-        println!("ring w={w}: measured {} vs closed-form {} ({})",
-                 human_bytes(moved), human_bytes(expected_ring_bytes(n, w)),
-                 if moved == expected_ring_bytes(n, w) { "exact" }
-                 else { "MISMATCH" });
+        for wire in [DType::F32, DType::Bf16] {
+            let mut grads: Vec<Vec<f32>> =
+                (0..w).map(|i| vec![i as f32; n]).collect();
+            let mut ledger = CommLedger::default();
+            let moved = ring_all_reduce(&mut grads, &mut ledger, wire);
+            let want = expected_ring_bytes(n, w, wire);
+            println!("ring w={w} {}: measured {} vs closed-form {} ({})",
+                     wire, human_bytes(moved), human_bytes(want),
+                     if moved == want { "exact" } else { "MISMATCH" });
+        }
     }
 }
 

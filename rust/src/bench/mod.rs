@@ -2,8 +2,56 @@
 //!
 //! `cargo bench` targets use `harness = false` binaries built on this:
 //! warm-up, repeated timed runs, mean/p50/p95 + throughput reporting.
+//!
+//! Pass `--json <path>` to a bench binary to also write a
+//! machine-readable report (schema `switchlora-bench-v1`): every
+//! [`BenchResult`] the run produced plus whatever extra tables the
+//! binary attaches (e.g. the precision memory/comm tables).  The
+//! committed `BENCH_kernels.json` / `BENCH_infer.json` at the repo root
+//! accumulate the perf trajectory across PRs.
 
+use std::path::Path;
+use std::sync::Mutex;
 use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// When enabled (`record_results`), every `bench`/`bench_budget` call
+/// also appends its result here for the `--json` report.
+static SINK: Mutex<Option<Vec<BenchResult>>> = Mutex::new(None);
+
+/// Start recording every bench result for a later [`write_json`].
+pub fn record_results() {
+    *SINK.lock().unwrap_or_else(|e| e.into_inner()) = Some(Vec::new());
+}
+
+fn record(r: &BenchResult) {
+    if let Some(v) =
+        SINK.lock().unwrap_or_else(|e| e.into_inner()).as_mut()
+    {
+        v.push(r.clone());
+    }
+}
+
+/// Write the recorded results plus `tables` as a JSON report.
+pub fn write_json(path: &Path, bench: &str, tables: Vec<(&str, Json)>)
+    -> anyhow::Result<()> {
+    let results = SINK
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .take()
+        .unwrap_or_default();
+    let mut pairs = vec![
+        ("schema", Json::str("switchlora-bench-v1")),
+        ("bench", Json::str(bench)),
+        ("threads", Json::num(crate::kernels::threads() as f64)),
+        ("results",
+         Json::Arr(results.iter().map(BenchResult::to_json).collect())),
+    ];
+    pairs.extend(tables);
+    std::fs::write(path, Json::obj(pairs).to_string() + "\n")?;
+    Ok(())
+}
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -16,6 +64,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// JSON row for the `--json` report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("min_ms", Json::num(self.min_ms)),
+        ])
+    }
+
     pub fn row(&self) -> String {
         format!(
             "{:<44} {:>7} it  mean {:>9.3} ms  p50 {:>9.3} ms  \
@@ -41,14 +101,16 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
     let pct = |p: f64| samples[(p * (samples.len() - 1) as f64) as usize];
-    BenchResult {
+    let result = BenchResult {
         name: name.to_string(),
         iters,
         mean_ms: mean,
         p50_ms: pct(0.50),
         p95_ms: pct(0.95),
         min_ms: samples[0],
-    }
+    };
+    record(&result);
+    result
 }
 
 /// Adaptive variant: time-boxed to roughly `budget_ms` of measurement.

@@ -3,35 +3,52 @@
 //! stores with different layouts (e.g. LoRA pre-train → merged full
 //! fine-tune) can exchange weights.
 //!
-//! Format v2 (little-endian, magic `SWLORA2`):
+//! Format v3 (little-endian, magic `SWLORA3`) tags every tensor with a
+//! storage dtype:
 //! ```text
-//! magic "SWLORA2\0" | config-name len+bytes | n_params
-//! per param: name len+bytes | numel u64 | f32 data
-//! opt flag u8;     if 1: n u64 | m | v | s      (f32 arrays of length n)
+//! magic "SWLORA3\0" | config-name len+bytes | n_params
+//! per param: name len+bytes | dtype u8 | numel u64 | payload
+//!            (f32: 4B/elem; bf16: 2B/elem; int8: 1B/elem codes,
+//!             then rows u64 + rows f32 scales)
+//! opt flag u8;     if 1: moments dtype u8 | m | v (at that width) |
+//!                  s (f32s)
 //! method flag u8;  if 1: name | version u32 | payload len u64 + bytes
 //! trainer flag u8; if 1: len u64 + `util::bytes` payload of
 //!                  (next_step u64 | rng | ema f64 + primed u8 |
 //!                   comm bytes + rounds u64)
 //! ```
 //!
+//! Master weight checkpoints are written f32 (resume must round-trip
+//! bitwise); the dtype tags carry `--moments-dtype bf16` Adam moments
+//! at 2 bytes each and let the loader accept bf16/int8-tagged tensors
+//! from packed exports.  Loading dequantizes everything to f32.
+//!
 //! The method/trainer sections make a run resumable mid-schedule
 //! (`--ckpt-every` / `--resume`): the method payload is whatever the
 //! `TrainingMethod::save_state` hook wrote (freeze timers, candidate
 //! pools, projection state, ...), and the trainer section carries the
 //! step clock, the loss EMA, the leader RNG and the comm ledger.
-//! Version-1 files (magic `SWLORA1`, weights + optimizer only) still
-//! load; their method/trainer sections read as absent.
+//! Version-2 files (magic `SWLORA2`, untagged f32 tensors) and
+//! version-1 files (`SWLORA1`, weights + optimizer only) still load.
+//!
+//! Reads are hardened: the file is slurped once (its real size bounds
+//! every allocation) and each declared length/numel is validated
+//! against the bytes actually remaining *before* any buffer is
+//! allocated, so a corrupt or truncated header fails with a clear
+//! error instead of an OOM-sized `Vec`.
 
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::model::layout::ParamStore;
 use crate::optim::adam::AdamState;
+use crate::tensor::dtype::{bf16_to_f32, f32_to_bf16, DType};
 use crate::util::bytes;
 use crate::util::rng::RngState;
 
+const MAGIC_V3: &[u8; 8] = b"SWLORA3\0";
 const MAGIC_V2: &[u8; 8] = b"SWLORA2\0";
 const MAGIC_V1: &[u8; 8] = b"SWLORA1\0";
 
@@ -41,29 +58,9 @@ fn write_str(w: &mut impl Write, s: &str) -> Result<()> {
     Ok(())
 }
 
-fn read_str(r: &mut impl Read) -> Result<String> {
-    let mut len = [0u8; 4];
-    r.read_exact(&mut len)?;
-    let mut buf = vec![0u8; u32::from_le_bytes(len) as usize];
-    r.read_exact(&mut buf)?;
-    String::from_utf8(buf).context("non-utf8 string in checkpoint")
-}
-
 fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
     w.write_all(&v.to_le_bytes())?;
     Ok(())
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn read_u8(r: &mut impl Read) -> Result<u8> {
-    let mut b = [0u8; 1];
-    r.read_exact(&mut b)?;
-    Ok(b[0])
 }
 
 fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
@@ -77,14 +74,128 @@ fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     Ok(())
 }
 
-fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
-    let n = read_u64(r)? as usize;
-    let mut buf = vec![0u8; n * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+/// Length-prefixed bf16 array: values are converted f32→bf16 on write
+/// (exact for on-grid values, e.g. `--moments-dtype bf16` states).
+fn write_bf16s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let mut buf = Vec::with_capacity(xs.len() * 2);
+    for x in xs {
+        buf.extend_from_slice(&f32_to_bf16(*x).to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Bounds-checked cursor over a fully-read checkpoint file.  Every
+/// length or numel the header declares is validated against the bytes
+/// actually remaining *before* any allocation happens, so corruption
+/// surfaces as a clean error, never as an OOM-sized `Vec`.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        ensure!(n <= self.remaining(),
+                "corrupt or truncated checkpoint: {what} needs {n} more \
+                 bytes but only {} remain", self.remaining());
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn str(&mut self, what: &str) -> Result<String> {
+        let len = self.u32(what)? as usize;
+        let b = self.take(len, what)?;
+        String::from_utf8(b.to_vec())
+            .context("non-utf8 string in checkpoint")
+    }
+
+    /// Declared element count, validated against the remaining bytes at
+    /// `width` per element before anything is allocated.
+    fn checked_len(&self, n: u64, width: usize, what: &str)
+        -> Result<usize> {
+        let n = usize::try_from(n)
+            .map_err(|_| anyhow::anyhow!("{what}: absurd length {n}"))?;
+        let bytes = n.checked_mul(width).ok_or_else(|| {
+            anyhow::anyhow!("{what}: length {n} overflows")
+        })?;
+        ensure!(bytes <= self.remaining(),
+                "corrupt or truncated checkpoint: {what} declares {n} \
+                 elements ({bytes} bytes) but only {} bytes remain",
+                self.remaining());
+        Ok(n)
+    }
+
+    fn f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u64(what)?;
+        let n = self.checked_len(n, 4, what)?;
+        let b = self.take(n * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// bf16 payload, widened to f32 (exact).
+    fn bf16s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u64(what)?;
+        let n = self.checked_len(n, 2, what)?;
+        let b = self.take(n * 2, what)?;
+        Ok(b.chunks_exact(2)
+            .map(|c| bf16_to_f32(u16::from_le_bytes([c[0], c[1]])))
+            .collect())
+    }
+
+    /// int8 payload (codes + per-row scales), dequantized to f32.
+    fn i8s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.u64(what)?;
+        let n = self.checked_len(n, 1, what)?;
+        let codes = self.take(n, what)?.to_vec();
+        let rows = self.u64(what)?;
+        let rows = self.checked_len(rows, 4, what)?;
+        ensure!(rows > 0 && n % rows == 0,
+                "corrupt checkpoint: {what} has {n} int8 codes over \
+                 {rows} rows");
+        let scales = self.f32s_exact(rows, what)?;
+        let cols = n / rows;
+        let mut out = Vec::with_capacity(n);
+        for (r, chunk) in codes.chunks_exact(cols).enumerate() {
+            let sc = scales[r];
+            out.extend(chunk.iter().map(|&c| sc * c as i8 as f32));
+        }
+        Ok(out)
+    }
+
+    /// `n` raw f32s with no length prefix (int8 scale arrays).
+    fn f32s_exact(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let b = self.take(n * 4, what)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
 }
 
 /// The resumable state of a training method, as written by
@@ -137,18 +248,32 @@ pub fn save_full(path: &Path, config_name: &str, store: &ParamStore,
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC_V2)?;
+    w.write_all(MAGIC_V3)?;
     write_str(&mut w, config_name)?;
     write_u64(&mut w, store.layout.params.len() as u64)?;
     for p in &store.layout.params {
         write_str(&mut w, &p.name)?;
+        // master weights are checkpointed f32: resume must round-trip
+        // the authoritative parameters bitwise
+        w.write_all(&[DType::F32.tag()])?;
         write_f32s(&mut w, &store.data[p.offset..p.offset + p.numel])?;
     }
     match opt {
         Some(o) => {
             w.write_all(&[1u8])?;
-            write_f32s(&mut w, &o.m)?;
-            write_f32s(&mut w, &o.v)?;
+            w.write_all(&[o.moments_dtype.tag()])?;
+            match o.moments_dtype {
+                // bf16 moments live on the bf16 grid, so the 2-byte
+                // payload is exact — half the optimizer footprint
+                DType::Bf16 => {
+                    write_bf16s(&mut w, &o.m)?;
+                    write_bf16s(&mut w, &o.v)?;
+                }
+                _ => {
+                    write_f32s(&mut w, &o.m)?;
+                    write_f32s(&mut w, &o.v)?;
+                }
+            }
             write_f32s(&mut w, &o.s)?;
         }
         None => w.write_all(&[0u8])?,
@@ -187,59 +312,86 @@ pub struct Checkpoint {
     pub config_name: String,
     pub params: Vec<(String, Vec<f32>)>,
     pub opt: Option<AdamState>,
-    /// resumable method state (v2 mid-run checkpoints only)
+    /// resumable method state (v2+ mid-run checkpoints only)
     pub method: Option<MethodState>,
-    /// resumable trainer state (v2 mid-run checkpoints only)
+    /// resumable trainer state (v2+ mid-run checkpoints only)
     pub trainer: Option<TrainerState>,
 }
 
 pub fn load(path: &Path) -> Result<Checkpoint> {
-    let f = std::fs::File::open(path)
+    // slurp once: the file's real size bounds every later allocation
+    let buf = std::fs::read(path)
         .with_context(|| format!("opening {}", path.display()))?;
-    let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    let v2 = &magic == MAGIC_V2;
-    if !v2 && &magic != MAGIC_V1 {
+    if buf.len() < 8 {
         bail!("{} is not a switchlora checkpoint", path.display());
     }
-    let config_name = read_str(&mut r)?;
-    let n = read_u64(&mut r)? as usize;
+    let mut magic = [0u8; 8];
+    magic.copy_from_slice(&buf[..8]);
+    let version: u32 = if &magic == MAGIC_V3 {
+        3
+    } else if &magic == MAGIC_V2 {
+        2
+    } else if &magic == MAGIC_V1 {
+        1
+    } else {
+        bail!("{} is not a switchlora checkpoint", path.display());
+    };
+    let mut r = Cur::new(&buf[8..]);
+    let config_name = r.str("config name")?;
+    let n = r.u64("param count")? as usize;
+    // every param record costs >= 13 bytes; reject absurd counts before
+    // reserving anything
+    ensure!(n <= r.remaining() / 13 + 1,
+            "corrupt checkpoint: {n} params declared in {} bytes",
+            r.remaining());
     let mut params = Vec::with_capacity(n);
     for _ in 0..n {
-        let name = read_str(&mut r)?;
-        let data = read_f32s(&mut r)?;
+        let name = r.str("param name")?;
+        let data = if version >= 3 {
+            let dtype = DType::from_tag(r.u8("param dtype")?)?;
+            match dtype {
+                DType::F32 => r.f32s(&name)?,
+                DType::Bf16 => r.bf16s(&name)?,
+                DType::I8 => r.i8s(&name)?,
+            }
+        } else {
+            r.f32s(&name)?
+        };
         params.push((name, data));
     }
-    let opt = if read_u8(&mut r)? == 1 {
-        let m = read_f32s(&mut r)?;
-        let v = read_f32s(&mut r)?;
-        let s = read_f32s(&mut r)?;
-        Some(AdamState { m, v, s })
+    let opt = if r.u8("optimizer flag")? == 1 {
+        let dtype = if version >= 3 {
+            DType::from_tag(r.u8("moments dtype")?)?
+        } else {
+            DType::F32
+        };
+        let (m, v) = match dtype {
+            DType::F32 => (r.f32s("opt.m")?, r.f32s("opt.v")?),
+            DType::Bf16 => (r.bf16s("opt.m")?, r.bf16s("opt.v")?),
+            DType::I8 => bail!("int8 Adam moments are not a thing this \
+                                format supports"),
+        };
+        let s = r.f32s("opt.s")?;
+        Some(AdamState::from_parts(m, v, s, dtype))
     } else {
         None
     };
-    let (method, trainer) = if v2 {
-        let method = if read_u8(&mut r)? == 1 {
-            let name = read_str(&mut r)?;
-            let mut vb = [0u8; 4];
-            r.read_exact(&mut vb)?;
-            let len = read_u64(&mut r)? as usize;
-            let mut payload = vec![0u8; len];
-            r.read_exact(&mut payload)?;
-            Some(MethodState {
-                name,
-                version: u32::from_le_bytes(vb),
-                payload,
-            })
+    let (method, trainer) = if version >= 2 {
+        let method = if r.u8("method flag")? == 1 {
+            let name = r.str("method name")?;
+            let ver = r.u32("method version")?;
+            let len = r.u64("method payload")?;
+            let len = r.checked_len(len, 1, "method payload")?;
+            let payload = r.take(len, "method payload")?.to_vec();
+            Some(MethodState { name, version: ver, payload })
         } else {
             None
         };
-        let trainer = if read_u8(&mut r)? == 1 {
-            let len = read_u64(&mut r)? as usize;
-            let mut payload = vec![0u8; len];
-            r.read_exact(&mut payload)?;
-            let mut b = bytes::ByteReader::new(&payload);
+        let trainer = if r.u8("trainer flag")? == 1 {
+            let len = r.u64("trainer payload")?;
+            let len = r.checked_len(len, 1, "trainer payload")?;
+            let payload = r.take(len, "trainer payload")?;
+            let mut b = bytes::ByteReader::new(payload);
             let ts = TrainerState {
                 next_step: b.u64()?,
                 rng: b.rng()?,
@@ -470,6 +622,160 @@ mod tests {
         let ck2 = Checkpoint { config_name: "x".into(), params: vec![],
                                opt: None, method: None, trainer: None };
         assert!(ck2.opt_validated(10, 16).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_legacy_v2_files() {
+        // hand-write a v2 (SWLORA2) file: untagged f32 params, f32
+        // optimizer arrays, empty method/trainer sections
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt_v2rd");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old2.ckpt");
+        let store = toy_store(4.0);
+        let opt = AdamState::new(10, 12);
+        {
+            let f = std::fs::File::create(&path).unwrap();
+            let mut w = BufWriter::new(f);
+            w.write_all(b"SWLORA2\0").unwrap();
+            write_str(&mut w, "tiny").unwrap();
+            write_u64(&mut w, store.layout.params.len() as u64).unwrap();
+            for p in &store.layout.params {
+                write_str(&mut w, &p.name).unwrap();
+                write_f32s(&mut w,
+                           &store.data[p.offset..p.offset + p.numel])
+                    .unwrap();
+            }
+            w.write_all(&[1u8]).unwrap();
+            write_f32s(&mut w, &opt.m).unwrap();
+            write_f32s(&mut w, &opt.v).unwrap();
+            write_f32s(&mut w, &opt.s).unwrap();
+            w.write_all(&[0u8]).unwrap(); // no method state
+            w.write_all(&[0u8]).unwrap(); // no trainer state
+            w.flush().unwrap();
+        }
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.config_name, "tiny");
+        let o = ck.opt.as_ref().unwrap();
+        assert_eq!(o.moments_dtype, crate::tensor::dtype::DType::F32);
+        assert_eq!(o.m, opt.m);
+        let mut dst = toy_store(0.0);
+        assert_eq!(ck.restore_into(&mut dst).loaded, 2);
+        assert_eq!(dst.data, store.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bf16_moments_roundtrip_exactly_and_halve_the_payload() {
+        use crate::tensor::dtype::{round_through, DType};
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt_bf16m");
+        let p16 = dir.join("m16.ckpt");
+        let p32 = dir.join("m32.ckpt");
+        let store = toy_store(1.0);
+        let mut o16 = AdamState::with_moments(10, 16, DType::Bf16);
+        let mut o32 = AdamState::new(10, 16);
+        for i in 0..16 {
+            let x = 0.321 * (i as f32 - 7.5);
+            // host_step keeps bf16 moments on-grid; mirror that here
+            o16.m[i] = round_through(x, DType::Bf16);
+            o16.v[i] = round_through(x * x, DType::Bf16);
+            o32.m[i] = x;
+            o32.v[i] = x * x;
+        }
+        save(&p16, "t", &store, Some(&o16)).unwrap();
+        save(&p32, "t", &store, Some(&o32)).unwrap();
+        let got = load(&p16).unwrap().opt.unwrap();
+        assert_eq!(got.moments_dtype, DType::Bf16);
+        // on-grid values survive the 2-byte payload bit for bit
+        assert_eq!(got.m, o16.m);
+        assert_eq!(got.v, o16.v);
+        assert_eq!(got.s, o16.s);
+        // and the file really is smaller: 2 arrays × 16 elems × 2 bytes
+        let sz16 = std::fs::metadata(&p16).unwrap().len();
+        let sz32 = std::fs::metadata(&p32).unwrap().len();
+        assert_eq!(sz32 - sz16, 2 * 16 * 2, "{sz32} vs {sz16}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v3_reads_bf16_and_int8_tagged_params() {
+        use crate::tensor::dtype::{DType, PackedBuf};
+        // hand-write a v3 file with one bf16 and one int8 param — the
+        // dtype-tagged payloads a packed export would carry
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt_v3t");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tagged.ckpt");
+        let wdata: Vec<f32> = (0..6).map(|i| 0.25 * i as f32 - 0.7)
+            .collect();
+        let ndata = [1.0f32, -2.5, 0.125, 3.0];
+        {
+            let f = std::fs::File::create(&path).unwrap();
+            let mut w = BufWriter::new(f);
+            w.write_all(b"SWLORA3\0").unwrap();
+            write_str(&mut w, "tiny").unwrap();
+            write_u64(&mut w, 2).unwrap();
+            // "w": int8, 2 rows x 3 cols
+            write_str(&mut w, "w").unwrap();
+            w.write_all(&[DType::I8.tag()]).unwrap();
+            let packed = PackedBuf::pack(&wdata, 2, 3, DType::I8);
+            let PackedBuf::I8 { q, scales, .. } = &packed else {
+                unreachable!()
+            };
+            write_u64(&mut w, q.len() as u64).unwrap();
+            for c in q {
+                w.write_all(&(*c as u8).to_le_bytes()).unwrap();
+            }
+            write_u64(&mut w, scales.len() as u64).unwrap();
+            for sc in scales {
+                w.write_all(&sc.to_le_bytes()).unwrap();
+            }
+            // "n": bf16
+            write_str(&mut w, "n").unwrap();
+            w.write_all(&[DType::Bf16.tag()]).unwrap();
+            write_bf16s(&mut w, &ndata).unwrap();
+            w.write_all(&[0u8]).unwrap(); // no optimizer
+            w.write_all(&[0u8]).unwrap(); // no method
+            w.write_all(&[0u8]).unwrap(); // no trainer
+            w.flush().unwrap();
+        }
+        let ck = load(&path).unwrap();
+        let packed = PackedBuf::pack(&wdata, 2, 3, DType::I8);
+        assert_eq!(ck.params[0].1, packed.to_f32(), "int8 dequant");
+        assert_eq!(ck.params[1].1, ndata, "bf16 (on-grid) exact");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_and_corrupt_headers_fail_cleanly() {
+        let dir = std::env::temp_dir().join("switchlora_test_ckpt_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let store = toy_store(2.0);
+        save(&path, "tiny", &store, Some(&AdamState::new(10, 16)))
+            .unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // truncation anywhere inside the file errors instead of OOMing
+        for frac in [0.3, 0.6, 0.95] {
+            let cut = (full.len() as f64 * frac) as usize;
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let err = load(&path).unwrap_err().to_string();
+            assert!(err.contains("truncated") || err.contains("corrupt")
+                        || err.contains("checkpoint"),
+                    "cut at {cut}: {err}");
+        }
+        // a header declaring an OOM-sized array must fail the length
+        // validation (declared bytes > the whole remaining file)
+        let mut evil = full.clone();
+        // first param record: after magic(8) + "tiny"(4+4) + count(8)
+        // comes name "w" (4+1) + dtype(1), then the u64 numel — poison it
+        let numel_at = 8 + 8 + 8 + 5 + 1;
+        evil[numel_at..numel_at + 8]
+            .copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &evil).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("overflows") || err.contains("declares")
+                    || err.contains("absurd"),
+                "poisoned numel: {err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

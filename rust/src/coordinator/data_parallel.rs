@@ -17,8 +17,16 @@
 //! finish, so losses and the byte ledger are bitwise identical to the
 //! interleaved schedule (`rust/tests/determinism_threads.rs` pins this).
 //!
-//! Byte accounting uses bf16-equivalents (2 bytes/element), matching the
-//! paper's bf16 gradient wire format.
+//! **Wire dtype.**  The ring is parameterized by the payload dtype
+//! (`--comm-dtype`): with `f32` every element crosses a link at 4 bytes
+//! and values are untouched (the bitwise-legacy path); with `bf16` each
+//! payload is rounded through bf16 before it crosses (round-to-nearest-
+//! even, the paper's gradient wire format) and the ledger counts 2
+//! bytes/element — exactly half the f32 volume, which the comm tests
+//! pin down.  The ledger, `expected_ring_bytes` and the CSV/eval-log
+//! comm columns all report *true* bytes at the configured width.
+
+use crate::tensor::dtype::{round_through, DType};
 
 /// Per-step communication ledger.
 #[derive(Clone, Copy, Debug, Default)]
@@ -41,9 +49,14 @@ impl CommLedger {
 
 /// In-place ring all-reduce (average) across `grads` (one vector per
 /// worker, all the same length).  After the call every worker holds the
-/// element-wise mean.  Returns bytes moved (2 bytes/element accounting).
-pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
-    -> u64 {
+/// element-wise mean.  `wire` is the link dtype: `F32` moves exact
+/// values at 4 bytes/element; `Bf16` rounds every payload element
+/// through bf16 as it crosses a link and counts 2 bytes/element.
+/// Returns bytes moved at the wire width.
+pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger,
+                       wire: DType) -> u64 {
+    assert!(matches!(wire, DType::F32 | DType::Bf16),
+            "ring wire dtype must be f32 or bf16");
     let w = grads.len();
     assert!(w > 0);
     let n = grads[0].len();
@@ -52,6 +65,14 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
         ledger.rounds += 1;
         return 0;
     }
+    let width = wire.bytes() as u64;
+    // a payload element as it arrives on the other side of a link
+    let onto_wire = |xs: &[f32]| -> Vec<f32> {
+        match wire {
+            DType::F32 => xs.to_vec(),
+            _ => xs.iter().map(|&x| round_through(x, wire)).collect(),
+        }
+    };
     // chunk boundaries: chunk c = [starts[c], starts[c+1])
     let starts: Vec<usize> = (0..=w).map(|c| c * n / w).collect();
     let mut moved = 0u64;
@@ -63,8 +84,8 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
         for i in 0..w {
             let c = (i + w - t) % w;
             let (s, e) = (starts[c], starts[c + 1]);
-            sends.push(((i + 1) % w, c, grads[i][s..e].to_vec()));
-            moved += 2 * (e - s) as u64;
+            sends.push(((i + 1) % w, c, onto_wire(&grads[i][s..e])));
+            moved += width * (e - s) as u64;
         }
         for (dst, c, data) in sends {
             let (s, e) = (starts[c], starts[c + 1]);
@@ -75,13 +96,25 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
     }
     // now worker i holds the fully-reduced chunk (i + 1) % w
     // --- phase 2: all-gather ---
+    // the reduced chunk leaves its owner through the wire dtype; round
+    // the owner's local copy the same way (rounding is idempotent), so
+    // every worker ends the all-reduce with identical values — worker
+    // divergence here would silently fork a data-parallel run
+    if !matches!(wire, DType::F32) {
+        for (i, g) in grads.iter_mut().enumerate() {
+            let c = (i + 1) % w;
+            for x in g[starts[c]..starts[c + 1]].iter_mut() {
+                *x = round_through(*x, wire);
+            }
+        }
+    }
     for t in 0..w - 1 {
         let mut sends: Vec<(usize, usize, Vec<f32>)> = Vec::with_capacity(w);
         for i in 0..w {
             let c = (i + 1 + w - t) % w;
             let (s, e) = (starts[c], starts[c + 1]);
-            sends.push(((i + 1) % w, c, grads[i][s..e].to_vec()));
-            moved += 2 * (e - s) as u64;
+            sends.push(((i + 1) % w, c, onto_wire(&grads[i][s..e])));
+            moved += width * (e - s) as u64;
         }
         for (dst, c, data) in sends {
             let (s, e) = (starts[c], starts[c + 1]);
@@ -100,20 +133,22 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger)
     moved
 }
 
-/// Theoretical ring volume: 2·(w−1)/w of the buffer per worker, summed.
-/// Chunks are n/w ± 1, so the accounting mirrors the implementation's
-/// exact chunk boundaries instead of approximating.
-pub fn expected_ring_bytes(n_elems: usize, w: usize) -> u64 {
+/// Theoretical ring volume at a wire dtype: 2·(w−1)/w of the buffer per
+/// worker, summed, at `wire.bytes()` per element.  Chunks are n/w ± 1,
+/// so the accounting mirrors the implementation's exact chunk
+/// boundaries instead of approximating.
+pub fn expected_ring_bytes(n_elems: usize, w: usize, wire: DType) -> u64 {
     if w <= 1 {
         return 0;
     }
+    let width = wire.bytes() as u64;
     let starts: Vec<usize> = (0..=w).map(|c| c * n_elems / w).collect();
     // reduce-scatter: (w−1) rounds, every worker sends one chunk per round
     let mut total = 0u64;
     for t in 0..(w - 1) {
         for i in 0..w {
             let c = (i + w - t) % w;
-            total += 2 * (starts[c + 1] - starts[c]) as u64;
+            total += width * (starts[c + 1] - starts[c]) as u64;
         }
     }
     total * 2 // the all-gather phase moves the same volume
@@ -141,7 +176,7 @@ mod tests {
                 })
                 .collect();
             let mut ledger = CommLedger::default();
-            ring_all_reduce(&mut grads, &mut ledger);
+            ring_all_reduce(&mut grads, &mut ledger, DType::F32);
             for (i, g) in grads.iter().enumerate() {
                 for (a, b) in g.iter().zip(&want) {
                     assert!((a - b).abs() < 1e-4,
@@ -156,13 +191,58 @@ mod tests {
         for (w, n) in [(2, 1000), (4, 999), (8, 4096)] {
             let mut grads = make_grads(w, n, 7);
             let mut ledger = CommLedger::default();
-            let moved = ring_all_reduce(&mut grads, &mut ledger);
-            assert_eq!(moved, expected_ring_bytes(n, w));
+            let moved = ring_all_reduce(&mut grads, &mut ledger,
+                                        DType::F32);
+            assert_eq!(moved, expected_ring_bytes(n, w, DType::F32));
             // aggregate volume ≈ 2 phases · (w−1) rounds · w senders ·
-            // (n/w elems) · 2 bytes = 4·(w−1)·n bytes
-            let approx = 4.0 * (w - 1) as f64 * n as f64;
+            // (n/w elems) · 4 bytes = 8·(w−1)·n bytes
+            let approx = 8.0 * (w - 1) as f64 * n as f64;
             assert!((moved as f64 - approx).abs() / approx < 0.05,
                     "w={w}: {moved} vs {approx}");
+        }
+    }
+
+    #[test]
+    fn bf16_wire_moves_exactly_half_the_bytes() {
+        // the --comm-dtype bf16 ledger claim: same ring, same chunking,
+        // half the measured volume — exactly, not approximately
+        for (w, n) in [(2, 1000), (3, 997), (4, 4096), (5, 63)] {
+            let mut a = make_grads(w, n, 11);
+            let mut b = a.clone();
+            let mut ledger = CommLedger::default();
+            let f32_moved = ring_all_reduce(&mut a, &mut ledger,
+                                            DType::F32);
+            let bf16_moved = ring_all_reduce(&mut b, &mut ledger,
+                                             DType::Bf16);
+            assert_eq!(f32_moved, 2 * bf16_moved, "w={w} n={n}");
+            assert_eq!(bf16_moved, expected_ring_bytes(n, w, DType::Bf16));
+            assert_eq!(expected_ring_bytes(n, w, DType::F32),
+                       2 * expected_ring_bytes(n, w, DType::Bf16));
+            assert_eq!(ledger.bytes, f32_moved + bf16_moved);
+        }
+    }
+
+    #[test]
+    fn bf16_wire_still_averages_correctly() {
+        let (w, n) = (4, 257);
+        let mut grads = make_grads(w, n, 5);
+        let want: Vec<f32> = (0..n)
+            .map(|j| grads.iter().map(|g| g[j]).sum::<f32>() / w as f32)
+            .collect();
+        let mut ledger = CommLedger::default();
+        ring_all_reduce(&mut grads, &mut ledger, DType::Bf16);
+        for g in &grads {
+            for (a, b) in g.iter().zip(&want) {
+                // bf16 rounding error scales with the ~N(0,1) summand
+                // magnitudes (not the mean), so the bound needs an
+                // absolute term: measured worst case is ~0.01 here
+                assert!((a - b).abs() <= 0.05 * b.abs() + 0.02,
+                        "{a} vs {b}");
+            }
+        }
+        // all workers agree exactly (the all-gather broadcast wins)
+        for g in &grads[1..] {
+            assert_eq!(g, &grads[0]);
         }
     }
 
@@ -171,7 +251,8 @@ mod tests {
         let mut grads = make_grads(1, 100, 1);
         let before = grads[0].clone();
         let mut ledger = CommLedger::default();
-        assert_eq!(ring_all_reduce(&mut grads, &mut ledger), 0);
+        assert_eq!(ring_all_reduce(&mut grads, &mut ledger, DType::F32),
+                   0);
         assert_eq!(grads[0], before);
         assert_eq!(ledger.rounds, 1);
     }
@@ -183,8 +264,10 @@ mod tests {
         let mut a = make_grads(w, full_n, 2);
         let mut b = make_grads(w, lora_n, 3);
         let mut ledger = CommLedger::default();
-        let full_bytes = ring_all_reduce(&mut a, &mut ledger) as f64;
-        let lora_bytes = ring_all_reduce(&mut b, &mut ledger) as f64;
+        let full_bytes =
+            ring_all_reduce(&mut a, &mut ledger, DType::F32) as f64;
+        let lora_bytes =
+            ring_all_reduce(&mut b, &mut ledger, DType::F32) as f64;
         let ratio = lora_bytes / full_bytes;
         assert!((ratio - 0.46).abs() < 0.01, "ratio {ratio}");
         assert_eq!(ledger.rounds, 2);

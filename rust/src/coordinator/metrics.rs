@@ -9,6 +9,7 @@ use std::path::Path;
 use anyhow::{Context, Result};
 
 use super::data_parallel::CommLedger;
+use crate::tensor::dtype::DType;
 use crate::util::human_bytes;
 
 /// Streaming CSV writer with a fixed header.
@@ -108,12 +109,14 @@ pub fn perplexity(mean_nll: f64) -> f64 {
 
 /// One-line per-step communication summary for run reports and the CLI
 /// — the visible form of the paper's claim that all-reduce traffic is
-/// proportional to trainable parameters.
-pub fn comm_summary(comm: &CommLedger, steps: u64) -> String {
+/// proportional to trainable parameters.  `wire` is the dtype the bytes
+/// were counted at (`--comm-dtype`), so the headline states what moved.
+pub fn comm_summary(comm: &CommLedger, steps: u64, wire: DType) -> String {
     let per_step = if steps == 0 { 0 } else { comm.bytes / steps };
     format!("{}/step measured all-reduce traffic ({} total over {} \
-             rounds)",
-            human_bytes(per_step), human_bytes(comm.bytes), comm.rounds)
+             rounds, {} wire)",
+            human_bytes(per_step), human_bytes(comm.bytes), comm.rounds,
+            wire)
 }
 
 #[cfg(test)]
@@ -184,9 +187,13 @@ mod tests {
     #[test]
     fn comm_summary_reports_per_step_rate() {
         let comm = CommLedger { bytes: 4096 * 100, rounds: 100 };
-        let s = comm_summary(&comm, 100);
+        let s = comm_summary(&comm, 100, DType::F32);
         assert!(s.contains("4.0KB/step"), "{s}");
         assert!(s.contains("100 rounds"), "{s}");
-        assert!(comm_summary(&comm, 0).contains("0B/step"));
+        assert!(s.contains("f32 wire"), "{s}");
+        assert!(comm_summary(&comm, 0, DType::Bf16)
+            .contains("0B/step"));
+        assert!(comm_summary(&comm, 0, DType::Bf16)
+            .contains("bf16 wire"));
     }
 }

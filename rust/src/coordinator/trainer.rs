@@ -43,6 +43,7 @@ use crate::optim::adam::AdamState;
 use crate::optim::schedule::LrSchedule;
 use crate::optim::AdamHyper;
 use crate::runtime::{Engine, ModelRuntime};
+use crate::tensor::dtype::PrecisionPolicy;
 use crate::util::rng::Rng;
 
 pub use crate::methods::Method;
@@ -81,6 +82,10 @@ pub struct TrainConfig {
     /// state and the step clock are restored, then training continues to
     /// `steps` (the config must otherwise match the original run)
     pub resume: Option<PathBuf>,
+    /// precision policy (`--precision` / `--comm-dtype` /
+    /// `--moments-dtype` / `--quantize-base`); the all-f32 default is
+    /// bitwise identical to the pre-precision-layer trainer
+    pub precision: PrecisionPolicy,
 }
 
 impl TrainConfig {
@@ -104,6 +109,7 @@ impl TrainConfig {
             ckpt_every: 0,
             ckpt_path: None,
             resume: None,
+            precision: PrecisionPolicy::default(),
         }
     }
 }
@@ -193,9 +199,14 @@ impl Trainer {
         let mut store = ParamStore::zeros(layout.clone());
         init_store(&mut store, &manifest.linears, mc.rank, cfg.init,
                    &mut rng);
-        let rt = ModelRuntime::load(engine, manifest.clone(), variant)?;
+        if !cfg.precision.is_default() {
+            crate::info!("precision policy: {}", cfg.precision.summary());
+        }
+        let rt = ModelRuntime::load_with(engine, manifest.clone(), variant,
+                                         cfg.precision)?;
         let padded = rt.padded;
-        let mut opt = AdamState::new(layout.n_trainable, padded);
+        let mut opt = AdamState::with_moments(layout.n_trainable, padded,
+                                              cfg.precision.moments);
         let mut base_mask = vec![0.0f32; padded];
         for x in base_mask.iter_mut().take(layout.n_trainable) {
             *x = 1.0;
@@ -292,7 +303,7 @@ impl Trainer {
             // measured all-reduce traffic for THIS step (the ledger is
             // cumulative): what the comm_bytes CSV column logs
             let bytes_before = comm.bytes;
-            ring_all_reduce(&mut grads, &mut comm);
+            ring_all_reduce(&mut grads, &mut comm, cfg.precision.comm);
             let step_comm_bytes = comm.bytes - bytes_before;
             let grad = &grads[0];
 
@@ -381,6 +392,11 @@ impl Trainer {
         if let Some(o) =
             ck.opt_validated(store.layout.n_trainable, padded)?
         {
+            ensure!(o.moments_dtype == self.cfg.precision.moments,
+                    "checkpoint {} keeps Adam moments in {}, but this \
+                     run asked for --moments-dtype {}; resume with the \
+                     original precision flags", path.display(),
+                    o.moments_dtype, self.cfg.precision.moments);
             *opt = o;
         }
         if let Some(ms) = &ck.method {

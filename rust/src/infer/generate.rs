@@ -15,7 +15,7 @@
 use anyhow::{ensure, Result};
 
 use super::sampler::Sampler;
-use crate::model::layout::ParamStore;
+use crate::model::packed::ParamSource;
 use crate::runtime::InferRuntime;
 use crate::util::rng::Rng;
 
@@ -54,15 +54,17 @@ pub struct Generation {
 }
 
 /// Generate continuations for a batch of (possibly ragged) prompts.
-pub fn generate(rt: &dyn InferRuntime, store: &ParamStore,
+/// `params` is any [`ParamSource`]: the master-precision store, or a
+/// quantized `PackedStore` for `--quantize-base` serving.
+pub fn generate(rt: &dyn InferRuntime, params: &dyn ParamSource,
                 prompts: &[Vec<i32>], cfg: &GenConfig)
     -> Result<Generation> {
-    generate_stream(rt, store, prompts, cfg, |_, _| {})
+    generate_stream(rt, params, prompts, cfg, |_, _| {})
 }
 
 /// [`generate`] with a streaming callback: `on_token(seq, token)` fires
 /// for every emitted token, in emission order (the CLI's live output).
-pub fn generate_stream(rt: &dyn InferRuntime, store: &ParamStore,
+pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
                        prompts: &[Vec<i32>], cfg: &GenConfig,
                        mut on_token: impl FnMut(usize, i32))
     -> Result<Generation> {
@@ -91,7 +93,7 @@ pub fn generate_stream(rt: &dyn InferRuntime, store: &ParamStore,
     let mut last = vec![0i32; b];
     let mut prefill_tokens = 0usize;
     for (s, prompt) in prompts.iter().enumerate() {
-        let logits = rt.prefill(store, &mut cache, s, prompt)?;
+        let logits = rt.prefill(params, &mut cache, s, prompt)?;
         prefill_tokens += prompt.len();
         let tok = cfg.sampler.sample(&logits, &mut rngs[s]) as i32;
         sequences[s].push(tok);
@@ -108,7 +110,7 @@ pub fn generate_stream(rt: &dyn InferRuntime, store: &ParamStore,
             break;
         }
         let toks: Vec<i32> = active.iter().map(|&s| last[s]).collect();
-        let logits = rt.decode(store, &mut cache, &active, &toks)?;
+        let logits = rt.decode(params, &mut cache, &active, &toks)?;
         decode_steps += 1;
         let mut still = Vec::with_capacity(active.len());
         for (i, &s) in active.iter().enumerate() {

@@ -28,6 +28,8 @@ pub mod pool;
 pub use pool::{detected_parallelism, in_serial, serial, set_threads,
                threads};
 
+use crate::tensor::dtype::{bf16_to_f32, MatRef};
+
 /// Minimum useful task size in multiply-adds: below roughly this much
 /// work per task, pool dispatch costs more than it saves, so kernels run
 /// inline.  A threshold never affects results (see the determinism
@@ -248,6 +250,115 @@ pub fn rotate_columns(a: &mut [f32], rows: usize, cols: usize, p: usize,
             let xq = r[q] as f64;
             r[p] = (c * xp - s * xq) as f32;
             r[q] = (s * xp + c * xq) as f32;
+        }
+    });
+}
+
+// ---------------------------------------------------------------------
+// Packed-RHS matmuls (the precision layer).
+//
+// Same loop structure, row ownership and accumulation order as the f32
+// kernels above — the determinism contract holds unchanged — but the
+// weight operand is a dtype-tagged [`MatRef`] that is dequantized *on
+// load* inside the blocked inner loop, with f32 accumulation.  Dequant
+// is per element, so for any packed buffer `b`:
+// `packed_kernel(b) == f32_kernel(b.to_f32())` **bitwise**, and an
+// `F32` view delegates straight to the f32 kernel (a strict no-op for
+// the default all-f32 policy).
+// ---------------------------------------------------------------------
+
+/// `y[rows,m] += x[rows,k] @ w[m,k]ᵀ` with a packed weight operand (the
+/// linear-layer orientation; `w` row `o` holds output channel `o`, so
+/// int8 per-row scales are per output channel).  Parallel over rows of
+/// `y`, f32 accumulation.
+pub fn addmm_nt_packed(y: &mut [f32], x: &[f32], w: MatRef<'_>,
+                       rows: usize, k: usize, m: usize) {
+    debug_assert_eq!(y.len(), rows * m, "addmm_nt_packed y shape");
+    debug_assert_eq!(x.len(), rows * k, "addmm_nt_packed x shape");
+    debug_assert_eq!(w.numel(), m * k, "addmm_nt_packed w shape");
+    let (wq16, wq8, scales) = match w {
+        MatRef::F32(wf) => {
+            addmm_nt(y, x, wf, rows, k, m);
+            return;
+        }
+        MatRef::Bf16(wq) => (Some(wq), None, None),
+        MatRef::I8 { q, scales } => {
+            debug_assert_eq!(scales.len(), m, "addmm_nt_packed scales");
+            (None, Some(q), Some(scales))
+        }
+    };
+    let yp = SendPtr(y.as_mut_ptr());
+    par_rows(rows, k * m, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `y`
+        let yc = unsafe { yp.rows(lo, hi, m) };
+        for (i, yr) in yc.chunks_exact_mut(m).enumerate() {
+            let xr = &x[(lo + i) * k..(lo + i + 1) * k];
+            for (o, yo) in yr.iter_mut().enumerate() {
+                let mut acc = 0.0f32;
+                if let Some(wq) = wq16 {
+                    let wr = &wq[o * k..(o + 1) * k];
+                    for (a, &b) in xr.iter().zip(wr) {
+                        acc += a * bf16_to_f32(b);
+                    }
+                } else {
+                    let (q, s) = (wq8.unwrap(), scales.unwrap());
+                    let sc = s[o];
+                    let wr = &q[o * k..(o + 1) * k];
+                    for (a, &b) in xr.iter().zip(wr) {
+                        acc += a * (sc * b as f32);
+                    }
+                }
+                *yo += acc;
+            }
+        }
+    });
+}
+
+/// `y[rows,k] += x[rows,m] @ w[m,k]` (no transpose) with a packed
+/// weight operand; int8 per-row scales are per row of `w`.  Parallel
+/// over rows of `y`, f32 accumulation, same zero-skip as the f32
+/// kernel (decided on the f32 `x` values, so the skip pattern matches
+/// the dequantize-then-`addmm_nn` reference exactly).
+pub fn addmm_nn_packed(y: &mut [f32], x: &[f32], w: MatRef<'_>,
+                       rows: usize, m: usize, k: usize) {
+    debug_assert_eq!(y.len(), rows * k, "addmm_nn_packed y shape");
+    debug_assert_eq!(x.len(), rows * m, "addmm_nn_packed x shape");
+    debug_assert_eq!(w.numel(), m * k, "addmm_nn_packed w shape");
+    let (wq16, wq8, scales) = match w {
+        MatRef::F32(wf) => {
+            addmm_nn(y, x, wf, rows, m, k);
+            return;
+        }
+        MatRef::Bf16(wq) => (Some(wq), None, None),
+        MatRef::I8 { q, scales } => {
+            debug_assert_eq!(scales.len(), m, "addmm_nn_packed scales");
+            (None, Some(q), Some(scales))
+        }
+    };
+    let yp = SendPtr(y.as_mut_ptr());
+    par_rows(rows, m * k, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `y`
+        let yc = unsafe { yp.rows(lo, hi, k) };
+        for (i, yr) in yc.chunks_exact_mut(k).enumerate() {
+            let xr = &x[(lo + i) * m..(lo + i + 1) * m];
+            for (o, &s) in xr.iter().enumerate() {
+                if s == 0.0 {
+                    continue;
+                }
+                if let Some(wq) = wq16 {
+                    let wr = &wq[o * k..(o + 1) * k];
+                    for (yj, &wj) in yr.iter_mut().zip(wr) {
+                        *yj += s * bf16_to_f32(wj);
+                    }
+                } else {
+                    let (q, sc) = (wq8.unwrap(), scales.unwrap());
+                    let so = sc[o];
+                    let wr = &q[o * k..(o + 1) * k];
+                    for (yj, &wj) in yr.iter_mut().zip(wr) {
+                        *yj += s * (so * wj as f32);
+                    }
+                }
+            }
         }
     });
 }
@@ -674,6 +785,77 @@ mod tests {
         let mut a = a0;
         serial(|| rotate_columns(&mut a, rows, cols, 1, 4, c, s));
         assert_eq!(bits(&a), bits(&want));
+    }
+
+    #[test]
+    fn packed_f32_view_is_the_f32_kernel_bitwise() {
+        let mut rng = Rng::new(8);
+        let (rows, k, m) = (13, 29, 17);
+        let x = randv(rows * k, &mut rng);
+        let w = randv(m * k, &mut rng);
+        let dy = randv(rows * m, &mut rng);
+        let mut y1 = vec![0.0; rows * m];
+        addmm_nt(&mut y1, &x, &w, rows, k, m);
+        let mut y2 = vec![0.0; rows * m];
+        addmm_nt_packed(&mut y2, &x, MatRef::F32(&w), rows, k, m);
+        assert_eq!(bits(&y1), bits(&y2));
+        let mut d1 = vec![0.0; rows * k];
+        addmm_nn(&mut d1, &dy, &w, rows, m, k);
+        let mut d2 = vec![0.0; rows * k];
+        addmm_nn_packed(&mut d2, &dy, MatRef::F32(&w), rows, m, k);
+        assert_eq!(bits(&d1), bits(&d2));
+    }
+
+    #[test]
+    fn packed_kernels_match_dequantize_then_f32_bitwise() {
+        use crate::tensor::dtype::{DType, PackedBuf};
+        let mut rng = Rng::new(9);
+        let (rows, k, m) = (11, 37, 23);
+        let x = randv(rows * k, &mut rng);
+        let w = randv(m * k, &mut rng);
+        let dy = randv(rows * m, &mut rng);
+        for dtype in [DType::Bf16, DType::I8] {
+            let packed = PackedBuf::pack(&w, m, k, dtype);
+            let wd = packed.to_f32();
+            let mut want = randv(rows * m, &mut rng);
+            let mut got = want.clone();
+            addmm_nt(&mut want, &x, &wd, rows, k, m);
+            addmm_nt_packed(&mut got, &x, packed.view(), rows, k, m);
+            assert_eq!(bits(&want), bits(&got), "{dtype:?} nt");
+            let mut dwant = vec![0.0; rows * k];
+            addmm_nn(&mut dwant, &dy, &wd, rows, m, k);
+            let mut dgot = vec![0.0; rows * k];
+            addmm_nn_packed(&mut dgot, &dy, packed.view(), rows, m, k);
+            assert_eq!(bits(&dwant), bits(&dgot), "{dtype:?} nn");
+        }
+    }
+
+    #[test]
+    fn packed_kernels_are_thread_invariant() {
+        use crate::tensor::dtype::{DType, PackedBuf};
+        let mut rng = Rng::new(10);
+        let (rows, k, m) = (37, 53, 41);
+        let x = randv(rows * k, &mut rng);
+        let dy = randv(rows * m, &mut rng);
+        let w = randv(m * k, &mut rng);
+        for dtype in [DType::Bf16, DType::I8] {
+            let packed = PackedBuf::pack(&w, m, k, dtype);
+            assert_thread_invariant(
+                || {
+                    let mut y = vec![0.0; rows * m];
+                    addmm_nt_packed(&mut y, &x, packed.view(), rows, k,
+                                    m);
+                    let mut d = vec![0.0; rows * k];
+                    addmm_nn_packed(&mut d, &dy, packed.view(), rows, m,
+                                    k);
+                    (y, d)
+                },
+                |(y, d)| {
+                    let mut b = bits(y);
+                    b.extend(bits(d));
+                    b
+                });
+        }
     }
 
     #[test]

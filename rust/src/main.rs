@@ -6,6 +6,8 @@
 //!            [--csv curve.csv] [--init switchlora|lora_default]
 //!            [--ckpt-every 100 [--ckpt-path resume.ckpt]]
 //!            [--resume resume.ckpt]
+//!            [--precision f32|bf16] [--comm-dtype f32|bf16]
+//!            [--moments-dtype f32|bf16]
 //!   `--threads N` (any subcommand; or SWITCHLORA_THREADS=N) sizes the
 //!   kernel thread pool — default is the detected hardware parallelism,
 //!   1 forces the serial reference path; results are bitwise identical
@@ -28,8 +30,9 @@
 //! switchlora eval --spec s1m --ckpt ckpt.bin --variant lora
 //! switchlora rank --spec s1m --ckpt ckpt.bin --variant lora
 //! switchlora generate --spec tiny [--ckpt ckpt.bin] [--variant lora]
-//!            [--merge] [--prompt "text"] [--max-new 64] [--batch 4]
-//!            [--temperature 0.8] [--top-k 40] [--stop 0,10] [--seed 42]
+//!            [--merge] [--quantize-base int8|bf16] [--prompt "text"]
+//!            [--max-new 64] [--batch 4] [--temperature 0.8]
+//!            [--top-k 40] [--stop 0,10] [--seed 42]
 //! switchlora tables            # analytic Tables 4/5 + App. D/F
 //! switchlora info              # list specs + the method registry
 //! ```
@@ -51,7 +54,9 @@ use switchlora::model::analytics as an;
 use switchlora::model::config::ModelConfig;
 use switchlora::model::init::{seeded_store, InitMode};
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::model::packed::{PackedStore, ParamSource};
 use switchlora::runtime::{load_infer, Engine};
+use switchlora::tensor::dtype::{DType, PrecisionPolicy};
 use switchlora::util::{human_bytes, human_params, printable};
 
 fn main() {
@@ -79,7 +84,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "rank" => cmd_rank(args),
         "generate" => cmd_generate(args),
         "tables" => cmd_tables(),
-        "info" => cmd_info(),
+        "info" => cmd_info(args),
         _ => {
             print!("{HELP}");
             Ok(())
@@ -95,7 +100,21 @@ backend: native CPU by default (no artifacts needed); build with\n\
 `--features pjrt` and set SWITCHLORA_BACKEND=pjrt for the AOT/PJRT path\n\
 threading: `--threads N` / SWITCHLORA_THREADS=N size the kernel pool\n\
 (default: detected parallelism; results are bitwise thread-invariant)\n\
+precision: `--precision bf16` views frozen base weights in bf16,\n\
+`--comm-dtype bf16` halves the measured all-reduce bytes,\n\
+`--moments-dtype bf16` keeps Adam moments at bf16, and\n\
+`generate --quantize-base int8` serves from ~4x smaller frozen weights\n\
+(default is pure f32 everywhere and bitwise-identical to older builds)\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
+
+/// Resolve the precision policy shared by the training/serving
+/// subcommands from the global flags.
+fn policy_from_args(args: &Args) -> Result<PrecisionPolicy> {
+    PrecisionPolicy::from_flags(args.get("precision"),
+                                args.get("comm-dtype"),
+                                args.get("moments-dtype"),
+                                args.get("quantize-base"))
+}
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
     let spec = args.get_or("spec", "tiny");
@@ -124,6 +143,7 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
             "{spec}_{}_resume.ckpt", cfg.method.name())));
     }
     cfg.resume = args.get("resume").map(PathBuf::from);
+    cfg.precision = policy_from_args(args)?;
     let mut engine = Engine::cpu()?;
     switchlora::info!("execution backend: {} ({} kernel thread(s), {} \
                        detected)", engine.backend_name(),
@@ -131,7 +151,9 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
                       switchlora::kernels::detected_parallelism());
     let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
     print!("{}", exp::results_table("pretrain", &[res.clone()]));
-    println!("comm: {}", comm_summary(&res.comm, steps));
+    println!("precision: {}", cfg.precision.summary());
+    println!("comm: {}", comm_summary(&res.comm, steps,
+                                      cfg.precision.comm));
     if !res.counters.is_empty() {
         let line = res
             .counters
@@ -275,6 +297,28 @@ fn cmd_generate(args: &Args) -> Result<()> {
         switchlora::info!("adapters merged (W ← W + s·B·A): decoding \
                            with zero adapter overhead");
     }
+    // --quantize-base int8|bf16: serve from a packed store — dense base
+    // weights compressed (per-row symmetric int8 or bf16), everything
+    // the forward needs at full precision kept f32
+    let policy = policy_from_args(args)?;
+    let packed = if policy.frozen_base != DType::F32 {
+        let p = PackedStore::quantize_base(&store, policy.frozen_base);
+        let (bp, bf) = p.base_bytes();
+        switchlora::info!(
+            "base weights quantized to {}: {} -> {} resident ({:.2}x); \
+             whole model {} -> {}", policy.frozen_base,
+            human_bytes(bf as u64), human_bytes(bp as u64),
+            bf as f64 / (bp.max(1)) as f64,
+            human_bytes(4 * store.layout.total as u64),
+            human_bytes(p.resident_bytes() as u64));
+        Some(p)
+    } else {
+        None
+    };
+    let params: &dyn ParamSource = match &packed {
+        Some(p) => p,
+        None => &store,
+    };
     let engine = Engine::cpu()?;
     let rt = load_infer(&engine, manifest.clone(), variant)?;
     let tok = ByteTokenizer::new(mc.vocab);
@@ -320,7 +364,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     // tokens buffer until they complete a UTF-8 sequence so multi-byte
     // characters stream the same way the summary line renders them
     let mut pending: Vec<u8> = Vec::new();
-    let gen = generate_stream(rt.as_ref(), &store, &prompts, &cfg,
+    let gen = generate_stream(rt.as_ref(), params, &prompts, &cfg,
                               |s, t| {
         if s != 0 {
             return;
@@ -426,7 +470,7 @@ fn cmd_tables() -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
     println!("training methods (--method NAME):");
     for m in switchlora::methods::registry() {
         let opts = if m.option_keys.is_empty() {
@@ -440,6 +484,14 @@ fn cmd_info() -> Result<()> {
               (override: --threads N or SWITCHLORA_THREADS=N)",
              switchlora::kernels::detected_parallelism(),
              switchlora::kernels::threads());
+    let policy = policy_from_args(args)?;
+    println!("\nprecision policy: {}{}", policy.summary(),
+             if policy.is_default() {
+                 "  (defaults; set --precision/--comm-dtype/\
+                  --moments-dtype/--quantize-base)"
+             } else {
+                 ""
+             });
     let artifacts = default_artifacts_dir();
     println!("\nartifacts dir: {}", artifacts.display());
     let mut specs: Vec<String> = std::fs::read_dir(&artifacts)

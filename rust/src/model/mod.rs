@@ -7,3 +7,4 @@ pub mod analytics;
 pub mod config;
 pub mod init;
 pub mod layout;
+pub mod packed;

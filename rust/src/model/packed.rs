@@ -1,0 +1,187 @@
+//! Dtype-polymorphic parameter access: the [`ParamSource`] trait and the
+//! packed serving store.
+//!
+//! The master [`ParamStore`] is one contiguous `f32` buffer — right for
+//! training, wasteful for serving a frozen model.  [`PackedStore`] holds
+//! the same layout with each parameter in its own dtype-tagged
+//! [`PackedBuf`]: `Role::Base` dense weights (the frozen majority of a
+//! LoRA model, or every linear of a merged export) compressed to `bf16`
+//! or symmetric per-row `int8`, everything the forward still needs at
+//! full precision (embeddings, norms, adapters, heads) kept `f32`.
+//!
+//! [`ParamSource`] is how the model consumes either: [`MatRef`] views
+//! for matmul weights (the packed kernels dequantize on load) and `f32`
+//! slices for the parameter roles that stay master-precision.  A
+//! `&ParamStore` coerces to `&dyn ParamSource` at every call site, so
+//! the f32 path is unchanged — and bitwise identical, since an `F32`
+//! view delegates to the original kernels.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::layout::{Layout, ParamStore, Role};
+use crate::tensor::dtype::{DType, MatRef, PackedBuf};
+
+/// Read access to a set of named parameters, at whatever precision each
+/// one is stored in.
+pub trait ParamSource {
+    /// A parameter as a dtype-tagged matrix view (matmul RHS).
+    fn mat(&self, name: &str) -> Result<MatRef<'_>>;
+
+    /// A parameter that must be stored in `f32` (embeddings, norms,
+    /// LoRA factors, heads — the master-precision roles).  Errors when
+    /// the parameter is packed to a lower dtype.
+    fn f32s(&self, name: &str) -> Result<&[f32]>;
+}
+
+impl ParamSource for ParamStore {
+    fn mat(&self, name: &str) -> Result<MatRef<'_>> {
+        Ok(MatRef::F32(self.slice(name)?))
+    }
+
+    fn f32s(&self, name: &str) -> Result<&[f32]> {
+        self.slice(name)
+    }
+}
+
+/// A layout's parameters with per-parameter dtype-tagged storage — the
+/// serving artifact behind `--quantize-base`.
+#[derive(Clone, Debug)]
+pub struct PackedStore {
+    pub layout: Arc<Layout>,
+    /// one buffer per `layout.params` entry, same order
+    bufs: Vec<PackedBuf>,
+}
+
+impl PackedStore {
+    /// Pack a store, compressing every `Role::Base` dense weight to
+    /// `base_dtype` (per-row scales for int8 follow the weight's output
+    /// channels) and keeping every other role `f32`.
+    pub fn quantize_base(store: &ParamStore, base_dtype: DType)
+        -> PackedStore {
+        let bufs = store
+            .layout
+            .params
+            .iter()
+            .map(|p| {
+                let data = &store.data[p.offset..p.offset + p.numel];
+                let dtype = if p.role == Role::Base {
+                    base_dtype
+                } else {
+                    DType::F32
+                };
+                PackedBuf::pack(data, p.rows(), p.cols(), dtype)
+            })
+            .collect();
+        PackedStore { layout: store.layout.clone(), bufs }
+    }
+
+    fn buf(&self, name: &str) -> Result<&PackedBuf> {
+        let i = *self
+            .layout
+            .by_name
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown param {name:?}"))?;
+        Ok(&self.bufs[i])
+    }
+
+    /// Total resident bytes of all parameters (int8 scales included).
+    pub fn resident_bytes(&self) -> usize {
+        self.bufs.iter().map(|b| b.resident_bytes()).sum()
+    }
+
+    /// `(packed, f32)` resident bytes of the `Role::Base` segment — the
+    /// compression the serving tables report.
+    pub fn base_bytes(&self) -> (usize, usize) {
+        let mut packed = 0;
+        let mut full = 0;
+        for (p, b) in self.layout.params.iter().zip(&self.bufs) {
+            if p.role == Role::Base {
+                packed += b.resident_bytes();
+                full += 4 * p.numel;
+            }
+        }
+        (packed, full)
+    }
+
+    /// Expand back to a master-precision store holding exactly the
+    /// values the packed kernels compute with (dequantized per element).
+    pub fn dequantized(&self) -> ParamStore {
+        let mut out = ParamStore::zeros(self.layout.clone());
+        for (p, b) in self.layout.params.iter().zip(&self.bufs) {
+            out.data[p.offset..p.offset + p.numel]
+                .copy_from_slice(&b.to_f32());
+        }
+        out
+    }
+}
+
+impl ParamSource for PackedStore {
+    fn mat(&self, name: &str) -> Result<MatRef<'_>> {
+        Ok(self.buf(name)?.view())
+    }
+
+    fn f32s(&self, name: &str) -> Result<&[f32]> {
+        match self.buf(name)? {
+            PackedBuf::F32(d) => Ok(d),
+            b => bail!("param {name:?} is packed as {}; this access \
+                        path requires master-precision f32", b.dtype()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::seeded_store;
+    use crate::model::layout::{Manifest, Variant};
+
+    #[test]
+    fn f32_packing_is_lossless_and_transparent() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let store = seeded_store(&man, Variant::Lora, 3).unwrap();
+        let packed = PackedStore::quantize_base(&store, DType::F32);
+        assert_eq!(packed.dequantized().data, store.data);
+        assert_eq!(packed.resident_bytes(), 4 * store.layout.total);
+        // f32s works for every param when nothing is compressed
+        for p in &store.layout.params {
+            assert_eq!(packed.f32s(&p.name).unwrap(),
+                       store.slice(&p.name).unwrap());
+        }
+    }
+
+    #[test]
+    fn int8_compresses_only_the_base_segment() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let store = seeded_store(&man, Variant::Lora, 4).unwrap();
+        let packed = PackedStore::quantize_base(&store, DType::I8);
+        let (base_packed, base_full) = packed.base_bytes();
+        assert!(base_full > 0);
+        // ~4x on the base segment (1 byte/elem + one f32 scale per row)
+        assert!((base_packed as f64) < base_full as f64 / 3.5,
+                "base {base_packed} vs f32 {base_full}");
+        // non-base roles stay exact
+        for p in &store.layout.params {
+            if p.role != Role::Base {
+                assert_eq!(packed.f32s(&p.name).unwrap(),
+                           store.slice(&p.name).unwrap(), "{}", p.name);
+            } else {
+                assert!(packed.f32s(&p.name).is_err());
+                assert_eq!(packed.mat(&p.name).unwrap().dtype(),
+                           DType::I8);
+            }
+        }
+        // total shrinks accordingly
+        assert!(packed.resident_bytes() < 4 * store.layout.total);
+    }
+
+    #[test]
+    fn unknown_param_errors() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let store = seeded_store(&man, Variant::Lora, 5).unwrap();
+        let packed = PackedStore::quantize_base(&store, DType::Bf16);
+        assert!(packed.mat("nope").is_err());
+        assert!(packed.f32s("nope").is_err());
+    }
+}

@@ -9,6 +9,7 @@
 //! kernel (`rust/tests/test_runtime.rs`).
 
 use super::AdamHyper;
+use crate::tensor::dtype::{round_through, DType};
 
 /// A (possibly strided) span of elements in the packed trainable vector.
 /// `stride == 1` is a contiguous row; LoRA-B columns have `stride == rank`.
@@ -38,24 +39,55 @@ impl Span {
 }
 
 /// Adam moments + per-element step counts, padded like the kernel buffers.
+///
+/// `moments_dtype` is the *precision* of the first/second moments: with
+/// `Bf16`, every value written to `m`/`v` is kept on the bf16 grid
+/// (rounded-to-nearest-even on each update) and checkpoints store them
+/// as 2-byte payloads — the memory-reduction lever of `--moments-dtype
+/// bf16`.  The backing buffers stay `f32` so every consumer (span
+/// resets, the switch algorithm, serialization) indexes them uniformly;
+/// the numerics are identical to a true 16-bit store because bf16→f32
+/// is exact.  Step counts `s` always stay f32 (they are small integers).
 #[derive(Clone, Debug)]
 pub struct AdamState {
     pub m: Vec<f32>,
     pub v: Vec<f32>,
     /// per-element step counts (f32 to match the kernel layout)
     pub s: Vec<f32>,
+    /// storage precision of `m`/`v` (`F32` or `Bf16`)
+    pub moments_dtype: DType,
 }
 
 impl AdamState {
     /// `n` live elements padded to `padded` (padding lanes get step=1 so
     /// bias correction never divides by zero — they are masked anyway).
     pub fn new(n: usize, padded: usize) -> AdamState {
+        Self::with_moments(n, padded, DType::F32)
+    }
+
+    /// [`AdamState::new`] with an explicit moment precision
+    /// (`--moments-dtype`).
+    pub fn with_moments(n: usize, padded: usize, moments_dtype: DType)
+        -> AdamState {
+        debug_assert!(matches!(moments_dtype, DType::F32 | DType::Bf16),
+                      "moment precision must be f32 or bf16");
         let padded = padded.max(n);
         let mut s = vec![0.0; padded];
         for x in s.iter_mut().skip(n) {
             *x = 1.0;
         }
-        AdamState { m: vec![0.0; padded], v: vec![0.0; padded], s }
+        AdamState {
+            m: vec![0.0; padded],
+            v: vec![0.0; padded],
+            s,
+            moments_dtype,
+        }
+    }
+
+    /// Reassemble a state from checkpointed arrays.
+    pub fn from_parts(m: Vec<f32>, v: Vec<f32>, s: Vec<f32>,
+                      moments_dtype: DType) -> AdamState {
+        AdamState { m, v, s, moments_dtype }
     }
 
     pub fn len(&self) -> usize {
@@ -84,13 +116,22 @@ pub fn host_step(p: &mut [f32], g: &[f32], st: &mut AdamState, mask: &[f32],
                  h: &AdamHyper) {
     let n = p.len();
     assert!(g.len() >= n && mask.len() >= n && st.len() >= n);
+    // bf16 moments: every stored value lives on the bf16 grid, and the
+    // update consumes the *stored* (rounded) value so the state alone
+    // determines the trajectory — exactly what a 16-bit buffer would do
+    let bf16_moments = st.moments_dtype == DType::Bf16;
     for i in 0..n {
         let mk = mask[i];
         let s_new = st.s[i] + mk;
-        let m_new = mk * (h.beta1 * st.m[i] + (1.0 - h.beta1) * g[i])
+        let mut m_new = mk * (h.beta1 * st.m[i] + (1.0 - h.beta1) * g[i])
             + (1.0 - mk) * st.m[i];
-        let v_new = mk * (h.beta2 * st.v[i] + (1.0 - h.beta2) * g[i] * g[i])
-            + (1.0 - mk) * st.v[i];
+        let mut v_new =
+            mk * (h.beta2 * st.v[i] + (1.0 - h.beta2) * g[i] * g[i])
+                + (1.0 - mk) * st.v[i];
+        if bf16_moments {
+            m_new = round_through(m_new, DType::Bf16);
+            v_new = round_through(v_new, DType::Bf16);
+        }
         // Frozen lanes can have s == 0 (reset + freeze of a switched
         // vector); clamp the bias-correction clock so 1-b^0 never divides.
         // Live lanes (mask == 1) always have s_new >= 1.
@@ -187,6 +228,51 @@ mod tests {
         let st = AdamState::new(3, 8);
         assert_eq!(&st.s[..3], &[0.0, 0.0, 0.0]);
         assert!(st.s[3..].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn bf16_moments_stay_on_the_bf16_grid() {
+        use crate::tensor::dtype::{bf16_to_f32, f32_to_bf16};
+        let n = 16;
+        let mut p = vec![0.1f32; n];
+        let g: Vec<f32> = (0..n).map(|i| 0.3 + 0.17 * i as f32).collect();
+        let mut st = AdamState::with_moments(n, n, DType::Bf16);
+        let h = AdamHyper::new(0.01);
+        let ones = vec![1.0f32; n];
+        for _ in 0..5 {
+            host_step(&mut p, &g, &mut st, &ones, &h);
+        }
+        for (&m, &v) in st.m.iter().zip(&st.v) {
+            assert_eq!(m, bf16_to_f32(f32_to_bf16(m)), "m off-grid");
+            assert_eq!(v, bf16_to_f32(f32_to_bf16(v)), "v off-grid");
+        }
+        // the rounded trajectory still tracks the f32 one closely
+        let mut p32 = vec![0.1f32; n];
+        let mut st32 = AdamState::new(n, n);
+        for _ in 0..5 {
+            host_step(&mut p32, &g, &mut st32, &ones, &h);
+        }
+        for (a, b) in p.iter().zip(&p32) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn f32_moments_default_is_unchanged() {
+        // AdamState::new == with_moments(F32): the legacy path, bitwise
+        let mut p1 = vec![0.5f32; 4];
+        let mut p2 = p1.clone();
+        let g = vec![1.0, -2.0, 0.25, 3.0];
+        let h = AdamHyper::new(0.02);
+        let mut s1 = AdamState::new(4, 8);
+        let mut s2 = AdamState::with_moments(4, 8, DType::F32);
+        assert_eq!(s1.moments_dtype, DType::F32);
+        for _ in 0..3 {
+            host_step(&mut p1, &g, &mut s1, &[1.0; 4], &h);
+            host_step(&mut p2, &g, &mut s2, &[1.0; 4], &h);
+        }
+        assert_eq!(p1, p2);
+        assert_eq!(s1.m, s2.m);
     }
 
     #[test]

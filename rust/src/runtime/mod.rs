@@ -43,8 +43,10 @@ pub use native::NativeModel;
 
 use crate::infer::kv_cache::KvCache;
 use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::model::packed::ParamSource;
 use crate::optim::adam::AdamState;
 use crate::optim::AdamHyper;
+use crate::tensor::dtype::PrecisionPolicy;
 
 /// The engine/runtime contract every backend implements: forward+backward
 /// with loss and packed gradients, eval loss, the classification variants,
@@ -116,16 +118,19 @@ pub trait StepRuntime {
 /// decode path.
 pub trait InferRuntime {
     /// Run a prompt chunk for sequence `seq`, extending its cache.
-    /// Returns the last position's LM logits `[vocab]`.
-    fn prefill(&self, store: &ParamStore, cache: &mut KvCache, seq: usize,
-               tokens: &[i32]) -> Result<Vec<f32>>;
+    /// Returns the last position's LM logits `[vocab]`.  Parameters come
+    /// through [`ParamSource`]: a master-precision `ParamStore` or a
+    /// quantized serving `PackedStore` (`--quantize-base`) — the packed
+    /// kernels dequantize base weights on load.
+    fn prefill(&self, params: &dyn ParamSource, cache: &mut KvCache,
+               seq: usize, tokens: &[i32]) -> Result<Vec<f32>>;
 
     /// One KV-cached decode step over the listed sequences (`seqs`
     /// strictly increasing, one token each).  Finished sequences are
     /// simply left off the list — they pay no compute and their cache
     /// rows stop growing.  Returns logits `[seqs.len(), vocab]` in list
     /// order.
-    fn decode(&self, store: &ParamStore, cache: &mut KvCache,
+    fn decode(&self, params: &dyn ParamSource, cache: &mut KvCache,
               seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>>;
 
     /// An empty cache shaped for this model: `batch` sequences of up to
@@ -206,16 +211,31 @@ pub struct ModelRuntime {
 }
 
 impl ModelRuntime {
-    /// Bind `variant` of `manifest` to `engine`'s backend.
+    /// Bind `variant` of `manifest` to `engine`'s backend with the
+    /// default (all-f32, bitwise-legacy) precision policy.
     pub fn load(engine: &mut Engine, manifest: Manifest, variant: Variant)
+        -> Result<ModelRuntime> {
+        Self::load_with(engine, manifest, variant,
+                        PrecisionPolicy::default())
+    }
+
+    /// Bind `variant` of `manifest` to `engine`'s backend under a
+    /// precision policy (frozen base weights viewed in
+    /// `policy.frozen_base` by the packed kernels).  Only the native
+    /// backend is dtype-aware; PJRT artifacts are compiled f32.
+    pub fn load_with(engine: &mut Engine, manifest: Manifest,
+                     variant: Variant, policy: PrecisionPolicy)
         -> Result<ModelRuntime> {
         let inner: Box<dyn StepRuntime> = match engine {
             Engine::Native => {
-                Box::new(native::NativeModel::new(manifest.clone(),
-                                                  variant)?)
+                Box::new(native::NativeModel::with_policy(
+                    manifest.clone(), variant, policy)?)
             }
             #[cfg(feature = "pjrt")]
             Engine::Pjrt(e) => {
+                ensure!(policy.is_default(),
+                        "precision policies need the native backend \
+                         (the PJRT artifacts are compiled f32)");
                 Box::new(exec::PjrtRuntime::load(e, manifest.clone(),
                                                  variant)?)
             }

@@ -28,10 +28,13 @@ use anyhow::{bail, ensure, Result};
 
 use super::{InferRuntime, StepRuntime};
 use crate::infer::kv_cache::KvCache;
-use crate::kernels::{self, addmm_nn, addmm_nt, addmm_tn};
+use crate::kernels::{self, addmm_nn, addmm_nn_packed, addmm_nt,
+                     addmm_nt_packed, addmm_tn};
 use crate::model::layout::{Layout, Manifest, ParamStore, Variant};
+use crate::model::packed::ParamSource;
 use crate::optim::adam::{host_step, AdamState};
 use crate::optim::AdamHyper;
+use crate::tensor::dtype::{DType, MatRef, PackedBuf, PrecisionPolicy};
 
 // The attention primitives live in the shared kernel layer; re-exported
 // here so gradient tests and the KV cache keep addressing them as part
@@ -347,11 +350,27 @@ pub struct NativeModel {
     pub manifest: Manifest,
     pub variant: Variant,
     pub padded: usize,
+    /// Precision policy: which dtype frozen base weights are viewed in
+    /// by the matmul kernels.  The all-f32 default takes the legacy
+    /// code paths bitwise.
+    pub policy: PrecisionPolicy,
 }
 
 impl NativeModel {
     pub fn new(manifest: Manifest, variant: Variant)
         -> Result<NativeModel> {
+        Self::with_policy(manifest, variant, PrecisionPolicy::default())
+    }
+
+    /// [`NativeModel::new`] with an explicit precision policy.  Only
+    /// `policy.frozen_base` changes this model's arithmetic: a *frozen*
+    /// dense weight (one that carries LoRA adapters) is repacked to that
+    /// dtype before each matmul, amortized over the batch; trainable
+    /// dense weights, adapters, norms, embeddings and heads always stay
+    /// master f32.  Serving paths avoid the per-call repack by handing
+    /// the model an already-packed [`crate::model::packed::PackedStore`].
+    pub fn with_policy(manifest: Manifest, variant: Variant,
+                       policy: PrecisionPolicy) -> Result<NativeModel> {
         let mc = &manifest.config;
         ensure!(mc.hidden % mc.heads == 0,
                 "hidden {} not divisible by heads {}", mc.hidden, mc.heads);
@@ -365,7 +384,7 @@ impl NativeModel {
         }
         layout.meta(if variant == Variant::Cls { "cls_head" }
                     else { "lm_head" })?;
-        Ok(NativeModel { manifest, variant, padded })
+        Ok(NativeModel { manifest, variant, padded, policy })
     }
 
     fn layout(&self) -> &Layout {
@@ -454,21 +473,59 @@ impl NativeModel {
         Ok((xf, xf_in, invf, acts))
     }
 
+    /// View of a dense base weight for the matmul kernels.  When the
+    /// weight is *frozen* (it carries adapters) and the policy asks for
+    /// a sub-f32 `frozen_base`, an f32 master view is repacked to that
+    /// dtype (`owned` keeps the transient buffer alive); already-packed
+    /// sources (a serving [`crate::model::packed::PackedStore`]) and
+    /// trainable dense weights pass through untouched.
+    ///
+    /// Deliberately NOT cached across calls: the switch op mutates `W`
+    /// through the store with no notification here, and a stale packed
+    /// copy would be silently (bitwise-)wrong after a switch — while
+    /// detecting staleness costs as much as repacking.  The repack is
+    /// O(m·n) against the matmul's O(rows·m·n), under 1% of step time
+    /// at training batch shapes; latency-critical serving avoids it
+    /// entirely by pre-packing (`PackedStore`).
+    fn base_view<'a>(&self, wv: MatRef<'a>, frozen: bool, m: usize,
+                     n: usize, owned: &'a mut Option<PackedBuf>)
+        -> MatRef<'a> {
+        if frozen && self.policy.frozen_base != DType::F32 {
+            if let MatRef::F32(w) = wv {
+                let packed =
+                    PackedBuf::pack(w, m, n, self.policy.frozen_base);
+                return owned.insert(packed).view();
+            }
+        }
+        wv
+    }
+
     /// Apply block linear `lin_idx` (see `LIN_NAMES`) of layer `li`.
-    fn lin_fwd(&self, store: &ParamStore, li: usize, lin_idx: usize,
+    /// The base weight comes through [`ParamSource::mat`] at whatever
+    /// dtype it is stored in; adapters are always master f32.
+    fn lin_fwd(&self, src: &dyn ParamSource, li: usize, lin_idx: usize,
                x: &[f32], rows: usize, scale: f32)
         -> Result<(Vec<f32>, Vec<f32>)> {
         let (name, m, n_in) = self.lin_dims(li, lin_idx);
-        let w = store.slice(&name)?;
-        if self.adapted(&name) {
-            let a = store.slice(&format!("{name}.a"))?;
-            let bb = store.slice(&format!("{name}.b"))?;
+        let adapted = self.adapted(&name);
+        let mut owned = None;
+        let wv = self.base_view(src.mat(&name)?, adapted, m, n_in,
+                                &mut owned);
+        let mut y = vec![0.0; rows * m];
+        addmm_nt_packed(&mut y, x, wv, rows, n_in, m);
+        if adapted {
+            let a = src.f32s(&format!("{name}.a"))?;
+            let bb = src.f32s(&format!("{name}.b"))?;
             let r = self.manifest.config.rank;
-            let (y, xa) =
-                lora_linear_fwd(x, w, a, bb, scale, rows, n_in, m, r);
+            let xa = linear_fwd(x, a, rows, n_in, r);
+            let mut yb = vec![0.0; rows * m];
+            addmm_nt(&mut yb, &xa, bb, rows, r, m);
+            for (yi, bi) in y.iter_mut().zip(&yb) {
+                *yi += scale * bi;
+            }
             Ok((y, xa))
         } else {
-            Ok((linear_fwd(x, w, rows, n_in, m), Vec::new()))
+            Ok((y, Vec::new()))
         }
     }
 
@@ -484,29 +541,49 @@ impl NativeModel {
     }
 
     /// Backward of block linear `lin_idx`, accumulating parameter grads
-    /// into `flat` (packed trainable vector) and returning `dx`.
+    /// into `flat` (packed trainable vector) and returning `dx`.  The
+    /// base weight is consumed through the same dtype view as the
+    /// forward (`dX`'s base term dequantizes on load); adapter and
+    /// dense-weight gradients stay master f32.
     #[allow(clippy::too_many_arguments)]
-    fn lin_bwd(&self, store: &ParamStore, flat: &mut [f32], li: usize,
+    fn lin_bwd(&self, src: &dyn ParamSource, flat: &mut [f32], li: usize,
                lin_idx: usize, dy: &[f32], x: &[f32], xa: &[f32],
                rows: usize, scale: f32) -> Result<Vec<f32>> {
         let (name, m, n_in) = self.lin_dims(li, lin_idx);
-        let w = store.slice(&name)?;
+        let adapted = self.adapted(&name);
         let layout = self.layout();
-        if self.adapted(&name) {
-            let a = store.slice(&format!("{name}.a"))?;
-            let bb = store.slice(&format!("{name}.b"))?;
+        let mut owned = None;
+        let wv = self.base_view(src.mat(&name)?, adapted, m, n_in,
+                                &mut owned);
+        // dX's base term: dY @ W (dequant-on-load when W is packed)
+        let mut dx = vec![0.0; rows * n_in];
+        addmm_nn_packed(&mut dx, dy, wv, rows, m, n_in);
+        if adapted {
+            let a = src.f32s(&format!("{name}.a"))?;
+            let bb = src.f32s(&format!("{name}.b"))?;
             let r = self.manifest.config.rank;
-            let g = lora_linear_bwd(dy, x, xa, w, a, bb, scale, rows, n_in,
-                                    m, r, false);
-            accumulate(flat, layout, &format!("{name}.a"),
-                       &g.da.unwrap())?;
-            accumulate(flat, layout, &format!("{name}.b"),
-                       &g.db.unwrap())?;
-            Ok(g.dx)
+            // dyb = s·(dY @ B)  [rows, r]
+            let mut dyb = vec![0.0; rows * r];
+            addmm_nn(&mut dyb, dy, bb, rows, m, r);
+            for v in dyb.iter_mut() {
+                *v *= scale;
+            }
+            addmm_nn(&mut dx, &dyb, a, rows, r, n_in);
+            let mut da = vec![0.0; r * n_in];
+            addmm_tn(&mut da, &dyb, x, rows, r, n_in);
+            let mut db = vec![0.0; m * r];
+            addmm_tn(&mut db, dy, xa, rows, m, r);
+            for v in db.iter_mut() {
+                *v *= scale;
+            }
+            accumulate(flat, layout, &format!("{name}.a"), &da)?;
+            accumulate(flat, layout, &format!("{name}.b"), &db)?;
+            Ok(dx)
         } else {
-            let g = linear_bwd(dy, x, w, rows, n_in, m, true);
-            accumulate(flat, layout, &name, &g.dw.unwrap())?;
-            Ok(g.dx)
+            let mut dw = vec![0.0; m * n_in];
+            addmm_tn(&mut dw, dy, x, rows, m, n_in);
+            accumulate(flat, layout, &name, &dw)?;
+            Ok(dx)
         }
     }
 
@@ -841,7 +918,9 @@ impl NativeModel {
     /// K/V (which the cache holds already RoPE'd at their absolute
     /// positions), so cached and full-context logits agree — the
     /// invariant `rust/tests/inference.rs` checks at every decode step.
-    fn forward_cached(&self, store: &ParamStore, cache: &mut KvCache,
+    /// Parameters come through [`ParamSource`], so the same code serves
+    /// a master-precision `ParamStore` and a quantized `PackedStore`.
+    fn forward_cached(&self, src: &dyn ParamSource, cache: &mut KvCache,
                       seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         let mc = &self.manifest.config;
         let (h, nh) = (mc.hidden, mc.heads);
@@ -855,7 +934,7 @@ impl NativeModel {
         ensure!(base + t <= cache.capacity,
                 "KV cache capacity {} exceeded by {base}+{t}",
                 cache.capacity);
-        let embed = store.slice("embed")?;
+        let embed = src.f32s("embed")?;
         let mut x = vec![0.0f32; t * h];
         for (i, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
@@ -865,10 +944,10 @@ impl NativeModel {
         }
         for li in 0..mc.layers {
             let (xn1, _) = rms_norm_fwd(
-                &x, store.slice(&format!("l{li}.attn_norm"))?, t, h);
-            let (yq, _) = self.lin_fwd(store, li, 0, &xn1, t, scale)?;
-            let (yk, _) = self.lin_fwd(store, li, 1, &xn1, t, scale)?;
-            let (yv, _) = self.lin_fwd(store, li, 2, &xn1, t, scale)?;
+                &x, src.f32s(&format!("l{li}.attn_norm"))?, t, h);
+            let (yq, _) = self.lin_fwd(src, li, 0, &xn1, t, scale)?;
+            let (yk, _) = self.lin_fwd(src, li, 1, &xn1, t, scale)?;
+            let (yv, _) = self.lin_fwd(src, li, 2, &xn1, t, scale)?;
             let mut q = to_heads(&yq, 1, t, nh, hd);
             let mut k = to_heads(&yk, 1, t, nh, hd);
             let v = to_heads(&yv, 1, t, nh, hd);
@@ -877,46 +956,46 @@ impl NativeModel {
             cache.append(li, seq, &k, &v, t);
             let o = cache.attend(li, seq, &q, t);
             let o2 = from_heads(&o, 1, t, nh, hd);
-            let (yo, _) = self.lin_fwd(store, li, 3, &o2, t, scale)?;
+            let (yo, _) = self.lin_fwd(src, li, 3, &o2, t, scale)?;
             for (xi, yi) in x.iter_mut().zip(&yo) {
                 *xi += yi;
             }
             let (xn2, _) = rms_norm_fwd(
-                &x, store.slice(&format!("l{li}.mlp_norm"))?, t, h);
-            let (gate, _) = self.lin_fwd(store, li, 4, &xn2, t, scale)?;
-            let (up, _) = self.lin_fwd(store, li, 5, &xn2, t, scale)?;
+                &x, src.f32s(&format!("l{li}.mlp_norm"))?, t, h);
+            let (gate, _) = self.lin_fwd(src, li, 4, &xn2, t, scale)?;
+            let (up, _) = self.lin_fwd(src, li, 5, &xn2, t, scale)?;
             let act: Vec<f32> = gate
                 .iter()
                 .zip(&up)
                 .map(|(&g, &u)| silu(g) * u)
                 .collect();
-            let (ydown, _) = self.lin_fwd(store, li, 6, &act, t, scale)?;
+            let (ydown, _) = self.lin_fwd(src, li, 6, &act, t, scale)?;
             for (xi, yi) in x.iter_mut().zip(&ydown) {
                 *xi += yi;
             }
         }
         cache.bump(seq, t);
-        let (xf, _) = rms_norm_fwd(&x, store.slice("final_norm")?, t, h);
+        let (xf, _) = rms_norm_fwd(&x, src.f32s("final_norm")?, t, h);
         Ok(xf)
     }
 }
 
 impl InferRuntime for NativeModel {
-    fn prefill(&self, store: &ParamStore, cache: &mut KvCache,
+    fn prefill(&self, src: &dyn ParamSource, cache: &mut KvCache,
                seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         self.ensure_lm()?;
         let h = self.manifest.config.hidden;
-        let xf = self.forward_cached(store, cache, seq, tokens)?;
+        let xf = self.forward_cached(src, cache, seq, tokens)?;
         let v_out = self.layout().meta("lm_head")?.rows();
         let last = &xf[(tokens.len() - 1) * h..];
-        Ok(linear_fwd(last, store.slice("lm_head")?, 1, h, v_out))
+        Ok(linear_fwd(last, src.f32s("lm_head")?, 1, h, v_out))
     }
 
     // NOTE: this body deliberately mirrors `forward`/`forward_cached`
     // per layer (batched rows=len(seqs), t=1 head-layout identity); any
     // model-definition change must land in all three, and the per-step
     // parity tests in `rust/tests/inference.rs` pin the invariant.
-    fn decode(&self, store: &ParamStore, cache: &mut KvCache,
+    fn decode(&self, src: &dyn ParamSource, cache: &mut KvCache,
               seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>> {
         self.ensure_lm()?;
         let mc = &self.manifest.config;
@@ -941,7 +1020,7 @@ impl InferRuntime for NativeModel {
             ensure!(l > 0, "decode before prefill for sequence {s}");
         }
         let lens: Vec<usize> = seqs.iter().map(|&s| cache.len(s)).collect();
-        let embed = store.slice("embed")?;
+        let embed = src.f32s("embed")?;
         let mut x = vec![0.0f32; b * h];
         for (i, &tok) in tokens.iter().enumerate() {
             let tok = tok as usize;
@@ -951,10 +1030,10 @@ impl InferRuntime for NativeModel {
         }
         for li in 0..mc.layers {
             let (xn1, _) = rms_norm_fwd(
-                &x, store.slice(&format!("l{li}.attn_norm"))?, b, h);
-            let (mut q, _) = self.lin_fwd(store, li, 0, &xn1, b, scale)?;
-            let (mut k, _) = self.lin_fwd(store, li, 1, &xn1, b, scale)?;
-            let (v, _) = self.lin_fwd(store, li, 2, &xn1, b, scale)?;
+                &x, src.f32s(&format!("l{li}.attn_norm"))?, b, h);
+            let (mut q, _) = self.lin_fwd(src, li, 0, &xn1, b, scale)?;
+            let (mut k, _) = self.lin_fwd(src, li, 1, &xn1, b, scale)?;
+            let (v, _) = self.lin_fwd(src, li, 2, &xn1, b, scale)?;
             // for t = 1 the `[1, nh·hd]` row IS the `[nh, 1, hd]` head
             // layout, so no to_heads/from_heads transposition is needed
             let mut o2 = vec![0.0f32; b * h];
@@ -966,20 +1045,20 @@ impl InferRuntime for NativeModel {
                 let os = cache.attend(li, s, &q[row.clone()], 1);
                 o2[row].copy_from_slice(&os);
             }
-            let (yo, _) = self.lin_fwd(store, li, 3, &o2, b, scale)?;
+            let (yo, _) = self.lin_fwd(src, li, 3, &o2, b, scale)?;
             for (xi, yi) in x.iter_mut().zip(&yo) {
                 *xi += yi;
             }
             let (xn2, _) = rms_norm_fwd(
-                &x, store.slice(&format!("l{li}.mlp_norm"))?, b, h);
-            let (gate, _) = self.lin_fwd(store, li, 4, &xn2, b, scale)?;
-            let (up, _) = self.lin_fwd(store, li, 5, &xn2, b, scale)?;
+                &x, src.f32s(&format!("l{li}.mlp_norm"))?, b, h);
+            let (gate, _) = self.lin_fwd(src, li, 4, &xn2, b, scale)?;
+            let (up, _) = self.lin_fwd(src, li, 5, &xn2, b, scale)?;
             let act: Vec<f32> = gate
                 .iter()
                 .zip(&up)
                 .map(|(&g, &u)| silu(g) * u)
                 .collect();
-            let (ydown, _) = self.lin_fwd(store, li, 6, &act, b, scale)?;
+            let (ydown, _) = self.lin_fwd(src, li, 6, &act, b, scale)?;
             for (xi, yi) in x.iter_mut().zip(&ydown) {
                 *xi += yi;
             }
@@ -987,9 +1066,9 @@ impl InferRuntime for NativeModel {
         for &s in seqs {
             cache.bump(s, 1);
         }
-        let (xf, _) = rms_norm_fwd(&x, store.slice("final_norm")?, b, h);
+        let (xf, _) = rms_norm_fwd(&x, src.f32s("final_norm")?, b, h);
         let v_out = self.layout().meta("lm_head")?.rows();
-        Ok(linear_fwd(&xf, store.slice("lm_head")?, b, h, v_out))
+        Ok(linear_fwd(&xf, src.f32s("lm_head")?, b, h, v_out))
     }
 
     fn new_cache(&self, batch: usize, capacity: usize) -> KvCache {

@@ -1,0 +1,552 @@
+//! Numeric dtypes and packed storage: the precision layer.
+//!
+//! The paper's systems claims — 54% less communication, 13% less memory
+//! than full-rank pre-training — are about how many *bytes* move and
+//! stay resident, so the rest of the stack must be able to store and
+//! transport numbers at less than `f32` width.  This module is the one
+//! place those representations live:
+//!
+//! * [`DType`] — the storage dtypes the system understands (`f32`,
+//!   software `bf16`, symmetric per-row `int8` with `f32` scales).
+//! * [`f32_to_bf16`]/[`bf16_to_f32`] — software bfloat16 with
+//!   round-to-nearest-even, bit-compatible with hardware bf16.
+//! * [`quantize_row_i8`] and [`PackedBuf`] — QLoRA-style symmetric
+//!   per-row (output-channel) int8 with one `f32` scale per row.
+//! * [`MatRef`] — a borrowed dtype-tagged matrix view, the RHS type of
+//!   the packed matmul kernels ([`crate::kernels::addmm_nt_packed`]).
+//! * [`PrecisionPolicy`] — which dtype each *role* in the system uses
+//!   (master weights, compute, all-reduce wire, Adam moments, frozen
+//!   base weights), resolved from the CLI flags `--precision`,
+//!   `--comm-dtype`, `--moments-dtype`, `--quantize-base`.
+//!
+//! Invariants the consumers rely on: converting an `f32` slice to a
+//! [`PackedBuf`] and back with [`PackedBuf::to_f32`] is the *exact*
+//! value the packed kernels see (dequant-on-load is per-element, so
+//! `packed kernel == dequantize-then-f32-kernel` bitwise), and the
+//! all-`f32` policy is a strict no-op: `PackedBuf::F32` round-trips
+//! bytes untouched and the policy-aware call sites take their legacy
+//! paths.
+
+use anyhow::{bail, Result};
+
+/// A storage dtype.  `bytes()` is the wire/resident width per element
+/// (int8 scale overhead is accounted where the scales live, one `f32`
+/// per row).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    Bf16,
+    I8,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::Bf16 => "bf16",
+            DType::I8 => "int8",
+        }
+    }
+
+    /// Bytes per element of the payload.
+    pub fn bytes(&self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::Bf16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" | "fp32" | "float32" => DType::F32,
+            "bf16" | "bfloat16" => DType::Bf16,
+            "int8" | "i8" => DType::I8,
+            other => bail!("unknown dtype {other:?} (expected f32, bf16 \
+                            or int8)"),
+        })
+    }
+
+    /// Checkpoint tag byte (format v3).  Stable across releases.
+    pub fn tag(&self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::Bf16 => 1,
+            DType::I8 => 2,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<DType> {
+        Ok(match t {
+            0 => DType::F32,
+            1 => DType::Bf16,
+            2 => DType::I8,
+            other => bail!("unknown dtype tag {other} in checkpoint"),
+        })
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Software bfloat16.
+// ---------------------------------------------------------------------
+
+/// `f32 → bf16` with round-to-nearest-even (the hardware rounding mode).
+/// NaN payloads are quieted so a NaN never rounds to infinity.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep sign + a quiet mantissa bit so the result stays NaN
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // round to nearest, ties to even on the truncated 16 bits
+    let round_bias = 0x7FFF + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round_bias)) >> 16) as u16
+}
+
+/// `bf16 → f32` (exact: bf16 is a prefix of the f32 encoding).
+#[inline]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Round an `f32` through a dtype's representable set — the value a
+/// number has after crossing a `dtype`-width wire.  `F32` is identity;
+/// `I8` has no standalone scalar form (its scale is per-row) and is
+/// rejected by the policy layer before reaching here.
+#[inline]
+pub fn round_through(x: f32, dtype: DType) -> f32 {
+    match dtype {
+        DType::F32 => x,
+        DType::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+        DType::I8 => x, // per-row scaled; handled by PackedBuf
+    }
+}
+
+// ---------------------------------------------------------------------
+// Symmetric per-row int8.
+// ---------------------------------------------------------------------
+
+/// Quantize one row symmetrically: `scale = max|x| / 127`, `q =
+/// round(x/scale)` clamped to `[-127, 127]`.  A zero row gets scale 0
+/// and all-zero codes (dequantizing to exact zeros).
+pub fn quantize_row_i8(row: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(row.len(), out.len());
+    let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    if amax == 0.0 || !amax.is_finite() {
+        out.fill(0);
+        return if amax == 0.0 { 0.0 } else { f32::NAN };
+    }
+    let scale = amax / 127.0;
+    let inv = 127.0 / amax;
+    for (o, &x) in out.iter_mut().zip(row) {
+        *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+// ---------------------------------------------------------------------
+// Packed buffers and borrowed views.
+// ---------------------------------------------------------------------
+
+/// A borrowed dtype-tagged matrix view: the RHS of the packed matmul
+/// kernels.  `I8` scales are per *row* of the viewed matrix.
+#[derive(Clone, Copy, Debug)]
+pub enum MatRef<'a> {
+    F32(&'a [f32]),
+    Bf16(&'a [u16]),
+    I8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+impl MatRef<'_> {
+    pub fn dtype(&self) -> DType {
+        match self {
+            MatRef::F32(_) => DType::F32,
+            MatRef::Bf16(_) => DType::Bf16,
+            MatRef::I8 { .. } => DType::I8,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            MatRef::F32(w) => w.len(),
+            MatRef::Bf16(w) => w.len(),
+            MatRef::I8 { q, .. } => q.len(),
+        }
+    }
+}
+
+/// An owned dtype-tagged buffer: one parameter's storage in a packed
+/// store, or a transient packed view of a master-precision weight.
+#[derive(Clone, Debug)]
+pub enum PackedBuf {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    /// row-major codes with one symmetric scale per row
+    I8 { q: Vec<i8>, scales: Vec<f32>, cols: usize },
+}
+
+impl PackedBuf {
+    /// Pack a row-major `[rows, cols]` f32 matrix into `dtype` storage.
+    pub fn pack(data: &[f32], rows: usize, cols: usize, dtype: DType)
+        -> PackedBuf {
+        debug_assert_eq!(data.len(), rows * cols, "PackedBuf::pack shape");
+        match dtype {
+            DType::F32 => PackedBuf::F32(data.to_vec()),
+            DType::Bf16 => {
+                PackedBuf::Bf16(data.iter().map(|&x| f32_to_bf16(x))
+                                    .collect())
+            }
+            DType::I8 => {
+                let mut q = vec![0i8; data.len()];
+                let mut scales = Vec::with_capacity(rows);
+                for (r, qr) in q.chunks_exact_mut(cols).enumerate() {
+                    let row = &data[r * cols..(r + 1) * cols];
+                    scales.push(quantize_row_i8(row, qr));
+                }
+                PackedBuf::I8 { q, scales, cols }
+            }
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            PackedBuf::F32(_) => DType::F32,
+            PackedBuf::Bf16(_) => DType::Bf16,
+            PackedBuf::I8 { .. } => DType::I8,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            PackedBuf::F32(d) => d.len(),
+            PackedBuf::Bf16(d) => d.len(),
+            PackedBuf::I8 { q, .. } => q.len(),
+        }
+    }
+
+    /// Resident bytes of this buffer (int8 includes its f32 scales).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            PackedBuf::F32(d) => 4 * d.len(),
+            PackedBuf::Bf16(d) => 2 * d.len(),
+            PackedBuf::I8 { q, scales, .. } => q.len() + 4 * scales.len(),
+        }
+    }
+
+    pub fn view(&self) -> MatRef<'_> {
+        match self {
+            PackedBuf::F32(d) => MatRef::F32(d),
+            PackedBuf::Bf16(d) => MatRef::Bf16(d),
+            PackedBuf::I8 { q, scales, .. } => {
+                MatRef::I8 { q, scales }
+            }
+        }
+    }
+
+    /// Dequantize to f32 — exactly the values the packed kernels see
+    /// (their dequant-on-load is per-element, so `packed kernel(buf) ==
+    /// f32 kernel(buf.to_f32())` bitwise).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            PackedBuf::F32(d) => d.clone(),
+            PackedBuf::Bf16(d) => {
+                d.iter().map(|&b| bf16_to_f32(b)).collect()
+            }
+            PackedBuf::I8 { q, scales, cols } => {
+                let mut out = Vec::with_capacity(q.len());
+                for (r, qr) in q.chunks_exact(*cols).enumerate() {
+                    let s = scales[r];
+                    out.extend(qr.iter().map(|&c| s * c as f32));
+                }
+                out
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Precision policy.
+// ---------------------------------------------------------------------
+
+/// Which dtype each role in the system uses.  The default is pure f32
+/// everywhere, and every consumer treats that default as a strict
+/// no-op: bitwise-identical to the pre-precision-layer code paths.
+///
+/// Roles:
+/// * `master` — the authoritative trainable weights (and every
+///   gradient/adapter buffer).  Always `f32`; low-precision training
+///   keeps full-precision masters, as in standard mixed precision.
+/// * `compute` — the dtype dense base weights are *viewed* in by the
+///   matmul kernels (f32 accumulate always).  `--precision bf16`.
+/// * `comm` — the data-parallel all-reduce wire format
+///   (`--comm-dtype`): payload values are rounded through this dtype
+///   and the byte ledger counts its true width.
+/// * `moments` — Adam `m`/`v` precision (`--moments-dtype`): values are
+///   kept on the bf16 grid and checkpointed at 2 bytes each.
+/// * `frozen_base` — storage of frozen dense weights (training) and of
+///   the serving-time base weights (`--quantize-base int8`).  Defaults
+///   to `compute`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrecisionPolicy {
+    pub master: DType,
+    pub compute: DType,
+    pub comm: DType,
+    pub moments: DType,
+    pub frozen_base: DType,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> Self {
+        PrecisionPolicy {
+            master: DType::F32,
+            compute: DType::F32,
+            comm: DType::F32,
+            moments: DType::F32,
+            frozen_base: DType::F32,
+        }
+    }
+}
+
+impl PrecisionPolicy {
+    /// Resolve a policy from the CLI flag values.  `frozen_base`
+    /// follows `compute` unless `--quantize-base` overrides it.
+    pub fn from_flags(precision: Option<&str>, comm: Option<&str>,
+                      moments: Option<&str>, quantize_base: Option<&str>)
+        -> Result<PrecisionPolicy> {
+        let compute = match precision {
+            Some(s) => DType::parse(s)?,
+            None => DType::F32,
+        };
+        ensure_role("--precision", compute, &[DType::F32, DType::Bf16])?;
+        let comm_d = match comm {
+            Some(s) => DType::parse(s)?,
+            None => DType::F32,
+        };
+        ensure_role("--comm-dtype", comm_d, &[DType::F32, DType::Bf16])?;
+        let moments_d = match moments {
+            Some(s) => DType::parse(s)?,
+            None => DType::F32,
+        };
+        ensure_role("--moments-dtype", moments_d,
+                    &[DType::F32, DType::Bf16])?;
+        let frozen = match quantize_base {
+            Some(s) => {
+                let d = DType::parse(s)?;
+                ensure_role("--quantize-base", d,
+                            &[DType::Bf16, DType::I8])?;
+                d
+            }
+            None => compute,
+        };
+        Ok(PrecisionPolicy {
+            master: DType::F32,
+            compute,
+            comm: comm_d,
+            moments: moments_d,
+            frozen_base: frozen,
+        })
+    }
+
+    /// True when every role is f32 — the bitwise-legacy configuration.
+    pub fn is_default(&self) -> bool {
+        *self == PrecisionPolicy::default()
+    }
+
+    /// One-line human summary (the `info` subcommand / run banner).
+    pub fn summary(&self) -> String {
+        format!("master {} | compute {} | comm {} | moments {} | \
+                 frozen-base {}",
+                self.master, self.compute, self.comm, self.moments,
+                self.frozen_base)
+    }
+}
+
+fn ensure_role(flag: &str, d: DType, allowed: &[DType]) -> Result<()> {
+    if !allowed.contains(&d) {
+        let names: Vec<&str> = allowed.iter().map(|a| a.name()).collect();
+        bail!("{flag} {}: unsupported here (allowed: {})", d.name(),
+              names.join(", "));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bf16_exact_on_representables() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 1.5, -3.25,
+                  f32::INFINITY, f32::NEG_INFINITY] {
+            let rt = bf16_to_f32(f32_to_bf16(x));
+            assert_eq!(rt.to_bits(), x.to_bits(), "{x} not exact");
+        }
+        // bf16 has an 8-bit mantissa: 1 + 2^-8 is representable,
+        // 1 + 2^-9 rounds to even (back down to 1.0)
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 1.0 / 256.0)),
+                   1.0 + 1.0 / 256.0);
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 1.0 / 512.0)), 1.0);
+        // ...while 1 + 3·2^-9 rounds up to 1 + 2^-7 (nearest even)
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0 + 3.0 / 512.0)),
+                   1.0 + 2.0 / 256.0);
+    }
+
+    #[test]
+    fn bf16_nan_stays_nan() {
+        let q = f32_to_bf16(f32::NAN);
+        assert!(bf16_to_f32(q).is_nan());
+        let neg = f32_to_bf16(f32::from_bits(0xFF80_0001)); // -NaN payload
+        assert!(bf16_to_f32(neg).is_nan());
+    }
+
+    #[test]
+    fn bf16_roundtrip_relative_error_bound() {
+        prop_check("bf16 round-trip error <= 2^-8 relative", 200, |rng| {
+            let x = rng.normal_f32(0.0, 10.0);
+            let rt = bf16_to_f32(f32_to_bf16(x));
+            let err = (rt - x).abs();
+            // RNE on an 8-bit mantissa: err <= ulp/2 = 2^-9 * 2^ceil
+            let bound = x.abs() * (1.0 / 256.0) + f32::MIN_POSITIVE;
+            if err > bound {
+                return Err(format!("{x} -> {rt}: err {err} > {bound}"));
+            }
+            // idempotent: a bf16 value round-trips exactly
+            if bf16_to_f32(f32_to_bf16(rt)).to_bits() != rt.to_bits() {
+                return Err(format!("{rt} not idempotent"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i8_row_quantization_error_bound() {
+        prop_check("int8 per-row |x - q·s| <= s/2", 100, |rng| {
+            let n = 1 + rng.below(64);
+            let amp = 0.01 + 10.0 * rng.uniform_range(0.0, 1.0);
+            let row: Vec<f32> =
+                (0..n).map(|_| rng.normal_f32(0.0, amp)).collect();
+            let mut q = vec![0i8; n];
+            let scale = quantize_row_i8(&row, &mut q);
+            for (&x, &c) in row.iter().zip(&q) {
+                let deq = scale * c as f32;
+                let err = (x - deq).abs();
+                if err > 0.5001 * scale + 1e-12 {
+                    return Err(format!(
+                        "x {x} q {c} scale {scale}: err {err}"));
+                }
+            }
+            // max-abs element is coded at full range (monotone scales)
+            let amax = row.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            if (scale - amax / 127.0).abs() > 1e-12 * amax {
+                return Err(format!("scale {scale} vs {}", amax / 127.0));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn i8_scales_are_monotone_in_row_magnitude() {
+        // doubling a row doubles its scale exactly (power-of-two scale)
+        let row = [0.3f32, -1.7, 0.05, 0.9];
+        let doubled: Vec<f32> = row.iter().map(|&x| 2.0 * x).collect();
+        let mut q = [0i8; 4];
+        let s1 = quantize_row_i8(&row, &mut q);
+        let q1 = q;
+        let s2 = quantize_row_i8(&doubled, &mut q);
+        assert_eq!(s2, 2.0 * s1);
+        assert_eq!(q, q1, "codes are scale-invariant");
+    }
+
+    #[test]
+    fn i8_zero_row_is_exact() {
+        let mut q = [5i8; 3];
+        let s = quantize_row_i8(&[0.0, 0.0, 0.0], &mut q);
+        assert_eq!(s, 0.0);
+        assert_eq!(q, [0, 0, 0]);
+    }
+
+    #[test]
+    fn packed_buf_roundtrips() {
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (5, 7);
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| rng.normal_f32(0.0, 1.0))
+            .collect();
+        // f32 is byte-identical
+        let f = PackedBuf::pack(&data, rows, cols, DType::F32);
+        assert_eq!(f.to_f32(), data);
+        assert_eq!(f.resident_bytes(), 4 * data.len());
+        // bf16 matches the scalar round-trip elementwise
+        let b = PackedBuf::pack(&data, rows, cols, DType::Bf16);
+        let want: Vec<f32> =
+            data.iter().map(|&x| round_through(x, DType::Bf16)).collect();
+        assert_eq!(b.to_f32(), want);
+        assert_eq!(b.resident_bytes(), 2 * data.len());
+        // int8 respects the per-row error bound and byte accounting
+        let i = PackedBuf::pack(&data, rows, cols, DType::I8);
+        assert_eq!(i.resident_bytes(), data.len() + 4 * rows);
+        let deq = i.to_f32();
+        for r in 0..rows {
+            let amax = data[r * cols..(r + 1) * cols]
+                .iter()
+                .fold(0.0f32, |a, &x| a.max(x.abs()));
+            let s = amax / 127.0;
+            for c in 0..cols {
+                let err = (deq[r * cols + c] - data[r * cols + c]).abs();
+                assert!(err <= 0.5001 * s, "({r},{c}) err {err} s {s}");
+            }
+        }
+        assert_eq!(i.numel(), data.len());
+    }
+
+    #[test]
+    fn policy_resolution_and_validation() {
+        let d = PrecisionPolicy::from_flags(None, None, None, None)
+            .unwrap();
+        assert!(d.is_default());
+        let p = PrecisionPolicy::from_flags(Some("bf16"), Some("bf16"),
+                                            Some("bf16"), None)
+            .unwrap();
+        assert_eq!(p.compute, DType::Bf16);
+        assert_eq!(p.comm, DType::Bf16);
+        assert_eq!(p.moments, DType::Bf16);
+        // frozen_base follows compute unless overridden
+        assert_eq!(p.frozen_base, DType::Bf16);
+        assert_eq!(p.master, DType::F32);
+        let q = PrecisionPolicy::from_flags(None, None, None,
+                                            Some("int8"))
+            .unwrap();
+        assert_eq!(q.frozen_base, DType::I8);
+        assert_eq!(q.compute, DType::F32);
+        assert!(!q.is_default());
+        // int8 is a storage dtype, not a wire/compute dtype
+        assert!(PrecisionPolicy::from_flags(Some("int8"), None, None,
+                                            None).is_err());
+        assert!(PrecisionPolicy::from_flags(None, Some("int8"), None,
+                                            None).is_err());
+        assert!(PrecisionPolicy::from_flags(None, None, Some("int8"),
+                                            None).is_err());
+        // --quantize-base f32 is a no-op request: rejected for clarity
+        assert!(PrecisionPolicy::from_flags(None, None, None,
+                                            Some("f32")).is_err());
+        assert!(DType::parse("banana").is_err());
+        assert!(p.summary().contains("comm bf16"));
+    }
+
+    #[test]
+    fn dtype_tags_roundtrip() {
+        for d in [DType::F32, DType::Bf16, DType::I8] {
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(DType::from_tag(9).is_err());
+    }
+}

@@ -1,11 +1,18 @@
-//! Host tensor substrate: row-major f32 matrices/vectors.
+//! Host tensor substrate: row-major matrices/vectors.
 //!
 //! This is the coordinator-side math library — it backs the switch
 //! operation (rank-1 updates on `W`), GaLore's gradient projection, the
 //! host optimizer, checkpoint manipulation and the singular-value analysis
 //! of Figures 10/11.  It is deliberately simple (no strides/broadcasting):
 //! every shape in the system is a vector or a 2-D matrix.
+//!
+//! The coordinator-side [`Tensor`] is `f32` (master precision); the
+//! [`dtype`] submodule provides the storage dtypes below that — software
+//! `bf16` and symmetric per-row `int8` — as [`dtype::PackedBuf`] buffers
+//! consumed by the packed kernels and the serving-time
+//! [`crate::model::packed::PackedStore`].
 
+pub mod dtype;
 pub mod linalg;
 pub mod matmul;
 

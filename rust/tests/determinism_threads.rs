@@ -174,6 +174,7 @@ fn data_parallel_workers_threaded_matches_interleaved() {
     // fused-Adam-padded vector, once per step
     let padded = manifest().adam_padded(Variant::Lora).unwrap();
     let expected = switchlora::coordinator::data_parallel::
-        expected_ring_bytes(padded, 2);
+        expected_ring_bytes(padded, 2,
+                            switchlora::tensor::dtype::DType::F32);
     assert_eq!(r1.comm.bytes, expected * 8, "ring bytes off for 8 steps");
 }
