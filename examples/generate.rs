@@ -94,6 +94,7 @@ fn main() -> Result<()> {
         sampler: Sampler::top_k(32, 0.9),
         stop_tokens: vec![0],
         seed: 7,
+        max_context: None,
     };
     let out_s = generate(&model, &store, &prompts, &cfg_s)?;
     println!("\n== sampled (top-k 32, temperature 0.9, seed 7) ==");

@@ -7,9 +7,13 @@
 //! LoRA decode at the same context; a third measures the
 //! `--quantize-base int8` serving claim — resident bytes ~4x down on
 //! the frozen base, logits within tolerance, decode speed comparable.
+//! A fourth table measures `--kv-dtype`: decode speed, cache bytes, and
+//! logit deviation per KV-cache dtype.
 //!
 //! `--json <path>` writes a machine-readable report (the committed
-//! `BENCH_infer.json` accumulates the perf trajectory).
+//! `BENCH_infer.json` holds the current trajectory point), including
+//! the flat `tracked` table — decode ms/token per spec at the largest
+//! benched context — that `tools/bench_check.py` gates CI on.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -20,7 +24,7 @@ use switchlora::model::init::seeded_store;
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
 use switchlora::model::packed::{PackedStore, ParamSource};
 use switchlora::runtime::{InferRuntime, NativeModel};
-use switchlora::tensor::dtype::DType;
+use switchlora::tensor::dtype::{DType, PrecisionPolicy};
 use switchlora::util::json::Json;
 use switchlora::util::rng::Rng;
 
@@ -70,23 +74,28 @@ fn uncached_ms_per_tok(model: &NativeModel, store: &dyn ParamSource,
     1e3 * t0.elapsed().as_secs_f64() / n_new as f64
 }
 
-fn bench_cached_vs_uncached(spec: &str) {
+/// Returns the cached decode ms/token at the largest benched context —
+/// the headline number the `tracked` trajectory table carries.
+fn bench_cached_vs_uncached(spec: &str) -> Option<f64> {
     let Some((man, store, model)) = lora_setup(spec) else {
         println!("({spec} spec unavailable)");
-        return;
+        return None;
     };
     let vocab = man.config.vocab;
     println!("\n-- {spec}: decode ms/token, cached vs full re-forward --");
     println!("{:>8} {:>14} {:>14} {:>10}", "context", "uncached",
              "kv-cached", "speedup");
     let n_new = 8;
+    let mut last_cached = None;
     for ctx_len in [16usize, 32, 64, 128] {
         let ctx = prompt(vocab, ctx_len);
         let cached = cached_ms_per_tok(&model, &store, &ctx, n_new);
         let uncached = uncached_ms_per_tok(&model, &store, &ctx, n_new);
         println!("{:>8} {:>12.3}ms {:>12.3}ms {:>9.1}x", ctx_len,
                  uncached, cached, uncached / cached.max(1e-9));
+        last_cached = Some(cached);
     }
+    last_cached
 }
 
 fn bench_prefill(spec: &str) {
@@ -136,7 +145,8 @@ fn bench_quantized_base(spec: &str) -> Vec<Json> {
     let f32_ms = cached_ms_per_tok(&dense, &merged, &ctx, n_new);
     let f32_bytes = 4 * merged.layout.total;
     for dtype in [DType::Bf16, DType::I8] {
-        let packed = PackedStore::quantize_base(&merged, dtype);
+        let Ok(packed) = PackedStore::quantize_base(&merged, dtype)
+        else { continue };
         let (bp, bf) = packed.base_bytes();
         let q_ms = cached_ms_per_tok(&dense, &packed, &ctx, n_new);
         // worst-case logit deviation vs the f32 reference at the last
@@ -170,6 +180,52 @@ fn bench_quantized_base(spec: &str) -> Vec<Json> {
     rows
 }
 
+/// The `--kv-dtype` table: decode speed, resident cache bytes, and
+/// worst-case prefill-logit deviation per KV-cache dtype (f32 is the
+/// reference row).
+fn bench_kv_dtypes(spec: &str) -> Vec<Json> {
+    let Some((man, store, _)) = lora_setup(spec) else {
+        return Vec::new();
+    };
+    let vocab = man.config.vocab;
+    let ctx = prompt(vocab, 64);
+    let n_new = 16;
+    println!("\n-- {spec}: KV-cache dtype (--kv-dtype) --");
+    let mut rows = Vec::new();
+    let mut l_ref: Vec<f32> = Vec::new();
+    for dtype in [DType::F32, DType::Bf16, DType::I8] {
+        let policy = PrecisionPolicy {
+            kv_cache: dtype,
+            ..PrecisionPolicy::default()
+        };
+        let Ok(model) =
+            NativeModel::with_policy(man.clone(), Variant::Lora, policy)
+        else { continue };
+        let ms = cached_ms_per_tok(&model, &store, &ctx, n_new);
+        let mut cache = model.new_cache(1, ctx.len() + 1);
+        let logits =
+            model.prefill(&store, &mut cache, 0, &ctx).unwrap();
+        let bytes = cache.bytes();
+        if dtype == DType::F32 {
+            l_ref = logits.clone();
+        }
+        let max_diff = l_ref
+            .iter()
+            .zip(&logits)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        println!("   {:<5} {ms:.3}ms/tok  cache {:>8}B  max|Δlogit| \
+                  {max_diff:.4}", dtype.name(), bytes);
+        rows.push(Json::obj(vec![
+            ("spec", Json::str(spec)),
+            ("kv_dtype", Json::str(dtype.name())),
+            ("ms_per_tok", Json::num(ms)),
+            ("cache_bytes", Json::num(bytes as f64)),
+            ("max_logit_diff", Json::num(max_diff as f64)),
+        ]));
+    }
+    rows
+}
+
 fn main() {
     switchlora::util::logging::init();
     let args = switchlora::cli::Args::parse(std::env::args().skip(1));
@@ -178,15 +234,26 @@ fn main() {
         switchlora::bench::record_results();
     }
     let mut quant_rows = Vec::new();
+    let mut kv_rows = Vec::new();
+    let mut tracked = Vec::new();
     for spec in ["tiny", "s1m"] {
-        bench_cached_vs_uncached(spec);
+        if let Some(ms) = bench_cached_vs_uncached(spec) {
+            // leak is fine: a handful of static-lifetime key strings
+            let key: &'static str =
+                Box::leak(format!("decode_{spec}_ms_per_tok")
+                    .into_boxed_str());
+            tracked.push((key, Json::num(ms)));
+        }
         bench_prefill(spec);
         bench_merge_overhead(spec);
         quant_rows.extend(bench_quantized_base(spec));
+        kv_rows.extend(bench_kv_dtypes(spec));
     }
     if let Some(path) = json_path {
         switchlora::bench::write_json(&path, "bench_infer", vec![
+            ("tracked", Json::obj(tracked)),
             ("quantized_base", Json::Arr(quant_rows)),
+            ("kv_cache", Json::Arr(kv_rows)),
         ])
         .expect("writing bench json");
         println!("json report: {}", path.display());

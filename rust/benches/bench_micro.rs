@@ -6,7 +6,9 @@
 //! (packed-RHS matmuls; memory/comm tables per dtype).
 //!
 //! `--json <path>` writes a machine-readable report (the committed
-//! `BENCH_kernels.json` accumulates the perf trajectory).
+//! `BENCH_kernels.json` holds the current trajectory point), including
+//! the flat `tracked` table — matmul GF/s and kernel latencies — that
+//! `tools/bench_check.py` gates CI on.
 //!
 //! These are the L3 profile the §Perf iteration worked from.
 
@@ -218,7 +220,8 @@ fn bench_thread_scaling(engine: &mut Engine) {
 
 /// Packed-RHS matmul cost per dtype: the dequant-on-load price of
 /// serving (or training) with bf16/int8 base weights, at an s1m-shaped
-/// linear.
+/// linear — plus the `--int8-native` integer-dot path on the same
+/// int8-packed weights.
 fn bench_packed_matmul() {
     println!("\n-- packed-RHS addmm_nt (s1m linear, 1024x512x512) --");
     let mut rng = Rng::new(13);
@@ -228,6 +231,7 @@ fn bench_packed_matmul() {
     let w: Vec<f32> = (0..m * kd).map(|_| rng.normal_f32(0.0, 0.5))
         .collect();
     let mut y = vec![0.0f32; rows * m];
+    kernels::set_int8_native(false);
     for dtype in [DType::F32, DType::Bf16, DType::I8] {
         let packed = PackedBuf::pack(&w, m, kd, dtype);
         let r = bench(&format!("addmm_nt_packed {dtype}"), 2, 15, || {
@@ -238,6 +242,69 @@ fn bench_packed_matmul() {
         println!("{}   (resident {} KB)", r.row(),
                  packed.resident_bytes() / 1024);
     }
+    let packed = PackedBuf::pack(&w, m, kd, DType::I8);
+    kernels::set_int8_native(true);
+    let r = bench("addmm_nt_packed i8 (int8-native)", 2, 15, || {
+        y.fill(0.0);
+        kernels::addmm_nt_packed(&mut y, &x, packed.view(), rows, kd, m);
+    });
+    kernels::set_int8_native(false);
+    println!("{}   (resident {} KB)", r.row(),
+             packed.resident_bytes() / 1024);
+}
+
+/// The flat `tracked` table of headline metrics for the perf
+/// trajectory: `tools/bench_check.py` compares these against the
+/// committed baseline and fails CI on a large regression.  Keys ending
+/// `_gflops` are higher-is-better, `_ms` lower-is-better.
+fn tracked_metrics() -> Json {
+    println!("\n-- tracked trajectory metrics --");
+    let mut rng = Rng::new(17);
+    let (rows, kd, m) = (1024usize, 512usize, 512usize);
+    let gflops = |ms: f64| {
+        (2.0 * (rows * kd * m) as f64) / (ms / 1e3) / 1e9
+    };
+    let x: Vec<f32> = (0..rows * kd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let w: Vec<f32> = (0..m * kd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let mut y = vec![0.0f32; rows * m];
+    let rf = bench("tracked: addmm_nt f32 1024x512x512", 3, 20, || {
+        y.fill(0.0);
+        kernels::addmm_nt(&mut y, &x, &w, rows, kd, m);
+    });
+    let qi8 = PackedBuf::pack(&w, m, kd, DType::I8);
+    kernels::set_int8_native(false);
+    let rd = bench("tracked: addmm_nt_packed i8 dequant", 3, 20, || {
+        y.fill(0.0);
+        kernels::addmm_nt_packed(&mut y, &x, qi8.view(), rows, kd, m);
+    });
+    kernels::set_int8_native(true);
+    let rn = bench("tracked: addmm_nt_packed i8 native", 3, 20, || {
+        y.fill(0.0);
+        kernels::addmm_nt_packed(&mut y, &x, qi8.view(), rows, kd, m);
+    });
+    kernels::set_int8_native(false);
+    let (bh, t, hd) = (16usize, 256usize, 32usize);
+    let q: Vec<f32> = (0..bh * t * hd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let kk: Vec<f32> = (0..bh * t * hd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let v: Vec<f32> = (0..bh * t * hd).map(|_| rng.normal_f32(0.0, 0.5))
+        .collect();
+    let ra = bench("tracked: attention fwd 16x256x32", 2, 10, || {
+        let o = kernels::causal_attention_fwd(&q, &kk, &v, bh, t, hd);
+        std::hint::black_box(o);
+    });
+    for r in [&rf, &rd, &rn, &ra] {
+        println!("{}", r.row());
+    }
+    Json::obj(vec![
+        ("matmul_f32_gflops", Json::num(gflops(rf.mean_ms))),
+        ("matmul_i8_dequant_gflops", Json::num(gflops(rd.mean_ms))),
+        ("matmul_i8_native_gflops", Json::num(gflops(rn.mean_ms))),
+        ("attention_fwd_ms", Json::num(ra.mean_ms)),
+    ])
 }
 
 /// Measured resident model bytes per frozen-base dtype (the
@@ -251,7 +318,8 @@ fn precision_memory_table() -> Json {
             &man, Variant::Lora, 0)
         else { continue };
         for dtype in [DType::F32, DType::Bf16, DType::I8] {
-            let packed = PackedStore::quantize_base(&store, dtype);
+            let Ok(packed) = PackedStore::quantize_base(&store, dtype)
+            else { continue };
             let (bp, bf) = packed.base_bytes();
             rows.push(Json::obj(vec![
                 ("spec", Json::str(spec)),
@@ -309,8 +377,10 @@ fn main() {
     bench_exec(&mut engine);
     bench_thread_scaling(&mut engine);
     bench_packed_matmul();
+    let tracked = tracked_metrics();
     if let Some(path) = json_path {
         switchlora::bench::write_json(&path, "bench_micro", vec![
+            ("tracked", tracked),
             ("precision_memory", precision_memory_table()),
             ("precision_comm", precision_comm_table()),
         ])

@@ -4,11 +4,17 @@
 //! warm-up, repeated timed runs, mean/p50/p95 + throughput reporting.
 //!
 //! Pass `--json <path>` to a bench binary to also write a
-//! machine-readable report (schema `switchlora-bench-v1`): every
+//! machine-readable report (schema `switchlora-bench-v2`): every
 //! [`BenchResult`] the run produced plus whatever extra tables the
-//! binary attaches (e.g. the precision memory/comm tables).  The
-//! committed `BENCH_kernels.json` / `BENCH_infer.json` at the repo root
-//! accumulate the perf trajectory across PRs.
+//! binary attaches (e.g. the precision memory/comm tables).  By
+//! convention a binary attaches a flat `tracked` table of headline
+//! metrics — keys ending `_gflops` / `_tok_s` are higher-is-better,
+//! `_ms` / `_ms_per_tok` lower-is-better — which is what
+//! `tools/bench_check.py` gates CI on.  The committed
+//! `BENCH_kernels.json` / `BENCH_infer.json` at the repo root hold the
+//! current point of the perf trajectory; the report also records a
+//! `host` fingerprint so the checker can tell a regression from a
+//! hardware change.
 
 use std::path::Path;
 use std::sync::Mutex;
@@ -42,8 +48,9 @@ pub fn write_json(path: &Path, bench: &str, tables: Vec<(&str, Json)>)
         .take()
         .unwrap_or_default();
     let mut pairs = vec![
-        ("schema", Json::str("switchlora-bench-v1")),
+        ("schema", Json::str("switchlora-bench-v2")),
         ("bench", Json::str(bench)),
+        ("host", Json::str(&host_fingerprint())),
         ("threads", Json::num(crate::kernels::threads() as f64)),
         ("results",
          Json::Arr(results.iter().map(BenchResult::to_json).collect())),
@@ -51,6 +58,22 @@ pub fn write_json(path: &Path, bench: &str, tables: Vec<(&str, Json)>)
     pairs.extend(tables);
     std::fs::write(path, Json::obj(pairs).to_string() + "\n")?;
     Ok(())
+}
+
+/// Coarse host fingerprint for the trajectory reports: timings are only
+/// comparable when this matches, so `tools/bench_check.py` downgrades a
+/// cross-host comparison to an advisory.
+pub fn host_fingerprint() -> String {
+    if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in info.lines() {
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some((_, v)) = rest.split_once(':') {
+                    return v.trim().to_string();
+                }
+            }
+        }
+    }
+    format!("{}-{}", std::env::consts::ARCH, std::env::consts::OS)
 }
 
 #[derive(Clone, Debug)]
@@ -100,7 +123,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-    let pct = |p: f64| samples[(p * (samples.len() - 1) as f64) as usize];
+    let pct = |p: f64| samples[pct_index(p, samples.len())];
     let result = BenchResult {
         name: name.to_string(),
         iters,
@@ -113,15 +136,29 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F)
     result
 }
 
+/// Nearest-rank index of percentile `p` (in `0.0..=1.0`) into a sorted
+/// sample slice of length `n`.  Rounds to the nearest rank rather than
+/// truncating: with 8 samples, p95 is the last sample (index 7) — the
+/// old `as usize` cast landed on index 6 and under-reported tail
+/// latency for every small-`n` run.
+pub fn pct_index(p: f64, n: usize) -> usize {
+    debug_assert!(n > 0, "percentile of an empty sample set");
+    ((p * (n - 1) as f64).round() as usize).min(n - 1)
+}
+
 /// Adaptive variant: time-boxed to roughly `budget_ms` of measurement.
+///
+/// The probe run that sizes the iteration count is also the warmup —
+/// its (cold) timing is discarded, and the measured loop starts hot.
+/// An extra warmup iteration here would silently shrink the budget.
 pub fn bench_budget<F: FnMut()>(name: &str, budget_ms: f64, mut f: F)
     -> BenchResult {
-    // one probe run decides the iteration count
+    // one probe run decides the iteration count and warms the code
     let t = Instant::now();
     f();
     let probe = t.elapsed().as_secs_f64() * 1e3;
     let iters = ((budget_ms / probe.max(1e-3)) as usize).clamp(3, 10_000);
-    bench(name, 1.min(iters), iters, f)
+    bench(name, 0, iters, f)
 }
 
 #[cfg(test)]
@@ -146,6 +183,22 @@ mod tests {
             count += 1;
         });
         assert!(r.iters >= 3);
-        assert!(count >= r.iters);
+        // probe + timed iterations, and nothing more: the probe is the
+        // warmup, so exactly one extra call beyond `iters`
+        assert_eq!(count, r.iters + 1);
+    }
+
+    #[test]
+    fn percentile_index_uses_nearest_rank() {
+        // the old truncating cast mapped (0.95, 8) to 6; nearest-rank
+        // lands on the max sample
+        assert_eq!(pct_index(0.95, 8), 7);
+        assert_eq!(pct_index(0.50, 8), 4); // half rounds away from zero
+        assert_eq!(pct_index(0.50, 9), 4); // exact median when odd
+        assert_eq!(pct_index(0.0, 5), 0);
+        assert_eq!(pct_index(1.0, 5), 4);
+        assert_eq!(pct_index(1.0, 1), 0);
+        // never out of bounds even at the top rank of a large n
+        assert_eq!(pct_index(1.0, 10_000), 9_999);
     }
 }

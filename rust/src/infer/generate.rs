@@ -28,6 +28,11 @@ pub struct GenConfig {
     /// token ids that end a sequence (emitted, then the sequence stops)
     pub stop_tokens: Vec<i32>,
     pub seed: u64,
+    /// KV-cache capacity ceiling (`--max-context`).  `None` sizes the
+    /// cache to fit `max_new` exactly; with a ceiling, a sequence that
+    /// fills the cache retires cleanly with fewer generated tokens
+    /// instead of aborting the whole batch.
+    pub max_context: Option<usize>,
 }
 
 impl GenConfig {
@@ -37,6 +42,7 @@ impl GenConfig {
             sampler: Sampler::greedy(),
             stop_tokens: Vec::new(),
             seed: 42,
+            max_context: None,
         }
     }
 }
@@ -82,7 +88,14 @@ pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
         });
     }
     let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
-    let mut cache = rt.new_cache(b, max_prompt + cfg.max_new);
+    let mut capacity = max_prompt + cfg.max_new;
+    if let Some(cap) = cfg.max_context {
+        ensure!(max_prompt <= cap,
+                "longest prompt ({max_prompt} tokens) exceeds \
+                 --max-context {cap}");
+        capacity = capacity.min(cap);
+    }
+    let mut cache = rt.new_cache(b, capacity);
     // one independent sampling stream per (seed, sequence index)
     let mut rngs: Vec<Rng> = (0..b)
         .map(|s| Rng::new(cfg.seed).fork(s as u64))
@@ -106,6 +119,10 @@ pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
     let v = rt.vocab_out();
     let mut decode_steps = 0usize;
     for _ in 1..cfg.max_new {
+        // a sequence whose cache is full cannot take another decode
+        // step: retire it cleanly (clamped generation) rather than
+        // letting KvCache::append abort the whole batch
+        active.retain(|&s| cache.len(s) < cache.capacity);
         if active.is_empty() {
             break;
         }

@@ -6,19 +6,105 @@
 //! Caching them turns per-token decode cost from O(T²) re-forward work
 //! into O(T): one attention sweep over the cache per layer.
 //!
-//! Layout: one `[batch·heads, capacity, head_dim]` f32 buffer per layer
-//! for K and for V.  Sequences advance independently (`lens` is
-//! per-sequence), so ragged prompts and per-sequence stop handling in a
-//! batched decode loop need no padding or masking: attention for
-//! sequence `s` simply sweeps `0..lens[s]`.
+//! Layout: one `[batch·heads, capacity, head_dim]` buffer per layer for
+//! K and for V, in a dtype-tagged storage mode (`--kv-dtype`): `f32`
+//! (the default, exact), `bf16` (half the bytes, RNE-rounded per
+//! element), or `int8` (quarter the bytes, symmetric per-position-row
+//! quantization with one f32 scale per `(seq, head, pos)` row — the
+//! same scheme the frozen base uses).  Sequences advance independently
+//! (`lens` is per-sequence), so ragged prompts and per-sequence stop
+//! handling in a batched decode loop need no padding or masking:
+//! attention for sequence `s` simply sweeps `0..lens[s]`.
 //!
 //! Attention over the cache runs on the shared kernel layer
 //! ([`crate::kernels::cached_attend`]), which mirrors
 //! `kernels::causal_attention_fwd` operation-for-operation (same
-//! dot-product, max-subtraction and normalization order), so cached
+//! dot-product, max-subtraction and normalization order), so f32 cached
 //! decode reproduces the full re-forward logits bit-for-bit — the
-//! property `rust/tests/inference.rs` pins down — while long-context
-//! prefill chunks parallelize over heads.
+//! property `rust/tests/inference.rs` pins down.  Quantized modes
+//! dequantize the live prefix into a reused f32 scratch before the same
+//! kernel, trading a bounded representation error (pinned by tests
+//! below) for serving memory that scales with concurrent users.
+
+use crate::kernels;
+use crate::tensor::dtype::{bf16_to_f32, f32_to_bf16, quantize_row_i8,
+                           DType};
+
+/// One layer's K or V storage in the cache's dtype.
+enum KvBuf {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    /// codes plus one symmetric scale per `(seq, head, pos)` head-dim
+    /// row (quantized at append time; rows past a sequence's length are
+    /// dead until overwritten)
+    I8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+impl KvBuf {
+    fn new(dtype: DType, numel: usize, rows: usize) -> KvBuf {
+        match dtype {
+            DType::F32 => KvBuf::F32(vec![0.0; numel]),
+            DType::Bf16 => KvBuf::Bf16(vec![0; numel]),
+            DType::I8 => KvBuf::I8 { q: vec![0; numel],
+                                     scales: vec![0.0; rows] },
+        }
+    }
+
+    /// Store `src` (whole head-dim rows) at element offset `dst`
+    /// (`dst` is a multiple of `hd`, `src.len()` a multiple of `hd`).
+    fn store_rows(&mut self, dst: usize, src: &[f32], hd: usize) {
+        match self {
+            KvBuf::F32(d) => {
+                d[dst..dst + src.len()].copy_from_slice(src);
+            }
+            KvBuf::Bf16(d) => {
+                for (o, &x) in d[dst..dst + src.len()].iter_mut()
+                    .zip(src) {
+                    *o = f32_to_bf16(x);
+                }
+            }
+            KvBuf::I8 { q, scales } => {
+                for (r, row) in src.chunks_exact(hd).enumerate() {
+                    let o = dst + r * hd;
+                    scales[o / hd] =
+                        quantize_row_i8(row, &mut q[o..o + hd]);
+                }
+            }
+        }
+    }
+
+    /// Dequantize whole head-dim rows `[src, src + n)` (element
+    /// offsets) into `out`.
+    fn load_rows(&self, src: usize, out: &mut [f32], hd: usize) {
+        match self {
+            KvBuf::F32(d) => out.copy_from_slice(&d[src..src + out.len()]),
+            KvBuf::Bf16(d) => {
+                for (o, &b) in out.iter_mut()
+                    .zip(&d[src..src + out.len()]) {
+                    *o = bf16_to_f32(b);
+                }
+            }
+            KvBuf::I8 { q, scales } => {
+                for (r, row) in out.chunks_exact_mut(hd).enumerate() {
+                    let o = src + r * hd;
+                    let s = scales[o / hd];
+                    for (y, &c) in row.iter_mut().zip(&q[o..o + hd]) {
+                        *y = s * c as f32;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Resident bytes (int8 includes its per-row f32 scales).
+    fn bytes(&self) -> usize {
+        match self {
+            KvBuf::F32(d) => 4 * d.len(),
+            KvBuf::Bf16(d) => 2 * d.len(),
+            KvBuf::I8 { q, scales } => q.len() + 4 * scales.len(),
+        }
+    }
+}
 
 /// Key/value cache over `layers × batch` independent sequences.
 pub struct KvCache {
@@ -28,33 +114,59 @@ pub struct KvCache {
     pub head_dim: usize,
     /// maximum positions per sequence
     pub capacity: usize,
+    /// storage dtype of the K/V buffers (`--kv-dtype`)
+    dtype: DType,
     /// tokens currently cached, per sequence
     lens: Vec<usize>,
     /// per layer: `[batch·heads, capacity, head_dim]`
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    k: Vec<KvBuf>,
+    v: Vec<KvBuf>,
     /// score-row scratch reused across `attend` calls (the per-layer
     /// decode hot path would otherwise heap-allocate per call)
     scratch: Vec<f32>,
+    /// dequantized `[heads, ctx, head_dim]` K/V scratch for the packed
+    /// storage modes, reused across `attend` calls
+    kdq: Vec<f32>,
+    vdq: Vec<f32>,
 }
 
 impl KvCache {
+    /// An exact f32 cache — the default storage mode.
     pub fn new(layers: usize, batch: usize, heads: usize, head_dim: usize,
                capacity: usize) -> KvCache {
+        KvCache::with_dtype(layers, batch, heads, head_dim, capacity,
+                            DType::F32)
+    }
+
+    /// A cache storing K/V in `dtype` (`--kv-dtype`).
+    pub fn with_dtype(layers: usize, batch: usize, heads: usize,
+                      head_dim: usize, capacity: usize, dtype: DType)
+        -> KvCache {
         assert!(layers > 0 && batch > 0 && heads > 0 && head_dim > 0
                 && capacity > 0, "degenerate KV cache shape");
         let per_layer = batch * heads * capacity * head_dim;
+        let rows = batch * heads * capacity;
         KvCache {
             layers,
             batch,
             heads,
             head_dim,
             capacity,
+            dtype,
             lens: vec![0; batch],
-            k: (0..layers).map(|_| vec![0.0; per_layer]).collect(),
-            v: (0..layers).map(|_| vec![0.0; per_layer]).collect(),
+            k: (0..layers).map(|_| KvBuf::new(dtype, per_layer, rows))
+                .collect(),
+            v: (0..layers).map(|_| KvBuf::new(dtype, per_layer, rows))
+                .collect(),
             scratch: Vec::new(),
+            kdq: Vec::new(),
+            vdq: Vec::new(),
         }
+    }
+
+    /// Storage dtype of the K/V buffers.
+    pub fn dtype(&self) -> DType {
+        self.dtype
     }
 
     /// Tokens cached so far for sequence `seq`.
@@ -67,10 +179,11 @@ impl KvCache {
         self.lens.fill(0);
     }
 
-    /// Cache memory footprint in bytes (serving-capacity accounting).
+    /// Cache memory footprint in bytes (serving-capacity accounting):
+    /// the K and V payloads at their storage width, plus the int8
+    /// per-row scales when quantized.
     pub fn bytes(&self) -> usize {
-        2 * self.layers * self.batch * self.heads * self.capacity
-            * self.head_dim * std::mem::size_of::<f32>()
+        self.k.iter().chain(&self.v).map(|b| b.bytes()).sum()
     }
 
     /// Flat offset of `(seq, head, pos)` in a layer buffer.
@@ -95,10 +208,10 @@ impl KvCache {
         for h in 0..nh {
             let src = h * t_new * hd;
             let dst = self.at(seq, h, base);
-            self.k[layer][dst..dst + t_new * hd]
-                .copy_from_slice(&k_new[src..src + t_new * hd]);
-            self.v[layer][dst..dst + t_new * hd]
-                .copy_from_slice(&v_new[src..src + t_new * hd]);
+            self.k[layer].store_rows(dst, &k_new[src..src + t_new * hd],
+                                     hd);
+            self.v[layer].store_rows(dst, &v_new[src..src + t_new * hd],
+                                     hd);
         }
     }
 
@@ -115,18 +228,51 @@ impl KvCache {
     /// appended via [`KvCache::append`].  Chunk row `i` attends to cached
     /// positions `0..len+i+1`, which is exactly full causal attention.
     /// Returns `[heads, t_new, head_dim]`.
+    ///
+    /// The f32 storage mode hands the kernel zero-copy slices; packed
+    /// modes dequantize only the live prefix (`0..len+t_new`) of each
+    /// head into reused scratch, so decode never touches dead capacity.
     pub fn attend(&mut self, layer: usize, seq: usize, q: &[f32],
                   t_new: usize) -> Vec<f32> {
         let (nh, hd, cap) = (self.heads, self.head_dim, self.capacity);
         let base = self.lens[seq];
         assert_eq!(q.len(), nh * t_new * hd, "q chunk shape");
-        // the heads of one sequence are contiguous: [nh, cap, hd]
         let mut scratch = std::mem::take(&mut self.scratch);
-        let lo = self.at(seq, 0, 0);
-        let kc = &self.k[layer][lo..lo + nh * cap * hd];
-        let vc = &self.v[layer][lo..lo + nh * cap * hd];
-        let o = crate::kernels::cached_attend(q, kc, vc, nh, t_new, base,
-                                              cap, hd, &mut scratch);
+        let o = if self.dtype == DType::F32 {
+            // the heads of one sequence are contiguous: [nh, cap, hd]
+            let lo = self.at(seq, 0, 0);
+            let (kc, vc) = match (&self.k[layer], &self.v[layer]) {
+                (KvBuf::F32(kd), KvBuf::F32(vd)) => {
+                    (&kd[lo..lo + nh * cap * hd],
+                     &vd[lo..lo + nh * cap * hd])
+                }
+                _ => unreachable!("f32 cache holds f32 buffers"),
+            };
+            kernels::cached_attend(q, kc, vc, nh, t_new, base, cap, hd,
+                                   &mut scratch)
+        } else {
+            let ctx = base + t_new;
+            let mut kdq = std::mem::take(&mut self.kdq);
+            let mut vdq = std::mem::take(&mut self.vdq);
+            kdq.resize(nh * ctx * hd, 0.0);
+            vdq.resize(nh * ctx * hd, 0.0);
+            for h in 0..nh {
+                let src = self.at(seq, h, 0);
+                let dst = h * ctx * hd;
+                self.k[layer].load_rows(src,
+                                        &mut kdq[dst..dst + ctx * hd],
+                                        hd);
+                self.v[layer].load_rows(src,
+                                        &mut vdq[dst..dst + ctx * hd],
+                                        hd);
+            }
+            // the dequantized copy is tight: capacity == ctx
+            let o = kernels::cached_attend(q, &kdq, &vdq, nh, t_new,
+                                           base, ctx, hd, &mut scratch);
+            self.kdq = kdq;
+            self.vdq = vdq;
+            o
+        };
         self.scratch = scratch;
         o
     }
@@ -243,6 +389,81 @@ mod tests {
     fn bytes_accounting() {
         let c = KvCache::new(2, 3, 4, 8, 16);
         assert_eq!(c.bytes(), 2 * 2 * 3 * 4 * 16 * 8 * 4);
+        // bf16 halves the payload exactly
+        let b = KvCache::with_dtype(2, 3, 4, 8, 16, DType::Bf16);
+        assert_eq!(b.bytes(), c.bytes() / 2);
+        // int8: 1 byte/elem + one f32 scale per (seq, head, pos) row
+        let i = KvCache::with_dtype(2, 3, 4, 8, 16, DType::I8);
+        let rows = 3 * 4 * 16;
+        assert_eq!(i.bytes(), 2 * 2 * (rows * 8 + 4 * rows));
+        assert_eq!(i.dtype(), DType::I8);
+        assert_eq!(c.dtype(), DType::F32);
+    }
+
+    #[test]
+    fn quantized_cache_attends_close_to_f32() {
+        // bf16/int8 storage perturbs K/V by at most one quantization
+        // step per element; the attention output (a convex combination
+        // of V rows re-weighted by slightly-off scores) stays close
+        for (dtype, tol) in [(DType::Bf16, 0.02), (DType::I8, 0.08)] {
+            prop_check("quantized KV attend close", 10, move |rng| {
+                let nh = 1 + rng.below(3);
+                let hd = 4 * (1 + rng.below(3));
+                let t = 2 + rng.below(8);
+                let q = randv(nh * t * hd, rng);
+                let k = randv(nh * t * hd, rng);
+                let v = randv(nh * t * hd, rng);
+                let mut exact = KvCache::new(1, 1, nh, hd, t);
+                exact.append(0, 0, &k, &v, t);
+                let want = exact.attend(0, 0, &q, t);
+                let mut quant =
+                    KvCache::with_dtype(1, 1, nh, hd, t, dtype);
+                quant.append(0, 0, &k, &v, t);
+                let got = quant.attend(0, 0, &q, t);
+                for (g, w) in got.iter().zip(&want) {
+                    if (g - w).abs() > tol {
+                        return Err(format!(
+                            "{dtype}: {g} vs {w} (tol {tol})"));
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn quantized_chunked_append_is_position_consistent() {
+        // appending in chunks quantizes exactly the same per-position
+        // rows, so chunked == one-shot bitwise for every storage mode
+        let mut rng = Rng::new(31);
+        let (nh, hd, t, split) = (2, 8, 6, 4);
+        let k = randv(nh * t * hd, &mut rng);
+        let v = randv(nh * t * hd, &mut rng);
+        let q = randv(nh * (t - split) * hd, &mut rng);
+        let part = |x: &[f32], lo: usize, hi: usize| -> Vec<f32> {
+            (0..nh)
+                .flat_map(|h| {
+                    x[(h * t + lo) * hd..(h * t + hi) * hd].to_vec()
+                })
+                .collect()
+        };
+        for dtype in [DType::Bf16, DType::I8] {
+            let mut one = KvCache::with_dtype(1, 1, nh, hd, t, dtype);
+            one.append(0, 0, &k, &v, t);
+            one.bump(0, split); // queries sit at positions split..t
+            let want = one.attend(0, 0, &q, t - split);
+            let mut two = KvCache::with_dtype(1, 1, nh, hd, t, dtype);
+            two.append(0, 0, &part(&k, 0, split), &part(&v, 0, split),
+                       split);
+            two.bump(0, split);
+            two.append(0, 0, &part(&k, split, t), &part(&v, split, t),
+                       t - split);
+            let got = two.attend(0, 0, &q, t - split);
+            let bits = |x: &[f32]| -> Vec<u32> {
+                x.iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(bits(&got), bits(&want), "{dtype}");
+        }
     }
 
     #[test]

@@ -18,6 +18,18 @@
 //! checkpoint subsystem survive unchanged
 //! (`rust/tests/determinism_threads.rs`).
 //!
+//! **Vectorization layout.**  Every hot inner loop is one of two
+//! shapes: a lane-split [`dot`] (eight independent accumulators, fixed
+//! pairwise reduction — removes the serial FP dependence chain that
+//! blocks packed FMAs) or a unit-stride [`axpy`].  The packed kernels
+//! hoist their dtype dispatch out of the k-loop entirely: a weight row
+//! is dequantized once into a contiguous f32 panel and the panel goes
+//! through the same [`dot`]/[`axpy`] the f32 kernels use, which keeps
+//! `packed(buf) == f32(buf.to_f32())` bitwise by construction.  An
+//! optional int8×int8→i32 path ([`set_int8_native`], `--int8-native`)
+//! trades that bitwise equality for integer throughput with a bounded,
+//! tested error.
+//!
 //! Thread control: `--threads N` / `SWITCHLORA_THREADS` / detected
 //! parallelism — see [`pool`].  Kernels stay inline below a minimum task
 //! size, so tiny shapes (single-token decode, 2×2 tests) never pay the
@@ -28,13 +40,121 @@ pub mod pool;
 pub use pool::{detected_parallelism, in_serial, serial, set_threads,
                threads};
 
-use crate::tensor::dtype::{bf16_to_f32, MatRef};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::tensor::dtype::{bf16_to_f32, quantize_row_i8, MatRef};
 
 /// Minimum useful task size in multiply-adds: below roughly this much
 /// work per task, pool dispatch costs more than it saves, so kernels run
 /// inline.  A threshold never affects results (see the determinism
 /// contract above), only where the work runs.
 const MIN_TASK_WORK: usize = 1 << 14;
+
+/// Lane count of the split accumulators in [`dot`]/[`dot_i8`].  Eight
+/// f32 lanes fill one AVX2 register (two NEON registers), which is what
+/// lets LLVM emit packed FMAs; the final reduction is a fixed pairwise
+/// tree, so the result is one well-defined value at any thread count
+/// and on any target.
+const DOT_LANES: usize = 8;
+
+/// Inner product with [`DOT_LANES`] independent accumulators.  The
+/// naive `acc += a·b` loop is a serial FP dependence chain the
+/// vectorizer must not reassociate; splitting the sum into fixed lanes
+/// (lane `l` owns elements `l, l+8, l+16, …`) removes the chain while
+/// keeping one deterministic accumulation order — the tail past the
+/// last full block is folded in after the pairwise tree.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot length");
+    let ac = a.chunks_exact(DOT_LANES);
+    let bc = b.chunks_exact(DOT_LANES);
+    let mut tail = 0.0f32;
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += x * y;
+    }
+    let mut lanes = [0.0f32; DOT_LANES];
+    for (av, bv) in ac.zip(bc) {
+        for (l, acc) in lanes.iter_mut().enumerate() {
+            *acc += av[l] * bv[l];
+        }
+    }
+    let head = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+    head + tail
+}
+
+/// Integer inner product for the int8-native path: widen each code to
+/// `i32` and accumulate in `i32` lanes.  Integer addition is exact, so
+/// lane order is irrelevant here; the only requirement is
+/// `k ≤ I8_NATIVE_MAX_K` so `k·127²` cannot overflow.
+#[inline]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len(), "dot_i8 length");
+    let ac = a.chunks_exact(DOT_LANES);
+    let bc = b.chunks_exact(DOT_LANES);
+    let mut tail = 0i32;
+    for (x, y) in ac.remainder().iter().zip(bc.remainder()) {
+        tail += *x as i32 * *y as i32;
+    }
+    let mut lanes = [0i32; DOT_LANES];
+    for (av, bv) in ac.zip(bc) {
+        for (l, acc) in lanes.iter_mut().enumerate() {
+            *acc += av[l] as i32 * bv[l] as i32;
+        }
+    }
+    lanes.iter().sum::<i32>() + tail
+}
+
+/// Largest inner dimension the int8-native dot accepts: past this the
+/// worst-case `k·127·127` magnitude could overflow `i32`, so
+/// [`addmm_nt_packed`] falls back to the dequantizing reference path
+/// (always correct, just slower).
+pub const I8_NATIVE_MAX_K: usize = (i32::MAX / (127 * 127)) as usize;
+
+/// `y += s·x` over contiguous slices — the unit-stride update shared by
+/// the axpy-style kernels (`addmm_nn`/`addmm_tn`/`gram`/`matmul_nn`,
+/// attention's weighted sums).  Elementwise, so it vectorizes without
+/// any reassociation: bitwise identical to the scalar loop it replaces.
+#[inline]
+fn axpy(y: &mut [f32], s: f32, x: &[f32]) {
+    for (yj, xj) in y.iter_mut().zip(x) {
+        *yj += s * xj;
+    }
+}
+
+/// Runtime switch for the int8×int8→i32 matmul path: 0 = unset (read
+/// `SWITCHLORA_INT8_NATIVE` on first query), 1 = off, 2 = on.
+static INT8_NATIVE: AtomicU8 = AtomicU8::new(0);
+
+/// Enable/disable the int8-native matmul path (`--int8-native`).  Off
+/// by default: the dequantize-on-load path stays the bitwise reference
+/// (`packed == f32(w.to_f32())`), while the native path re-quantizes
+/// each activation row and accumulates in i32, trading a bounded
+/// rounding error (see [`addmm_nt_packed`]) for integer throughput.
+pub fn set_int8_native(on: bool) {
+    INT8_NATIVE.store(if on { 2 } else { 1 }, Ordering::SeqCst);
+}
+
+/// Whether the int8-native path is engaged — `--int8-native`, the
+/// `SWITCHLORA_INT8_NATIVE` env var (`1`/`true`/`on`), or
+/// [`set_int8_native`].
+pub fn int8_native() -> bool {
+    match INT8_NATIVE.load(Ordering::SeqCst) {
+        0 => {
+            let on = std::env::var("SWITCHLORA_INT8_NATIVE")
+                .map(|v| {
+                    v == "1"
+                        || v.eq_ignore_ascii_case("true")
+                        || v.eq_ignore_ascii_case("on")
+                })
+                .unwrap_or(false);
+            set_int8_native(on);
+            on
+        }
+        1 => false,
+        _ => true,
+    }
+}
 
 /// Raw mutable base pointer that may cross into pool tasks.  Each task
 /// reborrows a *disjoint* row range, which is what makes the aliasing
@@ -109,12 +229,7 @@ pub fn addmm_nt(y: &mut [f32], x: &[f32], w: &[f32], rows: usize,
         for (i, yr) in yc.chunks_exact_mut(m).enumerate() {
             let xr = &x[(lo + i) * k..(lo + i + 1) * k];
             for (o, yo) in yr.iter_mut().enumerate() {
-                let wr = &w[o * k..(o + 1) * k];
-                let mut acc = 0.0f32;
-                for (a, b) in xr.iter().zip(wr) {
-                    acc += a * b;
-                }
-                *yo += acc;
+                *yo += dot(xr, &w[o * k..(o + 1) * k]);
             }
         }
     });
@@ -137,10 +252,7 @@ pub fn addmm_nn(y: &mut [f32], x: &[f32], w: &[f32], rows: usize,
                 if s == 0.0 {
                     continue;
                 }
-                let wr = &w[o * k..(o + 1) * k];
-                for (yj, wj) in yr.iter_mut().zip(wr) {
-                    *yj += s * wj;
-                }
+                axpy(yr, s, &w[o * k..(o + 1) * k]);
             }
         }
     });
@@ -167,10 +279,7 @@ pub fn addmm_tn(wg: &mut [f32], dy: &[f32], x: &[f32], rows: usize,
                 if s == 0.0 {
                     continue;
                 }
-                let wr = &mut wc[(o - lo) * k..(o - lo + 1) * k];
-                for (wj, xj) in wr.iter_mut().zip(xr) {
-                    *wj += s * xj;
-                }
+                axpy(&mut wc[(o - lo) * k..(o - lo + 1) * k], s, xr);
             }
         }
     });
@@ -198,10 +307,7 @@ pub fn matmul_nn(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize,
                     if aik == 0.0 {
                         continue;
                     }
-                    let b_row = &b[kk * n..(kk + 1) * n];
-                    for (cj, bj) in c_row.iter_mut().zip(b_row) {
-                        *cj += aik * bj;
-                    }
+                    axpy(c_row, aik, &b[kk * n..(kk + 1) * n]);
                 }
             }
         }
@@ -225,10 +331,7 @@ pub fn gram(g: &mut [f32], a: &[f32], rows: usize, n: usize) {
                 if rp == 0.0 {
                     continue;
                 }
-                let g_row = &mut gc[(p - lo) * n..(p - lo + 1) * n];
-                for (gq, aq) in g_row.iter_mut().zip(row) {
-                    *gq += rp * aq;
-                }
+                axpy(&mut gc[(p - lo) * n..(p - lo + 1) * n], rp, row);
             }
         }
     });
@@ -257,58 +360,115 @@ pub fn rotate_columns(a: &mut [f32], rows: usize, cols: usize, p: usize,
 // ---------------------------------------------------------------------
 // Packed-RHS matmuls (the precision layer).
 //
-// Same loop structure, row ownership and accumulation order as the f32
+// Same row ownership and per-element accumulation order as the f32
 // kernels above — the determinism contract holds unchanged — but the
-// weight operand is a dtype-tagged [`MatRef`] that is dequantized *on
-// load* inside the blocked inner loop, with f32 accumulation.  Dequant
-// is per element, so for any packed buffer `b`:
+// weight operand is a dtype-tagged [`MatRef`].  The dtype dispatch is
+// hoisted all the way out of the hot loops: each weight row is
+// dequantized once into a contiguous f32 panel ([`dequant_row`], a
+// branch-free unit-stride loop) and the panel then goes through the
+// same lane-split [`dot`]/[`axpy`] the f32 kernels use.  Dequant stays
+// per-element in value, so for any packed buffer `b`:
 // `packed_kernel(b) == f32_kernel(b.to_f32())` **bitwise**, and an
 // `F32` view delegates straight to the f32 kernel (a strict no-op for
-// the default all-f32 policy).
+// the default all-f32 policy).  The optional int8-native path is the
+// one deliberate exception — approximate, bounded, and off by default.
 // ---------------------------------------------------------------------
+
+/// Dequantize row `o` of a packed weight into the f32 `panel`
+/// (`panel.len() == k`).  One dispatch per row; the per-element loop is
+/// branch-free and unit-stride on both sides, producing exactly the
+/// values `to_f32()` would for that row.
+#[inline]
+fn dequant_row(w: MatRef<'_>, o: usize, k: usize, panel: &mut [f32]) {
+    match w {
+        MatRef::F32(wf) => panel.copy_from_slice(&wf[o * k..(o + 1) * k]),
+        MatRef::Bf16(wq) => {
+            for (p, &b) in panel.iter_mut().zip(&wq[o * k..(o + 1) * k]) {
+                *p = bf16_to_f32(b);
+            }
+        }
+        MatRef::I8 { q, scales } => {
+            let sc = scales[o];
+            for (p, &b) in panel.iter_mut().zip(&q[o * k..(o + 1) * k]) {
+                *p = sc * b as f32;
+            }
+        }
+    }
+}
 
 /// `y[rows,m] += x[rows,k] @ w[m,k]ᵀ` with a packed weight operand (the
 /// linear-layer orientation; `w` row `o` holds output channel `o`, so
 /// int8 per-row scales are per output channel).  Parallel over rows of
 /// `y`, f32 accumulation.
+///
+/// With [`int8_native`] engaged and an `I8` operand, takes the
+/// int8×int8→i32 path instead: the activation row is re-quantized once
+/// (same symmetric per-row scheme as the weights), whole output rows
+/// run as integer dots, and each output gets one `sx·sw[o]` rescale.
+/// That path is *not* bitwise equal to the reference — its error per
+/// output is bounded by the activation quantization step,
+/// `|Δy| ≤ (sx/2)·Σ_j |w_deq[o,j]|` to first order (pinned by a test
+/// below) — and falls back to the reference when `k >`
+/// [`I8_NATIVE_MAX_K`].
 pub fn addmm_nt_packed(y: &mut [f32], x: &[f32], w: MatRef<'_>,
                        rows: usize, k: usize, m: usize) {
     debug_assert_eq!(y.len(), rows * m, "addmm_nt_packed y shape");
     debug_assert_eq!(x.len(), rows * k, "addmm_nt_packed x shape");
     debug_assert_eq!(w.numel(), m * k, "addmm_nt_packed w shape");
-    let (wq16, wq8, scales) = match w {
+    match w {
         MatRef::F32(wf) => {
             addmm_nt(y, x, wf, rows, k, m);
             return;
         }
-        MatRef::Bf16(wq) => (Some(wq), None, None),
         MatRef::I8 { q, scales } => {
             debug_assert_eq!(scales.len(), m, "addmm_nt_packed scales");
-            (None, Some(q), Some(scales))
+            if int8_native() && k <= I8_NATIVE_MAX_K {
+                addmm_nt_i8_native(y, x, q, scales, rows, k, m);
+                return;
+            }
         }
-    };
+        MatRef::Bf16(_) => {}
+    }
     let yp = SendPtr(y.as_mut_ptr());
     par_rows(rows, k * m, |lo, hi| {
         // SAFETY: tasks receive disjoint row ranges of `y`
         let yc = unsafe { yp.rows(lo, hi, m) };
+        // Weight row `o` is dequantized once per task and shared by all
+        // owned activation rows (the old loop re-dequantized it per
+        // output element).  Each y element is still written by exactly
+        // one task with the same [`dot`] the f32 kernel uses, so the
+        // bitwise contract and the determinism contract both hold.
+        let mut panel = vec![0.0f32; k];
+        for o in 0..m {
+            dequant_row(w, o, k, &mut panel);
+            for (i, yr) in yc.chunks_exact_mut(m).enumerate() {
+                let xr = &x[(lo + i) * k..(lo + i + 1) * k];
+                yr[o] += dot(xr, &panel);
+            }
+        }
+    });
+}
+
+/// Int8-native body of [`addmm_nt_packed`].  Row ownership and the
+/// one-task-per-element rule are unchanged, so the path is thread-count
+/// invariant; a non-finite activation row quantizes to a NaN scale and
+/// poisons its outputs, matching f32 NaN propagation.
+fn addmm_nt_i8_native(y: &mut [f32], x: &[f32], q: &[i8], sw: &[f32],
+                      rows: usize, k: usize, m: usize) {
+    let yp = SendPtr(y.as_mut_ptr());
+    par_rows(rows, k * m, |lo, hi| {
+        // SAFETY: tasks receive disjoint row ranges of `y`
+        let yc = unsafe { yp.rows(lo, hi, m) };
+        let mut qx = vec![0i8; k];
         for (i, yr) in yc.chunks_exact_mut(m).enumerate() {
             let xr = &x[(lo + i) * k..(lo + i + 1) * k];
+            let sx = quantize_row_i8(xr, &mut qx);
+            if sx == 0.0 {
+                continue; // exact-zero activation row adds nothing
+            }
             for (o, yo) in yr.iter_mut().enumerate() {
-                let mut acc = 0.0f32;
-                if let Some(wq) = wq16 {
-                    let wr = &wq[o * k..(o + 1) * k];
-                    for (a, &b) in xr.iter().zip(wr) {
-                        acc += a * bf16_to_f32(b);
-                    }
-                } else {
-                    let (q, s) = (wq8.unwrap(), scales.unwrap());
-                    let sc = s[o];
-                    let wr = &q[o * k..(o + 1) * k];
-                    for (a, &b) in xr.iter().zip(wr) {
-                        acc += a * (sc * b as f32);
-                    }
-                }
-                *yo += acc;
+                let acc = dot_i8(&qx, &q[o * k..(o + 1) * k]);
+                *yo += (sx * sw[o]) * acc as f32;
             }
         }
     });
@@ -319,45 +479,45 @@ pub fn addmm_nt_packed(y: &mut [f32], x: &[f32], w: MatRef<'_>,
 /// over rows of `y`, f32 accumulation, same zero-skip as the f32
 /// kernel (decided on the f32 `x` values, so the skip pattern matches
 /// the dequantize-then-`addmm_nn` reference exactly).
+///
+/// No int8-native variant exists for this orientation: the per-row
+/// weight scales multiply different rows of the *sum* here, so they
+/// cannot be factored out of an integer accumulator — and this kernel
+/// only runs in training backward passes, never on the serving path.
 pub fn addmm_nn_packed(y: &mut [f32], x: &[f32], w: MatRef<'_>,
                        rows: usize, m: usize, k: usize) {
     debug_assert_eq!(y.len(), rows * k, "addmm_nn_packed y shape");
     debug_assert_eq!(x.len(), rows * m, "addmm_nn_packed x shape");
     debug_assert_eq!(w.numel(), m * k, "addmm_nn_packed w shape");
-    let (wq16, wq8, scales) = match w {
-        MatRef::F32(wf) => {
-            addmm_nn(y, x, wf, rows, m, k);
-            return;
-        }
-        MatRef::Bf16(wq) => (Some(wq), None, None),
-        MatRef::I8 { q, scales } => {
-            debug_assert_eq!(scales.len(), m, "addmm_nn_packed scales");
-            (None, Some(q), Some(scales))
-        }
-    };
+    if let MatRef::F32(wf) = w {
+        addmm_nn(y, x, wf, rows, m, k);
+        return;
+    }
+    if let MatRef::I8 { scales, .. } = w {
+        debug_assert_eq!(scales.len(), m, "addmm_nn_packed scales");
+    }
     let yp = SendPtr(y.as_mut_ptr());
     par_rows(rows, m * k, |lo, hi| {
         // SAFETY: tasks receive disjoint row ranges of `y`
         let yc = unsafe { yp.rows(lo, hi, k) };
-        for (i, yr) in yc.chunks_exact_mut(k).enumerate() {
-            let xr = &x[(lo + i) * m..(lo + i + 1) * m];
-            for (o, &s) in xr.iter().enumerate() {
+        // `w` row `o` scales column `o` of `x`.  Looping `o` outer
+        // amortizes one dequant per task over all owned rows while each
+        // y-row still accumulates in ascending-`o` order — the same
+        // per-element order as `addmm_nn`, so the bitwise contract
+        // holds.  A row whose column of `x` is entirely zero is never
+        // dequantized at all (the f32 kernel's zero-skip, hoisted).
+        let mut panel = vec![0.0f32; k];
+        for o in 0..m {
+            if (lo..hi).all(|i| x[i * m + o] == 0.0) {
+                continue;
+            }
+            dequant_row(w, o, k, &mut panel);
+            for (i, yr) in yc.chunks_exact_mut(k).enumerate() {
+                let s = x[(lo + i) * m + o];
                 if s == 0.0 {
                     continue;
                 }
-                if let Some(wq) = wq16 {
-                    let wr = &wq[o * k..(o + 1) * k];
-                    for (yj, &wj) in yr.iter_mut().zip(wr) {
-                        *yj += s * bf16_to_f32(wj);
-                    }
-                } else {
-                    let (q, sc) = (wq8.unwrap(), scales.unwrap());
-                    let so = sc[o];
-                    let wr = &q[o * k..(o + 1) * k];
-                    for (yj, &wj) in yr.iter_mut().zip(wr) {
-                        *yj += s * (so * wj as f32);
-                    }
-                }
+                axpy(yr, s, &panel);
             }
         }
     });
@@ -391,12 +551,7 @@ pub fn causal_attention_fwd(q: &[f32], k: &[f32], v: &[f32], bh: usize,
             let arow = &mut ac[(r - lo) * t..(r - lo + 1) * t];
             let mut zmax = f32::NEG_INFINITY;
             for j in 0..=i {
-                let kj = &kg[j * hd..(j + 1) * hd];
-                let mut z = 0.0f32;
-                for d in 0..hd {
-                    z += qi[d] * kj[d];
-                }
-                let z = z * scale;
+                let z = dot(qi, &kg[j * hd..(j + 1) * hd]) * scale;
                 arow[j] = z;
                 zmax = zmax.max(z);
             }
@@ -408,11 +563,7 @@ pub fn causal_attention_fwd(q: &[f32], k: &[f32], v: &[f32], bh: usize,
             let orow = &mut oc[(r - lo) * hd..(r - lo + 1) * hd];
             for j in 0..=i {
                 arow[j] /= denom;
-                let p = arow[j];
-                let vj = &vg[j * hd..(j + 1) * hd];
-                for d in 0..hd {
-                    orow[d] += p * vj[d];
-                }
+                axpy(orow, arow[j], &vg[j * hd..(j + 1) * hd]);
             }
         }
     });
@@ -456,11 +607,8 @@ pub fn causal_attention_bwd(dout: &[f32], q: &[f32], k: &[f32],
                     let p = arow[j];
                     let vj = &vg[j * hd..(j + 1) * hd];
                     let dvj = &mut dvc[goff + j * hd..goff + (j + 1) * hd];
-                    let mut d = 0.0f32;
-                    for t_ in 0..hd {
-                        dvj[t_] += p * doi[t_];
-                        d += doi[t_] * vj[t_];
-                    }
+                    axpy(dvj, p, doi);
+                    let d = dot(doi, vj);
                     datt[j] = d;
                     row_dot += p * d;
                 }
@@ -473,14 +621,10 @@ pub fn causal_attention_bwd(dout: &[f32], q: &[f32], k: &[f32],
                         continue;
                     }
                     let kj = &kg[j * hd..(j + 1) * hd];
-                    let dkj =
-                        &mut dkc[goff + j * hd..goff + (j + 1) * hd];
-                    let dqi =
-                        &mut dqc[goff + i * hd..goff + (i + 1) * hd];
-                    for d in 0..hd {
-                        dqi[d] += dz * kj[d];
-                        dkj[d] += dz * qi[d];
-                    }
+                    axpy(&mut dqc[goff + i * hd..goff + (i + 1) * hd],
+                         dz, kj);
+                    axpy(&mut dkc[goff + j * hd..goff + (j + 1) * hd],
+                         dz, qi);
                 }
             }
         }
@@ -542,12 +686,7 @@ fn attend_heads(o: &mut [f32], q: &[f32], kc: &[f32], vc: &[f32],
             let ctx = base + i + 1;
             let mut zmax = f32::NEG_INFINITY;
             for (j, zj) in zrow.iter_mut().take(ctx).enumerate() {
-                let kj = &kg[j * hd..(j + 1) * hd];
-                let mut z = 0.0f32;
-                for (a, b) in qi.iter().zip(kj) {
-                    z += a * b;
-                }
-                let z = z * scale;
+                let z = dot(qi, &kg[j * hd..(j + 1) * hd]) * scale;
                 *zj = z;
                 zmax = zmax.max(z);
             }
@@ -559,11 +698,7 @@ fn attend_heads(o: &mut [f32], q: &[f32], kc: &[f32], vc: &[f32],
             let orow = &mut o[((h - lo) * t_new + i) * hd
                               ..((h - lo) * t_new + i + 1) * hd];
             for (j, zj) in zrow.iter().take(ctx).enumerate() {
-                let p = zj / denom;
-                let vj = &vg[j * hd..(j + 1) * hd];
-                for (od, vd) in orow.iter_mut().zip(vj) {
-                    *od += p * vd;
-                }
+                axpy(orow, zj / denom, &vg[j * hd..(j + 1) * hd]);
             }
         }
     }
@@ -809,6 +944,11 @@ mod tests {
     #[test]
     fn packed_kernels_match_dequantize_then_f32_bitwise() {
         use crate::tensor::dtype::{DType, PackedBuf};
+        // hold the test lock: the int8-native tests below toggle the
+        // process-global flag, and this test pins the reference path
+        let _t = pool::TEST_SERIALIZE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
         let mut rng = Rng::new(9);
         let (rows, k, m) = (11, 37, 23);
         let x = randv(rows * k, &mut rng);
@@ -856,6 +996,84 @@ mod tests {
                     b
                 });
         }
+    }
+
+    #[test]
+    fn int8_native_error_bounded_by_activation_quant_step() {
+        use crate::tensor::dtype::{DType, PackedBuf};
+        let mut rng = Rng::new(12);
+        let (rows, k, m) = (17, 64, 13);
+        let x = randv(rows * k, &mut rng);
+        let w = randv(m * k, &mut rng);
+        let packed = PackedBuf::pack(&w, m, k, DType::I8);
+        let wd = packed.to_f32();
+        let (q, sw) = match packed.view() {
+            MatRef::I8 { q, scales } => (q, scales),
+            _ => unreachable!(),
+        };
+        let mut reference = vec![0.0; rows * m];
+        addmm_nt(&mut reference, &x, &wd, rows, k, m);
+        let mut native = vec![0.0; rows * m];
+        addmm_nt_i8_native(&mut native, &x, q, sw, rows, k, m);
+        // the only approximation is the activation re-quantization:
+        // |Δy[i,o]| ≤ (sx/2)·Σ_j |w_deq[o,j]|, plus fp slack
+        let mut qx = vec![0i8; k];
+        for i in 0..rows {
+            let xr = &x[i * k..(i + 1) * k];
+            let sx = quantize_row_i8(xr, &mut qx);
+            for o in 0..m {
+                let wsum: f32 = wd[o * k..(o + 1) * k]
+                    .iter()
+                    .map(|v| v.abs())
+                    .sum();
+                let bound = 0.505 * sx * wsum + 1e-4;
+                let err = (native[i * m + o] - reference[i * m + o]).abs();
+                assert!(err <= bound,
+                        "({i},{o}): err {err} > bound {bound}");
+            }
+        }
+        // the native path obeys the determinism contract too
+        assert_thread_invariant(
+            || {
+                let mut y = vec![0.0; rows * m];
+                addmm_nt_i8_native(&mut y, &x, q, sw, rows, k, m);
+                y
+            },
+            |y| bits(y));
+    }
+
+    #[test]
+    fn int8_native_flag_dispatches_and_restores() {
+        use crate::tensor::dtype::{DType, PackedBuf};
+        // the flag is process-global: serialize against every test that
+        // pins the reference path
+        let _t = pool::TEST_SERIALIZE
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let mut rng = Rng::new(11);
+        let (rows, k, m) = (5, 40, 9);
+        let x = randv(rows * k, &mut rng);
+        let w = randv(m * k, &mut rng);
+        let packed = PackedBuf::pack(&w, m, k, DType::I8);
+        let (q, sw) = match packed.view() {
+            MatRef::I8 { q, scales } => (q, scales),
+            _ => unreachable!(),
+        };
+        let mut direct = vec![0.0; rows * m];
+        addmm_nt_i8_native(&mut direct, &x, q, sw, rows, k, m);
+        set_int8_native(true);
+        let mut via_flag = vec![0.0; rows * m];
+        addmm_nt_packed(&mut via_flag, &x, packed.view(), rows, k, m);
+        set_int8_native(false);
+        assert_eq!(bits(&direct), bits(&via_flag),
+                   "flag on: packed nt takes the native path");
+        // flag off again: back to the bitwise dequantizing reference
+        let mut reference = vec![0.0; rows * m];
+        addmm_nt(&mut reference, &x, &packed.to_f32(), rows, k, m);
+        let mut off = vec![0.0; rows * m];
+        addmm_nt_packed(&mut off, &x, packed.view(), rows, k, m);
+        assert_eq!(bits(&reference), bits(&off),
+                   "flag off: packed nt is the reference");
     }
 
     #[test]

@@ -30,9 +30,10 @@
 //! switchlora eval --spec s1m --ckpt ckpt.bin --variant lora
 //! switchlora rank --spec s1m --ckpt ckpt.bin --variant lora
 //! switchlora generate --spec tiny [--ckpt ckpt.bin] [--variant lora]
-//!            [--merge] [--quantize-base int8|bf16] [--prompt "text"]
-//!            [--max-new 64] [--batch 4] [--temperature 0.8]
-//!            [--top-k 40] [--stop 0,10] [--seed 42]
+//!            [--merge] [--quantize-base int8|bf16] [--int8-native]
+//!            [--kv-dtype f32|bf16|int8] [--max-context N]
+//!            [--prompt "text"] [--max-new 64] [--batch 4]
+//!            [--temperature 0.8] [--top-k 40] [--stop 0,10] [--seed 42]
 //! switchlora tables            # analytic Tables 4/5 + App. D/F
 //! switchlora info              # list specs + the method registry
 //! ```
@@ -55,7 +56,7 @@ use switchlora::model::config::ModelConfig;
 use switchlora::model::init::{seeded_store, InitMode};
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
 use switchlora::model::packed::{PackedStore, ParamSource};
-use switchlora::runtime::{load_infer, Engine};
+use switchlora::runtime::{load_infer_with, Engine};
 use switchlora::tensor::dtype::{DType, PrecisionPolicy};
 use switchlora::util::{human_bytes, human_params, printable};
 
@@ -76,6 +77,11 @@ fn dispatch(args: &Args) -> Result<()> {
             bail!("--threads must be >= 1 (1 = serial reference path)");
         }
         switchlora::kernels::set_threads(n);
+    }
+    // global: engage the int8×int8→i32 matmul path for int8-packed
+    // weights (also: SWITCHLORA_INT8_NATIVE=1)
+    if args.flag("int8-native") {
+        switchlora::kernels::set_int8_native(true);
     }
     match args.subcommand().unwrap_or("help") {
         "pretrain" => cmd_pretrain(args),
@@ -104,6 +110,9 @@ precision: `--precision bf16` views frozen base weights in bf16,\n\
 `--comm-dtype bf16` halves the measured all-reduce bytes,\n\
 `--moments-dtype bf16` keeps Adam moments at bf16, and\n\
 `generate --quantize-base int8` serves from ~4x smaller frozen weights\n\
+(add --int8-native for integer-arithmetic matmuls, --kv-dtype \
+bf16|int8\n\
+for a quantized KV cache, --max-context N to cap cache capacity)\n\
 (default is pure f32 everywhere and bitwise-identical to older builds)\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
 
@@ -113,7 +122,8 @@ fn policy_from_args(args: &Args) -> Result<PrecisionPolicy> {
     PrecisionPolicy::from_flags(args.get("precision"),
                                 args.get("comm-dtype"),
                                 args.get("moments-dtype"),
-                                args.get("quantize-base"))
+                                args.get("quantize-base"),
+                                args.get("kv-dtype"))
 }
 
 fn cmd_pretrain(args: &Args) -> Result<()> {
@@ -302,7 +312,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
     // the forward needs at full precision kept f32
     let policy = policy_from_args(args)?;
     let packed = if policy.frozen_base != DType::F32 {
-        let p = PackedStore::quantize_base(&store, policy.frozen_base);
+        let p = PackedStore::quantize_base(&store, policy.frozen_base)?;
         let (bp, bf) = p.base_bytes();
         switchlora::info!(
             "base weights quantized to {}: {} -> {} resident ({:.2}x); \
@@ -320,7 +330,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         None => &store,
     };
     let engine = Engine::cpu()?;
-    let rt = load_infer(&engine, manifest.clone(), variant)?;
+    let rt = load_infer_with(&engine, manifest.clone(), variant, policy)?;
     let tok = ByteTokenizer::new(mc.vocab);
     let prompt = tok.encode(&args.get_or("prompt", "The quick brown fox"));
     if prompt.is_empty() {
@@ -332,6 +342,16 @@ fn cmd_generate(args: &Args) -> Result<()> {
         .iter()
         .map(|s| s.parse().map_err(|e| anyhow::anyhow!("--stop {s:?}: {e}")))
         .collect::<Result<_>>()?;
+    let max_context = match args.get("max-context") {
+        Some(_) => {
+            let n = args.parse_num("max-context", 0usize)?;
+            if n == 0 {
+                bail!("--max-context must be >= 1");
+            }
+            Some(n)
+        }
+        None => None,
+    };
     let cfg = GenConfig {
         max_new: args.parse_num("max-new", 64usize)?,
         sampler: Sampler {
@@ -340,6 +360,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         },
         stop_tokens,
         seed,
+        max_context,
     };
     println!("spec {spec} [{}]: {} sequence(s), prompt {} tokens, \
               max-new {}, temperature {}, top-k {}",

@@ -58,23 +58,33 @@ impl PackedStore {
     /// Pack a store, compressing every `Role::Base` dense weight to
     /// `base_dtype` (per-row scales for int8 follow the weight's output
     /// channels) and keeping every other role `f32`.
+    ///
+    /// Fails fast when a to-be-packed parameter contains a non-finite
+    /// value, naming it: `quantize_row_i8` packs an inf/NaN row to an
+    /// all-zero payload with a NaN scale (and bf16 keeps the non-finite
+    /// value outright), so the corruption would otherwise surface only
+    /// as silent NaN logits at serving time.
     pub fn quantize_base(store: &ParamStore, base_dtype: DType)
-        -> PackedStore {
-        let bufs = store
-            .layout
-            .params
-            .iter()
-            .map(|p| {
-                let data = &store.data[p.offset..p.offset + p.numel];
-                let dtype = if p.role == Role::Base {
-                    base_dtype
-                } else {
-                    DType::F32
-                };
-                PackedBuf::pack(data, p.rows(), p.cols(), dtype)
-            })
-            .collect();
-        PackedStore { layout: store.layout.clone(), bufs }
+        -> Result<PackedStore> {
+        let mut bufs = Vec::with_capacity(store.layout.params.len());
+        for p in &store.layout.params {
+            let data = &store.data[p.offset..p.offset + p.numel];
+            let dtype = if p.role == Role::Base {
+                base_dtype
+            } else {
+                DType::F32
+            };
+            if dtype != DType::F32 {
+                if let Some(i) = data.iter().position(|x| !x.is_finite())
+                {
+                    bail!("cannot quantize param {:?} to {}: \
+                           non-finite value {} at element {i} of {}",
+                          p.name, dtype, data[i], p.numel);
+                }
+            }
+            bufs.push(PackedBuf::pack(data, p.rows(), p.cols(), dtype));
+        }
+        Ok(PackedStore { layout: store.layout.clone(), bufs })
     }
 
     fn buf(&self, name: &str) -> Result<&PackedBuf> {
@@ -141,7 +151,8 @@ mod tests {
     fn f32_packing_is_lossless_and_transparent() {
         let man = Manifest::builtin("tiny").unwrap();
         let store = seeded_store(&man, Variant::Lora, 3).unwrap();
-        let packed = PackedStore::quantize_base(&store, DType::F32);
+        let packed =
+            PackedStore::quantize_base(&store, DType::F32).unwrap();
         assert_eq!(packed.dequantized().data, store.data);
         assert_eq!(packed.resident_bytes(), 4 * store.layout.total);
         // f32s works for every param when nothing is compressed
@@ -155,7 +166,8 @@ mod tests {
     fn int8_compresses_only_the_base_segment() {
         let man = Manifest::builtin("tiny").unwrap();
         let store = seeded_store(&man, Variant::Lora, 4).unwrap();
-        let packed = PackedStore::quantize_base(&store, DType::I8);
+        let packed =
+            PackedStore::quantize_base(&store, DType::I8).unwrap();
         let (base_packed, base_full) = packed.base_bytes();
         assert!(base_full > 0);
         // ~4x on the base segment (1 byte/elem + one f32 scale per row)
@@ -180,8 +192,60 @@ mod tests {
     fn unknown_param_errors() {
         let man = Manifest::builtin("tiny").unwrap();
         let store = seeded_store(&man, Variant::Lora, 5).unwrap();
-        let packed = PackedStore::quantize_base(&store, DType::Bf16);
+        let packed =
+            PackedStore::quantize_base(&store, DType::Bf16).unwrap();
         assert!(packed.mat("nope").is_err());
         assert!(packed.f32s("nope").is_err());
+    }
+
+    #[test]
+    fn non_finite_base_params_fail_fast_naming_the_param() {
+        use crate::util::prop::prop_check;
+        let man = Manifest::builtin("tiny").unwrap();
+        prop_check("non-finite base fails fast", 12, move |rng| {
+            let mut store = seeded_store(&man, Variant::Lora, 6).unwrap();
+            // poison one random element of one random base param
+            let bases: Vec<usize> = store
+                .layout
+                .params
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| p.role == Role::Base)
+                .map(|(i, _)| i)
+                .collect();
+            let p = store.layout.params[bases[rng.below(bases.len())]]
+                .clone();
+            let at = p.offset + rng.below(p.numel);
+            let bad = if rng.below(2) == 0 {
+                f32::NAN
+            } else {
+                f32::INFINITY
+            };
+            store.data[at] = bad;
+            for dtype in [DType::Bf16, DType::I8] {
+                let err = PackedStore::quantize_base(&store, dtype)
+                    .expect_err("poisoned base must not pack");
+                let msg = format!("{err}");
+                if !msg.contains(&p.name) {
+                    return Err(format!(
+                        "error {msg:?} does not name {:?}", p.name));
+                }
+            }
+            // the same poison in a non-base param packs fine (it stays
+            // f32 — exact — and is the training layer's concern)
+            let mut ok = seeded_store(&man, Variant::Lora, 6).unwrap();
+            let np = ok
+                .layout
+                .params
+                .iter()
+                .find(|p| p.role != Role::Base)
+                .cloned()
+                .expect("tiny manifest has non-base params");
+            ok.data[np.offset] = bad;
+            if let Err(e) = PackedStore::quantize_base(&ok, DType::I8) {
+                return Err(format!("non-base poison rejected: {e}"));
+            }
+            Ok(())
+        });
     }
 }

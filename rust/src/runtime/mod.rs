@@ -147,9 +147,19 @@ pub trait InferRuntime {
 /// with no incremental entry point).
 pub fn load_infer(engine: &Engine, manifest: Manifest, variant: Variant)
     -> Result<Box<dyn InferRuntime>> {
+    load_infer_with(engine, manifest, variant, PrecisionPolicy::default())
+}
+
+/// [`load_infer`] under a precision policy: `policy.kv_cache` sets the
+/// KV-cache storage dtype (`--kv-dtype`) of every cache the runtime
+/// creates, and `policy.frozen_base` how dense weights are viewed.
+pub fn load_infer_with(engine: &Engine, manifest: Manifest,
+                       variant: Variant, policy: PrecisionPolicy)
+    -> Result<Box<dyn InferRuntime>> {
     match engine {
         Engine::Native => {
-            Ok(Box::new(NativeModel::new(manifest, variant)?))
+            Ok(Box::new(NativeModel::with_policy(manifest, variant,
+                                                 policy)?))
         }
         #[cfg(feature = "pjrt")]
         Engine::Pjrt(_) => anyhow::bail!(

@@ -1073,7 +1073,8 @@ impl InferRuntime for NativeModel {
 
     fn new_cache(&self, batch: usize, capacity: usize) -> KvCache {
         let mc = &self.manifest.config;
-        KvCache::new(mc.layers, batch, mc.heads, mc.head_dim(), capacity)
+        KvCache::with_dtype(mc.layers, batch, mc.heads, mc.head_dim(),
+                            capacity, self.policy.kv_cache)
     }
 
     fn vocab_out(&self) -> usize {

@@ -293,6 +293,10 @@ impl PackedBuf {
 /// * `frozen_base` — storage of frozen dense weights (training) and of
 ///   the serving-time base weights (`--quantize-base int8`).  Defaults
 ///   to `compute`.
+/// * `kv_cache` — storage of the serving-time KV cache (`--kv-dtype`):
+///   `f32` (exact, the default), `bf16`, or `int8` (symmetric per
+///   position-row scales).  Serving memory per concurrent user scales
+///   with this width.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PrecisionPolicy {
     pub master: DType,
@@ -300,6 +304,7 @@ pub struct PrecisionPolicy {
     pub comm: DType,
     pub moments: DType,
     pub frozen_base: DType,
+    pub kv_cache: DType,
 }
 
 impl Default for PrecisionPolicy {
@@ -310,15 +315,18 @@ impl Default for PrecisionPolicy {
             comm: DType::F32,
             moments: DType::F32,
             frozen_base: DType::F32,
+            kv_cache: DType::F32,
         }
     }
 }
 
 impl PrecisionPolicy {
     /// Resolve a policy from the CLI flag values.  `frozen_base`
-    /// follows `compute` unless `--quantize-base` overrides it.
+    /// follows `compute` unless `--quantize-base` overrides it;
+    /// `kv_cache` is `--kv-dtype` (default f32).
     pub fn from_flags(precision: Option<&str>, comm: Option<&str>,
-                      moments: Option<&str>, quantize_base: Option<&str>)
+                      moments: Option<&str>, quantize_base: Option<&str>,
+                      kv_dtype: Option<&str>)
         -> Result<PrecisionPolicy> {
         let compute = match precision {
             Some(s) => DType::parse(s)?,
@@ -345,12 +353,22 @@ impl PrecisionPolicy {
             }
             None => compute,
         };
+        let kv = match kv_dtype {
+            Some(s) => {
+                let d = DType::parse(s)?;
+                ensure_role("--kv-dtype", d,
+                            &[DType::F32, DType::Bf16, DType::I8])?;
+                d
+            }
+            None => DType::F32,
+        };
         Ok(PrecisionPolicy {
             master: DType::F32,
             compute,
             comm: comm_d,
             moments: moments_d,
             frozen_base: frozen,
+            kv_cache: kv,
         })
     }
 
@@ -362,9 +380,9 @@ impl PrecisionPolicy {
     /// One-line human summary (the `info` subcommand / run banner).
     pub fn summary(&self) -> String {
         format!("master {} | compute {} | comm {} | moments {} | \
-                 frozen-base {}",
+                 frozen-base {} | kv-cache {}",
                 self.master, self.compute, self.comm, self.moments,
-                self.frozen_base)
+                self.frozen_base, self.kv_cache)
     }
 }
 
@@ -510,11 +528,11 @@ mod tests {
 
     #[test]
     fn policy_resolution_and_validation() {
-        let d = PrecisionPolicy::from_flags(None, None, None, None)
+        let d = PrecisionPolicy::from_flags(None, None, None, None, None)
             .unwrap();
         assert!(d.is_default());
         let p = PrecisionPolicy::from_flags(Some("bf16"), Some("bf16"),
-                                            Some("bf16"), None)
+                                            Some("bf16"), None, None)
             .unwrap();
         assert_eq!(p.compute, DType::Bf16);
         assert_eq!(p.comm, DType::Bf16);
@@ -522,24 +540,34 @@ mod tests {
         // frozen_base follows compute unless overridden
         assert_eq!(p.frozen_base, DType::Bf16);
         assert_eq!(p.master, DType::F32);
+        // kv_cache is independent of compute: default f32
+        assert_eq!(p.kv_cache, DType::F32);
         let q = PrecisionPolicy::from_flags(None, None, None,
-                                            Some("int8"))
+                                            Some("int8"), Some("int8"))
             .unwrap();
         assert_eq!(q.frozen_base, DType::I8);
+        assert_eq!(q.kv_cache, DType::I8);
         assert_eq!(q.compute, DType::F32);
         assert!(!q.is_default());
         // int8 is a storage dtype, not a wire/compute dtype
         assert!(PrecisionPolicy::from_flags(Some("int8"), None, None,
-                                            None).is_err());
+                                            None, None).is_err());
         assert!(PrecisionPolicy::from_flags(None, Some("int8"), None,
-                                            None).is_err());
+                                            None, None).is_err());
         assert!(PrecisionPolicy::from_flags(None, None, Some("int8"),
-                                            None).is_err());
+                                            None, None).is_err());
         // --quantize-base f32 is a no-op request: rejected for clarity
         assert!(PrecisionPolicy::from_flags(None, None, None,
-                                            Some("f32")).is_err());
+                                            Some("f32"), None).is_err());
+        // --kv-dtype f32 IS accepted: it names the default storage
+        let kvf = PrecisionPolicy::from_flags(None, None, None, None,
+                                              Some("f32")).unwrap();
+        assert!(kvf.is_default());
+        assert!(PrecisionPolicy::from_flags(None, None, None, None,
+                                            Some("banana")).is_err());
         assert!(DType::parse("banana").is_err());
         assert!(p.summary().contains("comm bf16"));
+        assert!(q.summary().contains("kv-cache int8"));
     }
 
     #[test]

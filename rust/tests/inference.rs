@@ -126,6 +126,7 @@ fn batched_ragged_generation_matches_single_runs() {
         sampler: Sampler::top_k(16, 0.8),
         stop_tokens: Vec::new(),
         seed: 31,
+        max_context: None,
     };
     let batched = generate(&model, &store, &prompts, &cfg).unwrap();
     assert_eq!(batched.prefill_tokens, 3 + 7 + 5);
@@ -190,6 +191,47 @@ fn per_sequence_stop_handling() {
 }
 
 #[test]
+fn max_context_clamps_generation_instead_of_panicking() {
+    // ISSUE 6 S3: a full KV cache used to abort the whole batch via the
+    // KvCache::append overflow assert; with --max-context the loop
+    // retires a full sequence cleanly and the rest keep going.
+    let man = manifest();
+    let store = init(&man, Variant::Lora, 29);
+    let model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let vocab = man.config.vocab;
+    let prompts =
+        vec![rand_prompt(vocab, 5, 61), rand_prompt(vocab, 3, 62)];
+    let mut cfg = GenConfig::greedy(10);
+    cfg.max_context = Some(8);
+    let out = generate(&model, &store, &prompts, &cfg).unwrap();
+    // each sequence fills its cache to exactly max_context rows, then
+    // emits one final token from that last decode before retiring:
+    // generated = 1 + (max_context - prompt_len)
+    assert_eq!(out.n_generated, vec![4, 6]);
+    assert_eq!(out.sequences[0].len(), 9);
+    assert_eq!(out.sequences[1].len(), 9);
+    // the clamped run matches an unclamped run token-for-token up to
+    // the point of retirement
+    let free = generate(&model, &store, &prompts, &GenConfig::greedy(10))
+        .unwrap();
+    for s in 0..prompts.len() {
+        assert_eq!(&out.sequences[s][..],
+                   &free.sequences[s][..out.sequences[s].len()],
+                   "clamped stream diverged for sequence {s}");
+    }
+    // a ceiling that still fits everything changes nothing
+    let mut roomy = GenConfig::greedy(10);
+    roomy.max_context = Some(64);
+    let r = generate(&model, &store, &prompts, &roomy).unwrap();
+    assert_eq!(r.sequences, free.sequences);
+    // a prompt longer than the ceiling is a loud error, not a panic
+    let mut tight = GenConfig::greedy(4);
+    tight.max_context = Some(4);
+    let err = generate(&model, &store, &prompts, &tight).unwrap_err();
+    assert!(format!("{err}").contains("max-context"), "{err}");
+}
+
+#[test]
 fn same_seed_same_stream_across_runs() {
     let man = manifest();
     let store = init(&man, Variant::Lora, 17);
@@ -200,6 +242,7 @@ fn same_seed_same_stream_across_runs() {
         sampler: Sampler { temperature: 1.0, top_k: 0 },
         stop_tokens: Vec::new(),
         seed: 99,
+        max_context: None,
     };
     let a = generate(&model, &store, &prompts, &cfg).unwrap();
     let b = generate(&model, &store, &prompts, &cfg).unwrap();

@@ -37,7 +37,7 @@ fn manifest() -> Manifest {
 
 fn bf16_policy() -> PrecisionPolicy {
     PrecisionPolicy::from_flags(Some("bf16"), Some("bf16"), Some("bf16"),
-                                None)
+                                None, None)
         .unwrap()
 }
 
@@ -180,7 +180,8 @@ fn bf16_comm_dtype_halves_ledger_bytes_exactly() {
     let mut run = |comm: &str| {
         let mut cfg = quick_cfg(Method::lora(), steps, 2);
         cfg.precision =
-            PrecisionPolicy::from_flags(None, Some(comm), None, None)
+            PrecisionPolicy::from_flags(None, Some(comm), None, None,
+                                        None)
                 .unwrap();
         Trainer::new(cfg).unwrap().run(&mut engine).unwrap().0
     };
@@ -355,7 +356,8 @@ fn quantized_base_serving_holds_logits_within_tolerance() {
     // stated tolerances (fraction of the logit range + a floor): bf16
     // carries ~2^-9 relative weight error, int8 ~0.4% of each row's max
     for (dtype, tol) in [(DType::Bf16, 0.05f32), (DType::I8, 0.10f32)] {
-        let packed = PackedStore::quantize_base(&merged, dtype);
+        let packed =
+            PackedStore::quantize_base(&merged, dtype).unwrap();
         let mut c = dense.new_cache(1, ctx.len() + 1);
         let l_q = dense.prefill(&packed, &mut c, 0, &ctx).unwrap();
         let max_diff = l_ref
@@ -368,7 +370,8 @@ fn quantized_base_serving_holds_logits_within_tolerance() {
         assert!(max_diff > 0.0, "{dtype:?} quantization was a no-op");
     }
     // the int8 frozen base really is ~4x smaller
-    let packed = PackedStore::quantize_base(&merged, DType::I8);
+    let packed =
+        PackedStore::quantize_base(&merged, DType::I8).unwrap();
     let (bp, bf) = packed.base_bytes();
     assert!((bp as f64) < bf as f64 / 3.5,
             "int8 base {bp} vs f32 {bf}: expected ~4x");
@@ -382,4 +385,51 @@ fn quantized_base_serving_holds_logits_within_tolerance() {
     let g2 = generate(rt, &packed, &prompts, &cfg).unwrap();
     assert_eq!(g1.sequences, g2.sequences);
     assert_eq!(g1.n_generated, vec![8, 8]);
+}
+
+// ---------------------------------------------------------------------
+// Quantized KV cache through the policy (--kv-dtype).
+// ---------------------------------------------------------------------
+
+#[test]
+fn kv_dtype_policy_serves_close_to_f32_and_generates() {
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 10).unwrap();
+    let mut rng = Rng::new(23);
+    let ctx: Vec<i32> =
+        (0..24).map(|_| rng.below(man.config.vocab) as i32).collect();
+    let f32_model = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let mut c0 = f32_model.new_cache(1, ctx.len() + 1);
+    let l_ref = f32_model.prefill(&store, &mut c0, 0, &ctx).unwrap();
+    let max_abs = l_ref.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    // stated tolerances, same style as the frozen-base claim: bf16 K/V
+    // carry ~2^-9 relative error, int8 ~0.4% of each row's max
+    for (dtype, tol) in [(DType::Bf16, 0.05f32), (DType::I8, 0.15f32)] {
+        let policy = PrecisionPolicy {
+            kv_cache: dtype,
+            ..PrecisionPolicy::default()
+        };
+        let model =
+            NativeModel::with_policy(man.clone(), Variant::Lora, policy)
+                .unwrap();
+        let mut c = model.new_cache(1, ctx.len() + 1);
+        let l_q = model.prefill(&store, &mut c, 0, &ctx).unwrap();
+        let max_diff = l_ref
+            .iter()
+            .zip(&l_q)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()));
+        assert!(max_diff <= tol * (max_abs + 1.0),
+                "{dtype:?} kv cache: max|Δlogit| {max_diff} vs \
+                 tolerance {} (|logit|max {max_abs})",
+                tol * (max_abs + 1.0));
+        assert!(max_diff > 0.0, "{dtype:?} kv cache was a no-op");
+        // end-to-end ragged-batch generation: runs, is deterministic
+        let rt: &dyn InferRuntime = &model;
+        let prompts = vec![ctx.clone(), ctx[..5].to_vec()];
+        let cfg = GenConfig::greedy(6);
+        let g1 = generate(rt, &store, &prompts, &cfg).unwrap();
+        let g2 = generate(rt, &store, &prompts, &cfg).unwrap();
+        assert_eq!(g1.sequences, g2.sequences);
+        assert_eq!(g1.n_generated, vec![6, 6]);
+    }
 }

@@ -1,0 +1,139 @@
+#!/usr/bin/env python3
+"""Gate CI on the perf trajectory: compare a fresh bench JSON report
+against the committed baseline and fail on a large regression.
+
+Usage:
+    bench_check.py BASELINE.json FRESH.json [--threshold 0.30]
+
+Both files are `switchlora-bench-v2` reports (written by the bench
+binaries' `--json` flag; see `rust/src/bench/mod.rs`).  Only the flat
+`tracked` table is compared, on the keys the two reports share.  The
+naming convention carries the direction: keys ending `_gflops` or
+`_tok_s` are higher-is-better, `_ms` or `_ms_per_tok` lower-is-better.
+
+A metric REGRESSES when it moves against its direction by more than
+`--threshold` (default 0.30 = 30%, the ISSUE 6 gate) relative to the
+baseline value.  Any regression -> exit 1.
+
+Advisory (exit 0) cases, each printed loudly rather than silently
+passed:
+  * baseline file missing or has no/empty `tracked` table (a seed
+    report predating the trajectory, or a first run on a new metric);
+  * `host` fingerprints differ -- timings from different machines are
+    not comparable, so the check degrades to a notice asking for a
+    baseline refresh.
+
+stdlib only; no third-party imports.
+"""
+
+import json
+import os
+import sys
+
+HIGHER_BETTER = ("_gflops", "_tok_s")
+LOWER_BETTER = ("_ms", "_ms_per_tok")
+
+
+def direction(key):
+    """+1 higher-is-better, -1 lower-is-better, 0 untracked suffix."""
+    if key.endswith(HIGHER_BETTER):
+        return 1
+    if key.endswith(LOWER_BETTER):
+        return -1
+    return 0
+
+
+def load(path):
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f)
+
+
+def main(argv):
+    threshold = 0.30
+    args = []
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--threshold" and i + 1 < len(argv):
+            i += 1
+            threshold = float(argv[i])
+        elif a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+        else:
+            args.append(a)
+        i += 1
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = args
+
+    if not os.path.exists(baseline_path):
+        print(f"bench_check: no baseline at {baseline_path} -- "
+              "nothing to compare (commit a fresh report to start the "
+              "trajectory)")
+        return 0
+    base = load(baseline_path)
+    fresh = load(fresh_path)
+
+    bt = base.get("tracked") or {}
+    ft = fresh.get("tracked") or {}
+    if not bt:
+        print(f"bench_check: baseline {baseline_path} has no tracked "
+              "table -- advisory pass (regenerate and commit it)")
+        return 0
+    if not ft:
+        print(f"bench_check: FRESH report {fresh_path} has no tracked "
+              "table -- the bench binary regressed its --json output")
+        return 1
+
+    bhost, fhost = base.get("host"), fresh.get("host")
+    if bhost and fhost and bhost != fhost:
+        print("bench_check: host fingerprint changed, timings not "
+              "comparable -- advisory pass")
+        print(f"  baseline host: {bhost}")
+        print(f"  fresh host:    {fhost}")
+        print("  refresh the committed baseline on this machine to "
+              "re-arm the gate")
+        return 0
+
+    shared = sorted(set(bt) & set(ft))
+    if not shared:
+        print("bench_check: no shared tracked keys -- advisory pass")
+        return 0
+
+    failures = []
+    print(f"bench_check: threshold {threshold:.0%}, "
+          f"{len(shared)} shared metric(s)")
+    for key in shared:
+        d = direction(key)
+        b, f = bt[key], ft[key]
+        if d == 0 or not isinstance(b, (int, float)) \
+                or not isinstance(f, (int, float)) or b <= 0 or f <= 0:
+            print(f"  {key:<32} skipped (unrecognized suffix or "
+                  "non-positive value)")
+            continue
+        # fraction moved against the metric's good direction
+        regression = (b - f) / b if d > 0 else (f - b) / b
+        arrow = "better" if regression <= 0 else "worse"
+        status = "OK"
+        if regression > threshold:
+            status = "FAIL"
+            failures.append(key)
+        print(f"  {key:<32} {b:>12.3f} -> {f:>12.3f}  "
+              f"({abs(regression):.1%} {arrow})  {status}")
+
+    dropped = sorted(set(bt) - set(ft))
+    if dropped:
+        print(f"  note: baseline-only keys not in fresh report: "
+              f"{', '.join(dropped)}")
+
+    if failures:
+        print(f"bench_check: FAIL -- {len(failures)} metric(s) "
+              f"regressed >{threshold:.0%}: {', '.join(failures)}")
+        return 1
+    print("bench_check: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

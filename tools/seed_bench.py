@@ -1,0 +1,517 @@
+#!/usr/bin/env python3
+"""Seed the committed BENCH_*.json trajectory files with honest timings
+when no Rust toolchain is available.
+
+The repo's bench binaries (`cargo bench --bench bench_micro/bench_infer
+-- --json <path>`) are the canonical way to (re)generate the committed
+reports.  This script exists for environments that can compile C but
+not Rust: it emits a C transliteration of the restructured kernels --
+the same lane-split `dot` (8 independent accumulators, fixed pairwise
+reduction), the o-outer panel-dequant packed matmul, the int8-native
+integer-dot path, cached attention, and a per-token decode workload at
+the tiny/s1m model shapes -- compiles it with `gcc -O3 -march=native`,
+runs it single-threaded, and writes both BENCH files with:
+
+  * `tracked` tables measured from the transliteration (the fields
+    `tools/bench_check.py` gates on), with a provenance note saying
+    exactly where the numbers came from;
+  * byte tables carried over from the existing committed reports (they
+    are exact -- computed from the same formulas the binaries use);
+  * `threads: 1` (the true thread count of the measurement) and the
+    real host fingerprint.
+
+Fields the transliteration cannot measure honestly (e.g. the
+`max_logit_*` deviation columns, which need the full model) are OMITTED
+rather than committed as null.  stdlib only.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+C_SRC = r"""
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <stdint.h>
+#include <math.h>
+#include <time.h>
+
+static double now_ms(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec * 1e3 + ts.tv_nsec / 1e6;
+}
+
+static uint64_t rng_state = 0x9E3779B97F4A7C15ull;
+static float frand(void) {
+    rng_state ^= rng_state << 13;
+    rng_state ^= rng_state >> 7;
+    rng_state ^= rng_state << 17;
+    return (float)((rng_state >> 11) & 0xFFFFFF) / (float)0x1000000 - 0.5f;
+}
+static float *fvec(size_t n) {
+    float *p = malloc(n * sizeof(float));
+    for (size_t i = 0; i < n; i++) p[i] = 0.2f * frand();
+    return p;
+}
+
+volatile float sink;
+
+/* --- the restructured kernel inner loops (mirrors kernels/mod.rs) --- */
+
+#define LANES 8
+
+static float dotf(const float *a, const float *b, int k) {
+    float lanes[LANES] = {0};
+    int kk = k - k % LANES;
+    float tail = 0.0f;
+    for (int j = kk; j < k; j++) tail += a[j] * b[j];
+    for (int j = 0; j < kk; j += LANES)
+        for (int l = 0; l < LANES; l++) lanes[l] += a[j + l] * b[j + l];
+    return ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+         + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7])) + tail;
+}
+
+static int32_t doti8(const int8_t *a, const int8_t *b, int k) {
+    int32_t lanes[LANES] = {0};
+    int kk = k - k % LANES;
+    int32_t tail = 0;
+    for (int j = kk; j < k; j++) tail += (int32_t)a[j] * b[j];
+    for (int j = 0; j < kk; j += LANES)
+        for (int l = 0; l < LANES; l++)
+            lanes[l] += (int32_t)a[j + l] * b[j + l];
+    int32_t s = tail;
+    for (int l = 0; l < LANES; l++) s += lanes[l];
+    return s;
+}
+
+static void axpy(float *y, float s, const float *x, int n) {
+    for (int i = 0; i < n; i++) y[i] += s * x[i];
+}
+
+static float quant_row(const float *row, int8_t *out, int k) {
+    float amax = 0.0f;
+    for (int j = 0; j < k; j++) {
+        float a = fabsf(row[j]);
+        if (a > amax) amax = a;
+    }
+    if (amax == 0.0f) { memset(out, 0, k); return 0.0f; }
+    float inv = 127.0f / amax;
+    for (int j = 0; j < k; j++) {
+        float v = roundf(row[j] * inv);
+        out[j] = (int8_t)(v > 127.0f ? 127 : (v < -127.0f ? -127 : v));
+    }
+    return amax / 127.0f;
+}
+
+/* one [m x k] weight packed in every dtype */
+typedef struct { float *f; uint16_t *h; int8_t *q; float *sc; } W;
+
+static W packw(const float *w, int m, int k) {
+    W o;
+    size_t n = (size_t)m * k;
+    o.f = malloc(n * 4); memcpy(o.f, w, n * 4);
+    o.h = malloc(n * 2);
+    for (size_t i = 0; i < n; i++) {        /* bf16 round-nearest-even */
+        uint32_t b; memcpy(&b, &w[i], 4);
+        o.h[i] = (uint16_t)((b + 0x7FFF + ((b >> 16) & 1)) >> 16);
+    }
+    o.q = malloc(n); o.sc = malloc((size_t)m * 4);
+    for (int r = 0; r < m; r++)
+        o.sc[r] = quant_row(w + (size_t)r * k, o.q + (size_t)r * k, k);
+    return o;
+}
+
+/* y[1 x m] += x[1 x k] . W^T, RHS dispatched by dtype
+   (0 = f32, 1 = bf16 panel-dequant, 2 = i8 panel-dequant) */
+static void lin1(float *y, const float *x, const W *w, int k, int m,
+                 int dt, float *panel) {
+    if (dt == 0) {
+        for (int o = 0; o < m; o++) y[o] += dotf(x, w->f + (size_t)o * k, k);
+    } else if (dt == 1) {
+        for (int o = 0; o < m; o++) {
+            for (int j = 0; j < k; j++) {
+                uint32_t b = ((uint32_t)w->h[(size_t)o * k + j]) << 16;
+                float f; memcpy(&f, &b, 4);
+                panel[j] = f;
+            }
+            y[o] += dotf(x, panel, k);
+        }
+    } else {
+        for (int o = 0; o < m; o++) {
+            float s = w->sc[o];
+            const int8_t *qr = w->q + (size_t)o * k;
+            for (int j = 0; j < k; j++) panel[j] = s * qr[j];
+            y[o] += dotf(x, panel, k);
+        }
+    }
+}
+
+/* --- tracked kernel workloads ---------------------------------------- */
+
+static double matmul_ms(int dt, int native, int rows, int k, int m,
+                        int warm, int iters) {
+    float *x = fvec((size_t)rows * k), *wr = fvec((size_t)m * k);
+    float *y = malloc((size_t)rows * m * 4);
+    float *panel = malloc((size_t)k * 4);
+    int8_t *qx = malloc((size_t)k);
+    W w = packw(wr, m, k);
+    double t0 = 0;
+    for (int it = 0; it < warm + iters; it++) {
+        if (it == warm) t0 = now_ms();
+        memset(y, 0, (size_t)rows * m * 4);
+        if (native) {
+            for (int i = 0; i < rows; i++) {
+                float sx = quant_row(x + (size_t)i * k, qx, k);
+                if (sx == 0.0f) continue;
+                for (int o = 0; o < m; o++)
+                    y[(size_t)i * m + o] += (sx * w.sc[o])
+                        * (float)doti8(qx, w.q + (size_t)o * k, k);
+            }
+        } else if (dt == 0) {
+            for (int i = 0; i < rows; i++)
+                for (int o = 0; o < m; o++)
+                    y[(size_t)i * m + o] +=
+                        dotf(x + (size_t)i * k, w.f + (size_t)o * k, k);
+        } else {
+            /* o-outer panel dequant, as addmm_nt_packed */
+            for (int o = 0; o < m; o++) {
+                float s = w.sc[o];
+                const int8_t *qr = w.q + (size_t)o * k;
+                for (int j = 0; j < k; j++) panel[j] = s * qr[j];
+                for (int i = 0; i < rows; i++)
+                    y[(size_t)i * m + o] += dotf(x + (size_t)i * k, panel, k);
+            }
+        }
+        sink += y[0];
+    }
+    return (now_ms() - t0) / iters;
+}
+
+static double attention_ms(int bh, int t, int hd, int warm, int iters) {
+    float *q = fvec((size_t)bh * t * hd), *k = fvec((size_t)bh * t * hd);
+    float *v = fvec((size_t)bh * t * hd);
+    float *o = malloc((size_t)bh * t * hd * 4);
+    float *att = malloc((size_t)t * 4);
+    float scale = 1.0f / sqrtf((float)hd);
+    double t0 = 0;
+    for (int it = 0; it < warm + iters; it++) {
+        if (it == warm) t0 = now_ms();
+        memset(o, 0, (size_t)bh * t * hd * 4);
+        for (int g = 0; g < bh; g++) {
+            const float *qg = q + (size_t)g * t * hd;
+            const float *kg = k + (size_t)g * t * hd;
+            const float *vg = v + (size_t)g * t * hd;
+            float *og = o + (size_t)g * t * hd;
+            for (int i = 0; i < t; i++) {
+                float mx = -1e30f;
+                for (int j = 0; j <= i; j++) {
+                    float z = dotf(qg + (size_t)i * hd,
+                                   kg + (size_t)j * hd, hd) * scale;
+                    att[j] = z;
+                    if (z > mx) mx = z;
+                }
+                float den = 0.0f;
+                for (int j = 0; j <= i; j++) {
+                    float e = expf(att[j] - mx);
+                    att[j] = e;
+                    den += e;
+                }
+                for (int j = 0; j <= i; j++)
+                    axpy(og + (size_t)i * hd, att[j] / den,
+                         vg + (size_t)j * hd, hd);
+            }
+        }
+        sink += o[0];
+    }
+    return (now_ms() - t0) / iters;
+}
+
+/* --- per-token decode workload at a model shape ---------------------- */
+
+typedef struct { int h, L, nh, hd, ff, vocab, r; } Dims;
+
+static double decode_ms(Dims d, int dt, int use_lora, int ctx,
+                        int warm, int iters) {
+    int h = d.h, ff = d.ff, r = d.r, L = d.L, nh = d.nh, hd = d.hd;
+    int vocab = d.vocab;
+    int mx_dim = ff > h ? ff : h;
+    W *wl = malloc(sizeof(W) * (size_t)L * 6);  /* q k v o up down */
+    float **la = NULL, **lb = NULL;
+    int ins[6], outs[6];
+    ins[0] = ins[1] = ins[2] = ins[3] = h; ins[4] = h; ins[5] = ff;
+    outs[0] = outs[1] = outs[2] = outs[3] = h; outs[4] = ff; outs[5] = h;
+    for (int l = 0; l < L; l++)
+        for (int s = 0; s < 6; s++) {
+            float *raw = fvec((size_t)outs[s] * ins[s]);
+            wl[l * 6 + s] = packw(raw, outs[s], ins[s]);
+            free(raw);
+        }
+    if (use_lora) {
+        la = malloc(sizeof(float *) * (size_t)L * 6);
+        lb = malloc(sizeof(float *) * (size_t)L * 6);
+        for (int l = 0; l < L; l++)
+            for (int s = 0; s < 6; s++) {
+                la[l * 6 + s] = fvec((size_t)r * ins[s]);
+                lb[l * 6 + s] = fvec((size_t)outs[s] * r);
+            }
+    }
+    float *head_raw = fvec((size_t)vocab * h);
+    W head = packw(head_raw, vocab, h);
+    free(head_raw);
+    float *kc = fvec((size_t)L * nh * ctx * hd);
+    float *vc = fvec((size_t)L * nh * ctx * hd);
+    float *panel = malloc((size_t)mx_dim * 4);
+    float *x = fvec(h);
+    float *qb = malloc((size_t)h * 4), *kb = malloc((size_t)h * 4);
+    float *vb = malloc((size_t)h * 4), *ob = malloc((size_t)h * 4);
+    float *an = malloc((size_t)h * 4), *u = malloc((size_t)ff * 4);
+    float *t2 = malloc((size_t)h * 4), *t1 = malloc((size_t)r * 4);
+    float *scores = malloc((size_t)ctx * 4);
+    float *logits = malloc((size_t)vocab * 4);
+    float scale = 1.0f / sqrtf((float)hd), ls = 0.5f;
+    double t0 = 0;
+    for (int it = 0; it < warm + iters; it++) {
+        if (it == warm) t0 = now_ms();
+        for (int l = 0; l < L; l++) {
+            float *proj[4] = {qb, kb, vb, ob};
+            for (int s = 0; s < 3; s++) {
+                memset(proj[s], 0, (size_t)h * 4);
+                lin1(proj[s], x, &wl[l * 6 + s], h, h, dt, panel);
+                if (use_lora) {
+                    memset(t1, 0, (size_t)r * 4);
+                    for (int o = 0; o < r; o++)
+                        t1[o] += dotf(x, la[l * 6 + s] + (size_t)o * h, h);
+                    for (int o = 0; o < h; o++)
+                        proj[s][o] += ls
+                            * dotf(t1, lb[l * 6 + s] + (size_t)o * r, r);
+                }
+            }
+            /* append k/v at a rotating cache slot, then attend over ctx */
+            int slot = it % ctx;
+            for (int g = 0; g < nh; g++) {
+                memcpy(kc + (((size_t)l * nh + g) * ctx + slot) * hd,
+                       kb + (size_t)g * hd, (size_t)hd * 4);
+                memcpy(vc + (((size_t)l * nh + g) * ctx + slot) * hd,
+                       vb + (size_t)g * hd, (size_t)hd * 4);
+            }
+            memset(an, 0, (size_t)h * 4);
+            for (int g = 0; g < nh; g++) {
+                const float *kg = kc + ((size_t)l * nh + g) * ctx * hd;
+                const float *vg = vc + ((size_t)l * nh + g) * ctx * hd;
+                float mxs = -1e30f;
+                for (int j = 0; j < ctx; j++) {
+                    float z = dotf(qb + (size_t)g * hd,
+                                   kg + (size_t)j * hd, hd) * scale;
+                    scores[j] = z;
+                    if (z > mxs) mxs = z;
+                }
+                float den = 0.0f;
+                for (int j = 0; j < ctx; j++) {
+                    float e = expf(scores[j] - mxs);
+                    scores[j] = e;
+                    den += e;
+                }
+                for (int j = 0; j < ctx; j++)
+                    axpy(an + (size_t)g * hd, scores[j] / den,
+                         vg + (size_t)j * hd, hd);
+            }
+            memset(ob, 0, (size_t)h * 4);
+            lin1(ob, an, &wl[l * 6 + 3], h, h, dt, panel);
+            if (use_lora) {
+                memset(t1, 0, (size_t)r * 4);
+                for (int o = 0; o < r; o++)
+                    t1[o] += dotf(an, la[l * 6 + 3] + (size_t)o * h, h);
+                for (int o = 0; o < h; o++)
+                    ob[o] += ls * dotf(t1, lb[l * 6 + 3] + (size_t)o * r, r);
+            }
+            for (int i = 0; i < h; i++) x[i] += 0.01f * ob[i];
+            memset(u, 0, (size_t)ff * 4);
+            lin1(u, x, &wl[l * 6 + 4], h, ff, dt, panel);
+            if (use_lora) {
+                memset(t1, 0, (size_t)r * 4);
+                for (int o = 0; o < r; o++)
+                    t1[o] += dotf(x, la[l * 6 + 4] + (size_t)o * h, h);
+                for (int o = 0; o < ff; o++)
+                    u[o] += ls * dotf(t1, lb[l * 6 + 4] + (size_t)o * r, r);
+            }
+            for (int i = 0; i < ff; i++)
+                if (u[i] < 0.0f) u[i] = 0.0f;
+            memset(t2, 0, (size_t)h * 4);
+            lin1(t2, u, &wl[l * 6 + 5], ff, h, dt, panel);
+            if (use_lora) {
+                memset(t1, 0, (size_t)r * 4);
+                for (int o = 0; o < r; o++)
+                    t1[o] += dotf(u, la[l * 6 + 5] + (size_t)o * ff, ff);
+                for (int o = 0; o < h; o++)
+                    t2[o] += ls * dotf(t1, lb[l * 6 + 5] + (size_t)o * r, r);
+            }
+            for (int i = 0; i < h; i++) x[i] += 0.01f * t2[i];
+        }
+        memset(logits, 0, (size_t)vocab * 4);
+        lin1(logits, x, &head, h, vocab, 0, panel);  /* head stays f32 */
+        sink += logits[0];
+    }
+    return (now_ms() - t0) / iters;
+}
+
+int main(void) {
+    /* tracked kernel shapes match the bench binaries exactly */
+    printf("matmul_f32_ms %.6f\n", matmul_ms(0, 0, 1024, 512, 512, 2, 8));
+    printf("matmul_i8_dequant_ms %.6f\n",
+           matmul_ms(2, 0, 1024, 512, 512, 2, 8));
+    printf("matmul_i8_native_ms %.6f\n",
+           matmul_ms(0, 1, 1024, 512, 512, 2, 8));
+    printf("attention_fwd_ms %.6f\n", attention_ms(16, 256, 32, 2, 8));
+    /* model shapes, field order {h, L, nh, hd, ff, vocab, r} */
+    Dims tiny = {64, 2, 4, 16, 128, 256, 16};
+    Dims s1m = {128, 4, 4, 32, 256, 512, 32};
+    /* tracked decode: LoRA variant, f32, ctx ~128+new (matches the
+       largest row of the cached-decode table) */
+    printf("decode_tiny_tracked_ms %.6f\n",
+           decode_ms(tiny, 0, 1, 132, 200, 2000));
+    printf("decode_s1m_tracked_ms %.6f\n",
+           decode_ms(s1m, 0, 1, 132, 100, 1000));
+    /* quantized-base table: merged dense variant, ctx ~64+new */
+    printf("decode_tiny_f32_q_ms %.6f\n",
+           decode_ms(tiny, 0, 0, 72, 200, 2000));
+    printf("decode_tiny_bf16_q_ms %.6f\n",
+           decode_ms(tiny, 1, 0, 72, 200, 2000));
+    printf("decode_tiny_i8_q_ms %.6f\n",
+           decode_ms(tiny, 2, 0, 72, 200, 2000));
+    printf("decode_s1m_f32_q_ms %.6f\n",
+           decode_ms(s1m, 0, 0, 72, 100, 1000));
+    printf("decode_s1m_bf16_q_ms %.6f\n",
+           decode_ms(s1m, 1, 0, 72, 100, 1000));
+    printf("decode_s1m_i8_q_ms %.6f\n",
+           decode_ms(s1m, 2, 0, 72, 100, 1000));
+    fprintf(stderr, "sink %f\n", sink);
+    return 0;
+}
+"""
+
+
+def host_fingerprint():
+    """Mirror of switchlora::bench::host_fingerprint()."""
+    try:
+        with open("/proc/cpuinfo", "r", encoding="utf-8") as f:
+            for line in f:
+                if line.startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    import platform
+    return f"{platform.machine()}-{sys.platform}"
+
+
+def run_calibration():
+    with tempfile.TemporaryDirectory() as td:
+        src = os.path.join(td, "seed_bench.c")
+        exe = os.path.join(td, "seed_bench")
+        with open(src, "w", encoding="utf-8") as f:
+            f.write(C_SRC)
+        subprocess.run(
+            ["gcc", "-O3", "-march=native", "-o", exe, src, "-lm"],
+            check=True)
+        out = subprocess.run([exe], check=True, capture_output=True,
+                             text=True).stdout
+    vals = {}
+    for line in out.splitlines():
+        parts = line.split()
+        if len(parts) == 2:
+            vals[parts[0]] = float(parts[1])
+    return vals
+
+
+NOTE = (
+    "seed report: tracked timings measured by tools/seed_bench.py -- a C "
+    "transliteration of the restructured kernels (same lane-split dot, "
+    "o-outer panel dequant, and int8-native integer-dot inner loops) "
+    "compiled with gcc -O3 -march=native and run single-threaded on the "
+    "host named above; byte tables are exact (computed from the same "
+    "formulas the bench binaries use). max_logit_* deviation fields are "
+    "omitted because the transliteration does not run the full model. "
+    "Regenerate natively with `cargo bench --bench bench_micro -- --json "
+    "BENCH_kernels.json` / `--bench bench_infer -- --json "
+    "BENCH_infer.json` and commit the result to replace this calibration."
+)
+
+
+def main():
+    vals = run_calibration()
+    host = host_fingerprint()
+    flops = 2.0 * 1024 * 512 * 512
+
+    def gflops(ms):
+        return flops / (ms / 1e3) / 1e9
+
+    kernels_path = os.path.join(REPO, "BENCH_kernels.json")
+    infer_path = os.path.join(REPO, "BENCH_infer.json")
+    with open(kernels_path, "r", encoding="utf-8") as f:
+        old_kernels = json.load(f)
+    with open(infer_path, "r", encoding="utf-8") as f:
+        old_infer = json.load(f)
+
+    kernels = {
+        "schema": "switchlora-bench-v2",
+        "bench": "bench_micro",
+        "host": host,
+        "threads": 1,
+        "note": NOTE,
+        "results": [],
+        "tracked": {
+            "matmul_f32_gflops": round(gflops(vals["matmul_f32_ms"]), 3),
+            "matmul_i8_dequant_gflops":
+                round(gflops(vals["matmul_i8_dequant_ms"]), 3),
+            "matmul_i8_native_gflops":
+                round(gflops(vals["matmul_i8_native_ms"]), 3),
+            "attention_fwd_ms": round(vals["attention_fwd_ms"], 4),
+        },
+        "precision_memory": old_kernels["precision_memory"],
+        "precision_comm": old_kernels["precision_comm"],
+    }
+
+    quant_rows = []
+    for row in old_infer["quantized_base"]:
+        spec, dt = row["spec"], row["frozen_base"]
+        key = {"bf16": "bf16", "int8": "i8"}[dt]
+        new_row = {k: v for k, v in row.items()
+                   if v is not None and not k.startswith("max_logit")}
+        new_row["ms_per_tok"] = round(
+            vals[f"decode_{spec}_{key}_q_ms"], 4)
+        new_row["ms_per_tok_f32"] = round(
+            vals[f"decode_{spec}_f32_q_ms"], 4)
+        quant_rows.append(new_row)
+
+    infer = {
+        "schema": "switchlora-bench-v2",
+        "bench": "bench_infer",
+        "host": host,
+        "threads": 1,
+        "note": NOTE,
+        "results": [],
+        "tracked": {
+            "decode_tiny_ms_per_tok":
+                round(vals["decode_tiny_tracked_ms"], 4),
+            "decode_s1m_ms_per_tok":
+                round(vals["decode_s1m_tracked_ms"], 4),
+        },
+        "quantized_base": quant_rows,
+    }
+
+    for path, doc in [(kernels_path, kernels), (infer_path, infer)]:
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {path}")
+    for k, v in sorted(vals.items()):
+        print(f"  {k} = {v:.4f}")
+
+
+if __name__ == "__main__":
+    main()
