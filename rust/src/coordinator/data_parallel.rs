@@ -63,6 +63,7 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger,
     assert!(grads.iter().all(|g| g.len() == n), "ragged gradient vectors");
     if w == 1 {
         ledger.rounds += 1;
+        crate::obs::comm_round(0, n, 1, wire);
         return 0;
     }
     let width = wire.bytes() as u64;
@@ -130,6 +131,7 @@ pub fn ring_all_reduce(grads: &mut [Vec<f32>], ledger: &mut CommLedger,
     }
     ledger.bytes += moved;
     ledger.rounds += 1;
+    crate::obs::comm_round(moved, n, w, wire);
     moved
 }
 

@@ -10,7 +10,7 @@ use anyhow::{Context, Result};
 
 use super::data_parallel::CommLedger;
 use crate::tensor::dtype::DType;
-use crate::util::human_bytes;
+use crate::util::{human_bytes, human_bytes_f64};
 
 /// Streaming CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -112,11 +112,33 @@ pub fn perplexity(mean_nll: f64) -> f64 {
 /// proportional to trainable parameters.  `wire` is the dtype the bytes
 /// were counted at (`--comm-dtype`), so the headline states what moved.
 pub fn comm_summary(comm: &CommLedger, steps: u64, wire: DType) -> String {
-    let per_step = if steps == 0 { 0 } else { comm.bytes / steps };
+    // f64 rate: integer division used to truncate sub-KB-per-step runs
+    // (e.g. a small adapter over many steps) to a misleading "0B/step"
+    let per_step = if steps == 0 {
+        0.0
+    } else {
+        comm.bytes as f64 / steps as f64
+    };
     format!("{}/step measured all-reduce traffic ({} total over {} \
              rounds, {} wire)",
-            human_bytes(per_step), human_bytes(comm.bytes), comm.rounds,
-            wire)
+            human_bytes_f64(per_step), human_bytes(comm.bytes),
+            comm.rounds, wire)
+}
+
+/// Compact remaining-time estimate for the heartbeat line
+/// ("42s", "3m07s", "2h05m").
+pub fn eta(secs: f64) -> String {
+    if !secs.is_finite() || secs < 0.0 {
+        return "?".to_string();
+    }
+    let s = secs.round() as u64;
+    if s >= 3600 {
+        format!("{}h{:02}m", s / 3600, (s % 3600) / 60)
+    } else if s >= 60 {
+        format!("{}m{:02}s", s / 60, s % 60)
+    } else {
+        format!("{s}s")
+    }
 }
 
 #[cfg(test)]
@@ -195,5 +217,22 @@ mod tests {
             .contains("0B/step"));
         assert!(comm_summary(&comm, 0, DType::Bf16)
             .contains("bf16 wire"));
+    }
+
+    #[test]
+    fn comm_summary_keeps_sub_byte_rates() {
+        // 512 bytes over 1024 steps used to truncate to "0B/step"
+        let comm = CommLedger { bytes: 512, rounds: 1024 };
+        let s = comm_summary(&comm, 1024, DType::Bf16);
+        assert!(s.contains("0.5B/step"), "{s}");
+    }
+
+    #[test]
+    fn eta_renders_compactly() {
+        assert_eq!(eta(42.4), "42s");
+        assert_eq!(eta(187.0), "3m07s");
+        assert_eq!(eta(7500.0), "2h05m");
+        assert_eq!(eta(f64::INFINITY), "?");
+        assert_eq!(eta(-1.0), "?");
     }
 }

@@ -33,7 +33,7 @@ use anyhow::{ensure, Context, Result};
 use crate::coordinator::checkpoint::{self, MethodState, TrainerState};
 use crate::coordinator::data_parallel::{ring_all_reduce, CommLedger};
 use crate::coordinator::eval::eval_loss;
-use crate::coordinator::metrics::{perplexity, CsvWriter, Ema};
+use crate::coordinator::metrics::{self, perplexity, CsvWriter, Ema};
 use crate::data::dataset::{synth_batches, BatchIter, EvalSet};
 use crate::data::synth::CorpusGen;
 use crate::methods::{self, MethodCtx, TrainingMethod};
@@ -237,6 +237,23 @@ impl Trainer {
                 "checkpoint is {start_step} steps in, but this run is \
                  configured for only {} steps", cfg.steps);
 
+        // ---- memory ledger ----
+        // what this run keeps resident, decomposed by component and
+        // dtype: f32 master store (frozen + trainable), Adam moment
+        // buffers, and the method's candidate pools if it has any
+        let pool_bytes = method
+            .counters()
+            .iter()
+            .find(|(k, _)| k == "pool_resident_bytes")
+            .map(|&(_, v)| v)
+            .unwrap_or(0);
+        let mem_rows = crate::obs::train_mem_rows(
+            layout.total, layout.n_trainable, padded, pool_bytes);
+        crate::obs::memory_event("train", &mem_rows);
+        crate::debuglog!(
+            "resident memory: {}",
+            crate::util::human_bytes(crate::obs::mem_total(&mem_rows)));
+
         // ---- data ----
         let mut workers: Vec<BatchIter<CorpusGen>> = (0..cfg.workers)
             .map(|w| synth_batches(mc.vocab, cfg.seed, w as u64, mc.batch,
@@ -276,7 +293,15 @@ impl Trainer {
         };
 
         let t0 = Instant::now();
+        // per-phase wall-clock accumulators (seconds) for the
+        // heartbeat's throughput figures and the end-of-run profile;
+        // the obs spans reuse the same clock reads
+        let (mut ph_data, mut ph_fwdbwd, mut ph_ar, mut ph_opt,
+             mut ph_switch, mut ph_eval, mut ph_ckpt) =
+            (0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let tokens_per_step = (cfg.workers * mc.batch * mc.seq) as f64;
         for step in start_step..cfg.steps {
+            let _step_span = crate::obs::span("step", "step");
             // learning rate (method hook: e.g. ReLoRA local re-warm)
             let lr = method.lr_adjust(step, sched.lr(step), &sched);
             let hyper = hyper0.with_lr(lr);
@@ -285,13 +310,20 @@ impl Trainer {
             // One batch per worker; fwdbwd_multi runs each shard on its
             // own OS thread (native backend, kernel pool) or shares the
             // marshaled parameter literals (PJRT, §Perf L3).
+            let sp = crate::obs::phase("data");
             let batches: Vec<_> =
                 workers.iter_mut().map(|w| w.next_batch()).collect();
             let views: Vec<(&[i32], usize, usize)> = batches
                 .iter()
                 .map(|b| (b.tokens.as_slice(), b.batch, b.seq_plus_1))
                 .collect();
+            ph_data += sp.done();
+            // forward/backward spans are recorded inside the backend
+            // (per shard thread); this combined reading feeds the
+            // heartbeat
+            let tfb = Instant::now();
             let results = rt.fwdbwd_multi(&store, &views)?;
+            ph_fwdbwd += tfb.elapsed().as_secs_f64();
             let mut losses = 0.0f64;
             let mut grads: Vec<Vec<f32>> =
                 Vec::with_capacity(cfg.workers);
@@ -303,30 +335,49 @@ impl Trainer {
             // measured all-reduce traffic for THIS step (the ledger is
             // cumulative): what the comm_bytes CSV column logs
             let bytes_before = comm.bytes;
+            let sp = crate::obs::phase("allreduce");
             ring_all_reduce(&mut grads, &mut comm, cfg.precision.comm);
+            ph_ar += sp.done();
             let step_comm_bytes = comm.bytes - bytes_before;
             let grad = &grads[0];
 
             // ---- optimizer (method hook) ----
+            let sp = crate::obs::phase("optim");
             method.optim_step(step, &rt, &mut store, grad, &mut opt,
                               &base_mask, &hyper)?;
+            ph_opt += sp.done();
 
-            // ---- method post-step ----
+            // ---- method post-step (switching, resets) ----
+            let sp = crate::obs::phase("switch");
             method.post_step(step, &mut store, &mut opt, &mut rng)?;
+            ph_switch += sp.done();
 
             // ---- metrics / eval ----
             let e = ema.update(loss);
             train_curve.push((step, e));
             let mut eval_s = String::new();
             if (step + 1) % eval_every == 0 || step + 1 == cfg.steps {
+                let sp = crate::obs::phase("eval");
                 let el = eval_loss(&rt, &store, &eval_set)? as f64;
+                ph_eval += sp.done();
                 eval_curve.push((step, el));
                 eval_s = format!("{el:.4}");
+                // heartbeat: live throughput and ETA from the phase
+                // clock (replaces the single end-of-run mean_step_ms
+                // as the way to see how fast a run is going)
+                let done_steps = (step + 1 - start_step) as f64;
+                let wall = t0.elapsed().as_secs_f64().max(1e-9);
+                let sps = done_steps / wall;
+                let remaining =
+                    (cfg.steps - step - 1) as f64 / sps.max(1e-9);
                 crate::info!(
                     "[{}/{}] step {step} loss {loss:.4} ema {e:.4} \
-                     eval {el:.4} ppl {:.2} lr {lr:.2e} comm {}/step",
+                     eval {el:.4} ppl {:.2} lr {lr:.2e} comm {}/step | \
+                     {sps:.2} steps/s {:.0} tok/s eta {}",
                     cfg.method.name(), cfg.spec, perplexity(el),
-                    crate::util::human_bytes(comm.bytes / (step + 1)));
+                    crate::util::human_bytes_f64(
+                        comm.bytes as f64 / (step + 1) as f64),
+                    sps * tokens_per_step, metrics::eta(remaining));
             } else if step % cfg.log_every == 0 {
                 crate::debuglog!("step {step} loss {loss:.4} ema {e:.4}");
             }
@@ -341,9 +392,11 @@ impl Trainer {
                 && ((step + 1) % cfg.ckpt_every == 0
                     || step + 1 == cfg.steps)
             {
+                let sp = crate::obs::phase("checkpoint");
                 let path = cfg.ckpt_path.as_ref().expect("checked above");
                 self.save_resumable(path, method.as_ref(), &store, &opt,
                                     step + 1, &ema, &comm, &rng)?;
+                ph_ckpt += sp.done();
             }
         }
         if let Some(c) = csv.as_mut() {
@@ -352,6 +405,17 @@ impl Trainer {
 
         let elapsed = t0.elapsed().as_secs_f64();
         let steps_run = cfg.steps - start_step;
+        crate::obs::run_summary(steps_run, comm.bytes, comm.rounds,
+                                elapsed);
+        if steps_run > 0 {
+            let ms = |s: f64| 1e3 * s / steps_run as f64;
+            crate::info!(
+                "phase profile (ms/step): data {:.1} fwd+bwd {:.1} \
+                 allreduce {:.1} optim {:.1} switch {:.1} eval {:.1} \
+                 checkpoint {:.1}",
+                ms(ph_data), ms(ph_fwdbwd), ms(ph_ar), ms(ph_opt),
+                ms(ph_switch), ms(ph_eval), ms(ph_ckpt));
+        }
         let final_eval = eval_curve
             .last()
             .map(|&(_, l)| l)

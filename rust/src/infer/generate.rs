@@ -17,6 +17,7 @@ use anyhow::{ensure, Result};
 use super::sampler::Sampler;
 use crate::model::packed::ParamSource;
 use crate::runtime::InferRuntime;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Generation-loop configuration.
@@ -106,7 +107,9 @@ pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
     let mut last = vec![0i32; b];
     let mut prefill_tokens = 0usize;
     for (s, prompt) in prompts.iter().enumerate() {
+        let sp = crate::obs::span("infer", "prefill");
         let logits = rt.prefill(params, &mut cache, s, prompt)?;
+        sp.done();
         prefill_tokens += prompt.len();
         let tok = cfg.sampler.sample(&logits, &mut rngs[s]) as i32;
         sequences[s].push(tok);
@@ -127,8 +130,22 @@ pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
             break;
         }
         let toks: Vec<i32> = active.iter().map(|&s| last[s]).collect();
+        let sp = crate::obs::span("infer", "decode");
         let logits = rt.decode(params, &mut cache, &active, &toks)?;
+        let secs = sp.done();
         decode_steps += 1;
+        if crate::obs::enabled() {
+            crate::obs::hist_record("decode.token_us",
+                                    1e6 * secs / active.len() as f64);
+            let used: usize = (0..b).map(|s| cache.len(s)).sum();
+            crate::obs::event("kv", vec![
+                ("used", Json::num(used as f64)),
+                ("capacity", Json::num((b * cache.capacity) as f64)),
+                ("bytes", Json::num(cache.bytes() as f64)),
+                ("active", Json::num(active.len() as f64)),
+                ("dtype", Json::str(cache.dtype().name())),
+            ]);
+        }
         let mut still = Vec::with_capacity(active.len());
         for (i, &s) in active.iter().enumerate() {
             let row = &logits[i * v..(i + 1) * v];

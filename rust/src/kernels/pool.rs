@@ -215,12 +215,14 @@ fn worker(shared: Arc<Shared>) {
 pub fn run(n_tasks: usize, f: &(dyn Fn(usize) + Sync)) {
     let want = threads();
     if n_tasks <= 1 || want <= 1 || in_serial() {
+        crate::obs::pool_tally(n_tasks, false);
         let _g = serial_guard();
         for i in 0..n_tasks {
             f(i);
         }
         return;
     }
+    crate::obs::pool_tally(n_tasks, true);
     let shared = POOL.get_or_init(|| {
         Arc::new(Shared {
             state: Mutex::new(PoolState {

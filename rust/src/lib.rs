@@ -51,6 +51,7 @@ pub mod infer;
 pub mod kernels;
 pub mod methods;
 pub mod model;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod switchlora;

@@ -34,9 +34,17 @@
 //!            [--kv-dtype f32|bf16|int8] [--max-context N]
 //!            [--prompt "text"] [--max-new 64] [--batch 4]
 //!            [--temperature 0.8] [--top-k 40] [--stop 0,10] [--seed 42]
+//! switchlora report TRACE.jsonl  # summarize a --trace-out trace
 //! switchlora tables            # analytic Tables 4/5 + App. D/F
 //! switchlora info              # list specs + the method registry
 //! ```
+//!
+//! Any subcommand accepts `--trace-out PATH [--trace-format
+//! jsonl|chrome]`: a structured telemetry trace (phase spans, comm
+//! rounds, switch audit, memory ledgers) with zero effect on the math —
+//! traced runs are bitwise identical to untraced ones.  `jsonl` feeds
+//! `switchlora report` / `tools/trace_check.py`; `chrome` loads in
+//! Perfetto or `chrome://tracing`.
 
 use std::path::PathBuf;
 
@@ -64,7 +72,7 @@ fn main() {
     switchlora::util::logging::init();
     let args = Args::parse(std::env::args().skip(1));
     if let Err(e) = dispatch(&args) {
-        eprintln!("error: {e:#}");
+        switchlora::errorlog!("{e:#}");
         std::process::exit(1);
     }
 }
@@ -83,23 +91,51 @@ fn dispatch(args: &Args) -> Result<()> {
     if args.flag("int8-native") {
         switchlora::kernels::set_int8_native(true);
     }
-    match args.subcommand().unwrap_or("help") {
+    // global: structured tracing.  `--trace-out PATH` opens the sink
+    // before any compute; the sink is finished (registries dumped,
+    // chrome array closed, file flushed) after the subcommand returns,
+    // success or not.
+    if let Some(path) = args.get("trace-out") {
+        let fmt = switchlora::obs::TraceFormat::parse(
+            &args.get_or("trace-format", "jsonl"))?;
+        switchlora::obs::enable(std::path::Path::new(&path), fmt)?;
+        switchlora::info!("tracing to {path}");
+    }
+    let out = match args.subcommand().unwrap_or("help") {
         "pretrain" => cmd_pretrain(args),
         "finetune" => cmd_finetune(args),
         "eval" => cmd_eval(args),
         "rank" => cmd_rank(args),
         "generate" => cmd_generate(args),
+        "report" => cmd_report(args),
         "tables" => cmd_tables(),
         "info" => cmd_info(args),
         _ => {
             print!("{HELP}");
             Ok(())
         }
+    };
+    match switchlora::obs::finish() {
+        Ok(()) => out,
+        Err(e) => out.and(Err(e)),
     }
 }
 
+/// `switchlora report TRACE.jsonl` — summarize a trace into the
+/// per-phase / communication / switch-audit / memory tables.
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = match args.positional.get(1) {
+        Some(p) => p.clone(),
+        None => args.req("trace")?.to_string(),
+    };
+    let rep =
+        switchlora::obs::report::summarize(std::path::Path::new(&path))?;
+    print!("{}", rep.render());
+    Ok(())
+}
+
 const HELP: &str = "switchlora — switched low-rank adaptation pre-training\n\
-subcommands: pretrain finetune eval rank generate tables info\n\
+subcommands: pretrain finetune eval rank generate report tables info\n\
 training methods are pluggable: `switchlora info` lists the registry,\n\
 and `pretrain --method NAME` + per-method flags select one\n\
 backend: native CPU by default (no artifacts needed); build with\n\
@@ -114,6 +150,10 @@ precision: `--precision bf16` views frozen base weights in bf16,\n\
 bf16|int8\n\
 for a quantized KV cache, --max-context N to cap cache capacity)\n\
 (default is pure f32 everywhere and bitwise-identical to older builds)\n\
+telemetry: `--trace-out run.jsonl` on any subcommand records phase\n\
+spans, comm rounds, switch audits and memory ledgers (math untouched);\n\
+`--trace-format chrome` emits a Perfetto/chrome://tracing file, and\n\
+`switchlora report run.jsonl` prints the summary tables\n\
 see `rust/src/main.rs` header or README.md for full flag reference\n";
 
 /// Resolve the precision policy shared by the training/serving
@@ -160,10 +200,12 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
                       switchlora::kernels::threads(),
                       switchlora::kernels::detected_parallelism());
     let (res, store) = exp::pretrain(&mut engine, cfg.clone())?;
+    // stdout carries only the machine-readable results table; run
+    // commentary goes through the leveled logger (stderr)
     print!("{}", exp::results_table("pretrain", &[res.clone()]));
-    println!("precision: {}", cfg.precision.summary());
-    println!("comm: {}", comm_summary(&res.comm, steps,
-                                      cfg.precision.comm));
+    switchlora::info!("precision: {}", cfg.precision.summary());
+    switchlora::info!("comm: {}", comm_summary(&res.comm, steps,
+                                               cfg.precision.comm));
     if !res.counters.is_empty() {
         let line = res
             .counters
@@ -171,15 +213,15 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
             .map(|(k, v)| format!("{k}={v}"))
             .collect::<Vec<_>>()
             .join("  ");
-        println!("method counters: {line}");
+        switchlora::info!("method counters: {line}");
     }
-    println!("offload bytes/step: {}  switches: {}",
-             human_bytes((res.counter("offload_bytes") as f64
-                          / steps as f64) as u64),
-             res.counter("switches"));
+    switchlora::info!("offload bytes/step: {}  switches: {}",
+                      human_bytes((res.counter("offload_bytes") as f64
+                                   / steps as f64) as u64),
+                      res.counter("switches"));
     if let Some(out) = args.get("out") {
         checkpoint::save(&PathBuf::from(out), &spec, &store, None)?;
-        println!("checkpoint written to {out}");
+        switchlora::info!("checkpoint written to {out}");
     }
     Ok(())
 }
@@ -325,6 +367,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
     } else {
         None
     };
+    if let Some(p) = &packed {
+        switchlora::obs::memory_event(
+            "serve",
+            &switchlora::obs::packed_mem_rows(p, policy.frozen_base));
+    }
     let params: &dyn ParamSource = match &packed {
         Some(p) => p,
         None => &store,
@@ -362,10 +409,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
         seed,
         max_context,
     };
-    println!("spec {spec} [{}]: {} sequence(s), prompt {} tokens, \
-              max-new {}, temperature {}, top-k {}",
-             variant.key(), batch, prompts[0].len(), cfg.max_new,
-             cfg.sampler.temperature, cfg.sampler.top_k);
+    switchlora::info!(
+        "spec {spec} [{}]: {} sequence(s), prompt {} tokens, \
+         max-new {}, temperature {}, top-k {}",
+        variant.key(), batch, prompts[0].len(), cfg.max_new,
+        cfg.sampler.temperature, cfg.sampler.top_k);
     // ids above 255 have no byte identity, so wide-vocab specs
     // (s1m/s4m/s8m) stream raw token ids instead of decoded text
     let as_text = mc.vocab <= 256;
@@ -440,10 +488,11 @@ fn cmd_generate(args: &Args) -> Result<()> {
         println!("[seq {s}] {:>3} tokens | {}", new.len(), render(new));
     }
     let total: usize = gen.n_generated.iter().sum();
-    println!("prefill {} tokens, {} batched decode steps, {} tokens \
-              generated in {dt:.2}s ({:.1} tok/s)",
-             gen.prefill_tokens, gen.decode_steps, total,
-             total as f64 / dt.max(1e-9));
+    switchlora::info!(
+        "prefill {} tokens, {} batched decode steps, {} tokens \
+         generated in {dt:.2}s ({:.1} tok/s)",
+        gen.prefill_tokens, gen.decode_steps, total,
+        total as f64 / dt.max(1e-9));
     Ok(())
 }
 

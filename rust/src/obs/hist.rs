@@ -1,0 +1,104 @@
+//! Streaming histograms with **fixed** bucket edges.
+//!
+//! The edges are chosen up front and never move, so the dumped counts
+//! are a deterministic function of the recorded values: two runs that
+//! record the same multiset of values — in any order, from any number
+//! of threads — serialize identical histograms.  (Adaptive/quantile
+//! sketches trade that away for accuracy we don't need here.)
+
+/// A fixed-edge histogram.  `counts.len() == edges.len() + 1`: bucket
+/// `0` is the underflow bucket `(-inf, edges[0])`, bucket `i` covers
+/// `[edges[i-1], edges[i])`, and the last bucket is the overflow
+/// `[edges.last(), +inf)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hist {
+    pub edges: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Hist {
+    pub fn new(edges: Vec<f64>) -> Hist {
+        assert!(edges.windows(2).all(|w| w[0] < w[1]),
+                "histogram edges must be strictly ascending");
+        let n = edges.len() + 1;
+        Hist { edges, counts: vec![0; n], count: 0, sum: 0.0 }
+    }
+
+    /// Default edges for microsecond latencies: a 1-2-5 ladder from
+    /// 1 µs to 10 s (22 edges, 23 buckets).
+    pub fn latency_us() -> Hist {
+        let mut edges = Vec::new();
+        let mut decade = 1.0f64;
+        while decade < 1e7 {
+            for m in [1.0, 2.0, 5.0] {
+                edges.push(decade * m);
+            }
+            decade *= 10.0;
+        }
+        edges.push(1e7);
+        Hist::new(edges)
+    }
+
+    /// Bucket index for `value`: the number of edges `<= value`.
+    pub fn bucket(&self, value: f64) -> usize {
+        self.edges.partition_point(|&e| e <= value)
+    }
+
+    pub fn record(&mut self, value: f64) {
+        let b = self.bucket(value);
+        self.counts[b] += 1;
+        self.count += 1;
+        self.sum += value;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum / self.count as f64 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucketing_is_deterministic_and_order_invariant() {
+        let mut a = Hist::new(vec![1.0, 10.0, 100.0]);
+        let mut b = Hist::new(vec![1.0, 10.0, 100.0]);
+        let vals = [0.5, 1.0, 5.0, 99.9, 100.0, 1e6];
+        for &v in &vals {
+            a.record(v);
+        }
+        for &v in vals.iter().rev() {
+            b.record(v);
+        }
+        assert_eq!(a.counts, b.counts);
+        // 0.5 underflows; 1.0 and 5.0 land in [1,10); 99.9 in
+        // [10,100); 100.0 and 1e6 overflow into [100, inf)
+        assert_eq!(a.counts, vec![1, 2, 1, 2]);
+        assert_eq!(a.count, 6);
+        assert_eq!(a.bucket(0.0), 0);
+        assert_eq!(a.bucket(1.0), 1);
+        assert_eq!(a.bucket(100.0), 3);
+    }
+
+    #[test]
+    fn latency_edges_are_strictly_ascending() {
+        let h = Hist::latency_us();
+        assert!(h.edges.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(h.counts.len(), h.edges.len() + 1);
+        assert_eq!(h.edges[0], 1.0);
+        assert_eq!(*h.edges.last().unwrap(), 1e7);
+    }
+
+    #[test]
+    fn mean_tracks_sum() {
+        let mut h = Hist::new(vec![10.0]);
+        assert_eq!(h.mean(), 0.0);
+        h.record(4.0);
+        h.record(8.0);
+        assert_eq!(h.mean(), 6.0);
+        assert_eq!(h.sum, 12.0);
+    }
+}

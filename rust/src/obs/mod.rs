@@ -1,0 +1,458 @@
+//! Telemetry subsystem: metrics registry, thread-aware span timers,
+//! structured trace sinks, typed audit events and memory ledgers.
+//!
+//! Design rules, in order:
+//!
+//! 1. **Never touch math or RNG.**  Instrumentation reads clocks and
+//!    writes bytes; it must not perturb a single bit of the run.  The
+//!    contract is pinned by `tests/observability.rs`, which compares a
+//!    traced and an untraced run bitwise (losses, final weights, comm
+//!    bytes).
+//! 2. **Near-zero cost when disabled.**  Every emitter starts with one
+//!    relaxed atomic load; spans additionally take one `Instant::now`
+//!    so their wall-clock reading stays available to callers (the
+//!    trainer heartbeat uses it) even with tracing off.
+//! 3. **Deterministic output shape.**  Histograms use fixed bucket
+//!    edges ([`hist`]), JSON objects serialize with sorted keys, and
+//!    counters dump in name order — only timestamps and durations vary
+//!    between runs.
+//!
+//! State is process-global (like the kernel pool's thread setting):
+//! `enable()` opens a sink, instrumented code emits through it, and
+//! `finish()` dumps the registries and flushes.  Span/instant events
+//! carry a small process-local thread id so shard fan-out in
+//! `kernels::scoped_map` shows up as parallel tracks in Perfetto.
+
+pub mod hist;
+pub mod report;
+pub mod sink;
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::infer::kv_cache::KvCache;
+use crate::model::packed::PackedStore;
+use crate::tensor::dtype::DType;
+use crate::util::json::Json;
+
+pub use hist::Hist;
+pub use sink::{TraceFormat, TraceSink};
+
+// ---------------------------------------------------------------------
+// Global state
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<TraceSink>> = Mutex::new(None);
+static COUNTERS: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
+static GAUGES: Mutex<BTreeMap<String, f64>> = Mutex::new(BTreeMap::new());
+static HISTS: Mutex<BTreeMap<String, Hist>> = Mutex::new(BTreeMap::new());
+
+// Kernel-pool utilization tallies.  `pool::run` is called once per
+// kernel invocation — far too hot for a map lookup under a mutex, so
+// these get dedicated atomics and fold into the counter dump at
+// `finish()`.
+static POOL_JOBS: AtomicU64 = AtomicU64::new(0);
+static POOL_TASKS: AtomicU64 = AtomicU64::new(0);
+static POOL_INLINE_JOBS: AtomicU64 = AtomicU64::new(0);
+static POOL_INLINE_TASKS: AtomicU64 = AtomicU64::new(0);
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Small process-local thread id (1, 2, …) — stable per thread,
+/// assigned on first telemetry emission from that thread.
+fn tid() -> u64 {
+    TID.with(|c| {
+        let t = c.get();
+        if t != 0 {
+            return t;
+        }
+        let t = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        c.set(t);
+        t
+    })
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Open a trace sink and reset the registries.  Process-global; a
+/// second `enable` replaces the previous sink without flushing it —
+/// call [`finish`] first.
+pub fn enable(path: &Path, format: TraceFormat) -> Result<()> {
+    let sink = TraceSink::open(path, format)?;
+    lock(&COUNTERS).clear();
+    lock(&GAUGES).clear();
+    lock(&HISTS).clear();
+    for c in [&POOL_JOBS, &POOL_TASKS, &POOL_INLINE_JOBS,
+              &POOL_INLINE_TASKS]
+    {
+        c.store(0, Ordering::Relaxed);
+    }
+    *lock(&SINK) = Some(sink);
+    ENABLED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Dump the counter/gauge/histogram registries as final events, close
+/// the sink, and disable tracing.  No-op when tracing is off.
+pub fn finish() -> Result<()> {
+    if !ENABLED.swap(false, Ordering::SeqCst) {
+        return Ok(());
+    }
+    let mut g = lock(&SINK);
+    let Some(mut s) = g.take() else { return Ok(()) };
+    let mut counters = lock(&COUNTERS).clone();
+    for (name, c) in [("pool.jobs", &POOL_JOBS),
+                      ("pool.tasks", &POOL_TASKS),
+                      ("pool.inline_jobs", &POOL_INLINE_JOBS),
+                      ("pool.inline_tasks", &POOL_INLINE_TASKS)]
+    {
+        let v = c.load(Ordering::Relaxed);
+        if v > 0 {
+            counters.insert(name.to_string(), v);
+        }
+    }
+    let ts = s.now_us();
+    let t = tid();
+    let vals: Vec<(&str, Json)> = counters
+        .iter()
+        .map(|(k, &v)| (k.as_str(), Json::num(v as f64)))
+        .collect();
+    s.event("counters", ts, t, vec![("values", Json::obj(vals))]);
+    let gauges = lock(&GAUGES).clone();
+    if !gauges.is_empty() {
+        let vals: Vec<(&str, Json)> = gauges
+            .iter()
+            .map(|(k, &v)| (k.as_str(), Json::num(v)))
+            .collect();
+        s.event("gauges", ts, t, vec![("values", Json::obj(vals))]);
+    }
+    for (name, h) in lock(&HISTS).iter() {
+        s.event("hist", ts, t, vec![
+            ("name", Json::str(name)),
+            ("edges",
+             Json::Arr(h.edges.iter().map(|&e| Json::num(e)).collect())),
+            ("counts",
+             Json::Arr(h.counts.iter()
+                               .map(|&c| Json::num(c as f64))
+                               .collect())),
+            ("count", Json::num(h.count as f64)),
+            ("sum", Json::num(h.sum)),
+        ]);
+    }
+    s.finish()
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+/// A live span timer.  Dropping it records the span; `done()` records
+/// it and returns the elapsed seconds (valid with tracing off too —
+/// the clock read always happens, only the event write is gated).
+pub struct Span {
+    start: Instant,
+    cat: &'static str,
+    name: &'static str,
+    live: bool,
+}
+
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    Span { start: Instant::now(), cat, name, live: true }
+}
+
+/// A trainer-phase span (`cat = "phase"`): one of the eight step
+/// phases `report` aggregates (see [`report::PHASES`]).
+pub fn phase(name: &'static str) -> Span {
+    span("phase", name)
+}
+
+impl Span {
+    /// Record the span now (instead of at drop) and return its
+    /// duration in seconds.
+    pub fn done(mut self) -> f64 {
+        self.live = false;
+        record_span(self.cat, self.name, self.start)
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.live {
+            record_span(self.cat, self.name, self.start);
+        }
+    }
+}
+
+fn record_span(cat: &'static str, name: &'static str, start: Instant)
+               -> f64 {
+    let secs = start.elapsed().as_secs_f64();
+    if enabled() {
+        let mut g = lock(&SINK);
+        if let Some(s) = g.as_mut() {
+            let ts = s.rel_us(start);
+            s.span(cat, name, ts, (secs * 1e6) as u64, tid());
+        }
+    }
+    secs
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Bump a named counter (dumped in the final `counters` event).
+pub fn add(name: &str, delta: u64) {
+    if !enabled() {
+        return;
+    }
+    *lock(&COUNTERS).entry(name.to_string()).or_insert(0) += delta;
+}
+
+/// Set a named gauge to its latest value.
+pub fn gauge(name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    lock(&GAUGES).insert(name.to_string(), value);
+}
+
+/// Record into a named histogram (created with the default
+/// microsecond-latency edges on first use).
+pub fn hist_record(name: &str, value: f64) {
+    if !enabled() {
+        return;
+    }
+    lock(&HISTS)
+        .entry(name.to_string())
+        .or_insert_with(Hist::latency_us)
+        .record(value);
+}
+
+/// Emit a typed instant event with free-form payload fields.
+pub fn event(kind: &str, fields: Vec<(&str, Json)>) {
+    if !enabled() {
+        return;
+    }
+    let mut g = lock(&SINK);
+    if let Some(s) = g.as_mut() {
+        let ts = s.now_us();
+        s.event(kind, ts, tid(), fields);
+    }
+}
+
+/// Tally one `kernels::pool::run` call (hot path — atomics only).
+pub(crate) fn pool_tally(n_tasks: usize, pooled: bool) {
+    if !enabled() {
+        return;
+    }
+    if pooled {
+        POOL_JOBS.fetch_add(1, Ordering::Relaxed);
+        POOL_TASKS.fetch_add(n_tasks as u64, Ordering::Relaxed);
+    } else {
+        POOL_INLINE_JOBS.fetch_add(1, Ordering::Relaxed);
+        POOL_INLINE_TASKS.fetch_add(n_tasks as u64, Ordering::Relaxed);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed emitters
+// ---------------------------------------------------------------------
+
+/// Audit-trail record for one adapter-vector switch (one application
+/// of the paper's Algorithm 1 to one slot).  `side` is `"b"` (a column
+/// of B, length `len = out_features`) or `"a"` (a row of A, length
+/// `len = in_features`); `slot` is the adapter rank index swapped,
+/// `pool_slot` the candidate-pool column it exchanged with,
+/// `pool_next` the pool's LRU cursor after the swap, and
+/// `freeze_until` the step before which the counterpart's optimizer
+/// state stays zeroed.
+#[allow(clippy::too_many_arguments)]
+pub fn switch_event(step: u64, layer: &str, side: &str, slot: usize,
+                    pool_slot: usize, len: usize, pool_size: usize,
+                    pool_next: usize, freeze_until: u64) {
+    if !enabled() {
+        return;
+    }
+    add("switch.events", 1);
+    event("switch", vec![
+        ("step", Json::num(step as f64)),
+        ("layer", Json::str(layer)),
+        ("side", Json::str(side)),
+        ("slot", Json::num(slot as f64)),
+        ("pool_slot", Json::num(pool_slot as f64)),
+        ("len", Json::num(len as f64)),
+        ("pool_size", Json::num(pool_size as f64)),
+        ("pool_next", Json::num(pool_next as f64)),
+        ("freeze_until", Json::num(freeze_until as f64)),
+    ]);
+}
+
+/// One ring all-reduce invocation: the measured wire traffic.
+pub fn comm_round(bytes: u64, elems: usize, workers: usize, wire: DType) {
+    if !enabled() {
+        return;
+    }
+    add("comm.bytes", bytes);
+    add("comm.rounds", 1);
+    event("comm.round", vec![
+        ("bytes", Json::num(bytes as f64)),
+        ("elems", Json::num(elems as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("wire", Json::str(wire.name())),
+    ]);
+}
+
+/// End-of-run summary: the cross-check anchor `report` reconciles the
+/// summed `comm.round` events against.
+pub fn run_summary(steps: u64, comm_bytes: u64, comm_rounds: u64,
+                   elapsed_secs: f64) {
+    if !enabled() {
+        return;
+    }
+    event("run_summary", vec![
+        ("steps", Json::num(steps as f64)),
+        ("comm_bytes", Json::num(comm_bytes as f64)),
+        ("comm_rounds", Json::num(comm_rounds as f64)),
+        ("elapsed_us", Json::num((elapsed_secs * 1e6).round())),
+    ]);
+}
+
+// ---------------------------------------------------------------------
+// Memory ledger
+// ---------------------------------------------------------------------
+
+/// One memory-ledger row: a resident-byte component at its storage
+/// dtype.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MemRow {
+    pub component: &'static str,
+    pub dtype: DType,
+    pub bytes: u64,
+}
+
+pub fn mem_total(rows: &[MemRow]) -> u64 {
+    rows.iter().map(|r| r.bytes).sum()
+}
+
+/// Training-resident decomposition: the f32 master store split into
+/// frozen base and trainable adapter params, the Adam moment buffers
+/// (m/v/s, kept f32 in RAM regardless of checkpoint dtype), and the
+/// bf16-accounted candidate pools when the method keeps them
+/// (`pool_bytes` from the method's `pool_resident_bytes` counter).
+pub fn train_mem_rows(total: usize, n_trainable: usize, padded: usize,
+                      pool_bytes: u64) -> Vec<MemRow> {
+    let mut rows = vec![
+        MemRow { component: "master",
+                 dtype: DType::F32,
+                 bytes: 4 * (total - n_trainable) as u64 },
+        MemRow { component: "adapter",
+                 dtype: DType::F32,
+                 bytes: 4 * n_trainable as u64 },
+        MemRow { component: "optimizer_moments",
+                 dtype: DType::F32,
+                 bytes: 3 * 4 * padded as u64 },
+    ];
+    if pool_bytes > 0 {
+        rows.push(MemRow { component: "candidate_pool",
+                           dtype: DType::Bf16,
+                           bytes: pool_bytes });
+    }
+    rows
+}
+
+/// Serving decomposition of a [`PackedStore`]: base weights at the
+/// packed dtype (scale overhead included), everything else f32.  The
+/// row total equals `PackedStore::resident_bytes()` exactly
+/// (test-pinned).
+pub fn packed_mem_rows(p: &PackedStore, base_dtype: DType) -> Vec<MemRow> {
+    let (base_packed, _base_f32) = p.base_bytes();
+    let rest = p.resident_bytes() - base_packed;
+    vec![
+        MemRow { component: "frozen_base",
+                 dtype: base_dtype,
+                 bytes: base_packed as u64 },
+        MemRow { component: "serve_master",
+                 dtype: DType::F32,
+                 bytes: rest as u64 },
+    ]
+}
+
+/// The KV-cache row; equals `KvCache::bytes()` exactly (test-pinned).
+pub fn kv_mem_row(cache: &KvCache) -> MemRow {
+    MemRow { component: "kv_cache",
+             dtype: cache.dtype(),
+             bytes: cache.bytes() as u64 }
+}
+
+/// Emit a memory-ledger event: dtype-decomposed resident bytes for one
+/// context ("train", "serve", …).
+pub fn memory_event(context: &str, rows: &[MemRow]) {
+    if !enabled() {
+        return;
+    }
+    let arr = rows.iter()
+                  .map(|r| Json::obj(vec![
+                      ("component", Json::str(r.component)),
+                      ("dtype", Json::str(r.dtype.name())),
+                      ("bytes", Json::num(r.bytes as f64)),
+                  ]))
+                  .collect();
+    event("memory", vec![
+        ("context", Json::str(context)),
+        ("rows", Json::Arr(arr)),
+        ("total", Json::num(mem_total(rows) as f64)),
+    ]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_measures_even_when_disabled() {
+        // no enable(): the span must still return a real duration
+        let sp = span("test", "disabled");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let secs = sp.done();
+        assert!(secs >= 0.001, "span under-measured: {secs}");
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn train_rows_decompose_master_and_moments() {
+        let rows = train_mem_rows(100, 30, 32, 64);
+        assert_eq!(mem_total(&rows), 4 * 100 + 3 * 4 * 32 + 64);
+        assert_eq!(rows[0].component, "master");
+        assert_eq!(rows[0].bytes, 4 * 70);
+        assert_eq!(rows[1].bytes, 4 * 30);
+        let pool = rows.iter().find(|r| r.component == "candidate_pool");
+        assert_eq!(pool.unwrap().dtype, DType::Bf16);
+        // no pool → no row
+        assert_eq!(train_mem_rows(100, 30, 32, 0).len(), 3);
+    }
+
+    #[test]
+    fn tids_are_distinct_across_threads() {
+        let a = tid();
+        let b = std::thread::spawn(tid).join().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(a, tid(), "tid must be stable per thread");
+    }
+}

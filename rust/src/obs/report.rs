@@ -1,0 +1,283 @@
+//! `switchlora report TRACE.jsonl` — summarize a JSONL trace into the
+//! per-phase / communication / switch-audit / memory tables.
+//!
+//! The reader is deliberately tolerant: unknown `kind`s are counted
+//! but ignored, so traces from newer builds still summarize.  Chrome-
+//! format traces are for Perfetto — `summarize` detects them and bails
+//! with a pointer rather than mis-parsing.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::{human_bytes, human_bytes_f64};
+use crate::util::json::Json;
+
+/// Canonical trainer phases, in step order.  `trace_check.py` and the
+/// phase-coverage test key off this list.
+pub const PHASES: [&str; 8] = ["data", "forward", "backward", "allreduce",
+                               "optim", "switch", "eval", "checkpoint"];
+
+#[derive(Clone, Debug, Default)]
+pub struct SpanAgg {
+    pub cat: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub max_us: u64,
+}
+
+/// One memory-ledger row as read back from the trace.
+#[derive(Clone, Debug)]
+pub struct MemRowRead {
+    pub component: String,
+    pub dtype: String,
+    pub bytes: u64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub events: u64,
+    /// span name -> aggregate (across all cats; phase spans keep their
+    /// bare name, the canonical eight never collide with other cats)
+    pub spans: BTreeMap<String, SpanAgg>,
+    pub comm_rounds: u64,
+    pub comm_round_bytes: u64,
+    pub switches: u64,
+    pub switch_by_layer: BTreeMap<String, u64>,
+    pub switch_steps: Option<(u64, u64)>,
+    /// context -> (rows, total) — last event per context wins
+    pub memory: BTreeMap<String, (Vec<MemRowRead>, u64)>,
+    pub counters: BTreeMap<String, u64>,
+    pub hists: Vec<(String, u64, f64)>,
+    pub summary_steps: Option<u64>,
+    pub summary_comm_bytes: Option<u64>,
+    pub summary_comm_rounds: Option<u64>,
+    pub summary_elapsed_us: Option<u64>,
+    pub kv_peak_used: u64,
+    pub kv_peak_bytes: u64,
+}
+
+fn num_u64(j: &Json, key: &str) -> Result<u64> {
+    Ok(j.get(key)?.as_f64()? as u64)
+}
+
+pub fn summarize(path: &Path) -> Result<Report> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    if text.trim_start().starts_with('[') {
+        bail!("{} looks like a chrome-format trace (load it in Perfetto \
+               or chrome://tracing); `report` reads the JSONL format — \
+               re-run with `--trace-format jsonl`",
+              path.display());
+    }
+    let mut r = Report::default();
+    for (ln, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("{}:{}", path.display(), ln + 1))?;
+        r.events += 1;
+        let kind = j.get("kind")?.as_str()?.to_string();
+        match kind.as_str() {
+            "span" => {
+                let name = j.get("name")?.as_str()?.to_string();
+                let cat = j.get("cat")?.as_str()?.to_string();
+                let dur = num_u64(&j, "dur")?;
+                let agg = r.spans.entry(name).or_default();
+                agg.cat = cat;
+                agg.count += 1;
+                agg.total_us += dur;
+                agg.max_us = agg.max_us.max(dur);
+            }
+            "comm.round" => {
+                r.comm_rounds += 1;
+                r.comm_round_bytes += num_u64(&j, "bytes")?;
+            }
+            "switch" => {
+                r.switches += 1;
+                let layer = j.get("layer")?.as_str()?.to_string();
+                *r.switch_by_layer.entry(layer).or_insert(0) += 1;
+                let step = num_u64(&j, "step")?;
+                r.switch_steps = Some(match r.switch_steps {
+                    None => (step, step),
+                    Some((lo, hi)) => (lo.min(step), hi.max(step)),
+                });
+            }
+            "memory" => {
+                let ctx = j.get("context")?.as_str()?.to_string();
+                let mut rows = Vec::new();
+                for row in j.get("rows")?.as_arr()? {
+                    rows.push(MemRowRead {
+                        component: row.get("component")?
+                                      .as_str()?
+                                      .to_string(),
+                        dtype: row.get("dtype")?.as_str()?.to_string(),
+                        bytes: num_u64(row, "bytes")?,
+                    });
+                }
+                let total = num_u64(&j, "total")?;
+                r.memory.insert(ctx, (rows, total));
+            }
+            "kv" => {
+                r.kv_peak_used = r.kv_peak_used.max(num_u64(&j, "used")?);
+                r.kv_peak_bytes =
+                    r.kv_peak_bytes.max(num_u64(&j, "bytes")?);
+            }
+            "counters" => {
+                if let Json::Obj(m) = j.get("values")? {
+                    for (k, v) in m {
+                        r.counters.insert(k.clone(), v.as_f64()? as u64);
+                    }
+                }
+            }
+            "hist" => {
+                r.hists.push((j.get("name")?.as_str()?.to_string(),
+                              num_u64(&j, "count")?,
+                              j.get("sum")?.as_f64()?));
+            }
+            "run_summary" => {
+                r.summary_steps = Some(num_u64(&j, "steps")?);
+                r.summary_comm_bytes = Some(num_u64(&j, "comm_bytes")?);
+                r.summary_comm_rounds = Some(num_u64(&j, "comm_rounds")?);
+                r.summary_elapsed_us = Some(num_u64(&j, "elapsed_us")?);
+            }
+            // unknown kinds: tolerated for forward compatibility
+            _ => {}
+        }
+    }
+    Ok(r)
+}
+
+impl Report {
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut line = |s: String| {
+            out.push_str(&s);
+            out.push('\n');
+        };
+        line(format!("trace summary: {} events", self.events));
+
+        // -- per-phase step profile --
+        line(String::new());
+        line("per-phase step profile".to_string());
+        line(format!("  {:<12} {:>7} {:>12} {:>10} {:>10}",
+                     "phase", "calls", "total(ms)", "mean(ms)",
+                     "max(ms)"));
+        let mut shown: Vec<&str> = Vec::new();
+        for ph in PHASES {
+            if self.spans.contains_key(ph) {
+                shown.push(ph);
+            }
+        }
+        let phase_total: u64 =
+            shown.iter().map(|p| self.spans[*p].total_us).sum();
+        for &ph in &shown {
+            let a = &self.spans[ph];
+            line(format!(
+                "  {:<12} {:>7} {:>12.1} {:>10.3} {:>10.3}",
+                ph, a.count, a.total_us as f64 / 1e3,
+                a.total_us as f64 / 1e3 / a.count.max(1) as f64,
+                a.max_us as f64 / 1e3));
+        }
+        if phase_total > 0 {
+            line(format!("  phase wall total {:.1} ms",
+                         phase_total as f64 / 1e3));
+        }
+        let others: Vec<_> = self.spans
+                                .iter()
+                                .filter(|(n, _)| {
+                                    !PHASES.contains(&n.as_str())
+                                })
+                                .collect();
+        if !others.is_empty() {
+            line(String::new());
+            line("other spans".to_string());
+            for (name, a) in others {
+                line(format!(
+                    "  {:<20} {:>7} calls {:>12.1} ms total ({})",
+                    format!("{}:{}", a.cat, name), a.count,
+                    a.total_us as f64 / 1e3, a.cat));
+            }
+        }
+
+        // -- communication --
+        line(String::new());
+        line("communication".to_string());
+        line(format!("  {} rounds, {} on the wire",
+                     self.comm_rounds,
+                     human_bytes(self.comm_round_bytes)));
+        if let Some(total) = self.summary_comm_bytes {
+            let ok = total == self.comm_round_bytes;
+            line(format!(
+                "  ledger cross-check: run summary {} — {}",
+                human_bytes(total),
+                if ok { "match" } else { "MISMATCH" }));
+        }
+        if let (Some(steps), true) =
+            (self.summary_steps, self.comm_rounds > 0)
+        {
+            if steps > 0 {
+                line(format!(
+                    "  {}/step",
+                    human_bytes_f64(self.comm_round_bytes as f64
+                                    / steps as f64)));
+            }
+        }
+
+        // -- switch audit --
+        if self.switches > 0 {
+            line(String::new());
+            line("switch audit".to_string());
+            let (lo, hi) = self.switch_steps.unwrap_or((0, 0));
+            line(format!("  {} switches over steps {lo}..={hi}",
+                         self.switches));
+            for (layer, n) in &self.switch_by_layer {
+                line(format!("  {:<24} {:>6}", layer, n));
+            }
+        }
+
+        // -- memory ledgers --
+        for (ctx, (rows, total)) in &self.memory {
+            line(String::new());
+            line(format!("memory ledger [{ctx}]"));
+            line(format!("  {:<20} {:>6} {:>12}",
+                         "component", "dtype", "bytes"));
+            for row in rows {
+                line(format!("  {:<20} {:>6} {:>12}",
+                             row.component, row.dtype,
+                             human_bytes(row.bytes)));
+            }
+            line(format!("  {:<20} {:>6} {:>12}",
+                         "total", "", human_bytes(*total)));
+        }
+        if self.kv_peak_bytes > 0 {
+            line(format!("  kv cache peak: {} used rows, {}",
+                         self.kv_peak_used,
+                         human_bytes(self.kv_peak_bytes)));
+        }
+
+        // -- counters / histograms --
+        if !self.counters.is_empty() {
+            line(String::new());
+            line("counters".to_string());
+            for (k, v) in &self.counters {
+                line(format!("  {k:<24} {v:>12}"));
+            }
+        }
+        if !self.hists.is_empty() {
+            line(String::new());
+            line("histograms".to_string());
+            for (name, count, sum) in &self.hists {
+                let mean = if *count == 0 {
+                    0.0
+                } else {
+                    sum / *count as f64
+                };
+                line(format!("  {name:<24} n={count} mean={mean:.1}"));
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,160 @@
+//! Trace sinks: where telemetry events go once serialized.
+//!
+//! Two formats share one writer:
+//!
+//! * **JSONL** (`--trace-out run.jsonl`) — one JSON object per line,
+//!   self-describing via a `kind` field.  This is the machine format:
+//!   `switchlora report` and `tools/trace_check.py` consume it.
+//! * **Chrome trace-event** (`--trace-format chrome`) — a JSON array of
+//!   `ph:"X"` duration events and `ph:"i"` instants, loadable directly
+//!   in Perfetto or `chrome://tracing`.
+//!
+//! Mid-run IO errors are swallowed (tracing must never abort a run);
+//! they surface once, from [`TraceSink::finish`]'s flush.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceFormat {
+    Jsonl,
+    Chrome,
+}
+
+impl TraceFormat {
+    pub fn parse(s: &str) -> Result<TraceFormat> {
+        Ok(match s {
+            "jsonl" => TraceFormat::Jsonl,
+            "chrome" => TraceFormat::Chrome,
+            other => bail!("--trace-format must be jsonl or chrome, \
+                            got {other:?}"),
+        })
+    }
+}
+
+pub struct TraceSink {
+    out: BufWriter<File>,
+    pub format: TraceFormat,
+    /// Trace epoch: every `ts` is microseconds since this instant.
+    pub start: Instant,
+    wrote_any: bool,
+    pub events: u64,
+}
+
+impl TraceSink {
+    pub fn open(path: &Path, format: TraceFormat) -> Result<TraceSink> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(
+                    || format!("creating trace dir {}", dir.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating trace {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        if format == TraceFormat::Chrome {
+            let _ = out.write_all(b"[\n");
+        }
+        Ok(TraceSink {
+            out,
+            format,
+            start: Instant::now(),
+            wrote_any: false,
+            events: 0,
+        })
+    }
+
+    /// Microseconds of `t` relative to the trace epoch (0 if earlier).
+    pub fn rel_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.start).as_micros() as u64
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    fn emit(&mut self, j: Json) {
+        let line = j.to_string();
+        if self.format == TraceFormat::Chrome {
+            if self.wrote_any {
+                let _ = self.out.write_all(b",\n");
+            }
+            let _ = self.out.write_all(line.as_bytes());
+        } else {
+            let _ = self.out.write_all(line.as_bytes());
+            let _ = self.out.write_all(b"\n");
+        }
+        self.wrote_any = true;
+        self.events += 1;
+    }
+
+    /// A completed duration span.
+    pub fn span(&mut self, cat: &str, name: &str, ts_us: u64, dur_us: u64,
+                tid: u64) {
+        let j = match self.format {
+            TraceFormat::Jsonl => Json::obj(vec![
+                ("kind", Json::str("span")),
+                ("cat", Json::str(cat)),
+                ("name", Json::str(name)),
+                ("ts", Json::num(ts_us as f64)),
+                ("dur", Json::num(dur_us as f64)),
+                ("tid", Json::num(tid as f64)),
+            ]),
+            TraceFormat::Chrome => Json::obj(vec![
+                ("name", Json::str(name)),
+                ("cat", Json::str(cat)),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(ts_us as f64)),
+                ("dur", Json::num(dur_us as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+            ]),
+        };
+        self.emit(j);
+    }
+
+    /// A typed instant event with free-form payload fields.  In JSONL
+    /// the fields live at the top level next to `kind`/`ts`/`tid`; in
+    /// Chrome format they become the instant's `args`.
+    pub fn event(&mut self, kind: &str, ts_us: u64, tid: u64,
+                 fields: Vec<(&str, Json)>) {
+        let j = match self.format {
+            TraceFormat::Jsonl => {
+                let mut pairs = vec![
+                    ("kind", Json::str(kind)),
+                    ("ts", Json::num(ts_us as f64)),
+                    ("tid", Json::num(tid as f64)),
+                ];
+                pairs.extend(fields);
+                Json::obj(pairs)
+            }
+            TraceFormat::Chrome => Json::obj(vec![
+                ("name", Json::str(kind)),
+                ("cat", Json::str("event")),
+                ("ph", Json::str("i")),
+                ("ts", Json::num(ts_us as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(tid as f64)),
+                ("s", Json::str("t")),
+                ("args", Json::obj(fields)),
+            ]),
+        };
+        self.emit(j);
+    }
+
+    /// Close the chrome array (if any) and flush.  The one place IO
+    /// errors are reported.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.format == TraceFormat::Chrome {
+            self.out.write_all(b"\n]\n").context("closing trace")?;
+        }
+        self.out.flush().context("flushing trace")?;
+        Ok(())
+    }
+}

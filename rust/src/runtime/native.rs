@@ -639,7 +639,12 @@ impl NativeModel {
         let scale = mc.lora_scale() as f32;
         let n = b * t;
         let layout = self.layout();
+        let sp = crate::obs::phase("forward");
         let (xf, xf_in, invf, acts) = self.forward(store, inp, b, t)?;
+        sp.done();
+        // everything from the head pass to the embedding scatter is the
+        // backward sweep; early `?` returns record the span at drop
+        let sp = crate::obs::phase("backward");
 
         let mut flat =
             vec![0.0f32; self.padded.max(layout.n_trainable)];
@@ -735,6 +740,7 @@ impl NativeModel {
                 *u += v;
             }
         }
+        sp.done();
         Ok((loss, flat, hp.correct))
     }
 

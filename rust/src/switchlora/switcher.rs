@@ -186,6 +186,10 @@ impl SwitchLora {
                          &mut self.ledger, li, &spans, i, j, self.scale,
                          step + 1 + self.n_freeze);
                 self.total_switches += 1;
+                crate::obs::switch_event(step, &li.name, "b", i, j, li.m,
+                                         self.cands[idx].pool_size(),
+                                         self.cands[idx].next_b,
+                                         step + 1 + self.n_freeze);
             }
             // --- switch A rows ---
             let na = self.sched.switch_count(step, self.rank, &mut self.rng);
@@ -196,6 +200,10 @@ impl SwitchLora {
                          &mut self.ledger, li, &spans, i, j, self.scale,
                          step + 1 + self.n_freeze);
                 self.total_switches += 1;
+                crate::obs::switch_event(step, &li.name, "a", i, j, li.n,
+                                         self.cands[idx].pool_size(),
+                                         self.cands[idx].next_a,
+                                         step + 1 + self.n_freeze);
             }
         }
     }

@@ -71,6 +71,14 @@ macro_rules! info {
 }
 
 #[macro_export]
+macro_rules! errorlog {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error,
+                                   format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
 macro_rules! warnlog {
     ($($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Warn,

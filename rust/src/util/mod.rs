@@ -23,6 +23,27 @@ pub fn human_bytes(b: u64) -> String {
     }
 }
 
+/// [`human_bytes`] for fractional byte quantities (rates like
+/// bytes/step): keeps sub-unit precision instead of truncating small
+/// rates to "0B".
+pub fn human_bytes_f64(b: f64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    if b.is_nan() || b <= 0.0 {
+        return "0B".to_string();
+    }
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 && v.fract() == 0.0 {
+        format!("{}B", v as u64)
+    } else {
+        format!("{v:.1}{}", UNITS[u])
+    }
+}
+
 /// Replace control characters with `·` so decoded model output (arbitrary
 /// bytes under a random or half-trained checkpoint) stays terminal-safe.
 pub fn printable(s: &str) -> String {
@@ -53,6 +74,16 @@ mod tests {
         assert_eq!(human_bytes(512), "512B");
         assert_eq!(human_bytes(2048), "2.0KB");
         assert_eq!(human_bytes(95_600_000), "91.2MB");
+    }
+
+    #[test]
+    fn fractional_bytes_keep_sub_unit_precision() {
+        assert_eq!(human_bytes_f64(0.0), "0B");
+        assert_eq!(human_bytes_f64(0.5), "0.5B");
+        assert_eq!(human_bytes_f64(512.0), "512B");
+        assert_eq!(human_bytes_f64(4096.0), "4.0KB");
+        assert_eq!(human_bytes_f64(2048.0 * 1024.0), "2.0MB");
+        assert_eq!(human_bytes_f64(-3.0), "0B");
     }
 
     #[test]

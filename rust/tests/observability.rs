@@ -1,0 +1,290 @@
+//! Observability-layer tests.
+//!
+//! The load-bearing one is `traced_run_is_bitwise_identical`: the
+//! telemetry subsystem's hard contract is that it never touches RNG
+//! streams or math, so a traced run must reproduce an untraced run
+//! bit for bit — losses, final weights, comm bytes.
+//!
+//! Tracing state is process-global and `cargo test` runs tests in this
+//! binary on parallel threads, so every test that enables tracing
+//! serializes on `TRACE_LOCK` (pure-helper tests don't need it).
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use switchlora::coordinator::trainer::{default_artifacts_dir, Method,
+                                       TrainConfig, Trainer};
+use switchlora::infer::{generate, GenConfig, KvCache};
+use switchlora::methods::SwitchParams;
+use switchlora::model::init::seeded_store;
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::model::packed::PackedStore;
+use switchlora::obs;
+use switchlora::obs::report;
+use switchlora::runtime::{load_infer, Engine};
+use switchlora::tensor::dtype::DType;
+use switchlora::util::json::Json;
+
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    TRACE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("switchlora_obs_{name}"))
+}
+
+fn quick_cfg(steps: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::new(
+        "tiny",
+        Method::switchlora(SwitchParams {
+            interval0: 4.0,
+            ratio: 0.5,
+            n_freeze: 2,
+        }),
+        steps,
+    );
+    cfg.workers = 2; // non-trivial ring ⇒ nonzero wire bytes
+    cfg.eval_every = 3;
+    cfg.eval_batches = 2;
+    cfg.warmup = 2;
+    cfg
+}
+
+fn run(cfg: TrainConfig)
+    -> (switchlora::coordinator::trainer::RunResult, ParamStore) {
+    let mut engine = Engine::cpu().unwrap();
+    Trainer::new(cfg).unwrap().run(&mut engine).unwrap()
+}
+
+#[test]
+fn traced_run_is_bitwise_identical() {
+    let _g = lock();
+    let (res_a, store_a) = run(quick_cfg(8));
+    let trace = tmp("bitwise.jsonl");
+    obs::enable(&trace, obs::TraceFormat::Jsonl).unwrap();
+    let (res_b, store_b) = run(quick_cfg(8));
+    obs::finish().unwrap();
+
+    assert_eq!(res_a.train_curve, res_b.train_curve,
+               "tracing changed the loss curve");
+    assert_eq!(res_a.eval_curve, res_b.eval_curve);
+    assert_eq!(res_a.comm.bytes, res_b.comm.bytes);
+    assert_eq!(res_a.comm.rounds, res_b.comm.rounds);
+    assert_eq!(res_a.counters, res_b.counters,
+               "tracing changed switch/offload counters");
+    let bits = |s: &ParamStore| -> Vec<u32> {
+        s.data.iter().map(|x| x.to_bits()).collect()
+    };
+    assert_eq!(bits(&store_a), bits(&store_b),
+               "tracing changed final weights");
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn trace_covers_phases_and_audits_switches() {
+    let _g = lock();
+    let trace = tmp("full.jsonl");
+    let ckpt = tmp("full.ckpt");
+    let mut cfg = quick_cfg(8);
+    cfg.ckpt_every = 4;
+    cfg.ckpt_path = Some(ckpt.clone());
+    obs::enable(&trace, obs::TraceFormat::Jsonl).unwrap();
+    let (res, _) = run(cfg);
+    obs::finish().unwrap();
+
+    let rep = report::summarize(&trace).unwrap();
+    // all eight trainer phases fired and aggregated
+    for ph in report::PHASES {
+        let agg = rep.spans
+                     .get(ph)
+                     .unwrap_or_else(|| panic!("phase {ph:?} missing"));
+        assert!(agg.count > 0, "phase {ph:?} has no spans");
+        assert_eq!(agg.cat, "phase");
+    }
+    // the switch audit trail matches the method's own counters
+    assert!(res.counter("switches") > 0, "run never switched");
+    assert_eq!(rep.switches, res.counter("switches"),
+               "audit events disagree with RunResult switch counter");
+    assert!(!rep.switch_by_layer.is_empty());
+    // comm reconciliation: per-round events sum to the ledger, and the
+    // run summary restates the same total
+    assert_eq!(rep.comm_round_bytes, res.comm.bytes);
+    assert_eq!(rep.comm_rounds, res.comm.rounds);
+    assert_eq!(rep.summary_comm_bytes, Some(res.comm.bytes));
+    assert_eq!(rep.summary_comm_rounds, Some(res.comm.rounds));
+    assert_eq!(rep.summary_steps, Some(8));
+    // training memory ledger present with the expected decomposition
+    let (rows, total) = rep.memory
+                           .get("train")
+                           .expect("train memory ledger missing");
+    assert_eq!(rows.iter().map(|r| r.bytes).sum::<u64>(), *total);
+    for comp in ["master", "adapter", "optimizer_moments",
+                 "candidate_pool"] {
+        assert!(rows.iter().any(|r| r.component == comp),
+                "memory ledger missing {comp:?}");
+    }
+    // render is total-consistent and mentions the cross-check
+    let text = rep.render();
+    assert!(text.contains("per-phase step profile"), "{text}");
+    assert!(text.contains("match"), "{text}");
+    assert!(!text.contains("MISMATCH"), "{text}");
+
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn jsonl_events_parse_and_roundtrip() {
+    let _g = lock();
+    let trace = tmp("schema.jsonl");
+    obs::enable(&trace, obs::TraceFormat::Jsonl).unwrap();
+    let sp = obs::span("test", "unit");
+    std::thread::sleep(std::time::Duration::from_millis(2));
+    assert!(sp.done() >= 0.001);
+    obs::event("custom", vec![
+        ("x", Json::num(3.0)),
+        ("s", Json::str("quote\"and\\slash")),
+    ]);
+    obs::hist_record("lat_us", 42.0);
+    obs::add("widgets", 7);
+    obs::gauge("level", 0.5);
+    obs::finish().unwrap();
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut kinds = Vec::new();
+    for line in text.lines() {
+        let j = Json::parse(line).expect("every line is one JSON object");
+        // schema round-trip: parse(serialize(x)) == x
+        assert_eq!(Json::parse(&j.to_string()).unwrap(), j);
+        assert!(j.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(j.get("tid").unwrap().as_f64().unwrap() >= 1.0);
+        kinds.push(j.get("kind").unwrap().as_str().unwrap().to_string());
+    }
+    for k in ["span", "custom", "counters", "gauges", "hist"] {
+        assert!(kinds.iter().any(|x| x == k), "missing kind {k:?}");
+    }
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn chrome_trace_is_a_loadable_event_array() {
+    let _g = lock();
+    let trace = tmp("chrome.json");
+    obs::enable(&trace, obs::TraceFormat::Chrome).unwrap();
+    obs::span("phase", "data").done();
+    obs::event("switch", vec![("step", Json::num(1.0))]);
+    obs::finish().unwrap();
+
+    let j = Json::parse(&std::fs::read_to_string(&trace).unwrap())
+        .expect("chrome trace must be one valid JSON document");
+    let arr = j.as_arr().unwrap();
+    assert!(arr.len() >= 3, "span + instant + counters dump expected");
+    for e in arr {
+        e.get("name").unwrap().as_str().unwrap();
+        e.get("ph").unwrap().as_str().unwrap();
+        e.get("ts").unwrap().as_f64().unwrap();
+        e.get("pid").unwrap().as_f64().unwrap();
+        e.get("tid").unwrap().as_f64().unwrap();
+    }
+    let span = arr.iter()
+                  .find(|e| e.get("ph").unwrap().as_str().unwrap() == "X")
+                  .expect("no duration event");
+    assert_eq!(span.get("name").unwrap().as_str().unwrap(), "data");
+    assert_eq!(span.get("cat").unwrap().as_str().unwrap(), "phase");
+    span.get("dur").unwrap().as_f64().unwrap();
+    let inst = arr.iter()
+                  .find(|e| {
+                      e.get("name").unwrap().as_str().unwrap() == "switch"
+                  })
+                  .expect("no instant event");
+    assert_eq!(inst.get("ph").unwrap().as_str().unwrap(), "i");
+    inst.get("args").unwrap().get("step").unwrap().as_f64().unwrap();
+    // report refuses chrome traces with a pointer, not a parse error
+    let err = report::summarize(&trace).unwrap_err().to_string();
+    assert!(err.contains("Perfetto"), "{err}");
+    std::fs::remove_file(&trace).ok();
+}
+
+#[test]
+fn memory_ledger_matches_resident_bytes_exactly() {
+    // pure helpers — no tracing, no lock
+    let man =
+        Manifest::for_spec(&default_artifacts_dir(), "tiny").unwrap();
+    let store = seeded_store(&man, Variant::Lora, 1).unwrap();
+    let p = PackedStore::quantize_base(&store, DType::I8).unwrap();
+    let rows = obs::packed_mem_rows(&p, DType::I8);
+    assert_eq!(obs::mem_total(&rows) as usize, p.resident_bytes(),
+               "serve ledger total must equal PackedStore residency");
+    let fb = rows.iter().find(|r| r.component == "frozen_base").unwrap();
+    assert_eq!(fb.bytes as usize, p.base_bytes().0);
+    assert_eq!(fb.dtype, DType::I8);
+
+    let cache = KvCache::with_dtype(2, 3, 4, 8, 16, DType::I8);
+    let row = obs::kv_mem_row(&cache);
+    assert_eq!(row.bytes as usize, cache.bytes(),
+               "kv ledger row must equal KvCache residency");
+    assert_eq!(row.dtype, DType::I8);
+}
+
+#[test]
+fn traced_generation_records_decode_spans_and_kv() {
+    let _g = lock();
+    let man =
+        Manifest::for_spec(&default_artifacts_dir(), "tiny").unwrap();
+    let store = seeded_store(&man, Variant::Lora, 7).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let rt = load_infer(&engine, man.clone(), Variant::Lora).unwrap();
+
+    let trace = tmp("gen.jsonl");
+    obs::enable(&trace, obs::TraceFormat::Jsonl).unwrap();
+    let gen = generate(rt.as_ref(), &store,
+                       &[vec![1, 2, 3], vec![4, 5]],
+                       &GenConfig::greedy(6))
+        .unwrap();
+    obs::finish().unwrap();
+    assert!(gen.decode_steps > 0);
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let (mut prefill, mut decode, mut kv) = (0u64, 0u64, 0u64);
+    let mut hist_count = 0u64;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        match j.get("kind").unwrap().as_str().unwrap() {
+            "span" => {
+                let name = j.get("name").unwrap().as_str().unwrap();
+                let cat = j.get("cat").unwrap().as_str().unwrap();
+                if cat == "infer" && name == "prefill" {
+                    prefill += 1;
+                }
+                if cat == "infer" && name == "decode" {
+                    decode += 1;
+                }
+            }
+            "kv" => {
+                kv += 1;
+                let used = j.get("used").unwrap().as_f64().unwrap();
+                let cap = j.get("capacity").unwrap().as_f64().unwrap();
+                assert!(used > 0.0 && used <= cap, "{used} vs {cap}");
+                assert!(j.get("bytes").unwrap().as_f64().unwrap() > 0.0);
+            }
+            "hist" => {
+                if j.get("name").unwrap().as_str().unwrap()
+                    == "decode.token_us"
+                {
+                    hist_count =
+                        j.get("count").unwrap().as_f64().unwrap() as u64;
+                }
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(prefill, 2, "one prefill span per prompt");
+    assert_eq!(decode as usize, gen.decode_steps);
+    assert_eq!(kv as usize, gen.decode_steps,
+               "one kv occupancy event per decode step");
+    assert_eq!(hist_count as usize, gen.decode_steps,
+               "decode latency histogram records once per decode");
+    std::fs::remove_file(&trace).ok();
+}

@@ -1,0 +1,270 @@
+#!/usr/bin/env python3
+"""Validate a switchlora telemetry trace (JSONL or Chrome trace-event).
+
+Usage:
+    trace_check.py TRACE [--format jsonl|chrome]
+                   [--require-phases] [--require-switch]
+
+With `--format` omitted the format is sniffed: a file whose first
+non-space byte is `[` is treated as a Chrome trace-event array,
+anything else as JSONL (one event object per line).
+
+JSONL schema (see `rust/src/obs/sink.rs`): every line is a JSON object
+with `kind` (str), `ts` (number >= 0, microseconds) and `tid`
+(integer >= 1).  Per-kind payloads are checked where the schema is
+load-bearing:
+
+  * span        -- name/cat strings, dur >= 0
+  * comm.round  -- bytes/elems/workers numbers, wire string
+  * switch      -- step/slot/pool_slot/len/freeze_until numbers,
+                   layer/side strings
+  * memory      -- context string, rows[] of {component,dtype,bytes},
+                   and total == sum(rows.bytes) exactly
+  * hist        -- edges strictly ascending, len(counts) == len(edges)+1,
+                   count == sum(counts)
+  * run_summary -- steps/comm_bytes/comm_rounds numbers; when
+                   comm.round events are present their byte sum must
+                   equal comm_bytes exactly (the ledger cross-check)
+
+Chrome schema: a JSON array where every event has name/ph/ts/pid/tid,
+and `ph == "X"` events also carry `dur` -- the minimum Perfetto and
+chrome://tracing need to load the file.
+
+`--require-phases` additionally fails unless all eight trainer phases
+(data forward backward allreduce optim switch eval checkpoint) appear
+as `cat == "phase"` spans; `--require-switch` fails unless at least one
+switch audit event is present.  CI runs both against a traced smoke
+train.
+
+Exit 0 with a one-line summary when the trace is valid, exit 1 with
+every violation listed otherwise.  stdlib only; no third-party imports.
+"""
+
+import json
+import sys
+
+PHASES = ("data", "forward", "backward", "allreduce", "optim", "switch",
+          "eval", "checkpoint")
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_common(ev, where, errors):
+    ts = ev.get("ts")
+    if not is_num(ts) or ts < 0:
+        errors.append(f"{where}: bad ts {ts!r}")
+    tid = ev.get("tid")
+    if not is_num(tid) or tid < 1 or int(tid) != tid:
+        errors.append(f"{where}: bad tid {tid!r}")
+
+
+def check_jsonl_event(ev, where, errors, seen):
+    kind = ev.get("kind")
+    if not isinstance(kind, str) or not kind:
+        errors.append(f"{where}: missing kind")
+        return
+    check_common(ev, where, errors)
+    if kind == "span":
+        for key in ("name", "cat"):
+            if not isinstance(ev.get(key), str):
+                errors.append(f"{where}: span missing {key}")
+        dur = ev.get("dur")
+        if not is_num(dur) or dur < 0:
+            errors.append(f"{where}: span bad dur {dur!r}")
+        if ev.get("cat") == "phase":
+            seen["phases"].add(ev.get("name"))
+    elif kind == "comm.round":
+        for key in ("bytes", "elems", "workers"):
+            if not is_num(ev.get(key)):
+                errors.append(f"{where}: comm.round bad {key}")
+        if not isinstance(ev.get("wire"), str):
+            errors.append(f"{where}: comm.round missing wire")
+        if is_num(ev.get("bytes")):
+            seen["comm_bytes"] += ev["bytes"]
+            seen["comm_rounds"] += 1
+    elif kind == "switch":
+        for key in ("step", "slot", "pool_slot", "len", "freeze_until"):
+            if not is_num(ev.get(key)):
+                errors.append(f"{where}: switch bad {key}")
+        for key in ("layer", "side"):
+            if not isinstance(ev.get(key), str):
+                errors.append(f"{where}: switch missing {key}")
+        if ev.get("side") not in ("a", "b"):
+            errors.append(f"{where}: switch side {ev.get('side')!r}")
+        seen["switches"] += 1
+    elif kind == "memory":
+        if not isinstance(ev.get("context"), str):
+            errors.append(f"{where}: memory missing context")
+        rows = ev.get("rows")
+        if not isinstance(rows, list) or not rows:
+            errors.append(f"{where}: memory rows missing/empty")
+            return
+        total = 0
+        for i, row in enumerate(rows):
+            if not isinstance(row.get("component"), str) \
+                    or not isinstance(row.get("dtype"), str) \
+                    or not is_num(row.get("bytes")):
+                errors.append(f"{where}: memory row {i} malformed")
+                return
+            total += row["bytes"]
+        if total != ev.get("total"):
+            errors.append(f"{where}: memory total {ev.get('total')!r} "
+                          f"!= sum of rows {total}")
+    elif kind == "hist":
+        edges, counts = ev.get("edges"), ev.get("counts")
+        if not isinstance(edges, list) or not isinstance(counts, list):
+            errors.append(f"{where}: hist missing edges/counts")
+            return
+        if any(b <= a for a, b in zip(edges, edges[1:])):
+            errors.append(f"{where}: hist edges not ascending")
+        if len(counts) != len(edges) + 1:
+            errors.append(f"{where}: hist has {len(counts)} counts for "
+                          f"{len(edges)} edges (want edges+1)")
+        if sum(counts) != ev.get("count"):
+            errors.append(f"{where}: hist count {ev.get('count')!r} != "
+                          f"sum(counts) {sum(counts)}")
+    elif kind == "run_summary":
+        for key in ("steps", "comm_bytes", "comm_rounds"):
+            if not is_num(ev.get(key)):
+                errors.append(f"{where}: run_summary bad {key}")
+        seen["summary"] = ev
+    # other kinds (kv, counters, gauges, custom) only need the common
+    # fields -- forward compatible by design
+
+
+def check_jsonl(text, path, errors, seen):
+    n = 0
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        where = f"{path}:{ln}"
+        try:
+            ev = json.loads(line)
+        except ValueError as e:
+            errors.append(f"{where}: not JSON ({e})")
+            continue
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: event is not an object")
+            continue
+        n += 1
+        check_jsonl_event(ev, where, errors, seen)
+    if n == 0:
+        errors.append(f"{path}: empty trace")
+    summary = seen.get("summary")
+    if summary is not None and seen["comm_rounds"] > 0:
+        if seen["comm_bytes"] != summary.get("comm_bytes"):
+            errors.append(
+                f"{path}: comm.round events sum to {seen['comm_bytes']} "
+                f"bytes but run_summary claims "
+                f"{summary.get('comm_bytes')}")
+        if seen["comm_rounds"] != summary.get("comm_rounds"):
+            errors.append(
+                f"{path}: {seen['comm_rounds']} comm.round events but "
+                f"run_summary claims {summary.get('comm_rounds')}")
+    return n
+
+
+def check_chrome(text, path, errors, seen):
+    try:
+        arr = json.loads(text)
+    except ValueError as e:
+        errors.append(f"{path}: not JSON ({e})")
+        return 0
+    if not isinstance(arr, list):
+        errors.append(f"{path}: chrome trace must be a JSON array")
+        return 0
+    if not arr:
+        errors.append(f"{path}: empty trace")
+    for i, ev in enumerate(arr):
+        where = f"{path}[{i}]"
+        if not isinstance(ev, dict):
+            errors.append(f"{where}: event is not an object")
+            continue
+        for key in ("name", "ph"):
+            if not isinstance(ev.get(key), str):
+                errors.append(f"{where}: missing {key}")
+        for key in ("ts", "pid", "tid"):
+            if not is_num(ev.get(key)):
+                errors.append(f"{where}: bad {key}")
+        if ev.get("ph") == "X":
+            if not is_num(ev.get("dur")):
+                errors.append(f"{where}: duration event without dur")
+            if ev.get("cat") == "phase":
+                seen["phases"].add(ev.get("name"))
+        if ev.get("ph") == "i" and ev.get("name") == "switch":
+            seen["switches"] += 1
+    return len(arr)
+
+
+def main(argv):
+    path = None
+    fmt = None
+    require_phases = False
+    require_switch = False
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--format":
+            fmt = argv[i + 1]
+            i += 2
+        elif a == "--require-phases":
+            require_phases = True
+            i += 1
+        elif a == "--require-switch":
+            require_switch = True
+            i += 1
+        elif path is None:
+            path = a
+            i += 1
+        else:
+            print(f"unexpected argument {a!r}", file=sys.stderr)
+            return 2
+    if path is None:
+        print(__doc__, file=sys.stderr)
+        return 2
+
+    try:
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+    except OSError as e:
+        print(f"cannot read {path}: {e}", file=sys.stderr)
+        return 1
+    if fmt is None:
+        fmt = "chrome" if text.lstrip()[:1] == "[" else "jsonl"
+
+    errors = []
+    seen = {"phases": set(), "switches": 0, "comm_bytes": 0,
+            "comm_rounds": 0, "summary": None}
+    if fmt == "jsonl":
+        n = check_jsonl(text, path, errors, seen)
+    elif fmt == "chrome":
+        n = check_chrome(text, path, errors, seen)
+    else:
+        print(f"unknown --format {fmt!r}", file=sys.stderr)
+        return 2
+
+    if require_phases:
+        missing = [p for p in PHASES if p not in seen["phases"]]
+        if missing:
+            errors.append(f"{path}: phase coverage incomplete, missing "
+                          + " ".join(missing))
+    if require_switch and seen["switches"] == 0:
+        errors.append(f"{path}: no switch audit events")
+
+    if errors:
+        for e in errors[:50]:
+            print(f"SCHEMA: {e}")
+        if len(errors) > 50:
+            print(f"... and {len(errors) - 50} more")
+        print(f"FAIL: {len(errors)} violation(s) in {path}")
+        return 1
+    print(f"OK: {path} [{fmt}] {n} events, "
+          f"{len(seen['phases'])} phase(s), {seen['switches']} "
+          f"switch event(s), {seen['comm_rounds']} comm round(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
