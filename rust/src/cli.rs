@@ -9,6 +9,10 @@ use anyhow::{anyhow, bail, Result};
 pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
+    /// every `--key value` pair in arrival order; unlike `options`
+    /// (last-wins), this keeps repeats — `serve --adapter a=.. --adapter
+    /// b=..` reads them back with [`Args::get_all`]
+    pub multi: Vec<(String, String)>,
     pub flags: Vec<String>,
 }
 
@@ -25,6 +29,8 @@ impl Args {
                 if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
                     out.options.insert(key.to_string(),
                                        toks[i + 1].clone());
+                    out.multi.push((key.to_string(),
+                                    toks[i + 1].clone()));
                     i += 2;
                 } else {
                     out.flags.push(key.to_string());
@@ -44,6 +50,15 @@ impl Args {
 
     pub fn get_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Every value given for a repeatable option, in command-line order.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.multi
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn req(&self, key: &str) -> Result<&str> {
@@ -115,6 +130,19 @@ mod tests {
         assert_eq!(a.parse_num::<f32>("lr", 0.0).unwrap(), 0.02);
         assert!(a.flag("verbose"));
         assert_eq!(a.positional, vec!["pretrain", "extra"]);
+    }
+
+    #[test]
+    fn repeated_options_keep_every_value_in_order() {
+        let a = parse("serve --adapter a=one.ckpt --max-batch 4 \
+                       --adapter b=seed:7");
+        // the map keeps last-wins semantics for single-valued options...
+        assert_eq!(a.get("adapter"), Some("b=seed:7"));
+        // ...while get_all sees every occurrence, in order
+        assert_eq!(a.get_all("adapter"),
+                   vec!["a=one.ckpt", "b=seed:7"]);
+        assert_eq!(a.get_all("max-batch"), vec!["4"]);
+        assert!(a.get_all("absent").is_empty());
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Per-request LoRA adapter overlays for multi-tenant serving.
+//!
+//! Merging (`infer::merge`) bakes one adapter into the dense base —
+//! perfect for single-tenant serving, useless when many tasks share one
+//! machine: every tenant would need its own full-size merged copy of
+//! `W`.  An [`AdapterSet`] is the other deployment shape the LoRA paper
+//! describes: the base stays frozen (and quantized — one shared
+//! `PackedStore`), and each request carries only its task's `(A, B)`
+//! factors, applied *unmerged* in the forward path as
+//! `y += scale · (x·Aᵀ)·Bᵀ` per sequence.  Task switching is then a
+//! per-request lookup instead of a weight swap, and N tenants cost
+//! `N · rank·(m+n)` floats on top of a single base copy.
+//!
+//! The overlay arithmetic in `runtime/native.rs` mirrors the stored-
+//! adapter path of `lin_fwd` operation-for-operation, so serving an
+//! adapter as an overlay over the (f32-viewed) base is bitwise
+//! identical to decoding from the LoRA-variant store it was extracted
+//! from — `rust/tests/serving.rs` pins that down.
+
+use std::collections::HashMap;
+
+use anyhow::{ensure, Result};
+
+use crate::model::layout::{Manifest, ParamStore, Variant};
+
+/// One linear's low-rank factors, shapes self-contained so overlays
+/// from manifests of any rank can ride over the same base.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    /// `[r, n]` — the down-projection applied as `x · Aᵀ`
+    pub a: Vec<f32>,
+    /// `[m, r]` — the up-projection applied as `(x·Aᵀ) · Bᵀ`
+    pub b: Vec<f32>,
+    pub r: usize,
+    /// out dim (rows of W and of B)
+    pub m: usize,
+    /// in dim (cols of W and of A)
+    pub n: usize,
+}
+
+impl LowRank {
+    pub fn bytes(&self) -> usize {
+        4 * (self.a.len() + self.b.len())
+    }
+}
+
+/// A named adapter: every adapted linear's `(A, B)` pair plus the
+/// manifest's `lora_scale`, detached from any parameter store so the
+/// serving scheduler can hold many of these next to ONE shared base.
+#[derive(Clone, Debug)]
+pub struct AdapterSet {
+    pub name: String,
+    /// the manifest's `alpha / rank` scaling, applied at overlay time
+    pub scale: f32,
+    by_linear: HashMap<String, LowRank>,
+}
+
+impl AdapterSet {
+    /// Extract the adapters of `store` (a LoRA-variant parameter store —
+    /// trained, checkpointed, or seeded).  Linears the store's layout
+    /// does not adapt (layerwise-hybrid methods) are simply absent from
+    /// the set and serve as bare base.  The base weights of `store` are
+    /// deliberately NOT captured: deployment premise is that every
+    /// adapter rides the one shared frozen base.
+    pub fn from_store(manifest: &Manifest, store: &ParamStore,
+                      name: &str) -> Result<AdapterSet> {
+        let mut by_linear = HashMap::new();
+        for li in &manifest.linears {
+            let Some((a, b)) = store.lora_pair(li) else { continue };
+            let r = store.layout.meta(&li.a)?.rows();
+            ensure!(a.len() == r * li.n && b.len() == li.m * r,
+                    "adapter {name}: {} factors disagree with manifest \
+                     dims (r={r}, m={}, n={})", li.name, li.m, li.n);
+            ensure!(a.iter().chain(b).all(|x| x.is_finite()),
+                    "adapter {name}: non-finite value in {} factors",
+                    li.name);
+            by_linear.insert(li.name.clone(), LowRank {
+                a: a.to_vec(),
+                b: b.to_vec(),
+                r,
+                m: li.m,
+                n: li.n,
+            });
+        }
+        ensure!(!by_linear.is_empty(),
+                "adapter {name}: store has no LoRA factors to extract \
+                 (wrong variant?)");
+        Ok(AdapterSet {
+            name: name.to_string(),
+            scale: manifest.config.lora_scale() as f32,
+            by_linear,
+        })
+    }
+
+    /// The factors for linear `name`, if this adapter adapts it.
+    pub fn get(&self, name: &str) -> Option<&LowRank> {
+        self.by_linear.get(name)
+    }
+
+    pub fn n_linears(&self) -> usize {
+        self.by_linear.len()
+    }
+
+    /// Resident f32 payload of this adapter's factors — the per-tenant
+    /// marginal cost the serving memory ledger reports next to the one
+    /// shared base.
+    pub fn resident_bytes(&self) -> usize {
+        self.by_linear.values().map(|lr| lr.bytes()).sum()
+    }
+}
+
+/// Seed a standalone LoRA-variant store and extract its adapters — the
+/// `name=seed:N` form of `serve --adapter`, used by smoke tests and
+/// demos that have no trained checkpoints on hand.
+pub fn seeded_adapter(manifest: &Manifest, name: &str, seed: u64)
+    -> Result<AdapterSet> {
+    let store =
+        crate::model::init::seeded_store(manifest, Variant::Lora, seed)?;
+    AdapterSet::from_store(manifest, &store, name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init::seeded_store;
+
+    #[test]
+    fn extracts_every_adapted_linear() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let store = seeded_store(&man, Variant::Lora, 3).unwrap();
+        let ad = AdapterSet::from_store(&man, &store, "t1").unwrap();
+        assert_eq!(ad.n_linears(), man.linears.len());
+        assert_eq!(ad.scale, man.config.lora_scale() as f32);
+        let mut bytes = 0usize;
+        for li in &man.linears {
+            let lr = ad.get(&li.name).expect("adapted linear present");
+            assert_eq!((lr.m, lr.n), (li.m, li.n));
+            assert_eq!(lr.a.len(), lr.r * lr.n);
+            assert_eq!(lr.b.len(), lr.m * lr.r);
+            let (a, b) = store.lora_pair(li).unwrap();
+            assert_eq!(lr.a, a);
+            assert_eq!(lr.b, b);
+            bytes += 4 * (a.len() + b.len());
+        }
+        assert_eq!(ad.resident_bytes(), bytes);
+        assert!(ad.get("l0.nonexistent").is_none());
+    }
+
+    #[test]
+    fn full_variant_store_is_rejected() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let store = seeded_store(&man, Variant::Full, 3).unwrap();
+        assert!(AdapterSet::from_store(&man, &store, "t").is_err());
+    }
+
+    #[test]
+    fn seeded_adapters_differ_by_seed() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let a = seeded_adapter(&man, "a", 7).unwrap();
+        let b = seeded_adapter(&man, "b", 9).unwrap();
+        let name = &man.linears[0].name;
+        assert_ne!(a.get(name).unwrap().a, b.get(name).unwrap().a);
+    }
+}

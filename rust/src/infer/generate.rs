@@ -14,6 +14,7 @@
 
 use anyhow::{ensure, Result};
 
+use super::adapters::AdapterSet;
 use super::sampler::Sampler;
 use crate::model::packed::ParamSource;
 use crate::runtime::InferRuntime;
@@ -73,9 +74,36 @@ pub fn generate(rt: &dyn InferRuntime, params: &dyn ParamSource,
 /// for every emitted token, in emission order (the CLI's live output).
 pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
                        prompts: &[Vec<i32>], cfg: &GenConfig,
-                       mut on_token: impl FnMut(usize, i32))
+                       on_token: impl FnMut(usize, i32))
+    -> Result<Generation> {
+    let none: Vec<Option<&AdapterSet>> = vec![None; prompts.len()];
+    generate_adapted_stream(rt, params, &none, prompts, cfg, on_token)
+}
+
+/// [`generate`] in multi-tenant shape: `params` is the ONE shared base
+/// for the whole batch and `adapters[s]` is sequence `s`'s unmerged
+/// low-rank overlay (`None` decodes the bare base).  This is the batch
+/// semantics the `serve` scheduler runs request-by-request; tests pin
+/// that a mixed-adapter batch reproduces each sequence's solo run.
+pub fn generate_adapted(rt: &dyn InferRuntime, params: &dyn ParamSource,
+                        adapters: &[Option<&AdapterSet>],
+                        prompts: &[Vec<i32>], cfg: &GenConfig)
+    -> Result<Generation> {
+    generate_adapted_stream(rt, params, adapters, prompts, cfg,
+                            |_, _| {})
+}
+
+/// [`generate_adapted`] with a streaming callback.
+pub fn generate_adapted_stream(rt: &dyn InferRuntime,
+                               params: &dyn ParamSource,
+                               adapters: &[Option<&AdapterSet>],
+                               prompts: &[Vec<i32>], cfg: &GenConfig,
+                               mut on_token: impl FnMut(usize, i32))
     -> Result<Generation> {
     ensure!(!prompts.is_empty(), "no prompts to generate from");
+    ensure!(adapters.len() == prompts.len(),
+            "one adapter slot per prompt ({} != {})", adapters.len(),
+            prompts.len());
     ensure!(prompts.iter().all(|p| !p.is_empty()),
             "every prompt needs at least one token");
     let b = prompts.len();
@@ -108,7 +136,9 @@ pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
     let mut prefill_tokens = 0usize;
     for (s, prompt) in prompts.iter().enumerate() {
         let sp = crate::obs::span("infer", "prefill");
-        let logits = rt.prefill(params, &mut cache, s, prompt)?;
+        let logits =
+            rt.prefill_adapted(params, adapters[s], &mut cache, s,
+                               prompt)?;
         sp.done();
         prefill_tokens += prompt.len();
         let tok = cfg.sampler.sample(&logits, &mut rngs[s]) as i32;
@@ -130,8 +160,11 @@ pub fn generate_stream(rt: &dyn InferRuntime, params: &dyn ParamSource,
             break;
         }
         let toks: Vec<i32> = active.iter().map(|&s| last[s]).collect();
+        let ovs: Vec<Option<&AdapterSet>> =
+            active.iter().map(|&s| adapters[s]).collect();
         let sp = crate::obs::span("infer", "decode");
-        let logits = rt.decode(params, &mut cache, &active, &toks)?;
+        let logits =
+            rt.decode_adapted(params, &ovs, &mut cache, &active, &toks)?;
         let secs = sp.done();
         decode_steps += 1;
         if crate::obs::enabled() {

@@ -118,6 +118,11 @@ pub struct KvCache {
     dtype: DType,
     /// tokens currently cached, per sequence
     lens: Vec<usize>,
+    /// slot lifecycle for continuous-batching schedulers: sequence
+    /// indices not currently owned by a live request, lowest on top.
+    /// Purely bookkeeping — batch-at-once users (`infer::generate`)
+    /// index slots directly and never touch it.
+    free: Vec<usize>,
     /// per layer: `[batch·heads, capacity, head_dim]`
     k: Vec<KvBuf>,
     v: Vec<KvBuf>,
@@ -154,6 +159,7 @@ impl KvCache {
             capacity,
             dtype,
             lens: vec![0; batch],
+            free: (0..batch).rev().collect(),
             k: (0..layers).map(|_| KvBuf::new(dtype, per_layer, rows))
                 .collect(),
             v: (0..layers).map(|_| KvBuf::new(dtype, per_layer, rows))
@@ -177,6 +183,33 @@ impl KvCache {
     /// Forget all cached positions (reuse the allocation for a new batch).
     pub fn reset(&mut self) {
         self.lens.fill(0);
+        self.free = (0..self.batch).rev().collect();
+    }
+
+    /// Claim a free sequence slot for a newly admitted request (lowest
+    /// index first), or `None` when every slot is owned.  The slot
+    /// starts at length 0 — any K/V rows a previous owner left behind
+    /// are dead, since attention only ever sweeps `0..len`.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let seq = self.free.pop()?;
+        self.lens[seq] = 0;
+        Some(seq)
+    }
+
+    /// Return a retired request's slot to the free list.  The whole
+    /// cache allocation stays put: reclaiming a slot is O(1), and a
+    /// request admitted into it decodes bitwise identically to one
+    /// admitted into a fresh cache (`rust/tests/serving.rs`).
+    pub fn release(&mut self, seq: usize) {
+        assert!(seq < self.batch, "slot {seq} out of batch {}", self.batch);
+        assert!(!self.free.contains(&seq), "double release of slot {seq}");
+        self.lens[seq] = 0;
+        self.free.push(seq);
+    }
+
+    /// Slots currently available to [`KvCache::acquire`].
+    pub fn n_free(&self) -> usize {
+        self.free.len()
     }
 
     /// Cache memory footprint in bytes (serving-capacity accounting):
@@ -383,6 +416,41 @@ mod tests {
         assert_eq!((cache.len(0), cache.len(1), cache.len(2)), (1, 0, 2));
         cache.reset();
         assert_eq!((cache.len(0), cache.len(1), cache.len(2)), (0, 0, 0));
+    }
+
+    #[test]
+    fn slot_lifecycle_acquire_release_reset() {
+        let mut c = KvCache::new(1, 3, 1, 2, 4);
+        assert_eq!(c.n_free(), 3);
+        // lowest slot first, so admission order matches sequence order
+        assert_eq!(c.acquire(), Some(0));
+        assert_eq!(c.acquire(), Some(1));
+        assert_eq!(c.acquire(), Some(2));
+        assert_eq!(c.acquire(), None);
+        let kv = vec![0.5f32; 2];
+        c.append(0, 1, &kv, &kv, 1);
+        c.bump(1, 1);
+        assert_eq!(c.len(1), 1);
+        // the retired slot comes back with length 0 and is reused
+        // before lower-numbered never-freed slots
+        c.release(1);
+        assert_eq!((c.n_free(), c.len(1)), (1, 0));
+        assert_eq!(c.acquire(), Some(1));
+        c.release(1);
+        c.release(0);
+        c.release(2);
+        c.reset();
+        assert_eq!(c.n_free(), 3);
+        assert_eq!(c.acquire(), Some(0));
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_panics() {
+        let mut c = KvCache::new(1, 2, 1, 2, 4);
+        let s = c.acquire().unwrap();
+        c.release(s);
+        c.release(s);
     }
 
     #[test]

@@ -7,20 +7,27 @@
 //!   O(context) instead of the O(context²) full re-forward.
 //! * [`merge`] — fold `W + s·B·A` adapters into dense weights (LoRA's
 //!   zero-added-latency deployment claim), with an exact unmerge.
-//! * [`sampler`] — greedy / temperature / top-k sampling, seeded.
+//! * [`adapters`] — the multi-tenant dual of `merge`: detached per-task
+//!   `(A, B)` overlays applied unmerged over ONE shared frozen base.
+//! * [`sampler`] — greedy / temperature / top-k / top-p sampling,
+//!   seeded.
 //! * [`generate`] — the batched generation loop with ragged prompts and
-//!   per-sequence stop handling.
+//!   per-sequence stop handling; `generate_adapted` takes a per-sequence
+//!   adapter overlay (the serving scheduler's entry point).
 //!
 //! The model side lives behind `runtime::InferRuntime` (implemented by
 //! the native backend); entry points are the `generate` CLI subcommand,
 //! `examples/generate.rs` and `benches/bench_infer.rs`.
 
+pub mod adapters;
 pub mod generate;
 pub mod kv_cache;
 pub mod merge;
 pub mod sampler;
 
-pub use generate::{generate, generate_stream, GenConfig, Generation};
+pub use adapters::{seeded_adapter, AdapterSet, LowRank};
+pub use generate::{generate, generate_adapted, generate_stream,
+                   GenConfig, Generation};
 pub use kv_cache::KvCache;
 pub use merge::{adapter_delta, merge_adapters, merged_full_store,
                 unmerge_adapters, MergeState};

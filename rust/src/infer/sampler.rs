@@ -1,4 +1,5 @@
-//! Token sampling: greedy argmax, temperature softmax, top-k filtering.
+//! Token sampling: greedy argmax, temperature softmax, top-k and top-p
+//! (nucleus) filtering.
 //!
 //! All stochastic choices draw from an explicit `util::rng::Rng`, so a
 //! generation run is bit-reproducible from `(seed, sampling params)` —
@@ -9,22 +10,32 @@ use crate::util::rng::Rng;
 /// Sampling policy for one decode step.
 ///
 /// * `temperature <= 0` — greedy argmax (ties break to the lowest id),
-///   `top_k` is ignored.
+///   `top_k`/`top_p` are ignored.
 /// * otherwise — softmax over `logits / temperature`, restricted to the
-///   `top_k` highest logits when `top_k > 0` (0 means no truncation).
+///   `top_k` highest logits when `top_k > 0` (0 means no truncation),
+///   then nucleus-truncated to the smallest probability-descending
+///   prefix with mass ≥ `top_p` when `top_p < 1` (1 means no
+///   truncation; both filters compose, top-k first).
 #[derive(Clone, Copy, Debug)]
 pub struct Sampler {
     pub temperature: f32,
     pub top_k: usize,
+    /// nucleus mass in `(0, 1]`; `1.0` disables the filter (values
+    /// `<= 0` are treated as disabled too, never as an empty support)
+    pub top_p: f32,
 }
 
 impl Sampler {
     pub fn greedy() -> Sampler {
-        Sampler { temperature: 0.0, top_k: 0 }
+        Sampler { temperature: 0.0, top_k: 0, top_p: 1.0 }
     }
 
     pub fn top_k(k: usize, temperature: f32) -> Sampler {
-        Sampler { temperature, top_k: k }
+        Sampler { temperature, top_k: k, top_p: 1.0 }
+    }
+
+    pub fn nucleus(p: f32, temperature: f32) -> Sampler {
+        Sampler { temperature, top_k: 0, top_p: p }
     }
 
     /// Draw one token id from a logit row.
@@ -34,7 +45,8 @@ impl Sampler {
             return argmax(logits);
         }
         let n = logits.len();
-        if self.top_k == 0 || self.top_k >= n {
+        let nucleus = self.top_p > 0.0 && self.top_p < 1.0;
+        if (self.top_k == 0 || self.top_k >= n) && !nucleus {
             // full softmax: two O(V) passes over ascending ids, no
             // sort and no candidate allocation
             let zmax = logits.iter().fold(f32::NEG_INFINITY,
@@ -57,11 +69,41 @@ impl Sampler {
         // softmax-CDF walk in canonical ascending-id order so the draw
         // does not depend on select_nth's internal ordering
         let mut idx: Vec<usize> = (0..n).collect();
-        let k = self.top_k;
-        idx.select_nth_unstable_by(k - 1, |&a, &b| {
-            logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
-        });
-        idx.truncate(k);
+        if self.top_k > 0 && self.top_k < n {
+            let k = self.top_k;
+            idx.select_nth_unstable_by(k - 1, |&a, &b| {
+                logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+            });
+            idx.truncate(k);
+        }
+        if nucleus {
+            // nucleus: order the candidates by descending probability
+            // (ties to the lowest id) and keep the smallest prefix
+            // whose softmax mass reaches top_p — at least the mode.
+            // NaN weights never reach the threshold, so a poisoned row
+            // degrades to "keep everything" instead of panicking,
+            // matching the other paths' NaN posture.
+            idx.sort_unstable_by(|&a, &b| {
+                logits[b].total_cmp(&logits[a]).then(a.cmp(&b))
+            });
+            let zmax = idx
+                .iter()
+                .fold(f32::NEG_INFINITY, |m, &i| m.max(logits[i]));
+            let inv_t = 1.0 / self.temperature;
+            let w = |i: usize| (((logits[i] - zmax) * inv_t) as f64).exp();
+            let total: f64 = idx.iter().map(|&i| w(i)).sum();
+            let target = self.top_p as f64 * total;
+            let mut acc = 0.0f64;
+            let mut keep = idx.len();
+            for (j, &i) in idx.iter().enumerate() {
+                acc += w(i);
+                if acc >= target {
+                    keep = j + 1;
+                    break;
+                }
+            }
+            idx.truncate(keep);
+        }
         idx.sort_unstable();
         let zmax = idx
             .iter()
@@ -120,7 +162,7 @@ mod tests {
     fn temperature_softmax_covers_support() {
         // at high temperature every id should eventually appear
         let logits = [0.0, 0.5, -0.5, 0.2];
-        let s = Sampler { temperature: 5.0, top_k: 0 };
+        let s = Sampler { temperature: 5.0, top_k: 0, top_p: 1.0 };
         let mut rng = Rng::new(3);
         let mut seen = [false; 4];
         for _ in 0..500 {
@@ -143,9 +185,77 @@ mod tests {
     }
 
     #[test]
+    fn top_p_one_is_bitwise_the_unfiltered_path() {
+        // the nucleus filter off (top_p = 1.0) must not change a single
+        // draw vs the pre-top-p sampler: same rng consumption, same ids
+        let logits: Vec<f32> = (0..64).map(|i| (i as f32 * 0.83).cos())
+            .collect();
+        for (k, t) in [(0usize, 1.3f32), (8, 0.7)] {
+            let base = Sampler { temperature: t, top_k: k, top_p: 1.0 };
+            let off = Sampler { temperature: t, top_k: k, top_p: 0.0 };
+            let mut r1 = Rng::new(19);
+            let mut r2 = Rng::new(19);
+            for _ in 0..100 {
+                assert_eq!(base.sample(&logits, &mut r1),
+                           off.sample(&logits, &mut r2));
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support_to_the_nucleus() {
+        // softmax([3, 2, 0, -1, -3]) ≈ [.69, .26, .035, .013, .002]:
+        // top_p = 0.9 keeps exactly {0, 1} (0.69 < 0.9 ≤ 0.95)
+        let logits = [3.0, 2.0, 0.0, -1.0, -3.0];
+        let s = Sampler::nucleus(0.9, 1.0);
+        let mut rng = Rng::new(5);
+        let mut seen = [false; 5];
+        for _ in 0..400 {
+            seen[s.sample(&logits, &mut rng)] = true;
+        }
+        assert_eq!(seen, [true, true, false, false, false],
+                   "nucleus must be exactly the top-2: {seen:?}");
+        // a tiny top_p still keeps the mode
+        let tight = Sampler::nucleus(1e-6, 1.0);
+        for _ in 0..50 {
+            assert_eq!(tight.sample(&logits, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn top_p_composes_with_top_k() {
+        // top-k=3 keeps {1, 3, 0} (logits 3, 2, 0); nucleus 0.7 then
+        // drops id 0 (mass of {1} ≈ .705 ≥ .7 of the k-candidate total)
+        let logits = [0.0, 3.0, -5.0, 2.0, -4.0];
+        let s = Sampler { temperature: 1.0, top_k: 3, top_p: 0.7 };
+        let mut rng = Rng::new(23);
+        for _ in 0..200 {
+            let t = s.sample(&logits, &mut rng);
+            assert_eq!(t, 1, "nucleus within top-k must be the mode");
+        }
+    }
+
+    #[test]
+    fn top_p_is_nan_safe_and_deterministic() {
+        let mut logits: Vec<f32> =
+            (0..16).map(|i| (i as f32 * 0.41).sin()).collect();
+        logits[3] = f32::NAN;
+        logits[11] = f32::NAN;
+        let s = Sampler::nucleus(0.5, 0.9);
+        let draw = |seed: u64| -> Vec<usize> {
+            let mut rng = Rng::new(seed);
+            (0..50).map(|_| s.sample(&logits, &mut rng)).collect()
+        };
+        for t in draw(3) {
+            assert!(t < logits.len());
+        }
+        assert_eq!(draw(3), draw(3));
+    }
+
+    #[test]
     fn low_temperature_concentrates_on_argmax() {
         let logits = [0.0, 4.0, 1.0];
-        let s = Sampler { temperature: 0.05, top_k: 0 };
+        let s = Sampler { temperature: 0.05, top_k: 0, top_p: 1.0 };
         let mut rng = Rng::new(11);
         let hits = (0..200)
             .filter(|_| s.sample(&logits, &mut rng) == 1)

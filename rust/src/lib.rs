@@ -6,9 +6,11 @@
 //! Alg. 1/2), optimizer-state resets and freezes, candidate-vector
 //! management with offload accounting, a simulated data-parallel runtime
 //! with ring all-reduce, baselines (full-rank, LoRA, ReLoRA, GaLore),
-//! evaluation, resumable checkpointing, metrics, the CLI, and an
+//! evaluation, resumable checkpointing, metrics, the CLI, an
 //! inference subsystem (`infer`): KV-cached autoregressive generation
-//! with adapter merging and batched decode.
+//! with adapter merging and batched decode, and a serving subsystem
+//! (`serve`): a continuous-batching HTTP model server that multiplexes
+//! named LoRA adapters over ONE shared (quantized) frozen base.
 //!
 //! Training methods are first-class plugins ([`methods`]): the trainer
 //! drives only the [`methods::TrainingMethod`] trait, and every method —
@@ -54,6 +56,7 @@ pub mod model;
 pub mod obs;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod switchlora;
 pub mod tensor;
 pub mod util;

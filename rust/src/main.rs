@@ -34,6 +34,15 @@
 //!            [--kv-dtype f32|bf16|int8] [--max-context N]
 //!            [--prompt "text"] [--max-new 64] [--batch 4]
 //!            [--temperature 0.8] [--top-k 40] [--stop 0,10] [--seed 42]
+//! switchlora serve --spec tiny [--ckpt ckpt.bin [--base-variant full|lora]]
+//!            [--adapter NAME=PATH | NAME=seed:N]...   # repeatable
+//!            [--host 127.0.0.1] [--port 8080] [--max-batch 4]
+//!            [--queue-depth 16] [--max-context 256] [--max-new 64]
+//!            [--quantize-base int8|bf16|f32]   # default: int8
+//!   continuous-batching HTTP server: N named LoRA adapters multiplexed
+//!   over ONE shared (int8 by default) frozen base.  POST /v1/generate
+//!   streams NDJSON tokens; GET /healthz, GET /v1/adapters, POST
+//!   /admin/drain; SIGTERM drains gracefully.
 //! switchlora report TRACE.jsonl  # summarize a --trace-out trace
 //! switchlora tables            # analytic Tables 4/5 + App. D/F
 //! switchlora info              # list specs + the method registry
@@ -65,6 +74,7 @@ use switchlora::model::init::{seeded_store, InitMode};
 use switchlora::model::layout::{Manifest, ParamStore, Variant};
 use switchlora::model::packed::{PackedStore, ParamSource};
 use switchlora::runtime::{load_infer_with, Engine};
+use switchlora::serve::{AdapterRegistry, BaseSource, ServeConfig, Server};
 use switchlora::tensor::dtype::{DType, PrecisionPolicy};
 use switchlora::util::{human_bytes, human_params, printable};
 
@@ -107,6 +117,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => cmd_eval(args),
         "rank" => cmd_rank(args),
         "generate" => cmd_generate(args),
+        "serve" => cmd_serve(args),
         "report" => cmd_report(args),
         "tables" => cmd_tables(),
         "info" => cmd_info(args),
@@ -135,7 +146,8 @@ fn cmd_report(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "switchlora — switched low-rank adaptation pre-training\n\
-subcommands: pretrain finetune eval rank generate report tables info\n\
+subcommands: pretrain finetune eval rank generate serve report tables \
+info\n\
 training methods are pluggable: `switchlora info` lists the registry,\n\
 and `pretrain --method NAME` + per-method flags select one\n\
 backend: native CPU by default (no artifacts needed); build with\n\
@@ -150,6 +162,12 @@ precision: `--precision bf16` views frozen base weights in bf16,\n\
 bf16|int8\n\
 for a quantized KV cache, --max-context N to cap cache capacity)\n\
 (default is pure f32 everywhere and bitwise-identical to older builds)\n\
+serving: `serve --adapter NAME=PATH` (repeatable; NAME=seed:N for a\n\
+seeded demo adapter) runs a continuous-batching HTTP server that\n\
+multiplexes every named LoRA adapter over ONE shared frozen base\n\
+(int8 by default) — POST /v1/generate streams NDJSON tokens with\n\
+per-request adapter/seed/temperature/top-k/top-p; 429 + Retry-After\n\
+under backpressure; SIGTERM or POST /admin/drain drains gracefully\n\
 telemetry: `--trace-out run.jsonl` on any subcommand records phase\n\
 spans, comm rounds, switch audits and memory ledgers (math untouched);\n\
 `--trace-format chrome` emits a Perfetto/chrome://tracing file, and\n\
@@ -404,6 +422,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         sampler: Sampler {
             temperature: args.parse_num("temperature", 0.0f32)?,
             top_k: args.parse_num("top-k", 0usize)?,
+            top_p: args.parse_num("top-p", 1.0f32)?,
         },
         stop_tokens,
         seed,
@@ -411,9 +430,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
     };
     switchlora::info!(
         "spec {spec} [{}]: {} sequence(s), prompt {} tokens, \
-         max-new {}, temperature {}, top-k {}",
+         max-new {}, temperature {}, top-k {}, top-p {}",
         variant.key(), batch, prompts[0].len(), cfg.max_new,
-        cfg.sampler.temperature, cfg.sampler.top_k);
+        cfg.sampler.temperature, cfg.sampler.top_k, cfg.sampler.top_p);
     // ids above 255 have no byte identity, so wide-vocab specs
     // (s1m/s4m/s8m) stream raw token ids instead of decoded text
     let as_text = mc.vocab <= 256;
@@ -494,6 +513,92 @@ fn cmd_generate(args: &Args) -> Result<()> {
         gen.prefill_tokens, gen.decode_steps, total,
         total as f64 / dt.max(1e-9));
     Ok(())
+}
+
+/// `switchlora serve` — the continuous-batching multi-tenant model
+/// server.  One shared frozen base (int8 by default — the deployment
+/// premise; `--quantize-base f32` opts out), N named adapters applied
+/// unmerged per request, NDJSON token streaming over std-only HTTP.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let spec = args.get_or("spec", "tiny");
+    let artifacts = default_artifacts_dir();
+    check_spec(&artifacts, &spec)?;
+    let manifest = Manifest::for_spec(&artifacts, &spec)?;
+    let mc = manifest.config.clone();
+    let seed = args.parse_num("seed", 42u64)?;
+    // the base is always served as the Full variant: adapters arrive
+    // per-request as overlays, never baked into the stored weights
+    let store = match args.get("ckpt") {
+        Some(ckpt) => match args.get_or("base-variant", "full").as_str() {
+            "full" => load_store(&manifest, Variant::Full, ckpt)?,
+            "lora" => {
+                // keep only the dense weights a LoRA checkpoint shares
+                // with the Full layout; its adapters are dropped, NOT
+                // merged — register them with --adapter to serve them
+                let lora = load_store(&manifest, Variant::Lora, ckpt)?;
+                let layout = std::sync::Arc::new(
+                    manifest.layout(Variant::Full)?.clone());
+                let mut full = ParamStore::zeros(layout);
+                let copied =
+                    switchlora::model::init::copy_shared(&lora,
+                                                         &mut full);
+                if copied == 0 {
+                    bail!("--base-variant lora: checkpoint shares no \
+                           tensors with the full layout");
+                }
+                switchlora::info!(
+                    "base from lora checkpoint: {copied} shared \
+                     tensors copied; adapters dropped (serve them \
+                     with --adapter NAME=<ckpt>)");
+                full
+            }
+            other => bail!("--base-variant must be full|lora, got \
+                            {other:?}"),
+        },
+        None => {
+            switchlora::info!("no --ckpt given: serving a seeded \
+                               random base (demo mode)");
+            seeded_store(&manifest, Variant::Full, seed)?
+        }
+    };
+    let mut registry = AdapterRegistry::new();
+    for aspec in args.get_all("adapter") {
+        registry.load_spec(&manifest, aspec)?;
+    }
+    if registry.is_empty() {
+        switchlora::info!("no --adapter given: serving the bare base \
+                           only");
+    }
+    // serve defaults the frozen base to int8 — pass an explicit
+    // --quantize-base f32 to serve the master-precision store
+    let mut policy = policy_from_args(args)?;
+    if args.get("quantize-base").is_none() {
+        policy.frozen_base = DType::I8;
+    }
+    let base = if policy.frozen_base != DType::F32 {
+        let p = PackedStore::quantize_base(&store, policy.frozen_base)?;
+        let (bp, bf) = p.base_bytes();
+        switchlora::info!(
+            "base weights quantized to {}: {} -> {} resident ({:.2}x)",
+            policy.frozen_base, human_bytes(bf as u64),
+            human_bytes(bp as u64), bf as f64 / (bp.max(1)) as f64);
+        BaseSource::Packed { store: p, dtype: policy.frozen_base }
+    } else {
+        BaseSource::Master(store)
+    };
+    let engine = Engine::cpu()?;
+    let rt =
+        load_infer_with(&engine, manifest.clone(), Variant::Full,
+                        policy)?;
+    let cfg = ServeConfig {
+        host: args.get_or("host", "127.0.0.1"),
+        port: args.parse_num("port", 8080u16)?,
+        max_batch: args.parse_num("max-batch", 4usize)?,
+        queue_depth: args.parse_num("queue-depth", 16usize)?,
+        max_context: args.parse_num("max-context", 256usize)?,
+        default_max_new: args.parse_num("max-new", 64usize)?,
+    };
+    Server::bind(cfg, rt, base, registry, mc.vocab)?.run()
 }
 
 fn cmd_tables() -> Result<()> {

@@ -339,10 +339,11 @@ pub fn run_summary(steps: u64, comm_bytes: u64, comm_rounds: u64,
 // ---------------------------------------------------------------------
 
 /// One memory-ledger row: a resident-byte component at its storage
-/// dtype.
+/// dtype.  `component` is an owned string so multi-tenant contexts can
+/// emit one row per named adapter (`adapter:<name>`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct MemRow {
-    pub component: &'static str,
+    pub component: String,
     pub dtype: DType,
     pub bytes: u64,
 }
@@ -359,18 +360,18 @@ pub fn mem_total(rows: &[MemRow]) -> u64 {
 pub fn train_mem_rows(total: usize, n_trainable: usize, padded: usize,
                       pool_bytes: u64) -> Vec<MemRow> {
     let mut rows = vec![
-        MemRow { component: "master",
+        MemRow { component: "master".to_string(),
                  dtype: DType::F32,
                  bytes: 4 * (total - n_trainable) as u64 },
-        MemRow { component: "adapter",
+        MemRow { component: "adapter".to_string(),
                  dtype: DType::F32,
                  bytes: 4 * n_trainable as u64 },
-        MemRow { component: "optimizer_moments",
+        MemRow { component: "optimizer_moments".to_string(),
                  dtype: DType::F32,
                  bytes: 3 * 4 * padded as u64 },
     ];
     if pool_bytes > 0 {
-        rows.push(MemRow { component: "candidate_pool",
+        rows.push(MemRow { component: "candidate_pool".to_string(),
                            dtype: DType::Bf16,
                            bytes: pool_bytes });
     }
@@ -385,10 +386,10 @@ pub fn packed_mem_rows(p: &PackedStore, base_dtype: DType) -> Vec<MemRow> {
     let (base_packed, _base_f32) = p.base_bytes();
     let rest = p.resident_bytes() - base_packed;
     vec![
-        MemRow { component: "frozen_base",
+        MemRow { component: "frozen_base".to_string(),
                  dtype: base_dtype,
                  bytes: base_packed as u64 },
-        MemRow { component: "serve_master",
+        MemRow { component: "serve_master".to_string(),
                  dtype: DType::F32,
                  bytes: rest as u64 },
     ]
@@ -396,9 +397,30 @@ pub fn packed_mem_rows(p: &PackedStore, base_dtype: DType) -> Vec<MemRow> {
 
 /// The KV-cache row; equals `KvCache::bytes()` exactly (test-pinned).
 pub fn kv_mem_row(cache: &KvCache) -> MemRow {
-    MemRow { component: "kv_cache",
+    MemRow { component: "kv_cache".to_string(),
              dtype: cache.dtype(),
              bytes: cache.bytes() as u64 }
+}
+
+/// Multi-tenant serving decomposition: the ONE shared packed base (the
+/// [`packed_mem_rows`] rows — their subtotal still equals
+/// `PackedStore::resident_bytes()` exactly), one `adapter:<name>` row
+/// per resident adapter's f32 factors (`(name, bytes)` pairs, from
+/// `AdapterSet::resident_bytes`), and the KV cache.  Adding a tenant
+/// adds one small adapter row while the base rows stay byte-identical —
+/// the zero-base-duplication claim, ledger-verified in
+/// `rust/tests/serving.rs`.
+pub fn serve_mem_rows(p: &PackedStore, base_dtype: DType,
+                      adapters: &[(String, u64)], cache: &KvCache)
+    -> Vec<MemRow> {
+    let mut rows = packed_mem_rows(p, base_dtype);
+    for (name, bytes) in adapters {
+        rows.push(MemRow { component: format!("adapter:{name}"),
+                           dtype: DType::F32,
+                           bytes: *bytes });
+    }
+    rows.push(kv_mem_row(cache));
+    rows
 }
 
 /// Emit a memory-ledger event: dtype-decomposed resident bytes for one
@@ -409,7 +431,7 @@ pub fn memory_event(context: &str, rows: &[MemRow]) {
     }
     let arr = rows.iter()
                   .map(|r| Json::obj(vec![
-                      ("component", Json::str(r.component)),
+                      ("component", Json::str(&r.component)),
                       ("dtype", Json::str(r.dtype.name())),
                       ("bytes", Json::num(r.bytes as f64)),
                   ]))

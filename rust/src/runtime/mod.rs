@@ -41,6 +41,7 @@ use anyhow::{ensure, Result};
 
 pub use native::NativeModel;
 
+use crate::infer::adapters::AdapterSet;
 use crate::infer::kv_cache::KvCache;
 use crate::model::layout::{Manifest, ParamStore, Variant};
 use crate::model::packed::ParamSource;
@@ -116,22 +117,54 @@ pub trait StepRuntime {
 /// forward; `infer::generate` drives this loop, and adapter merging
 /// (`infer::merge`) removes even the LoRA adapter arithmetic from the
 /// decode path.
-pub trait InferRuntime {
-    /// Run a prompt chunk for sequence `seq`, extending its cache.
-    /// Returns the last position's LM logits `[vocab]`.  Parameters come
-    /// through [`ParamSource`]: a master-precision `ParamStore` or a
-    /// quantized serving `PackedStore` (`--quantize-base`) — the packed
-    /// kernels dequantize base weights on load.
-    fn prefill(&self, params: &dyn ParamSource, cache: &mut KvCache,
-               seq: usize, tokens: &[i32]) -> Result<Vec<f32>>;
+///
+/// The `_adapted` entry points separate per-sequence adapter state from
+/// the shared base: `params` stays ONE `&dyn ParamSource` for the whole
+/// batch while each sequence optionally carries its own
+/// [`AdapterSet`] overlay, applied unmerged inside the forward — the
+/// multi-tenant serving contract (`serve`), where N tasks share one
+/// quantized base with zero duplication.  The adapter-less `prefill`/
+/// `decode` are provided wrappers, so single-tenant callers (and every
+/// pre-serving test and bench) are unchanged.
+///
+/// `Send + Sync` is part of the contract: a serving scheduler owns the
+/// runtime on its own thread while handler threads hold the shared
+/// queue, so the runtime must be movable across threads.
+pub trait InferRuntime: Send + Sync {
+    /// Run a prompt chunk for sequence `seq`, extending its cache,
+    /// applying `adapter`'s low-rank overlay (if any) to every adapted
+    /// linear.  Returns the last position's LM logits `[vocab]`.
+    /// Parameters come through [`ParamSource`]: a master-precision
+    /// `ParamStore` or a quantized serving `PackedStore`
+    /// (`--quantize-base`) — the packed kernels dequantize base weights
+    /// on load.
+    fn prefill_adapted(&self, params: &dyn ParamSource,
+                       adapter: Option<&AdapterSet>, cache: &mut KvCache,
+                       seq: usize, tokens: &[i32]) -> Result<Vec<f32>>;
 
     /// One KV-cached decode step over the listed sequences (`seqs`
-    /// strictly increasing, one token each).  Finished sequences are
-    /// simply left off the list — they pay no compute and their cache
-    /// rows stop growing.  Returns logits `[seqs.len(), vocab]` in list
-    /// order.
+    /// strictly increasing, one token each), each under its own adapter
+    /// overlay (`adapters[i]` pairs with `seqs[i]`; `None` decodes the
+    /// bare base).  Finished sequences are simply left off the list —
+    /// they pay no compute and their cache rows stop growing.  Returns
+    /// logits `[seqs.len(), vocab]` in list order.
+    fn decode_adapted(&self, params: &dyn ParamSource,
+                      adapters: &[Option<&AdapterSet>],
+                      cache: &mut KvCache, seqs: &[usize],
+                      tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// [`InferRuntime::prefill_adapted`] with no overlay.
+    fn prefill(&self, params: &dyn ParamSource, cache: &mut KvCache,
+               seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.prefill_adapted(params, None, cache, seq, tokens)
+    }
+
+    /// [`InferRuntime::decode_adapted`] with no overlays.
     fn decode(&self, params: &dyn ParamSource, cache: &mut KvCache,
-              seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>>;
+              seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>> {
+        let none: Vec<Option<&AdapterSet>> = vec![None; seqs.len()];
+        self.decode_adapted(params, &none, cache, seqs, tokens)
+    }
 
     /// An empty cache shaped for this model: `batch` sequences of up to
     /// `capacity` positions.

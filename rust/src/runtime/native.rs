@@ -27,6 +27,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::{InferRuntime, StepRuntime};
+use crate::infer::adapters::AdapterSet;
 use crate::infer::kv_cache::KvCache;
 use crate::kernels::{self, addmm_nn, addmm_nn_packed, addmm_nt,
                      addmm_nt_packed, addmm_tn};
@@ -540,6 +541,68 @@ impl NativeModel {
         (format!("l{li}.{}", LIN_NAMES[lin_idx]), m, n_in)
     }
 
+    /// Add `ad`'s low-rank delta for linear `name` onto the base output
+    /// `y` (`[rows, m]`, inputs `x` `[rows, n_in]`): `y += scale ·
+    /// (x·Aᵀ)·Bᵀ`.  Deliberately the SAME operation order as the
+    /// stored-adapter branch of `lin_fwd` (zero-initialized `x·Aᵀ`
+    /// buffer, zero-initialized `·Bᵀ` buffer, then one scaled
+    /// accumulation), so an overlay over the f32-viewed base is bitwise
+    /// identical to running that adapter from its LoRA-variant store —
+    /// the serving-parity invariant `rust/tests/serving.rs` pins.
+    /// An adapter that doesn't cover `name` (layerwise-hybrid sets) is
+    /// a no-op.
+    fn apply_overlay(&self, y: &mut [f32], x: &[f32], rows: usize,
+                     m: usize, n_in: usize, name: &str, ad: &AdapterSet)
+        -> Result<()> {
+        let Some(lr) = ad.get(name) else { return Ok(()) };
+        ensure!(lr.m == m && lr.n == n_in,
+                "adapter {} disagrees with {name}: overlay [{}, {}] vs \
+                 base [{m}, {n_in}]", ad.name, lr.m, lr.n);
+        let xa = linear_fwd(x, &lr.a, rows, n_in, lr.r);
+        let mut yb = vec![0.0; rows * m];
+        addmm_nt(&mut yb, &xa, &lr.b, rows, lr.r, m);
+        for (yi, bi) in y[..rows * m].iter_mut().zip(&yb) {
+            *yi += ad.scale * bi;
+        }
+        Ok(())
+    }
+
+    /// `lin_fwd` with one adapter overlay shared by every row — the
+    /// prefill shape (all rows belong to one sequence).
+    fn lin_fwd_uni(&self, src: &dyn ParamSource, li: usize,
+                   lin_idx: usize, x: &[f32], rows: usize, scale: f32,
+                   ov: Option<&AdapterSet>) -> Result<Vec<f32>> {
+        let (mut y, _) = self.lin_fwd(src, li, lin_idx, x, rows, scale)?;
+        if let Some(ad) = ov {
+            let (name, m, n_in) = self.lin_dims(li, lin_idx);
+            self.apply_overlay(&mut y, x, rows, m, n_in, &name, ad)?;
+        }
+        Ok(y)
+    }
+
+    /// `lin_fwd` with a per-row adapter overlay — the decode shape (row
+    /// `i` belongs to sequence `i` of the step's list).  The kernels
+    /// compute each output row independently of its batch company, so
+    /// row-at-a-time overlay application below is bitwise identical to
+    /// the batched `lin_fwd_uni` path a solo run takes.
+    fn lin_fwd_rows(&self, src: &dyn ParamSource, li: usize,
+                    lin_idx: usize, x: &[f32], rows: usize, scale: f32,
+                    ovs: &[Option<&AdapterSet>]) -> Result<Vec<f32>> {
+        let (mut y, _) = self.lin_fwd(src, li, lin_idx, x, rows, scale)?;
+        if ovs.iter().any(|o| o.is_some()) {
+            let (name, m, n_in) = self.lin_dims(li, lin_idx);
+            debug_assert_eq!(ovs.len(), rows);
+            for (i, ov) in ovs.iter().enumerate() {
+                if let Some(ad) = ov {
+                    self.apply_overlay(&mut y[i * m..(i + 1) * m],
+                                       &x[i * n_in..(i + 1) * n_in],
+                                       1, m, n_in, &name, ad)?;
+                }
+            }
+        }
+        Ok(y)
+    }
+
     /// Backward of block linear `lin_idx`, accumulating parameter grads
     /// into `flat` (packed trainable vector) and returning `dx`.  The
     /// base weight is consumed through the same dtype view as the
@@ -925,8 +988,12 @@ impl NativeModel {
     /// positions), so cached and full-context logits agree — the
     /// invariant `rust/tests/inference.rs` checks at every decode step.
     /// Parameters come through [`ParamSource`], so the same code serves
-    /// a master-precision `ParamStore` and a quantized `PackedStore`.
-    fn forward_cached(&self, src: &dyn ParamSource, cache: &mut KvCache,
+    /// a master-precision `ParamStore` and a quantized `PackedStore`;
+    /// `adapter` is this sequence's unmerged low-rank overlay (the
+    /// multi-tenant serving path), applied on top of whatever adapters
+    /// the store itself carries.
+    fn forward_cached(&self, src: &dyn ParamSource,
+                      adapter: Option<&AdapterSet>, cache: &mut KvCache,
                       seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         let mc = &self.manifest.config;
         let (h, nh) = (mc.hidden, mc.heads);
@@ -951,9 +1018,12 @@ impl NativeModel {
         for li in 0..mc.layers {
             let (xn1, _) = rms_norm_fwd(
                 &x, src.f32s(&format!("l{li}.attn_norm"))?, t, h);
-            let (yq, _) = self.lin_fwd(src, li, 0, &xn1, t, scale)?;
-            let (yk, _) = self.lin_fwd(src, li, 1, &xn1, t, scale)?;
-            let (yv, _) = self.lin_fwd(src, li, 2, &xn1, t, scale)?;
+            let yq = self.lin_fwd_uni(src, li, 0, &xn1, t, scale,
+                                      adapter)?;
+            let yk = self.lin_fwd_uni(src, li, 1, &xn1, t, scale,
+                                      adapter)?;
+            let yv = self.lin_fwd_uni(src, li, 2, &xn1, t, scale,
+                                      adapter)?;
             let mut q = to_heads(&yq, 1, t, nh, hd);
             let mut k = to_heads(&yk, 1, t, nh, hd);
             let v = to_heads(&yv, 1, t, nh, hd);
@@ -962,20 +1032,24 @@ impl NativeModel {
             cache.append(li, seq, &k, &v, t);
             let o = cache.attend(li, seq, &q, t);
             let o2 = from_heads(&o, 1, t, nh, hd);
-            let (yo, _) = self.lin_fwd(src, li, 3, &o2, t, scale)?;
+            let yo = self.lin_fwd_uni(src, li, 3, &o2, t, scale,
+                                      adapter)?;
             for (xi, yi) in x.iter_mut().zip(&yo) {
                 *xi += yi;
             }
             let (xn2, _) = rms_norm_fwd(
                 &x, src.f32s(&format!("l{li}.mlp_norm"))?, t, h);
-            let (gate, _) = self.lin_fwd(src, li, 4, &xn2, t, scale)?;
-            let (up, _) = self.lin_fwd(src, li, 5, &xn2, t, scale)?;
+            let gate = self.lin_fwd_uni(src, li, 4, &xn2, t, scale,
+                                        adapter)?;
+            let up = self.lin_fwd_uni(src, li, 5, &xn2, t, scale,
+                                      adapter)?;
             let act: Vec<f32> = gate
                 .iter()
                 .zip(&up)
                 .map(|(&g, &u)| silu(g) * u)
                 .collect();
-            let (ydown, _) = self.lin_fwd(src, li, 6, &act, t, scale)?;
+            let ydown = self.lin_fwd_uni(src, li, 6, &act, t, scale,
+                                         adapter)?;
             for (xi, yi) in x.iter_mut().zip(&ydown) {
                 *xi += yi;
             }
@@ -987,11 +1061,12 @@ impl NativeModel {
 }
 
 impl InferRuntime for NativeModel {
-    fn prefill(&self, src: &dyn ParamSource, cache: &mut KvCache,
-               seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+    fn prefill_adapted(&self, src: &dyn ParamSource,
+                       adapter: Option<&AdapterSet>, cache: &mut KvCache,
+                       seq: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         self.ensure_lm()?;
         let h = self.manifest.config.hidden;
-        let xf = self.forward_cached(src, cache, seq, tokens)?;
+        let xf = self.forward_cached(src, adapter, cache, seq, tokens)?;
         let v_out = self.layout().meta("lm_head")?.rows();
         let last = &xf[(tokens.len() - 1) * h..];
         Ok(linear_fwd(last, src.f32s("lm_head")?, 1, h, v_out))
@@ -1001,8 +1076,10 @@ impl InferRuntime for NativeModel {
     // per layer (batched rows=len(seqs), t=1 head-layout identity); any
     // model-definition change must land in all three, and the per-step
     // parity tests in `rust/tests/inference.rs` pin the invariant.
-    fn decode(&self, src: &dyn ParamSource, cache: &mut KvCache,
-              seqs: &[usize], tokens: &[i32]) -> Result<Vec<f32>> {
+    fn decode_adapted(&self, src: &dyn ParamSource,
+                      adapters: &[Option<&AdapterSet>],
+                      cache: &mut KvCache, seqs: &[usize],
+                      tokens: &[i32]) -> Result<Vec<f32>> {
         self.ensure_lm()?;
         let mc = &self.manifest.config;
         let (h, nh) = (mc.hidden, mc.heads);
@@ -1013,6 +1090,9 @@ impl InferRuntime for NativeModel {
         ensure!(tokens.len() == b,
                 "decode step wants one token per listed sequence \
                  ({} != {b})", tokens.len());
+        ensure!(adapters.len() == b,
+                "decode step wants one adapter slot per listed sequence \
+                 ({} != {b})", adapters.len());
         ensure!(seqs.windows(2).all(|w| w[0] < w[1]),
                 "decode sequence list must be strictly increasing");
         // per-sequence absolute positions, read before any append
@@ -1037,9 +1117,12 @@ impl InferRuntime for NativeModel {
         for li in 0..mc.layers {
             let (xn1, _) = rms_norm_fwd(
                 &x, src.f32s(&format!("l{li}.attn_norm"))?, b, h);
-            let (mut q, _) = self.lin_fwd(src, li, 0, &xn1, b, scale)?;
-            let (mut k, _) = self.lin_fwd(src, li, 1, &xn1, b, scale)?;
-            let (v, _) = self.lin_fwd(src, li, 2, &xn1, b, scale)?;
+            let mut q =
+                self.lin_fwd_rows(src, li, 0, &xn1, b, scale, adapters)?;
+            let mut k =
+                self.lin_fwd_rows(src, li, 1, &xn1, b, scale, adapters)?;
+            let v =
+                self.lin_fwd_rows(src, li, 2, &xn1, b, scale, adapters)?;
             // for t = 1 the `[1, nh·hd]` row IS the `[nh, 1, hd]` head
             // layout, so no to_heads/from_heads transposition is needed
             let mut o2 = vec![0.0f32; b * h];
@@ -1051,20 +1134,24 @@ impl InferRuntime for NativeModel {
                 let os = cache.attend(li, s, &q[row.clone()], 1);
                 o2[row].copy_from_slice(&os);
             }
-            let (yo, _) = self.lin_fwd(src, li, 3, &o2, b, scale)?;
+            let yo =
+                self.lin_fwd_rows(src, li, 3, &o2, b, scale, adapters)?;
             for (xi, yi) in x.iter_mut().zip(&yo) {
                 *xi += yi;
             }
             let (xn2, _) = rms_norm_fwd(
                 &x, src.f32s(&format!("l{li}.mlp_norm"))?, b, h);
-            let (gate, _) = self.lin_fwd(src, li, 4, &xn2, b, scale)?;
-            let (up, _) = self.lin_fwd(src, li, 5, &xn2, b, scale)?;
+            let gate =
+                self.lin_fwd_rows(src, li, 4, &xn2, b, scale, adapters)?;
+            let up =
+                self.lin_fwd_rows(src, li, 5, &xn2, b, scale, adapters)?;
             let act: Vec<f32> = gate
                 .iter()
                 .zip(&up)
                 .map(|(&g, &u)| silu(g) * u)
                 .collect();
-            let (ydown, _) = self.lin_fwd(src, li, 6, &act, b, scale)?;
+            let ydown =
+                self.lin_fwd_rows(src, li, 6, &act, b, scale, adapters)?;
             for (xi, yi) in x.iter_mut().zip(&ydown) {
                 *xi += yi;
             }

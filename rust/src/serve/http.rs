@@ -1,0 +1,258 @@
+//! Thin HTTP/1.1 framing over std I/O — just enough protocol for the
+//! serving endpoints: request-line + header parsing with a
+//! `Content-Length` body, fixed responses, and a chunked
+//! `Transfer-Encoding` writer for streaming token output.  One request
+//! per connection (`Connection: close`), generic over `Read`/`Write` so
+//! the parsers unit-test against in-memory buffers.
+
+use std::io::{BufRead, Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Cap on the request line + headers, and on a request body.  Requests
+/// here are small JSON documents; anything bigger is hostile or lost.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// name/value pairs in arrival order; names matched case-insensitively
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one request.  `Ok(None)` means the peer closed the connection
+/// cleanly before sending anything (a keep-alive probe, a port scan);
+/// malformed framing is an error the caller answers with a 400.
+pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
+    let mut line = String::new();
+    if r.read_line(&mut line).context("reading request line")? == 0 {
+        return Ok(None);
+    }
+    let mut head_bytes = line.len();
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .context("empty request line")?
+        .to_string();
+    let path = parts.next().context("request line without path")?
+        .to_string();
+    let version = parts.next().context("request line without version")?;
+    ensure!(version.starts_with("HTTP/1."),
+            "unsupported protocol version {version}");
+    let mut headers = Vec::new();
+    loop {
+        let mut hl = String::new();
+        ensure!(r.read_line(&mut hl).context("reading header")? > 0,
+                "connection closed mid-headers");
+        head_bytes += hl.len();
+        ensure!(head_bytes <= MAX_HEAD_BYTES, "request head too large");
+        let hl = hl.trim_end_matches(['\r', '\n']);
+        if hl.is_empty() {
+            break;
+        }
+        let (k, v) = hl
+            .split_once(':')
+            .with_context(|| format!("malformed header line {hl:?}"))?;
+        headers.push((k.trim().to_string(), v.trim().to_string()));
+    }
+    let len = match headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+    {
+        Some((_, v)) => v
+            .parse::<usize>()
+            .with_context(|| format!("bad Content-Length {v:?}"))?,
+        None => 0,
+    };
+    ensure!(len <= MAX_BODY_BYTES,
+            "request body of {len} bytes exceeds {MAX_BODY_BYTES}");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("reading request body")?;
+    if method == "GET" || method == "POST" || method == "HEAD" {
+        Ok(Some(Request { method, path, headers, body }))
+    } else {
+        bail!("unsupported method {method}")
+    }
+}
+
+/// Canonical reason phrase for the statuses the server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete fixed-length response (plus `extra` headers, e.g.
+/// `Retry-After` on a 429) and flush.
+pub fn respond(w: &mut impl Write, status: u16, content_type: &str,
+               body: &[u8], extra: &[(&str, &str)])
+    -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: close\r\n")?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// [`respond`] with a JSON body (newline-terminated).
+pub fn respond_json(w: &mut impl Write, status: u16,
+                    body: &crate::util::json::Json)
+    -> std::io::Result<()> {
+    let mut s = body.to_string();
+    s.push('\n');
+    respond(w, status, "application/json", s.as_bytes(), &[])
+}
+
+/// Chunked `Transfer-Encoding` writer: each [`ChunkedWriter::chunk`] is
+/// flushed immediately, so the peer sees tokens as they decode — the
+/// "streamed tokens arrive incrementally" property the serve smoke test
+/// asserts.  Call [`ChunkedWriter::finish`] to write the terminal chunk.
+pub struct ChunkedWriter<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<'a, W: Write> ChunkedWriter<'a, W> {
+    pub fn start(w: &'a mut W, status: u16, content_type: &str)
+        -> std::io::Result<ChunkedWriter<'a, W>> {
+        write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
+        write!(w, "Content-Type: {content_type}\r\n")?;
+        write!(w, "Transfer-Encoding: chunked\r\n")?;
+        write!(w, "Connection: close\r\n\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
+        if data.is_empty() {
+            // a zero-length chunk is the stream terminator; skip
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    pub fn finish(self) -> std::io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+/// Decode a chunked transfer-encoded body (the test client's half of
+/// the protocol; the server only ever writes chunks).
+pub fn decode_chunked(mut body: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let nl = body
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .context("chunk size line without CRLF")?;
+        let size_line = std::str::from_utf8(&body[..nl])
+            .context("non-UTF8 chunk size")?;
+        let size = usize::from_str_radix(
+            size_line.split(';').next().unwrap_or("").trim(), 16)
+            .with_context(|| format!("bad chunk size {size_line:?}"))?;
+        body = &body[nl + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        ensure!(body.len() >= size + 2, "truncated chunk payload");
+        out.extend_from_slice(&body[..size]);
+        ensure!(&body[size..size + 2] == b"\r\n",
+                "chunk payload without trailing CRLF");
+        body = &body[size + 2..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_request_with_body() {
+        let raw = b"POST /v1/generate HTTP/1.1\r\nHost: x\r\n\
+                    Content-Length: 4\r\nContent-Type: application/json\
+                    \r\n\r\n{\"\"}";
+        let req = read_request(&mut Cursor::new(&raw[..]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.header("HOST"), Some("x"));
+        assert_eq!(req.body, b"{\"\"}");
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_garbage_is_err() {
+        assert!(read_request(&mut Cursor::new(&b""[..]))
+            .unwrap()
+            .is_none());
+        assert!(read_request(&mut Cursor::new(&b"nonsense\r\n\r\n"[..]))
+            .is_err());
+        let huge = format!("GET / HTTP/1.1\r\nX: {}\r\n\r\n",
+                           "y".repeat(MAX_HEAD_BYTES));
+        assert!(read_request(&mut Cursor::new(huge.as_bytes())).is_err());
+        let bomb = format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+                           MAX_BODY_BYTES + 1);
+        assert!(read_request(&mut Cursor::new(bomb.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn fixed_response_roundtrip() {
+        let mut out = Vec::new();
+        respond(&mut out, 429, "application/json", b"{}",
+                &[("Retry-After", "1")])
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Retry-After: 1\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+    }
+
+    #[test]
+    fn chunked_stream_roundtrip() {
+        let mut out = Vec::new();
+        let mut cw =
+            ChunkedWriter::start(&mut out, 200, "application/x-ndjson")
+                .unwrap();
+        cw.chunk(b"{\"token\":1}\n").unwrap();
+        cw.chunk(b"").unwrap(); // no-op, must not terminate the stream
+        cw.chunk(b"{\"done\":true}\n").unwrap();
+        cw.finish().unwrap();
+        let s = String::from_utf8(out.clone()).unwrap();
+        let head_end = s.find("\r\n\r\n").unwrap() + 4;
+        assert!(s.contains("Transfer-Encoding: chunked\r\n"));
+        let body = decode_chunked(&out[head_end..]).unwrap();
+        assert_eq!(body, b"{\"token\":1}\n{\"done\":true}\n");
+    }
+}

@@ -1,0 +1,38 @@
+//! Serving subsystem: a continuous-batching model server with
+//! multi-tenant LoRA adapters over ONE shared (quantized) frozen base.
+//!
+//! This is the deployment story the LoRA line of work promises —
+//! "efficient task-switching during deployment" — made concrete: the
+//! `serve` subcommand runs a long-lived HTTP/1.1 server (std `TcpListener`
+//! only, no new dependencies) whose scheduler drives the existing
+//! KV-cached `decode` loop continuously.  Requests prefill into a free
+//! cache slot *mid-flight*, decode one token per step alongside whatever
+//! else is in the batch, stream tokens back as NDJSON chunks, and retire
+//! without stalling their peers; their slot is immediately reclaimable
+//! by the next admission ([`crate::infer::kv_cache::KvCache::acquire`]).
+//!
+//! Multi-tenancy: N named adapters (`--adapter name=path`, repeatable)
+//! are loaded once as detached [`crate::infer::AdapterSet`]s and served
+//! over a single int8 `PackedStore` base — the request picks its
+//! adapter, the forward path applies the low-rank delta per sequence
+//! (`decode_adapted`), and the memory ledger shows exactly one
+//! frozen-base copy no matter how many tenants ride it.
+//!
+//! Module map:
+//! * [`http`] — request/response framing + chunked streaming writer.
+//! * [`scheduler`] — bounded admission queue (backpressure → 429) and
+//!   the continuous-batching decode loop, one thread, owns the cache.
+//! * [`server`] — adapter registry, the accept/handler threads, routes,
+//!   SIGTERM-triggered graceful drain.
+//!
+//! Log lines go through the leveled logger (stderr); stdout emits a
+//! single machine-readable `{"serve_ready": ...}` line once the socket
+//! is bound, which is how `tools/serve_smoke.py` discovers the port.
+
+pub mod http;
+pub mod scheduler;
+pub mod server;
+
+pub use scheduler::{Admission, FinishReason, Queue, SamplingSpec,
+                    Scheduler, ServeRequest, ServeStats, TokenEvent};
+pub use server::{AdapterRegistry, BaseSource, ServeConfig, Server};

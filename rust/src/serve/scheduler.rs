@@ -1,0 +1,501 @@
+//! Continuous-batching scheduler: the server's decode engine.
+//!
+//! One scheduler thread owns the model runtime, the shared base
+//! parameters, the adapter registry and the KV cache; handler threads
+//! only touch the bounded admission [`Queue`].  Each loop iteration
+//! admits queued requests into free cache slots (prefill + first
+//! token), then advances every active sequence by one token with a
+//! single batched `decode_adapted` call — so a request joins the batch
+//! mid-flight, streams tokens over its channel as they decode, and
+//! leaves on stop/length without stalling its peers, whose cache slot
+//! the next admission reclaims.
+//!
+//! Determinism: a request's sampling stream is `Rng::new(seed).fork(0)`
+//! — the same stream a solo `generate` run at sequence index 0 uses —
+//! and the kernels compute each batch row independently, so the tokens
+//! a request receives do not depend on what else shares its batch
+//! (`rust/tests/serving.rs` pins this bitwise).
+//!
+//! Backpressure: [`Queue::push`] rejects when `--queue-depth` requests
+//! are already waiting (the handler answers 429) or once a drain has
+//! begun (503).  Graceful drain: everything already admitted or queued
+//! runs to completion; only new arrivals are refused.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::infer::adapters::AdapterSet;
+use crate::infer::kv_cache::KvCache;
+use crate::infer::sampler::Sampler;
+use crate::model::packed::ParamSource;
+use crate::obs;
+use crate::runtime::InferRuntime;
+use crate::util::rng::Rng;
+
+/// Per-request sampling parameters (the HTTP body's knobs).
+#[derive(Clone, Debug)]
+pub struct SamplingSpec {
+    pub sampler: Sampler,
+    pub seed: u64,
+    /// tokens to generate (counting a terminating stop token)
+    pub max_new: usize,
+    pub stop_tokens: Vec<i32>,
+}
+
+/// Why a request's stream ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// emitted a stop token
+    Stop,
+    /// generated `max_new` tokens
+    Length,
+    /// its KV-cache slot reached `--max-context`
+    ContextFull,
+}
+
+impl FinishReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+            FinishReason::ContextFull => "context_full",
+        }
+    }
+}
+
+/// One unit of streamed progress, sent over the request's channel to
+/// the handler thread that owns the client socket.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    Token(i32),
+    Done { finish: FinishReason, n_generated: usize },
+    Error(String),
+}
+
+/// A validated request handed from an HTTP handler to the scheduler.
+pub struct ServeRequest {
+    pub id: u64,
+    /// registry name; `None` serves the bare base
+    pub adapter: Option<String>,
+    pub prompt: Vec<i32>,
+    pub spec: SamplingSpec,
+    pub tx: Sender<TokenEvent>,
+    pub enqueued: Instant,
+}
+
+/// Admission verdict from [`Queue::push`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum Admission {
+    Queued,
+    /// queue at `--queue-depth`: answer 429 (backpressure)
+    Full,
+    /// drain in progress: answer 503
+    Draining,
+}
+
+struct QueueInner {
+    pending: VecDeque<ServeRequest>,
+    draining: bool,
+}
+
+/// Bounded MPSC admission queue between handler threads and the
+/// scheduler thread.
+pub struct Queue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+    depth: usize,
+}
+
+impl Queue {
+    pub fn new(depth: usize) -> Queue {
+        assert!(depth > 0, "queue depth must be positive");
+        Queue {
+            inner: Mutex::new(QueueInner {
+                pending: VecDeque::new(),
+                draining: false,
+            }),
+            cv: Condvar::new(),
+            depth,
+        }
+    }
+
+    /// Try to enqueue; on `Full`/`Draining` the request is dropped here
+    /// (the handler still owns the receiving end and answers the client
+    /// itself).
+    pub fn push(&self, req: ServeRequest) -> Admission {
+        let mut g = self.inner.lock().unwrap();
+        if g.draining {
+            return Admission::Draining;
+        }
+        if g.pending.len() >= self.depth {
+            return Admission::Full;
+        }
+        g.pending.push_back(req);
+        self.cv.notify_one();
+        Admission::Queued
+    }
+
+    pub fn try_pop(&self) -> Option<ServeRequest> {
+        self.inner.lock().unwrap().pending.pop_front()
+    }
+
+    /// Block up to `timeout` for a request (the scheduler's idle wait).
+    /// Returns immediately once draining with an empty queue.
+    pub fn pop_wait(&self, timeout: Duration) -> Option<ServeRequest> {
+        let g = self.inner.lock().unwrap();
+        let (mut g, _) = self
+            .cv
+            .wait_timeout_while(g, timeout, |i| {
+                i.pending.is_empty() && !i.draining
+            })
+            .unwrap();
+        g.pending.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Refuse new admissions; everything already queued still runs.
+    pub fn begin_drain(&self) {
+        self.inner.lock().unwrap().draining = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.inner.lock().unwrap().draining
+    }
+}
+
+/// Shared serving counters: atomics the handlers, the scheduler and
+/// `/healthz` all touch without locking (plus one small mutexed map for
+/// the per-adapter request counts).
+#[derive(Default)]
+pub struct ServeStats {
+    pub received: AtomicU64,
+    pub rejected: AtomicU64,
+    pub completed: AtomicU64,
+    pub cancelled: AtomicU64,
+    pub tokens_streamed: AtomicU64,
+    pub active: AtomicU64,
+    pub queued: AtomicU64,
+    per_adapter: Mutex<BTreeMap<String, u64>>,
+}
+
+impl ServeStats {
+    pub fn count_adapter(&self, name: &str) {
+        let mut g = self.per_adapter.lock().unwrap();
+        *g.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    pub fn adapter_counts(&self) -> BTreeMap<String, u64> {
+        self.per_adapter.lock().unwrap().clone()
+    }
+}
+
+/// One in-flight sequence: its cache slot, its channel back to the
+/// handler, and its private sampling stream.
+struct Active {
+    slot: usize,
+    req: ServeRequest,
+    rng: Rng,
+    last: i32,
+    n_gen: usize,
+}
+
+/// The continuous-batching loop.  Owns the KV cache; borrows the
+/// runtime, the ONE shared base `ParamSource` and the adapter registry
+/// for its lifetime — per-request state never includes parameters,
+/// which is the zero-base-duplication invariant.
+pub struct Scheduler<'a> {
+    rt: &'a dyn InferRuntime,
+    base: &'a dyn ParamSource,
+    adapters: &'a BTreeMap<String, AdapterSet>,
+    cache: KvCache,
+    active: Vec<Active>,
+}
+
+impl<'a> Scheduler<'a> {
+    /// `cache` fixes the batch ceiling (`--max-batch` slots) and the
+    /// per-sequence context capacity (`--max-context`).
+    pub fn new(rt: &'a dyn InferRuntime, base: &'a dyn ParamSource,
+               adapters: &'a BTreeMap<String, AdapterSet>, cache: KvCache)
+        -> Scheduler<'a> {
+        Scheduler { rt, base, adapters, cache, active: Vec::new() }
+    }
+
+    /// Serve until `queue` is draining and no work remains.  Everything
+    /// admitted or queued before the drain began runs to completion.
+    pub fn run(&mut self, queue: &Queue, stats: &ServeStats) {
+        loop {
+            while self.active.len() < self.cache.batch {
+                match queue.try_pop() {
+                    Some(r) => self.admit(r, stats),
+                    None => break,
+                }
+            }
+            stats.queued.store(queue.len() as u64, Ordering::Relaxed);
+            stats
+                .active
+                .store(self.active.len() as u64, Ordering::Relaxed);
+            if obs::enabled() {
+                obs::gauge("serve.queue_depth", queue.len() as f64);
+                obs::gauge("serve.active", self.active.len() as f64);
+            }
+            if self.active.is_empty() {
+                if queue.is_draining() && queue.is_empty() {
+                    break;
+                }
+                if let Some(r) =
+                    queue.pop_wait(Duration::from_millis(50))
+                {
+                    self.admit(r, stats);
+                }
+                continue;
+            }
+            self.step(stats);
+        }
+    }
+
+    /// Admit one request: claim a slot, prefill, sample + stream the
+    /// first token.  Any failure is reported on the request's channel
+    /// and never disturbs the rest of the batch.
+    fn admit(&mut self, req: ServeRequest, stats: &ServeStats) {
+        let adapter = match &req.adapter {
+            Some(name) => match self.adapters.get(name) {
+                Some(a) => Some(a),
+                None => {
+                    let _ = req.tx.send(TokenEvent::Error(format!(
+                        "unknown adapter {name:?}")));
+                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+            },
+            None => None,
+        };
+        if req.prompt.is_empty()
+            || req.prompt.len() > self.cache.capacity
+        {
+            let _ = req.tx.send(TokenEvent::Error(format!(
+                "prompt of {} tokens outside 1..={}",
+                req.prompt.len(), self.cache.capacity)));
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let Some(slot) = self.cache.acquire() else {
+            // active.len() < cache.batch implies a free slot; report
+            // rather than trusting the invariant with a panic
+            let _ = req.tx.send(TokenEvent::Error(
+                "no free cache slot".to_string()));
+            stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        let sp = obs::span("serve", "prefill");
+        let logits = match self.rt.prefill_adapted(
+            self.base, adapter, &mut self.cache, slot, &req.prompt)
+        {
+            Ok(l) => l,
+            Err(e) => {
+                self.cache.release(slot);
+                let _ =
+                    req.tx.send(TokenEvent::Error(format!("prefill: {e}")));
+                stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        sp.done();
+        if obs::enabled() {
+            obs::hist_record(
+                "serve.ttft_us",
+                1e6 * req.enqueued.elapsed().as_secs_f64());
+            obs::add("serve.prefill_tokens", req.prompt.len() as u64);
+            let tenant = req.adapter.as_deref().unwrap_or("base");
+            obs::add(&format!("serve.requests.{tenant}"), 1);
+        }
+        stats.count_adapter(req.adapter.as_deref().unwrap_or("base"));
+        // same stream as a solo `generate` run at sequence index 0, so
+        // serve output is reproducible outside the server
+        let mut rng = Rng::new(req.spec.seed).fork(0);
+        let tok = req.spec.sampler.sample(&logits, &mut rng) as i32;
+        if req.tx.send(TokenEvent::Token(tok)).is_err() {
+            // client hung up between enqueue and first token
+            self.cache.release(slot);
+            stats.cancelled.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        stats.tokens_streamed.fetch_add(1, Ordering::Relaxed);
+        obs::add("serve.tokens_streamed", 1);
+        let a = Active { slot, req, rng, last: tok, n_gen: 1 };
+        if a.req.spec.stop_tokens.contains(&tok) {
+            self.finish(a, FinishReason::Stop, stats);
+        } else if a.req.spec.max_new <= 1 {
+            self.finish(a, FinishReason::Length, stats);
+        } else {
+            // decode lists sequences in increasing slot order
+            let at = self
+                .active
+                .partition_point(|x| x.slot < a.slot);
+            self.active.insert(at, a);
+        }
+    }
+
+    /// One batched decode step over every active sequence.
+    fn step(&mut self, stats: &ServeStats) {
+        // a sequence whose slot is full cannot take another step:
+        // retire it cleanly instead of aborting the batch
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.cache.len(self.active[i].slot) >= self.cache.capacity
+            {
+                let a = self.active.remove(i);
+                self.finish(a, FinishReason::ContextFull, stats);
+            } else {
+                i += 1;
+            }
+        }
+        if self.active.is_empty() {
+            return;
+        }
+        let seqs: Vec<usize> =
+            self.active.iter().map(|a| a.slot).collect();
+        let toks: Vec<i32> = self.active.iter().map(|a| a.last).collect();
+        let ovs: Vec<Option<&AdapterSet>> = self
+            .active
+            .iter()
+            .map(|a| {
+                a.req.adapter.as_deref().and_then(|n| self.adapters.get(n))
+            })
+            .collect();
+        let sp = obs::span("serve", "decode");
+        let batch = self.active.len();
+        let logits = match self.rt.decode_adapted(
+            self.base, &ovs, &mut self.cache, &seqs, &toks)
+        {
+            Ok(l) => l,
+            Err(e) => {
+                // a failed step poisons every listed sequence: fail
+                // them all and keep serving new admissions
+                let msg = format!("decode: {e}");
+                for a in std::mem::take(&mut self.active) {
+                    self.cache.release(a.slot);
+                    let _ =
+                        a.req.tx.send(TokenEvent::Error(msg.clone()));
+                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                return;
+            }
+        };
+        let secs = sp.done();
+        if obs::enabled() {
+            obs::hist_record("serve.decode_token_us",
+                             1e6 * secs / batch as f64);
+        }
+        let v = self.rt.vocab_out();
+        let mut still = Vec::with_capacity(batch);
+        for (i, mut a) in
+            std::mem::take(&mut self.active).into_iter().enumerate()
+        {
+            let row = &logits[i * v..(i + 1) * v];
+            let tok = a.req.spec.sampler.sample(row, &mut a.rng) as i32;
+            a.last = tok;
+            a.n_gen += 1;
+            if a.req.tx.send(TokenEvent::Token(tok)).is_err() {
+                // client went away mid-stream: reclaim its slot now
+                self.cache.release(a.slot);
+                stats.cancelled.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            stats.tokens_streamed.fetch_add(1, Ordering::Relaxed);
+            obs::add("serve.tokens_streamed", 1);
+            if a.req.spec.stop_tokens.contains(&tok) {
+                self.finish(a, FinishReason::Stop, stats);
+            } else if a.n_gen >= a.req.spec.max_new {
+                self.finish(a, FinishReason::Length, stats);
+            } else {
+                still.push(a);
+            }
+        }
+        self.active = still;
+    }
+
+    fn finish(&mut self, a: Active, finish: FinishReason,
+              stats: &ServeStats) {
+        self.cache.release(a.slot);
+        let _ = a.req.tx.send(TokenEvent::Done {
+            finish,
+            n_generated: a.n_gen,
+        });
+        stats.completed.fetch_add(1, Ordering::Relaxed);
+        if obs::enabled() {
+            obs::hist_record(
+                "serve.request_us",
+                1e6 * a.req.enqueued.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn dummy_request(id: u64, tx: Sender<TokenEvent>) -> ServeRequest {
+        ServeRequest {
+            id,
+            adapter: None,
+            prompt: vec![1, 2, 3],
+            spec: SamplingSpec {
+                sampler: Sampler::greedy(),
+                seed: 1,
+                max_new: 4,
+                stop_tokens: Vec::new(),
+            },
+            tx,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn queue_backpressure_and_drain() {
+        let q = Queue::new(2);
+        let (tx, _rx) = channel();
+        assert_eq!(q.push(dummy_request(1, tx.clone())),
+                   Admission::Queued);
+        assert_eq!(q.push(dummy_request(2, tx.clone())),
+                   Admission::Queued);
+        assert_eq!(q.push(dummy_request(3, tx.clone())), Admission::Full);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop().unwrap().id, 1);
+        assert_eq!(q.push(dummy_request(4, tx.clone())),
+                   Admission::Queued);
+        q.begin_drain();
+        assert_eq!(q.push(dummy_request(5, tx.clone())),
+                   Admission::Draining);
+        // already-queued work survives the drain
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop_wait(Duration::from_millis(1)).unwrap().id, 2);
+        assert_eq!(q.try_pop().unwrap().id, 4);
+        // draining + empty: the idle wait returns immediately
+        let t0 = Instant::now();
+        assert!(q.pop_wait(Duration::from_secs(5)).is_none());
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn stats_track_per_adapter_counts() {
+        let s = ServeStats::default();
+        s.count_adapter("a");
+        s.count_adapter("b");
+        s.count_adapter("a");
+        let c = s.adapter_counts();
+        assert_eq!(c.get("a"), Some(&2));
+        assert_eq!(c.get("b"), Some(&1));
+    }
+}

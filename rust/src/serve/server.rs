@@ -1,0 +1,819 @@
+//! The server proper: adapter registry, socket accept/handler threads,
+//! HTTP routes, and SIGTERM-triggered graceful drain.
+//!
+//! Thread shape: the caller's thread becomes the scheduler (it owns the
+//! runtime, the ONE shared base and the KV cache); one accept thread
+//! hands each connection to a short-lived handler thread; handlers talk
+//! to the scheduler only through the bounded [`Queue`] and a per-request
+//! mpsc channel.  On SIGTERM/SIGINT (or `POST /admin/drain`) the accept
+//! thread begins a drain: new requests get 503, everything admitted or
+//! queued streams to completion, then the scheduler exits and
+//! [`Server::run`] returns — clean shutdown with no truncated streams.
+//!
+//! Routes:
+//! * `GET  /healthz` — liveness + queue/stream counters.
+//! * `GET  /v1/adapters` — loaded adapters with resident byte costs.
+//! * `POST /v1/generate` — body `{"prompt"|"tokens", "adapter"?,
+//!   "max_new"?, "temperature"?, "top_k"?, "top_p"?, "seed"?, "stop"?,
+//!   "stream"?}`; streams NDJSON token lines over chunked transfer
+//!   encoding (default) or returns one JSON document (`"stream":false`).
+//!   429 + `Retry-After` when the queue is full, 503 while draining.
+//! * `POST /admin/drain` — trigger the graceful drain remotely (the
+//!   portable stand-in for SIGTERM that the e2e tests use).
+
+use std::collections::BTreeMap;
+use std::io::{BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, RecvTimeoutError};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::data::tokenizer::{ByteTokenizer, Tokenizer};
+use crate::infer::adapters::{seeded_adapter, AdapterSet};
+use crate::infer::sampler::Sampler;
+use crate::model::layout::{Manifest, ParamStore, Variant};
+use crate::model::packed::{PackedStore, ParamSource};
+use crate::obs;
+use crate::runtime::InferRuntime;
+use crate::tensor::dtype::DType;
+use crate::util::human_bytes;
+use crate::util::json::Json;
+
+use super::http::{self, ChunkedWriter, Request};
+use super::scheduler::{Admission, Queue, SamplingSpec, Scheduler,
+                       ServeRequest, ServeStats, TokenEvent};
+
+/// Process-wide drain trigger.  Registered with the raw C `signal`
+/// API so no new dependency is needed: the handler only stores a
+/// relaxed atomic flag (async-signal-safe), and the accept loop polls
+/// it between non-blocking accepts.
+#[cfg(unix)]
+mod sig {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_signum: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        // returns the previous handler as a pointer-sized integer
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sig {
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        false
+    }
+}
+
+/// The ONE shared frozen base every tenant decodes against: either the
+/// master-precision store or a quantized [`PackedStore`] (the deployment
+/// default).  `PackedStore` does not record its own base dtype, so the
+/// packed form carries it for the memory ledger.
+pub enum BaseSource {
+    Master(ParamStore),
+    Packed { store: PackedStore, dtype: DType },
+}
+
+impl BaseSource {
+    pub fn as_source(&self) -> &dyn ParamSource {
+        match self {
+            BaseSource::Master(s) => s,
+            BaseSource::Packed { store, .. } => store,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            BaseSource::Master(s) => format!(
+                "f32 master store ({})",
+                human_bytes(4 * s.layout.total as u64)),
+            BaseSource::Packed { store, dtype } => format!(
+                "{dtype} packed store ({})",
+                human_bytes(store.resident_bytes() as u64)),
+        }
+    }
+}
+
+/// Named adapters loaded at startup — the serve-time tenant table.
+/// Insertion is startup-only; the serving threads share it read-only.
+#[derive(Default)]
+pub struct AdapterRegistry {
+    by_name: BTreeMap<String, AdapterSet>,
+}
+
+impl AdapterRegistry {
+    pub fn new() -> AdapterRegistry {
+        AdapterRegistry::default()
+    }
+
+    pub fn insert(&mut self, ad: AdapterSet) -> Result<()> {
+        ensure!(!self.by_name.contains_key(&ad.name),
+                "duplicate adapter name {:?}", ad.name);
+        self.by_name.insert(ad.name.clone(), ad);
+        Ok(())
+    }
+
+    /// Load one `--adapter` spec: `name=path.ckpt` restores a
+    /// LoRA-variant checkpoint and extracts its factors;
+    /// `name=seed:N` seeds a fresh adapter (smoke tests and demos with
+    /// no trained checkpoints on hand).
+    pub fn load_spec(&mut self, manifest: &Manifest, spec: &str)
+        -> Result<()> {
+        let (name, src) = spec.split_once('=').with_context(|| {
+            format!("--adapter {spec:?}: expected name=path or \
+                     name=seed:N")
+        })?;
+        ensure!(!name.is_empty()
+                    && name.chars().all(|c| {
+                        c.is_ascii_alphanumeric() || "-_.".contains(c)
+                    }),
+                "--adapter name {name:?} must be non-empty \
+                 [A-Za-z0-9._-]");
+        ensure!(name != "base",
+                "--adapter name \"base\" is reserved for the bare \
+                 frozen base");
+        let ad = match src.strip_prefix("seed:") {
+            Some(seed) => {
+                let seed: u64 = seed.parse().with_context(|| {
+                    format!("--adapter {spec:?}: bad seed {seed:?}")
+                })?;
+                seeded_adapter(manifest, name, seed)?
+            }
+            None => {
+                let layout = Arc::new(
+                    manifest.layout(Variant::Lora)?.clone());
+                let mut store = ParamStore::zeros(layout);
+                let ck = checkpoint::load(&PathBuf::from(src))?;
+                let rep = ck.restore_into(&mut store);
+                ensure!(rep.loaded > 0,
+                        "--adapter {spec:?}: checkpoint shares no \
+                         parameters with the lora layout");
+                crate::info!("adapter {name:?} from {src}: {} params \
+                              loaded, {} absent, {} shape-mismatched",
+                             rep.loaded, rep.missing, rep.mismatched);
+                AdapterSet::from_store(manifest, &store, name)?
+            }
+        };
+        self.insert(ad)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&AdapterSet> {
+        self.by_name.get(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.by_name.keys().cloned().collect()
+    }
+
+    /// The scheduler's view: name → adapter.
+    pub fn map(&self) -> &BTreeMap<String, AdapterSet> {
+        &self.by_name
+    }
+
+    /// `(name, resident f32 bytes)` per adapter — the memory ledger's
+    /// per-tenant rows.
+    pub fn ledger(&self) -> Vec<(String, u64)> {
+        self.by_name
+            .iter()
+            .map(|(n, a)| (n.clone(), a.resident_bytes() as u64))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+/// `serve` subcommand knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub host: String,
+    pub port: u16,
+    /// concurrent sequences in the decode batch (KV-cache slots)
+    pub max_batch: usize,
+    /// admission-queue bound; beyond it, requests get 429
+    pub queue_depth: usize,
+    /// per-sequence KV capacity (prompt + generated)
+    pub max_context: usize,
+    /// `max_new` when the request body leaves it unset
+    pub default_max_new: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 8080,
+            max_batch: 4,
+            queue_depth: 16,
+            max_context: 256,
+            default_max_new: 64,
+        }
+    }
+}
+
+/// State the accept/handler threads share with the scheduler thread.
+struct Shared {
+    queue: Queue,
+    stats: ServeStats,
+    /// set by `POST /admin/drain`; the accept loop turns it into a drain
+    shutdown: AtomicBool,
+    vocab: usize,
+    max_context: usize,
+    default_max_new: usize,
+    adapter_names: Vec<String>,
+    adapter_ledger: Vec<(String, u64)>,
+    next_id: AtomicU64,
+}
+
+/// A bound, not-yet-running server.  [`Server::bind`] then
+/// [`Server::run`] — split so tests (and `--port 0` callers) can read
+/// [`Server::local_addr`] before the accept loop starts.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    rt: Box<dyn InferRuntime>,
+    base: BaseSource,
+    registry: AdapterRegistry,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig, rt: Box<dyn InferRuntime>,
+                base: BaseSource, registry: AdapterRegistry,
+                vocab: usize) -> Result<Server> {
+        ensure!(cfg.max_batch >= 1, "--max-batch must be >= 1");
+        ensure!(cfg.queue_depth >= 1, "--queue-depth must be >= 1");
+        ensure!(cfg.max_context >= 2,
+                "--max-context must fit a prompt token and a generated \
+                 token");
+        ensure!(cfg.default_max_new >= 1, "--max-new must be >= 1");
+        let listener =
+            TcpListener::bind(format!("{}:{}", cfg.host, cfg.port))
+                .with_context(|| {
+                    format!("binding {}:{}", cfg.host, cfg.port)
+                })?;
+        // non-blocking accept so the loop can poll the drain flag
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            queue: Queue::new(cfg.queue_depth),
+            stats: ServeStats::default(),
+            shutdown: AtomicBool::new(false),
+            vocab,
+            max_context: cfg.max_context,
+            default_max_new: cfg.default_max_new,
+            adapter_names: registry.names(),
+            adapter_ledger: registry.ledger(),
+            next_id: AtomicU64::new(1),
+        });
+        Ok(Server { listener, shared, rt, base, registry, cfg })
+    }
+
+    /// The bound address (resolves `--port 0` to the kernel's pick).
+    pub fn local_addr(&self) -> Result<std::net::SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Serve until drained: SIGTERM/SIGINT or `POST /admin/drain` stops
+    /// admissions, in-flight work completes, then this returns.
+    pub fn run(self) -> Result<()> {
+        sig::install();
+        let Server { listener, shared, rt, base, registry, cfg } = self;
+        let addr = listener.local_addr()?;
+        crate::info!(
+            "serving on http://{addr} — base: {}; {} adapter(s): [{}]; \
+             max-batch {}, queue-depth {}, max-context {}",
+            base.describe(), registry.len(),
+            shared.adapter_names.join(", "), cfg.max_batch,
+            cfg.queue_depth, cfg.max_context);
+        // the ONE machine-readable stdout line: how tools/serve_smoke.py
+        // discovers a --port 0 server's actual port
+        let ready = Json::obj(vec![(
+            "serve_ready",
+            Json::obj(vec![
+                ("host", Json::str(&addr.ip().to_string())),
+                ("port", Json::num(addr.port() as f64)),
+            ]),
+        )])
+        .to_string();
+        println!("{ready}");
+        let _ = std::io::stdout().flush();
+        let accept_shared = Arc::clone(&shared);
+        let accept = thread::spawn(move || {
+            let mut handlers: Vec<thread::JoinHandle<()>> = Vec::new();
+            loop {
+                if sig::triggered()
+                    || accept_shared.shutdown.load(Ordering::SeqCst)
+                {
+                    accept_shared.queue.begin_drain();
+                    break;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let s = Arc::clone(&accept_shared);
+                        handlers.push(thread::spawn(move || {
+                            handle(stream, &s)
+                        }));
+                        if handlers.len() >= 64 {
+                            handlers.retain(|h| !h.is_finished());
+                        }
+                    }
+                    Err(e)
+                        if e.kind()
+                            == std::io::ErrorKind::WouldBlock =>
+                    {
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        crate::warnlog!("accept: {e}");
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+            handlers
+        });
+        let cache = rt.new_cache(cfg.max_batch, cfg.max_context);
+        if let BaseSource::Packed { store, dtype } = &base {
+            // the zero-base-duplication ledger: one frozen-base copy no
+            // matter how many tenants; totals equal resident_bytes()
+            // exactly (test-pinned in rust/tests/serving.rs)
+            let rows = obs::serve_mem_rows(store, *dtype,
+                                           &shared.adapter_ledger,
+                                           &cache);
+            obs::memory_event("serve", &rows);
+            for r in &rows {
+                crate::info!("  mem {:<20} {:>5} {:>10}", r.component,
+                             r.dtype.name(), human_bytes(r.bytes));
+            }
+            crate::info!("  mem {:<20} {:>5} {:>10}", "total", "",
+                         human_bytes(obs::mem_total(&rows)));
+        }
+        Scheduler::new(rt.as_ref(), base.as_source(), registry.map(),
+                       cache)
+            .run(&shared.queue, &shared.stats);
+        // scheduler exited: drain is complete; reap the I/O threads
+        let handlers = accept
+            .join()
+            .unwrap_or_default();
+        for h in handlers {
+            let _ = h.join();
+        }
+        let s = &shared.stats;
+        let per: Vec<String> = s
+            .adapter_counts()
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        crate::info!(
+            "drained: {} received, {} completed, {} rejected, {} \
+             cancelled, {} tokens streamed{}",
+            s.received.load(Ordering::Relaxed),
+            s.completed.load(Ordering::Relaxed),
+            s.rejected.load(Ordering::Relaxed),
+            s.cancelled.load(Ordering::Relaxed),
+            s.tokens_streamed.load(Ordering::Relaxed),
+            if per.is_empty() {
+                String::new()
+            } else {
+                format!("; requests by tenant: {}", per.join("  "))
+            });
+        Ok(())
+    }
+}
+
+/// One connection, one request (`Connection: close`).
+fn handle(stream: TcpStream, shared: &Arc<Shared>) {
+    if let Err(e) = try_handle(stream, shared) {
+        crate::debuglog!("handler: {e:#}");
+    }
+}
+
+fn try_handle(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
+    // the listener is non-blocking; its accepted sockets must not be
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut w = stream;
+    let req = match http::read_request(&mut reader) {
+        Ok(Some(r)) => r,
+        Ok(None) => return Ok(()), // clean close before any bytes
+        Err(e) => {
+            let body = Json::obj(vec![(
+                "error", Json::str(&format!("{e:#}")))]);
+            http::respond_json(&mut w, 400, &body)?;
+            return Ok(());
+        }
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(&mut w, shared),
+        ("GET", "/v1/adapters") => adapters_route(&mut w, shared),
+        ("POST", "/admin/drain") => {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            let body = Json::obj(vec![("draining", Json::Bool(true))]);
+            http::respond_json(&mut w, 200, &body)?;
+            Ok(())
+        }
+        ("POST", "/v1/generate") => generate_route(&mut w, &req, shared),
+        _ => {
+            let body = Json::obj(vec![(
+                "error",
+                Json::str(&format!("no route {} {}", req.method,
+                                   req.path)))]);
+            http::respond_json(&mut w, 404, &body)?;
+            Ok(())
+        }
+    }
+}
+
+fn healthz(w: &mut TcpStream, shared: &Arc<Shared>) -> Result<()> {
+    let s = &shared.stats;
+    let body = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("draining", Json::Bool(shared.queue.is_draining())),
+        ("active", Json::num(s.active.load(Ordering::Relaxed) as f64)),
+        ("queued", Json::num(shared.queue.len() as f64)),
+        ("received",
+         Json::num(s.received.load(Ordering::Relaxed) as f64)),
+        ("completed",
+         Json::num(s.completed.load(Ordering::Relaxed) as f64)),
+        ("rejected",
+         Json::num(s.rejected.load(Ordering::Relaxed) as f64)),
+        ("tokens_streamed",
+         Json::num(s.tokens_streamed.load(Ordering::Relaxed) as f64)),
+        ("adapters",
+         Json::Arr(shared
+             .adapter_names
+             .iter()
+             .map(|n| Json::str(n))
+             .collect())),
+    ]);
+    http::respond_json(w, 200, &body)?;
+    Ok(())
+}
+
+fn adapters_route(w: &mut TcpStream, shared: &Arc<Shared>) -> Result<()> {
+    let arr = shared
+        .adapter_ledger
+        .iter()
+        .map(|(n, b)| Json::obj(vec![
+            ("name", Json::str(n)),
+            ("resident_bytes", Json::num(*b as f64)),
+        ]))
+        .collect();
+    http::respond_json(w, 200, &Json::Arr(arr))?;
+    Ok(())
+}
+
+/// A parsed + validated `/v1/generate` body.
+struct GenRequest {
+    adapter: Option<String>,
+    prompt: Vec<i32>,
+    spec: SamplingSpec,
+    stream: bool,
+}
+
+fn parse_generate(body: &[u8], shared: &Shared) -> Result<GenRequest> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let j = Json::parse(if text.trim().is_empty() { "{}" } else { text })
+        .context("body is not JSON")?;
+    let prompt: Vec<i32> = if let Some(t) = j.opt("tokens") {
+        t.as_arr()
+            .context("\"tokens\"")?
+            .iter()
+            .map(|x| {
+                let v = x.as_usize().context("\"tokens\" entry")?;
+                ensure!(v < shared.vocab,
+                        "token {v} outside vocab {}", shared.vocab);
+                Ok(v as i32)
+            })
+            .collect::<Result<_>>()?
+    } else if let Some(p) = j.opt("prompt") {
+        ByteTokenizer::new(shared.vocab)
+            .encode(p.as_str().context("\"prompt\"")?)
+    } else {
+        bail!("body needs \"prompt\" (string) or \"tokens\" (int array)")
+    };
+    ensure!(!prompt.is_empty(), "prompt encodes to zero tokens");
+    ensure!(prompt.len() <= shared.max_context,
+            "prompt of {} tokens exceeds --max-context {}", prompt.len(),
+            shared.max_context);
+    let adapter = match j.opt("adapter") {
+        Some(Json::Null) | None => None,
+        Some(a) => {
+            let name = a.as_str().context("\"adapter\"")?;
+            ensure!(shared.adapter_names.iter().any(|n| n == name),
+                    "unknown adapter {name:?} (loaded: {})",
+                    shared.adapter_names.join(", "));
+            Some(name.to_string())
+        }
+    };
+    let max_new = match j.opt("max_new") {
+        Some(v) => v.as_usize().context("\"max_new\"")?,
+        None => shared.default_max_new,
+    };
+    ensure!(max_new >= 1, "max_new must be >= 1");
+    let temperature = match j.opt("temperature") {
+        Some(v) => v.as_f64().context("\"temperature\"")? as f32,
+        None => 0.0,
+    };
+    ensure!(temperature.is_finite() && temperature >= 0.0,
+            "temperature must be finite and >= 0");
+    let top_k = match j.opt("top_k") {
+        Some(v) => v.as_usize().context("\"top_k\"")?,
+        None => 0,
+    };
+    let top_p = match j.opt("top_p") {
+        Some(v) => v.as_f64().context("\"top_p\"")? as f32,
+        None => 1.0,
+    };
+    ensure!(top_p > 0.0 && top_p <= 1.0,
+            "top_p must be in (0, 1] (1 disables nucleus filtering)");
+    let seed = match j.opt("seed") {
+        Some(v) => v.as_f64().context("\"seed\"")? as u64,
+        None => 42,
+    };
+    let stop_tokens: Vec<i32> = match j.opt("stop") {
+        Some(v) => v
+            .as_arr()
+            .context("\"stop\"")?
+            .iter()
+            .map(|x| Ok(x.as_usize().context("\"stop\" entry")? as i32))
+            .collect::<Result<_>>()?,
+        None => Vec::new(),
+    };
+    let stream = match j.opt("stream") {
+        Some(v) => v.as_bool().context("\"stream\"")?,
+        None => true,
+    };
+    Ok(GenRequest {
+        adapter,
+        prompt,
+        spec: SamplingSpec {
+            sampler: Sampler { temperature, top_k, top_p },
+            seed,
+            max_new,
+            stop_tokens,
+        },
+        stream,
+    })
+}
+
+/// Ceiling on waiting for the scheduler to produce the next event —
+/// far beyond any real decode step; hitting it means the scheduler
+/// thread is gone.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(300);
+
+fn generate_route(w: &mut TcpStream, req: &Request,
+                  shared: &Arc<Shared>) -> Result<()> {
+    let gr = match parse_generate(&req.body, shared) {
+        Ok(g) => g,
+        Err(e) => {
+            let body = Json::obj(vec![(
+                "error", Json::str(&format!("{e:#}")))]);
+            http::respond_json(w, 400, &body)?;
+            return Ok(());
+        }
+    };
+    shared.stats.received.fetch_add(1, Ordering::Relaxed);
+    let (tx, rx) = channel();
+    let sreq = ServeRequest {
+        id: shared.next_id.fetch_add(1, Ordering::Relaxed),
+        adapter: gr.adapter,
+        prompt: gr.prompt,
+        spec: gr.spec,
+        tx,
+        enqueued: Instant::now(),
+    };
+    match shared.queue.push(sreq) {
+        Admission::Full => {
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            obs::add("serve.http_429", 1);
+            let mut body = Json::obj(vec![(
+                "error",
+                Json::str("admission queue full, retry later"))])
+                .to_string();
+            body.push('\n');
+            http::respond(w, 429, "application/json", body.as_bytes(),
+                          &[("Retry-After", "1")])?;
+            return Ok(());
+        }
+        Admission::Draining => {
+            shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj(vec![(
+                "error", Json::str("server is draining"))]);
+            http::respond_json(w, 503, &body)?;
+            return Ok(());
+        }
+        Admission::Queued => {}
+    }
+    let tok = ByteTokenizer::new(shared.vocab);
+    let mut toks: Vec<i32> = Vec::new();
+    if gr.stream {
+        // NDJSON over chunked transfer encoding: one line per token,
+        // flushed as it decodes, then a final summary line
+        let mut cw =
+            ChunkedWriter::start(w, 200, "application/x-ndjson")?;
+        loop {
+            match rx.recv_timeout(EVENT_TIMEOUT) {
+                Ok(TokenEvent::Token(t)) => {
+                    toks.push(t);
+                    let mut line = Json::obj(vec![
+                        ("token", Json::num(t as f64)),
+                        ("index", Json::num((toks.len() - 1) as f64)),
+                    ])
+                    .to_string();
+                    line.push('\n');
+                    if cw.chunk(line.as_bytes()).is_err() {
+                        // client went away; the scheduler notices on
+                        // its next send and reclaims the slot
+                        return Ok(());
+                    }
+                }
+                Ok(TokenEvent::Done { finish, n_generated }) => {
+                    let mut line = Json::obj(vec![
+                        ("done", Json::Bool(true)),
+                        ("finish", Json::str(finish.as_str())),
+                        ("n_generated",
+                         Json::num(n_generated as f64)),
+                        ("text", Json::str(&tok.decode(&toks))),
+                    ])
+                    .to_string();
+                    line.push('\n');
+                    let _ = cw.chunk(line.as_bytes());
+                    let _ = cw.finish();
+                    return Ok(());
+                }
+                Ok(TokenEvent::Error(e)) => {
+                    let mut line = Json::obj(vec![(
+                        "error", Json::str(&e))])
+                        .to_string();
+                    line.push('\n');
+                    let _ = cw.chunk(line.as_bytes());
+                    let _ = cw.finish();
+                    return Ok(());
+                }
+                Err(RecvTimeoutError::Timeout)
+                | Err(RecvTimeoutError::Disconnected) => {
+                    let _ = cw.chunk(
+                        b"{\"error\":\"generation stream closed\"}\n");
+                    let _ = cw.finish();
+                    return Ok(());
+                }
+            }
+        }
+    }
+    // non-streaming: collect everything, answer with one document
+    loop {
+        match rx.recv_timeout(EVENT_TIMEOUT) {
+            Ok(TokenEvent::Token(t)) => toks.push(t),
+            Ok(TokenEvent::Done { finish, n_generated }) => {
+                let body = Json::obj(vec![
+                    ("tokens",
+                     Json::Arr(toks
+                         .iter()
+                         .map(|&t| Json::num(t as f64))
+                         .collect())),
+                    ("text", Json::str(&tok.decode(&toks))),
+                    ("finish", Json::str(finish.as_str())),
+                    ("n_generated", Json::num(n_generated as f64)),
+                ]);
+                http::respond_json(w, 200, &body)?;
+                return Ok(());
+            }
+            Ok(TokenEvent::Error(e)) => {
+                let body =
+                    Json::obj(vec![("error", Json::str(&e))]);
+                http::respond_json(w, 500, &body)?;
+                return Ok(());
+            }
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => {
+                let body = Json::obj(vec![(
+                    "error",
+                    Json::str("generation stream closed"))]);
+                http::respond_json(w, 500, &body)?;
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_shared() -> Shared {
+        Shared {
+            queue: Queue::new(4),
+            stats: ServeStats::default(),
+            shutdown: AtomicBool::new(false),
+            vocab: 256,
+            max_context: 32,
+            default_max_new: 8,
+            adapter_names: vec!["a".to_string(), "b".to_string()],
+            adapter_ledger: vec![("a".to_string(), 100),
+                                 ("b".to_string(), 100)],
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    #[test]
+    fn registry_loads_seeded_specs_and_rejects_duplicates() {
+        let man = Manifest::builtin("tiny").unwrap();
+        let mut reg = AdapterRegistry::new();
+        reg.load_spec(&man, "t1=seed:7").unwrap();
+        reg.load_spec(&man, "t2=seed:9").unwrap();
+        assert_eq!(reg.names(), vec!["t1", "t2"]);
+        assert!(reg.load_spec(&man, "t1=seed:11").is_err());
+        assert!(reg.load_spec(&man, "no-equals-sign").is_err());
+        assert!(reg.load_spec(&man, "base=seed:1").is_err());
+        assert!(reg.load_spec(&man, "bad name=seed:1").is_err());
+        assert!(reg.load_spec(&man, "t3=seed:notanumber").is_err());
+        let ledger = reg.ledger();
+        assert_eq!(ledger.len(), 2);
+        assert_eq!(ledger[0].1,
+                   reg.get("t1").unwrap().resident_bytes() as u64);
+    }
+
+    #[test]
+    fn generate_body_defaults_and_validation() {
+        let sh = test_shared();
+        let g = parse_generate(br#"{"prompt":"hi","adapter":"a"}"#, &sh)
+            .unwrap();
+        assert_eq!(g.prompt, vec![104, 105]);
+        assert_eq!(g.adapter.as_deref(), Some("a"));
+        assert_eq!(g.spec.max_new, 8);
+        assert_eq!(g.spec.seed, 42);
+        assert_eq!(g.spec.sampler.top_k, 0);
+        assert_eq!(g.spec.sampler.top_p, 1.0);
+        assert!(g.stream);
+
+        let g = parse_generate(
+            br#"{"tokens":[1,2,3],"max_new":2,"temperature":0.5,
+                 "top_k":5,"top_p":0.9,"seed":7,"stop":[0],
+                 "stream":false}"#,
+            &sh)
+            .unwrap();
+        assert_eq!(g.prompt, vec![1, 2, 3]);
+        assert!(g.adapter.is_none());
+        assert_eq!(g.spec.max_new, 2);
+        assert_eq!(g.spec.sampler.top_k, 5);
+        assert_eq!(g.spec.sampler.top_p, 0.9);
+        assert_eq!(g.spec.stop_tokens, vec![0]);
+        assert!(!g.stream);
+
+        assert!(parse_generate(b"{}", &sh).is_err()); // no prompt
+        assert!(parse_generate(b"not json", &sh).is_err());
+        assert!(parse_generate(br#"{"prompt":""}"#, &sh).is_err());
+        assert!(parse_generate(br#"{"prompt":"x","adapter":"nope"}"#,
+                               &sh)
+            .is_err());
+        assert!(parse_generate(br#"{"tokens":[999]}"#, &sh).is_err());
+        assert!(parse_generate(br#"{"prompt":"x","max_new":0}"#, &sh)
+            .is_err());
+        assert!(parse_generate(br#"{"prompt":"x","top_p":0}"#, &sh)
+            .is_err());
+        // a prompt longer than --max-context is refused up front
+        let long = format!(r#"{{"prompt":"{}"}}"#, "y".repeat(33));
+        assert!(parse_generate(long.as_bytes(), &sh).is_err());
+    }
+
+    #[test]
+    fn serve_config_defaults_are_sane() {
+        let c = ServeConfig::default();
+        assert_eq!(c.port, 8080);
+        assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
+    }
+}

@@ -239,7 +239,7 @@ fn same_seed_same_stream_across_runs() {
     let prompts = vec![rand_prompt(man.config.vocab, 5, 51)];
     let cfg = GenConfig {
         max_new: 32,
-        sampler: Sampler { temperature: 1.0, top_k: 0 },
+        sampler: Sampler { temperature: 1.0, top_k: 0, top_p: 1.0 },
         stop_tokens: Vec::new(),
         seed: 99,
         max_context: None,

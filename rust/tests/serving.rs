@@ -1,0 +1,448 @@
+//! Integration tests of the serving subsystem (ISSUE 8 acceptance):
+//!
+//! * the unmerged per-sequence adapter overlay is BITWISE identical to
+//!   decoding from the LoRA-variant store it was extracted from;
+//! * a mixed-adapter continuous batch (two tenants + the bare base)
+//!   reproduces, per sequence, exactly the tokens of a solo run with
+//!   that adapter merged into the dense weights;
+//! * a reclaimed KV-cache slot decodes bitwise identically to a fresh
+//!   cache (free-slot list, satellite of the continuous batcher);
+//! * the serve memory ledger's total equals `resident_bytes()` exactly,
+//!   and adding a tenant leaves every frozen-base row byte-identical —
+//!   the zero-base-duplication claim;
+//! * the scheduler serves queued requests token-identically to solo
+//!   `generate_adapted` runs (same seed convention), through mid-flight
+//!   admission and slot reuse;
+//! * the HTTP server streams those tokens over chunked NDJSON and
+//!   drains cleanly on `POST /admin/drain`.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::channel;
+use std::thread;
+use std::time::Instant;
+
+use switchlora::infer::kv_cache::KvCache;
+use switchlora::infer::{argmax, generate_adapted, merged_full_store,
+                        AdapterSet, GenConfig, Sampler};
+use switchlora::model::init::{copy_shared, seeded_store};
+use switchlora::model::layout::{Manifest, ParamStore, Variant};
+use switchlora::model::packed::PackedStore;
+use switchlora::obs::{mem_total, serve_mem_rows, MemRow};
+use switchlora::runtime::{InferRuntime, NativeModel};
+use switchlora::serve::http::decode_chunked;
+use switchlora::serve::{AdapterRegistry, BaseSource, Queue,
+                        SamplingSpec, Scheduler, ServeConfig,
+                        ServeRequest, ServeStats, Server, TokenEvent};
+use switchlora::tensor::dtype::DType;
+use switchlora::util::json::Json;
+use switchlora::util::rng::Rng;
+
+fn manifest() -> Manifest {
+    Manifest::builtin("tiny").unwrap()
+}
+
+fn rand_prompt(vocab: usize, len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..len).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// The serving base: a Full-variant store holding exactly the dense
+/// weights of `lora_store` (embeddings, norms, frozen `W`s, head) and
+/// no adapters.
+fn base_from(man: &Manifest, lora_store: &ParamStore) -> ParamStore {
+    let layout = std::sync::Arc::new(
+        man.layout(Variant::Full).unwrap().clone());
+    let mut full = ParamStore::zeros(layout);
+    let copied = copy_shared(lora_store, &mut full);
+    assert!(copied > 0, "no shared tensors copied");
+    full
+}
+
+/// `target`'s adapters replaced by `donor`'s — a LoRA store that decodes
+/// "donor's task over target's base".
+fn with_adapters_of(man: &Manifest, target: &ParamStore,
+                    donor: &ParamStore) -> ParamStore {
+    let mut out = target.clone();
+    for li in &man.linears {
+        let a = donor.slice(&li.a).unwrap().to_vec();
+        let b = donor.slice(&li.b).unwrap().to_vec();
+        out.slice_mut(&li.a).unwrap().copy_from_slice(&a);
+        out.slice_mut(&li.b).unwrap().copy_from_slice(&b);
+    }
+    out
+}
+
+#[test]
+fn adapter_overlay_is_bitwise_the_lora_store_forward() {
+    // overlay over the (byte-identical) dense base == decoding from the
+    // LoRA-variant store, bit for bit — the parity the serving path is
+    // built on
+    let man = manifest();
+    let lora_store = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let base = base_from(&man, &lora_store);
+    let ad = AdapterSet::from_store(&man, &lora_store, "t").unwrap();
+    let lora_rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let full_rt = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    let prompt = rand_prompt(man.config.vocab, 6, 3);
+    let mut c1 = lora_rt.new_cache(1, 16);
+    let mut c2 = full_rt.new_cache(1, 16);
+    let mut y1 =
+        lora_rt.prefill(&lora_store, &mut c1, 0, &prompt).unwrap();
+    let mut y2 = full_rt
+        .prefill_adapted(&base, Some(&ad), &mut c2, 0, &prompt)
+        .unwrap();
+    for step in 0..8 {
+        let bits = |v: &[f32]| -> Vec<u32> {
+            v.iter().map(|x| x.to_bits()).collect()
+        };
+        assert_eq!(bits(&y1), bits(&y2),
+                   "overlay logits diverge at step {step}");
+        let tok = argmax(&y1) as i32;
+        y1 = lora_rt
+            .decode(&lora_store, &mut c1, &[0], &[tok])
+            .unwrap();
+        y2 = full_rt
+            .decode_adapted(&base, &[Some(&ad)], &mut c2, &[0], &[tok])
+            .unwrap();
+    }
+}
+
+#[test]
+fn mixed_adapter_batch_matches_merged_solo_decodes() {
+    let man = manifest();
+    let vocab = man.config.vocab;
+    let lora1 = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let lora2 = seeded_store(&man, Variant::Lora, 22).unwrap();
+    let base = base_from(&man, &lora1);
+    let ad1 = AdapterSet::from_store(&man, &lora1, "a").unwrap();
+    let ad2 = AdapterSet::from_store(&man, &lora2, "b").unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    let prompts = vec![
+        rand_prompt(vocab, 3, 31),
+        rand_prompt(vocab, 7, 32),
+        rand_prompt(vocab, 5, 33),
+    ];
+    // greedy: rng-free, so token equality is exact equality of argmax
+    // chains
+    let cfg = GenConfig::greedy(9);
+    let ads: Vec<Option<&AdapterSet>> =
+        vec![Some(&ad1), None, Some(&ad2)];
+    let batch =
+        generate_adapted(&rt, &base, &ads, &prompts, &cfg).unwrap();
+
+    // (1) bitwise claim: each sequence solo, same unmerged code path
+    for (s, p) in prompts.iter().enumerate() {
+        let solo = generate_adapted(&rt, &base, &[ads[s]],
+                                    &[p.clone()], &cfg)
+            .unwrap();
+        assert_eq!(batch.sequences[s], solo.sequences[0],
+                   "seq {s}: batch composition changed its tokens");
+    }
+
+    // (2) cross-implementation claim: solo decode with the adapter
+    // MERGED into the dense weights (a different float evaluation
+    // order) picks the same greedy tokens
+    let merged1 = merged_full_store(&man, &lora1).unwrap();
+    let merged2 = merged_full_store(
+        &man, &with_adapters_of(&man, &lora1, &lora2)).unwrap();
+    for (s, reference) in
+        [(0usize, Some(&merged1)), (1, None), (2, Some(&merged2))]
+    {
+        let store = reference.unwrap_or(&base);
+        let solo = generate_adapted(&rt, store, &[None],
+                                    &[prompts[s].clone()], &cfg)
+            .unwrap();
+        assert_eq!(batch.sequences[s], solo.sequences[0],
+                   "seq {s}: unmerged overlay disagrees with merged \
+                    solo decode");
+    }
+}
+
+#[test]
+fn reclaimed_kv_slot_decodes_bitwise_like_fresh() {
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 9).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let vocab = man.config.vocab;
+    let warm = rand_prompt(vocab, 8, 41);
+    let probe = rand_prompt(vocab, 5, 42);
+    let run = |cache: &mut KvCache, slot: usize|
+        -> (Vec<i32>, Vec<u32>) {
+        let mut toks = Vec::new();
+        let mut bits = Vec::new();
+        let mut y =
+            rt.prefill(&store, cache, slot, &probe).unwrap();
+        for _ in 0..6 {
+            bits.extend(y.iter().map(|x| x.to_bits()));
+            let t = argmax(&y) as i32;
+            toks.push(t);
+            y = rt.decode(&store, cache, &[slot], &[t]).unwrap();
+        }
+        (toks, bits)
+    };
+    // dirty a slot, retire it, reuse it
+    let mut used = rt.new_cache(2, 32);
+    let s0 = used.acquire().unwrap();
+    rt.prefill(&store, &mut used, s0, &warm).unwrap();
+    rt.decode(&store, &mut used, &[s0], &[warm[0]]).unwrap();
+    used.release(s0);
+    let s1 = used.acquire().unwrap();
+    assert_eq!(s1, s0, "freed slot must be reused");
+    let (toks_reused, bits_reused) = run(&mut used, s1);
+    // reference: the same prompt in a never-touched cache
+    let mut fresh = rt.new_cache(2, 32);
+    let f = fresh.acquire().unwrap();
+    let (toks_fresh, bits_fresh) = run(&mut fresh, f);
+    assert_eq!(toks_reused, toks_fresh);
+    assert_eq!(bits_reused, bits_fresh,
+               "stale KV rows leaked into a reclaimed slot");
+}
+
+#[test]
+fn serve_ledger_total_is_exact_and_base_rows_never_grow() {
+    let man = manifest();
+    let full = seeded_store(&man, Variant::Full, 5).unwrap();
+    let packed = PackedStore::quantize_base(&full, DType::I8).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    let cache = rt.new_cache(4, 64);
+    let mk_ad = |seed: u64, name: &str| -> (String, u64) {
+        let store = seeded_store(&man, Variant::Lora, seed).unwrap();
+        let ad = AdapterSet::from_store(&man, &store, name).unwrap();
+        (name.to_string(), ad.resident_bytes() as u64)
+    };
+    let two = vec![mk_ad(21, "a"), mk_ad(22, "b")];
+    let three =
+        vec![mk_ad(21, "a"), mk_ad(22, "b"), mk_ad(23, "c")];
+    let rows2 = serve_mem_rows(&packed, DType::I8, &two, &cache);
+    let rows3 = serve_mem_rows(&packed, DType::I8, &three, &cache);
+    // the ledger accounts every resident byte exactly, no estimates
+    let expect = |ads: &[(String, u64)]| -> u64 {
+        packed.resident_bytes() as u64
+            + ads.iter().map(|(_, b)| b).sum::<u64>()
+            + cache.bytes() as u64
+    };
+    assert_eq!(mem_total(&rows2), expect(&two));
+    assert_eq!(mem_total(&rows3), expect(&three));
+    // one frozen-base copy no matter how many tenants: the non-adapter
+    // rows are byte-identical across registry sizes
+    let base_rows = |rows: &[MemRow]| -> Vec<(String, String, u64)> {
+        rows.iter()
+            .filter(|r| !r.component.starts_with("adapter:"))
+            .map(|r| (r.component.clone(), r.dtype.name().to_string(),
+                      r.bytes))
+            .collect()
+    };
+    assert_eq!(base_rows(&rows2), base_rows(&rows3));
+    assert_eq!(rows3.len(), rows2.len() + 1,
+               "a new tenant must add exactly one ledger row");
+}
+
+#[test]
+fn scheduler_serves_queued_requests_identically_to_solo_runs() {
+    let man = manifest();
+    let vocab = man.config.vocab;
+    let lora1 = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let lora2 = seeded_store(&man, Variant::Lora, 22).unwrap();
+    let base = base_from(&man, &lora1);
+    let mut adapters = BTreeMap::new();
+    adapters.insert("a".to_string(),
+                    AdapterSet::from_store(&man, &lora1, "a").unwrap());
+    adapters.insert("b".to_string(),
+                    AdapterSet::from_store(&man, &lora2, "b").unwrap());
+    let rt = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    // batch of 2 slots for 3 requests: the third joins mid-flight in a
+    // reclaimed slot
+    let cache = rt.new_cache(2, 64);
+    let queue = Queue::new(8);
+    let stats = ServeStats::default();
+    let reqs: Vec<(Option<&str>, Vec<i32>, u64, usize)> = vec![
+        (Some("a"), rand_prompt(vocab, 3, 51), 5, 4),
+        (None, rand_prompt(vocab, 6, 52), 6, 8),
+        (Some("b"), rand_prompt(vocab, 4, 53), 7, 6),
+    ];
+    let sampler = Sampler::top_k(8, 0.9);
+    let mut rxs = Vec::new();
+    for (i, (name, prompt, seed, max_new)) in reqs.iter().enumerate() {
+        let (tx, rx) = channel();
+        queue.push(ServeRequest {
+            id: i as u64,
+            adapter: name.map(str::to_string),
+            prompt: prompt.clone(),
+            spec: SamplingSpec {
+                sampler,
+                seed: *seed,
+                max_new: *max_new,
+                stop_tokens: Vec::new(),
+            },
+            tx,
+            enqueued: Instant::now(),
+        });
+        rxs.push(rx);
+    }
+    // pre-filled queue + drain: the scheduler serves everything already
+    // queued, then exits
+    queue.begin_drain();
+    Scheduler::new(&rt, &base, &adapters, cache).run(&queue, &stats);
+    for (i, ((name, prompt, seed, max_new), rx)) in
+        reqs.iter().zip(&rxs).enumerate()
+    {
+        let mut toks = Vec::new();
+        let mut done = None;
+        while let Ok(ev) = rx.try_recv() {
+            match ev {
+                TokenEvent::Token(t) => toks.push(t),
+                TokenEvent::Done { finish, n_generated } => {
+                    done = Some((finish, n_generated));
+                }
+                TokenEvent::Error(e) => panic!("request {i}: {e}"),
+            }
+        }
+        let (finish, n_generated) =
+            done.unwrap_or_else(|| panic!("request {i} never finished"));
+        assert_eq!(n_generated, *max_new);
+        assert_eq!(finish.as_str(), "length");
+        // the request's stream is exactly a solo generate_adapted run
+        // with the same seed (both use the seed's fork(0) stream)
+        let cfg = GenConfig {
+            max_new: *max_new,
+            sampler,
+            stop_tokens: Vec::new(),
+            seed: *seed,
+            max_context: None,
+        };
+        let ad = name.map(|n| &adapters[n]);
+        let solo = generate_adapted(&rt, &base, &[ad],
+                                    &[prompt.clone()], &cfg)
+            .unwrap();
+        assert_eq!(toks, solo.sequences[0][prompt.len()..].to_vec(),
+                   "request {i}: served tokens diverge from solo run");
+    }
+    use std::sync::atomic::Ordering;
+    assert_eq!(stats.completed.load(Ordering::Relaxed), 3);
+    assert_eq!(stats.tokens_streamed.load(Ordering::Relaxed),
+               (4 + 8 + 6) as u64);
+    let counts = stats.adapter_counts();
+    assert_eq!(counts.get("a"), Some(&1));
+    assert_eq!(counts.get("b"), Some(&1));
+    assert_eq!(counts.get("base"), Some(&1));
+}
+
+/// One blocking HTTP exchange against `addr`; returns (status, head,
+/// raw body bytes).  The server closes the connection after each
+/// response, so EOF delimits it.
+fn http_roundtrip(addr: &str, request: &str) -> (u16, String, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head_end = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .expect("response without header terminator")
+        + 4;
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .unwrap();
+    (status, head, buf[head_end..].to_vec())
+}
+
+fn post(addr: &str, path: &str, body: &str) -> (u16, String, Vec<u8>) {
+    http_roundtrip(addr, &format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: \
+         application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()))
+}
+
+#[test]
+fn http_server_streams_tokens_and_drains_cleanly() {
+    let man = manifest();
+    let vocab = man.config.vocab;
+    let lora1 = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let base_store = base_from(&man, &lora1);
+    let mut registry = AdapterRegistry::new();
+    registry.load_spec(&man, "a=seed:21").unwrap();
+    registry.load_spec(&man, "b=seed:22").unwrap();
+    let rt: Box<dyn InferRuntime> =
+        Box::new(NativeModel::new(man.clone(), Variant::Full).unwrap());
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0, // kernel-assigned; local_addr() resolves it
+        max_batch: 2,
+        queue_depth: 4,
+        max_context: 64,
+        default_max_new: 8,
+    };
+    let server = Server::bind(cfg, rt,
+                              BaseSource::Master(base_store.clone()),
+                              registry, vocab)
+        .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = thread::spawn(move || server.run());
+
+    // liveness + adapter listing
+    let (status, _, body) = http_roundtrip(
+        &addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 200);
+    let health =
+        Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(health.get("ok").unwrap().as_bool().unwrap());
+    let (status, _, body) = http_roundtrip(
+        &addr, "GET /v1/adapters HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 200);
+    let ads = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert_eq!(ads.as_arr().unwrap().len(), 2);
+
+    // a streamed generation: NDJSON token lines over chunked encoding
+    let (status, head, body) = post(
+        &addr, "/v1/generate",
+        r#"{"tokens":[1,2,3],"adapter":"a","max_new":5,"seed":9}"#);
+    assert_eq!(status, 200, "head: {head}");
+    assert!(head.contains("Transfer-Encoding: chunked"));
+    let nd = decode_chunked(&body).unwrap();
+    let nd = String::from_utf8(nd).unwrap();
+    let lines: Vec<&str> =
+        nd.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 6, "5 token lines + 1 done line: {nd}");
+    let mut toks = Vec::new();
+    for l in &lines[..5] {
+        let j = Json::parse(l).unwrap();
+        toks.push(j.get("token").unwrap().as_usize().unwrap() as i32);
+    }
+    let done = Json::parse(lines[5]).unwrap();
+    assert!(done.get("done").unwrap().as_bool().unwrap());
+    assert_eq!(done.get("finish").unwrap().as_str().unwrap(), "length");
+    assert_eq!(done.get("n_generated").unwrap().as_usize().unwrap(), 5);
+
+    // the stream equals a solo in-process run with the same seed
+    let rt2 = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    let ad = AdapterSet::from_store(&man, &lora1, "a").unwrap();
+    let cfg = GenConfig {
+        max_new: 5,
+        sampler: Sampler::greedy(),
+        stop_tokens: Vec::new(),
+        seed: 9,
+        max_context: None,
+    };
+    let solo = generate_adapted(&rt2, &base_store, &[Some(&ad)],
+                                &[vec![1, 2, 3]], &cfg)
+        .unwrap();
+    assert_eq!(toks, solo.sequences[0][3..].to_vec());
+
+    // validation surfaces as 400, not a dead socket
+    let (status, _, _) =
+        post(&addr, "/v1/generate", r#"{"adapter":"nope"}"#);
+    assert_eq!(status, 400);
+
+    // graceful drain: the run() thread exits cleanly
+    let (status, _, body) = post(&addr, "/admin/drain", "");
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    assert!(j.get("draining").unwrap().as_bool().unwrap());
+    handle.join().unwrap().unwrap();
+}

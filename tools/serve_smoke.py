@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""End-to-end smoke test of `switchlora serve` (stdlib only).
+
+Drives the real binary over real sockets and asserts the serving
+contracts that matter in deployment:
+
+  1. startup handshake: one machine-readable ``{"serve_ready": ...}``
+     stdout line announces the bound port (``--port 0`` friendly);
+  2. multi-tenant continuous batching: a request for adapter ``b``
+     issued *after* a long-running request for adapter ``a`` has started
+     streaming must run alongside it and finish while ``a`` is still
+     mid-stream — proving mid-flight batch join AND that tokens arrive
+     incrementally (not buffered until completion);
+  3. graceful drain: SIGTERM while a request is in flight lets that
+     request stream to completion, then the process exits 0.
+
+Usage:  python3 tools/serve_smoke.py [--bin target/release/switchlora]
+"""
+
+import argparse
+import json
+import os
+import signal
+import socket
+import subprocess
+import sys
+import time
+
+
+def fail(msg):
+    print("serve_smoke: FAIL: %s" % msg, file=sys.stderr)
+    sys.exit(1)
+
+
+class Stream:
+    """One streaming POST: parses the response head, then yields the
+    server's chunked-transfer payloads (one NDJSON line each) as the
+    server flushes them."""
+
+    def __init__(self, port, path, body):
+        self.sock = socket.create_connection(("127.0.0.1", port),
+                                             timeout=120)
+        payload = json.dumps(body)
+        req = ("POST %s HTTP/1.1\r\nHost: smoke\r\n"
+               "Content-Type: application/json\r\n"
+               "Content-Length: %d\r\n\r\n%s" % (path, len(payload),
+                                                 payload))
+        self.sock.sendall(req.encode())
+        self.buf = b""
+        head = self._read_until(b"\r\n\r\n")
+        self.status = int(head.split()[1])
+        self.head = head.decode("latin-1")
+        self.done_line = None
+
+    def _read_until(self, tok):
+        while tok not in self.buf:
+            d = self.sock.recv(4096)
+            if not d:
+                fail("connection closed mid-stream (buffered: %r)"
+                     % self.buf[:200])
+            self.buf += d
+        i = self.buf.index(tok) + len(tok)
+        out, self.buf = self.buf[:i], self.buf[i:]
+        return out
+
+    def next_event(self):
+        """The next parsed NDJSON object, or None at end of stream."""
+        size_line = self._read_until(b"\r\n")
+        size = int(size_line.strip().split(b";")[0], 16)
+        if size == 0:
+            return None
+        while len(self.buf) < size + 2:
+            d = self.sock.recv(4096)
+            if not d:
+                fail("connection closed inside a chunk")
+            self.buf += d
+        data, self.buf = self.buf[:size], self.buf[size + 2:]
+        return json.loads(data.decode())
+
+    def finished(self):
+        return self.done_line is not None
+
+    def assert_still_streaming(self):
+        """Non-blocking: slurp whatever the server has sent so far and
+        assert the stream has NOT reached its terminal chunk.  The
+        chunked terminator ``\\r\\n0\\r\\n\\r\\n`` cannot occur inside a
+        JSON payload (no CR in JSON lines), so its absence means the
+        server is still generating."""
+        self.sock.setblocking(False)
+        try:
+            while True:
+                d = self.sock.recv(65536)
+                if not d:
+                    fail("stream socket closed while peers were "
+                         "still running")
+                self.buf += d
+        except BlockingIOError:
+            pass
+        finally:
+            self.sock.settimeout(120)
+        if b"\r\n0\r\n\r\n" in self.buf:
+            fail("long request had already fully completed: tokens "
+                 "were buffered, not streamed incrementally")
+
+    def next_token(self):
+        """Advance one event; returns a token id, or None once done."""
+        if self.finished():
+            return None
+        ev = self.next_event()
+        if ev is None:
+            fail("stream terminated without a done line")
+        if "error" in ev:
+            fail("server error event: %s" % ev["error"])
+        if ev.get("done"):
+            self.done_line = ev
+            return None
+        return ev["token"]
+
+    def drain(self):
+        """Read to completion; returns (token_count, done_line)."""
+        n = 0
+        while self.next_token() is not None:
+            n += 1
+        return n, self.done_line
+
+
+def get_json(port, path):
+    s = socket.create_connection(("127.0.0.1", port), timeout=30)
+    s.sendall(("GET %s HTTP/1.1\r\nHost: smoke\r\n\r\n"
+               % path).encode())
+    data = b""
+    while True:
+        d = s.recv(4096)
+        if not d:
+            break
+        data += d
+    head, _, body = data.partition(b"\r\n\r\n")
+    return int(head.split()[1]), json.loads(body.decode())
+
+
+def wait_ready(proc, timeout=300):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        line = proc.stdout.readline()
+        if not line:
+            fail("server exited before serve_ready (rc=%s)"
+                 % proc.poll())
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            j = json.loads(line)
+        except ValueError:
+            continue
+        if "serve_ready" in j:
+            return int(j["serve_ready"]["port"])
+    fail("timed out waiting for the serve_ready line")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bin", default=os.path.join(
+        "target", "release", "switchlora"))
+    args = ap.parse_args()
+    if not os.path.exists(args.bin):
+        print("serve_smoke: building %s" % args.bin, file=sys.stderr)
+        subprocess.check_call(["cargo", "build", "--release"])
+    # the binary directly, NOT `cargo run`: SIGTERM must reach the
+    # server process itself for the drain assertion
+    proc = subprocess.Popen(
+        [args.bin, "serve", "--spec", "tiny",
+         "--adapter", "a=seed:7", "--adapter", "b=seed:9",
+         "--host", "127.0.0.1", "--port", "0",
+         "--max-batch", "2", "--queue-depth", "8",
+         "--max-context", "512"],
+        stdout=subprocess.PIPE, text=True)
+    try:
+        port = wait_ready(proc)
+        print("serve_smoke: ready on port %d" % port)
+
+        status, health = get_json(port, "/healthz")
+        assert status == 200 and health["ok"] is True, health
+        assert health["adapters"] == ["a", "b"], health
+        status, ads = get_json(port, "/v1/adapters")
+        assert status == 200 and len(ads) == 2, ads
+
+        # long request for tenant a: 200 tokens, streamed
+        a = Stream(port, "/v1/generate",
+                   {"prompt": "hello world", "adapter": "a",
+                    "max_new": 200, "seed": 3})
+        assert a.status == 200, a.head
+        assert "chunked" in a.head.lower(), a.head
+        first = a.next_token()
+        assert first is not None, "no first token"
+        print("serve_smoke: request a streaming (first token %d)"
+              % first)
+
+        # issued AFTER a's stream began; must join the running batch
+        # and finish while a (200 tokens) is still going — this can
+        # only happen if tokens stream incrementally and the batch is
+        # continuous
+        b = Stream(port, "/v1/generate",
+                   {"prompt": "hi", "adapter": "b", "max_new": 16,
+                    "seed": 4})
+        assert b.status == 200, b.head
+        nb, bdone = b.drain()
+        assert nb == 16 and bdone["finish"] == "length", (nb, bdone)
+        # at the moment b's done line arrived, a (200 tokens) must
+        # still be mid-stream — sequential (non-batched) serving or
+        # buffer-until-complete streaming would both have finished it
+        a.assert_still_streaming()
+        print("serve_smoke: request b joined mid-flight and finished "
+              "(16 tokens) while a still streaming")
+        na, adone = a.drain()
+        assert na == 200 and adone["finish"] == "length", (na, adone)
+        assert adone["n_generated"] == 200, adone
+
+        # graceful drain: SIGTERM mid-request; the in-flight request
+        # must still stream to completion and the process must exit 0
+        c = Stream(port, "/v1/generate",
+                   {"prompt": "drain me", "max_new": 300, "seed": 5})
+        assert c.status == 200, c.head
+        assert c.next_token() is not None, "no token before SIGTERM"
+        proc.send_signal(signal.SIGTERM)
+        print("serve_smoke: SIGTERM sent mid-request")
+        nc, cdone = c.drain()
+        assert nc == 300 and cdone["finish"] == "length", (nc, cdone)
+        rc = proc.wait(timeout=120)
+        assert rc == 0, "server exited %d after drain" % rc
+        print("serve_smoke: OK — mid-flight join, incremental "
+              "streaming, graceful drain")
+    except Exception:
+        proc.kill()
+        raise
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait()
+
+
+if __name__ == "__main__":
+    main()
