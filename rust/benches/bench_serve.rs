@@ -1,0 +1,249 @@
+//! Serving fast-path benchmarks (`harness = false`): a real in-process
+//! HTTP server on a loopback socket, measured from the client side.
+//!
+//! * request throughput on ONE kept-alive connection vs a fresh
+//!   connect-per-request (`Connection: close`) — the keep-alive claim;
+//! * streamed-generation TTFT (request write → first token line) and
+//!   inter-token latency, through chunked prefill and the continuous
+//!   batcher;
+//! * paged-KV residency: pool bytes vs the retired dense slab across
+//!   live-token counts — bytes scale with tokens, not with
+//!   `--max-batch × --max-context`.
+//!
+//! `--json <path>` writes the `switchlora-bench-v2` report; the
+//! committed `BENCH_serve.json` holds the current trajectory point and
+//! `tools/bench_check.py` gates CI on the flat `tracked` table
+//! (`_req_s` higher-is-better, `_ms` / `_ms_per_tok` lower-is-better).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::Instant;
+
+use switchlora::infer::kv_cache::KvCache;
+use switchlora::model::init::seeded_store;
+use switchlora::model::layout::{Manifest, Variant};
+use switchlora::runtime::{InferRuntime, NativeModel};
+use switchlora::serve::{AdapterRegistry, BaseSource, ServeConfig,
+                        Server};
+use switchlora::tensor::dtype::DType;
+use switchlora::util::json::Json;
+
+/// Read one HTTP response off a kept-alive socket: headers, then a
+/// `Content-Length` body or a chunked body up to its terminator.
+fn read_one_response(s: &mut TcpStream) -> Vec<u8> {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        assert!(s.read(&mut byte).expect("response head") > 0,
+                "EOF inside response head");
+        head.push(byte[0]);
+    }
+    let lower = String::from_utf8_lossy(&head).to_ascii_lowercase();
+    let mut body = Vec::new();
+    if let Some(pos) = lower.find("content-length:") {
+        let n: usize = lower[pos + "content-length:".len()..]
+            .lines()
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        body.resize(n, 0);
+        s.read_exact(&mut body).expect("response body");
+    } else if lower.contains("transfer-encoding: chunked") {
+        while !body.ends_with(b"\r\n0\r\n\r\n") {
+            assert!(s.read(&mut byte).expect("chunked body") > 0,
+                    "EOF inside chunked body");
+            body.push(byte[0]);
+        }
+    }
+    body
+}
+
+/// Spin the server on an ephemeral port; returns (addr, join handle).
+fn start_server()
+    -> (String, thread::JoinHandle<anyhow::Result<()>>) {
+    let man = Manifest::builtin("tiny").unwrap();
+    let vocab = man.config.vocab;
+    let store = seeded_store(&man, Variant::Full, 0).unwrap();
+    let rt: Box<dyn InferRuntime> =
+        Box::new(NativeModel::new(man, Variant::Full).unwrap());
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        max_batch: 2,
+        queue_depth: 16,
+        max_context: 256,
+        default_max_new: 8,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(cfg, rt, BaseSource::Master(store),
+                              AdapterRegistry::new(), vocab)
+        .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    (addr, thread::spawn(move || server.run()))
+}
+
+/// req/s for `n` sequential `GET /healthz` on one kept-alive socket.
+fn keepalive_req_s(addr: &str, n: usize) -> f64 {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let req = b"GET /healthz HTTP/1.1\r\nHost: b\r\n\r\n";
+    let t0 = Instant::now();
+    for _ in 0..n {
+        s.write_all(req).unwrap();
+        read_one_response(&mut s);
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// req/s with a fresh TCP connect per request (`Connection: close`).
+fn close_req_s(addr: &str, n: usize) -> f64 {
+    let req = b"GET /healthz HTTP/1.1\r\nHost: b\r\nConnection: \
+                close\r\n\r\n";
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_nodelay(true).unwrap();
+        s.write_all(req).unwrap();
+        let mut buf = Vec::new();
+        s.read_to_end(&mut buf).unwrap();
+        assert!(buf.windows(4).any(|w| w == b"\r\n\r\n"));
+    }
+    n as f64 / t0.elapsed().as_secs_f64()
+}
+
+/// One streamed generation; returns (ttft_ms, itl_ms) measured at the
+/// socket: time to the first NDJSON line, then mean gap between
+/// consecutive token lines (each payload line ends `}\n`).
+fn stream_latencies(addr: &str, prompt_len: usize, max_new: usize)
+    -> (f64, f64) {
+    let tokens: Vec<String> =
+        (0..prompt_len).map(|i| (i % 200).to_string()).collect();
+    let body = format!(
+        r#"{{"tokens":[{}],"max_new":{max_new},"seed":7}}"#,
+        tokens.join(","));
+    let req = format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: b\r\nContent-Length: \
+         {}\r\n\r\n{body}", body.len());
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_nodelay(true).unwrap();
+    let t0 = Instant::now();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut line_times = Vec::new();
+    let mut prev = 0u8;
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        assert!(s.read(&mut byte).expect("stream") > 0,
+                "EOF mid-stream");
+        buf.push(byte[0]);
+        if prev == b'}' && byte[0] == b'\n' {
+            line_times.push(t0.elapsed().as_secs_f64());
+        }
+        prev = byte[0];
+        if buf.ends_with(b"\r\n0\r\n\r\n") {
+            break;
+        }
+    }
+    // lines = max_new token lines + 1 done line
+    assert!(line_times.len() == max_new + 1,
+            "expected {} NDJSON lines, saw {}", max_new + 1,
+            line_times.len());
+    let ttft = 1e3 * line_times[0];
+    let itl = 1e3 * (line_times[max_new - 1] - line_times[0])
+        / (max_new - 1).max(1) as f64;
+    (ttft, itl)
+}
+
+/// The residency table: paged-pool bytes vs the dense slab the old
+/// allocator reserved up front, across live-token counts.  Bytes are
+/// exact arithmetic (`blocks × block_bytes`), not timings.
+fn kv_residency_rows() -> Vec<Json> {
+    let man = Manifest::builtin("tiny").unwrap();
+    let mc = &man.config;
+    let (batch, capacity, block) = (8usize, 256usize, 32usize);
+    println!("\n-- paged KV residency (batch {batch}, capacity \
+              {capacity}, block {block}) --");
+    println!("{:>12} {:>14} {:>14} {:>8}", "live tokens", "pool bytes",
+             "slab bytes", "pool%");
+    let mut rows = Vec::new();
+    for live_per_seq in [0usize, 16, 64, 128] {
+        let mut cache = KvCache::with_layout(
+            mc.layers, batch, mc.heads, mc.head_dim(), capacity,
+            DType::F32, block);
+        let row = vec![0.0f32;
+                       mc.heads * mc.head_dim() * live_per_seq.max(1)];
+        // half the slots live, half idle — the mix a real batcher holds
+        let live_slots = batch / 2;
+        if live_per_seq > 0 {
+            for seq in 0..live_slots {
+                cache.append(0, seq, &row, &row, live_per_seq);
+            }
+        }
+        let live = live_per_seq * live_slots;
+        let (pool, slab) = (cache.bytes(), cache.slab_bytes());
+        println!("{:>12} {:>14} {:>14} {:>7.1}%", live, pool, slab,
+                 100.0 * pool as f64 / slab as f64);
+        rows.push(Json::obj(vec![
+            ("live_tokens", Json::num(live as f64)),
+            ("pool_bytes", Json::num(pool as f64)),
+            ("slab_bytes", Json::num(slab as f64)),
+        ]));
+    }
+    rows
+}
+
+fn main() {
+    switchlora::util::logging::init();
+    let args = switchlora::cli::Args::parse(std::env::args().skip(1));
+    let json_path = args.get("json").map(PathBuf::from);
+    if json_path.is_some() {
+        switchlora::bench::record_results();
+    }
+    let kv_rows = kv_residency_rows();
+
+    let (addr, handle) = start_server();
+    // connection reuse: the same request stream with and without a
+    // fresh TCP handshake per request
+    let n = 300;
+    let _ = keepalive_req_s(&addr, 20); // warm both paths
+    let _ = close_req_s(&addr, 20);
+    let ka = keepalive_req_s(&addr, n);
+    let cl = close_req_s(&addr, n);
+    println!("\n-- /healthz request throughput ({n} requests) --");
+    println!("   keep-alive {ka:>9.0} req/s   close-per-request \
+              {cl:>9.0} req/s   ({:.2}x)", ka / cl.max(1e-9));
+
+    // streamed generation latency through chunked prefill
+    let (_, _) = stream_latencies(&addr, 64, 32); // warm
+    let (ttft, itl) = stream_latencies(&addr, 64, 32);
+    println!("\n-- streamed generation (prompt 64, max_new 32) --");
+    println!("   ttft {ttft:.2}ms   inter-token {itl:.3}ms/tok");
+
+    // stop the server cleanly
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"POST /admin/drain HTTP/1.1\r\nHost: b\r\n\
+                  Content-Length: 0\r\nConnection: close\r\n\r\n")
+        .unwrap();
+    let mut sink = Vec::new();
+    let _ = s.read_to_end(&mut sink);
+    handle.join().unwrap().unwrap();
+
+    if let Some(path) = json_path {
+        switchlora::bench::write_json(&path, "bench_serve", vec![
+            ("tracked", Json::obj(vec![
+                ("serve_keepalive_req_s", Json::num(ka)),
+                ("serve_close_req_s", Json::num(cl)),
+                ("serve_ttft_ms", Json::num(ttft)),
+                ("serve_itl_ms_per_tok", Json::num(itl)),
+            ])),
+            ("kv_residency", Json::Arr(kv_rows)),
+        ])
+        .expect("writing bench json");
+        println!("json report: {}", path.display());
+    }
+    println!("\nbench_serve complete");
+}

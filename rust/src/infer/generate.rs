@@ -175,6 +175,10 @@ pub fn generate_adapted_stream(rt: &dyn InferRuntime,
                 ("used", Json::num(used as f64)),
                 ("capacity", Json::num((b * cache.capacity) as f64)),
                 ("bytes", Json::num(cache.bytes() as f64)),
+                ("blocks_live",
+                 Json::num(cache.blocks_live() as f64)),
+                ("blocks_free",
+                 Json::num(cache.blocks_free() as f64)),
                 ("active", Json::num(active.len() as f64)),
                 ("dtype", Json::str(cache.dtype().name())),
             ]);

@@ -1,4 +1,5 @@
-//! Per-layer key/value cache for incremental autoregressive decoding.
+//! Paged per-layer key/value cache for incremental autoregressive
+//! decoding.
 //!
 //! During generation each new token only needs its *own* q/k/v plus the
 //! keys and values of every earlier position — which never change once
@@ -6,47 +7,83 @@
 //! Caching them turns per-token decode cost from O(T²) re-forward work
 //! into O(T): one attention sweep over the cache per layer.
 //!
-//! Layout: one `[batch·heads, capacity, head_dim]` buffer per layer for
-//! K and for V, in a dtype-tagged storage mode (`--kv-dtype`): `f32`
-//! (the default, exact), `bf16` (half the bytes, RNE-rounded per
-//! element), or `int8` (quarter the bytes, symmetric per-position-row
-//! quantization with one f32 scale per `(seq, head, pos)` row — the
-//! same scheme the frozen base uses).  Sequences advance independently
-//! (`lens` is per-sequence), so ragged prompts and per-sequence stop
-//! handling in a batched decode loop need no padding or masking:
-//! attention for sequence `s` simply sweeps `0..lens[s]`.
+//! Storage is **paged**: K/V rows live in fixed-size blocks of
+//! [`KvCache::block`] positions handed out from a shared per-layer pool,
+//! and each sequence owns a *block table* (an ordered list of block ids)
+//! instead of a pre-reserved `[capacity, head_dim]` strip.  One logical
+//! block id spans every layer and both K and V — block `b` of layer `l`
+//! lives at element offset `((b·heads + h)·block + p)·head_dim` of that
+//! layer's pool buffer — so the table is shared across layers and a
+//! block allocation grows all `2·layers` buffers together.  The pool
+//! grows lazily one block at a time up to
+//! `batch · ceil(capacity / block)` blocks, which means:
 //!
-//! Attention over the cache runs on the shared kernel layer
-//! ([`crate::kernels::cached_attend`]), which mirrors
-//! `kernels::causal_attention_fwd` operation-for-operation (same
-//! dot-product, max-subtraction and normalization order), so f32 cached
-//! decode reproduces the full re-forward logits bit-for-bit — the
-//! property `rust/tests/inference.rs` pins down.  Quantized modes
-//! dequantize the live prefix into a reused f32 scratch before the same
-//! kernel, trading a bounded representation error (pinned by tests
-//! below) for serving memory that scales with concurrent users.
+//!   * resident KV bytes scale with *live tokens* (block-rounded), not
+//!     with `batch × capacity` — a serve process with `--max-batch 32`
+//!     no longer reserves 32 full contexts up front;
+//!   * a retiring sequence returns its blocks to the free list in
+//!     O(blocks), and they are immediately reusable by any peer;
+//!   * allocation can never fail mid-decode: per-sequence overflow is
+//!     checked against `capacity` first, so the pool ceiling is a true
+//!     invariant.
+//!
+//! Blocks are dtype-tagged exactly like the old slab (`--kv-dtype`):
+//! `f32` (exact), `bf16` (half the bytes, RNE-rounded), or `int8`
+//! (quarter the bytes, symmetric per-position-row quantization with one
+//! f32 scale per `(block, head, pos)` row — the same scheme the frozen
+//! base uses).  Sequences advance independently (`lens` is
+//! per-sequence), so ragged prompts and per-sequence stops in a batched
+//! decode loop need no padding or masking.
+//!
+//! Attention over the cache runs on the shared kernel layer: the f32
+//! mode hands the block table to [`crate::kernels::cached_attend_paged`],
+//! which mirrors the contiguous [`crate::kernels::cached_attend`]
+//! operation-for-operation (same dot-product, max-subtraction and
+//! normalization order per row — only the *address* of each K/V row goes
+//! through the table), so paged decode reproduces the contiguous logits
+//! **bit-for-bit** — the PR 4 determinism contract, pinned by
+//! `rust/tests/inference.rs` and the unit tests below.  Quantized modes
+//! gather-dequantize the live prefix blockwise into a reused f32 scratch
+//! (identical rows in identical order to the old slab walk) before the
+//! same contiguous kernel.
 
 use crate::kernels;
 use crate::tensor::dtype::{bf16_to_f32, f32_to_bf16, quantize_row_i8,
                            DType};
 
-/// One layer's K or V storage in the cache's dtype.
+/// Default block size in positions (`--kv-block`): 32 rows × head_dim
+/// per (head, block) — small enough that short requests stay cheap,
+/// large enough that the block table stays tiny.
+pub const DEFAULT_KV_BLOCK: usize = 32;
+
+/// One layer's K or V block pool in the cache's dtype.
 enum KvBuf {
     F32(Vec<f32>),
     Bf16(Vec<u16>),
-    /// codes plus one symmetric scale per `(seq, head, pos)` head-dim
+    /// codes plus one symmetric scale per `(block, head, pos)` head-dim
     /// row (quantized at append time; rows past a sequence's length are
     /// dead until overwritten)
     I8 { q: Vec<i8>, scales: Vec<f32> },
 }
 
 impl KvBuf {
-    fn new(dtype: DType, numel: usize, rows: usize) -> KvBuf {
+    fn new(dtype: DType) -> KvBuf {
         match dtype {
-            DType::F32 => KvBuf::F32(vec![0.0; numel]),
-            DType::Bf16 => KvBuf::Bf16(vec![0; numel]),
-            DType::I8 => KvBuf::I8 { q: vec![0; numel],
-                                     scales: vec![0.0; rows] },
+            DType::F32 => KvBuf::F32(Vec::new()),
+            DType::Bf16 => KvBuf::Bf16(Vec::new()),
+            DType::I8 => KvBuf::I8 { q: Vec::new(), scales: Vec::new() },
+        }
+    }
+
+    /// Append one zeroed block's worth of storage to the pool.
+    fn grow(&mut self, numel: usize, rows: usize) {
+        match self {
+            KvBuf::F32(d) => d.resize(d.len() + numel, 0.0),
+            KvBuf::Bf16(d) => d.resize(d.len() + numel, 0),
+            KvBuf::I8 { q, scales } => {
+                q.resize(q.len() + numel, 0);
+                scales.resize(scales.len() + rows, 0.0);
+            }
         }
     }
 
@@ -73,7 +110,7 @@ impl KvBuf {
         }
     }
 
-    /// Dequantize whole head-dim rows `[src, src + n)` (element
+    /// Dequantize whole head-dim rows `[src, src + out.len())` (element
     /// offsets) into `out`.
     fn load_rows(&self, src: usize, out: &mut [f32], hd: usize) {
         match self {
@@ -106,7 +143,7 @@ impl KvBuf {
     }
 }
 
-/// Key/value cache over `layers × batch` independent sequences.
+/// Paged key/value cache over `layers × batch` independent sequences.
 pub struct KvCache {
     pub layers: usize,
     pub batch: usize,
@@ -114,7 +151,9 @@ pub struct KvCache {
     pub head_dim: usize,
     /// maximum positions per sequence
     pub capacity: usize,
-    /// storage dtype of the K/V buffers (`--kv-dtype`)
+    /// positions per block (`--kv-block`)
+    pub block: usize,
+    /// storage dtype of the K/V blocks (`--kv-dtype`)
     dtype: DType,
     /// tokens currently cached, per sequence
     lens: Vec<usize>,
@@ -123,7 +162,16 @@ pub struct KvCache {
     /// Purely bookkeeping — batch-at-once users (`infer::generate`)
     /// index slots directly and never touch it.
     free: Vec<usize>,
-    /// per layer: `[batch·heads, capacity, head_dim]`
+    /// per-sequence block table: `tables[seq][i]` stores positions
+    /// `i·block .. (i+1)·block`; one id spans all layers and K+V
+    tables: Vec<Vec<u32>>,
+    /// pool block ids owned by no sequence (most recently freed on top)
+    free_blocks: Vec<u32>,
+    /// blocks ever allocated — the pool high-water mark
+    n_blocks: usize,
+    /// allocation ceiling: `batch · ceil(capacity / block)`
+    max_blocks: usize,
+    /// per layer: block pool, `[n_blocks · heads · block, head_dim]`
     k: Vec<KvBuf>,
     v: Vec<KvBuf>,
     /// score-row scratch reused across `attend` calls (the per-layer
@@ -143,34 +191,47 @@ impl KvCache {
                             DType::F32)
     }
 
-    /// A cache storing K/V in `dtype` (`--kv-dtype`).
+    /// A cache storing K/V in `dtype` (`--kv-dtype`) with the default
+    /// block size.
     pub fn with_dtype(layers: usize, batch: usize, heads: usize,
                       head_dim: usize, capacity: usize, dtype: DType)
         -> KvCache {
+        KvCache::with_layout(layers, batch, heads, head_dim, capacity,
+                             dtype, DEFAULT_KV_BLOCK)
+    }
+
+    /// Full-layout constructor: `dtype` storage in blocks of `block`
+    /// positions (`--kv-block`).  Nothing is allocated up front — the
+    /// pool grows block-by-block as sequences append.
+    pub fn with_layout(layers: usize, batch: usize, heads: usize,
+                       head_dim: usize, capacity: usize, dtype: DType,
+                       block: usize) -> KvCache {
         assert!(layers > 0 && batch > 0 && heads > 0 && head_dim > 0
                 && capacity > 0, "degenerate KV cache shape");
-        let per_layer = batch * heads * capacity * head_dim;
-        let rows = batch * heads * capacity;
+        assert!(block > 0, "degenerate KV block size");
         KvCache {
             layers,
             batch,
             heads,
             head_dim,
             capacity,
+            block,
             dtype,
             lens: vec![0; batch],
             free: (0..batch).rev().collect(),
-            k: (0..layers).map(|_| KvBuf::new(dtype, per_layer, rows))
-                .collect(),
-            v: (0..layers).map(|_| KvBuf::new(dtype, per_layer, rows))
-                .collect(),
+            tables: vec![Vec::new(); batch],
+            free_blocks: Vec::new(),
+            n_blocks: 0,
+            max_blocks: batch * capacity.div_ceil(block),
+            k: (0..layers).map(|_| KvBuf::new(dtype)).collect(),
+            v: (0..layers).map(|_| KvBuf::new(dtype)).collect(),
             scratch: Vec::new(),
             kdq: Vec::new(),
             vdq: Vec::new(),
         }
     }
 
-    /// Storage dtype of the K/V buffers.
+    /// Storage dtype of the K/V blocks.
     pub fn dtype(&self) -> DType {
         self.dtype
     }
@@ -180,29 +241,34 @@ impl KvCache {
         self.lens[seq]
     }
 
-    /// Forget all cached positions (reuse the allocation for a new batch).
+    /// Forget all cached positions and return every block to the pool
+    /// (the pool allocation itself is kept for the next batch).
     pub fn reset(&mut self) {
+        for t in &mut self.tables {
+            self.free_blocks.append(t);
+        }
         self.lens.fill(0);
         self.free = (0..self.batch).rev().collect();
     }
 
     /// Claim a free sequence slot for a newly admitted request (lowest
     /// index first), or `None` when every slot is owned.  The slot
-    /// starts at length 0 — any K/V rows a previous owner left behind
-    /// are dead, since attention only ever sweeps `0..len`.
+    /// starts at length 0 and owns no blocks until its first append.
     pub fn acquire(&mut self) -> Option<usize> {
         let seq = self.free.pop()?;
         self.lens[seq] = 0;
         Some(seq)
     }
 
-    /// Return a retired request's slot to the free list.  The whole
-    /// cache allocation stays put: reclaiming a slot is O(1), and a
-    /// request admitted into it decodes bitwise identically to one
-    /// admitted into a fresh cache (`rust/tests/serving.rs`).
+    /// Return a retired request's slot to the free list and its blocks
+    /// to the pool — O(blocks held), and the blocks are immediately
+    /// reusable by any peer.  A request admitted into a recycled slot
+    /// decodes bitwise identically to one admitted into a fresh cache
+    /// (`rust/tests/serving.rs`).
     pub fn release(&mut self, seq: usize) {
         assert!(seq < self.batch, "slot {seq} out of batch {}", self.batch);
         assert!(!self.free.contains(&seq), "double release of slot {seq}");
+        self.free_blocks.append(&mut self.tables[seq]);
         self.lens[seq] = 0;
         self.free.push(seq);
     }
@@ -212,17 +278,101 @@ impl KvCache {
         self.free.len()
     }
 
+    /// Blocks currently owned by live sequences.
+    pub fn blocks_live(&self) -> usize {
+        self.n_blocks - self.free_blocks.len()
+    }
+
+    /// Allocated blocks sitting on the free list.
+    pub fn blocks_free(&self) -> usize {
+        self.free_blocks.len()
+    }
+
+    /// Pool high-water mark: blocks ever allocated.
+    pub fn blocks_allocated(&self) -> usize {
+        self.n_blocks
+    }
+
+    /// Pool ceiling: `batch · ceil(capacity / block)` blocks.
+    pub fn max_blocks(&self) -> usize {
+        self.max_blocks
+    }
+
+    /// Bytes one logical block occupies across all layers, K and V.
+    pub fn block_bytes(&self) -> usize {
+        let e = self.heads * self.block * self.head_dim;
+        let r = self.heads * self.block;
+        let per_buf = match self.dtype {
+            DType::F32 => 4 * e,
+            DType::Bf16 => 2 * e,
+            DType::I8 => e + 4 * r,
+        };
+        2 * self.layers * per_buf
+    }
+
+    /// What the pre-paging `[batch·heads, capacity, head_dim]` slab
+    /// would have reserved up front — the bench baseline for "resident
+    /// bytes scale with live tokens".
+    pub fn slab_bytes(&self) -> usize {
+        let e = self.batch * self.heads * self.capacity * self.head_dim;
+        let r = self.batch * self.heads * self.capacity;
+        let per_buf = match self.dtype {
+            DType::F32 => 4 * e,
+            DType::Bf16 => 2 * e,
+            DType::I8 => e + 4 * r,
+        };
+        2 * self.layers * per_buf
+    }
+
     /// Cache memory footprint in bytes (serving-capacity accounting):
-    /// the K and V payloads at their storage width, plus the int8
-    /// per-row scales when quantized.
+    /// the allocated block pool at its storage width, plus the int8
+    /// per-row scales when quantized.  Grows with the live-token
+    /// high-water mark, not with `batch × capacity`.
     pub fn bytes(&self) -> usize {
         self.k.iter().chain(&self.v).map(|b| b.bytes()).sum()
     }
 
-    /// Flat offset of `(seq, head, pos)` in a layer buffer.
+    /// Elements one block contributes to each per-layer pool buffer.
     #[inline]
-    fn at(&self, seq: usize, head: usize, pos: usize) -> usize {
-        ((seq * self.heads + head) * self.capacity + pos) * self.head_dim
+    fn blk_elems(&self) -> usize {
+        self.heads * self.block * self.head_dim
+    }
+
+    /// Flat element offset of `(block id, head, position-in-block)` in a
+    /// layer's pool buffer.
+    #[inline]
+    fn blk_off(&self, blk: usize, head: usize, p: usize) -> usize {
+        ((blk * self.heads + head) * self.block + p) * self.head_dim
+    }
+
+    /// Hand out a block: recycle the most recently freed one, else grow
+    /// every layer's pool by one block.  The ceiling is unreachable in
+    /// correct use — per-sequence overflow is checked against `capacity`
+    /// first — so this assert is an allocator invariant, not a user
+    /// error path.
+    fn alloc_block(&mut self) -> u32 {
+        if let Some(b) = self.free_blocks.pop() {
+            return b;
+        }
+        assert!(self.n_blocks < self.max_blocks,
+                "KV pool invariant broken: {} blocks exceeds ceiling {}",
+                self.n_blocks + 1, self.max_blocks);
+        let id = self.n_blocks as u32;
+        self.n_blocks += 1;
+        let (ne, nr) = (self.blk_elems(), self.heads * self.block);
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            buf.grow(ne, nr);
+        }
+        id
+    }
+
+    /// Grow `seq`'s block table until it covers positions `0..upto`.
+    /// Idempotent — every layer's append calls this with the same range.
+    fn ensure_blocks(&mut self, seq: usize, upto: usize) {
+        while self.tables[seq].len() * self.block < upto {
+            let b = self.alloc_block();
+            self.tables[seq].push(b);
+        }
     }
 
     /// Append `t_new` RoPE'd key rows and value rows for sequence `seq`
@@ -232,19 +382,28 @@ impl KvCache {
     /// base position; call [`KvCache::bump`] once after the last layer.
     pub fn append(&mut self, layer: usize, seq: usize, k_new: &[f32],
                   v_new: &[f32], t_new: usize) {
-        let (nh, hd) = (self.heads, self.head_dim);
+        let (nh, hd, blk) = (self.heads, self.head_dim, self.block);
         let base = self.lens[seq];
         assert!(base + t_new <= self.capacity,
                 "KV cache overflow: {base}+{t_new} > {}", self.capacity);
         assert_eq!(k_new.len(), nh * t_new * hd, "k chunk shape");
         assert_eq!(v_new.len(), nh * t_new * hd, "v chunk shape");
-        for h in 0..nh {
-            let src = h * t_new * hd;
-            let dst = self.at(seq, h, base);
-            self.k[layer].store_rows(dst, &k_new[src..src + t_new * hd],
-                                     hd);
-            self.v[layer].store_rows(dst, &v_new[src..src + t_new * hd],
-                                     hd);
+        self.ensure_blocks(seq, base + t_new);
+        // walk the chunk in per-block runs of global positions
+        let mut p = base;
+        while p < base + t_new {
+            let b = self.tables[seq][p / blk] as usize;
+            let off = p % blk;
+            let run = (blk - off).min(base + t_new - p);
+            for h in 0..nh {
+                let src = (h * t_new + (p - base)) * hd;
+                let dst = self.blk_off(b, h, off);
+                self.k[layer].store_rows(dst,
+                                         &k_new[src..src + run * hd], hd);
+                self.v[layer].store_rows(dst,
+                                         &v_new[src..src + run * hd], hd);
+            }
+            p += run;
         }
     }
 
@@ -262,42 +421,50 @@ impl KvCache {
     /// positions `0..len+i+1`, which is exactly full causal attention.
     /// Returns `[heads, t_new, head_dim]`.
     ///
-    /// The f32 storage mode hands the kernel zero-copy slices; packed
-    /// modes dequantize only the live prefix (`0..len+t_new`) of each
-    /// head into reused scratch, so decode never touches dead capacity.
+    /// The f32 storage mode hands the kernel the pool slices plus the
+    /// block table zero-copy; packed modes gather-dequantize only the
+    /// live prefix (`0..len+t_new`) of each head into reused scratch, so
+    /// decode never touches dead capacity.
     pub fn attend(&mut self, layer: usize, seq: usize, q: &[f32],
                   t_new: usize) -> Vec<f32> {
-        let (nh, hd, cap) = (self.heads, self.head_dim, self.capacity);
+        let (nh, hd, blk) = (self.heads, self.head_dim, self.block);
         let base = self.lens[seq];
+        let ctx = base + t_new;
         assert_eq!(q.len(), nh * t_new * hd, "q chunk shape");
+        debug_assert!(self.tables[seq].len() * blk >= ctx,
+                      "attend past the appended range");
         let mut scratch = std::mem::take(&mut self.scratch);
         let o = if self.dtype == DType::F32 {
-            // the heads of one sequence are contiguous: [nh, cap, hd]
-            let lo = self.at(seq, 0, 0);
-            let (kc, vc) = match (&self.k[layer], &self.v[layer]) {
+            let (kp, vp) = match (&self.k[layer], &self.v[layer]) {
                 (KvBuf::F32(kd), KvBuf::F32(vd)) => {
-                    (&kd[lo..lo + nh * cap * hd],
-                     &vd[lo..lo + nh * cap * hd])
+                    (kd.as_slice(), vd.as_slice())
                 }
                 _ => unreachable!("f32 cache holds f32 buffers"),
             };
-            kernels::cached_attend(q, kc, vc, nh, t_new, base, cap, hd,
-                                   &mut scratch)
+            kernels::cached_attend_paged(q, kp, vp, &self.tables[seq],
+                                         nh, t_new, base, blk, hd,
+                                         &mut scratch)
         } else {
-            let ctx = base + t_new;
             let mut kdq = std::mem::take(&mut self.kdq);
             let mut vdq = std::mem::take(&mut self.vdq);
             kdq.resize(nh * ctx * hd, 0.0);
             vdq.resize(nh * ctx * hd, 0.0);
-            for h in 0..nh {
-                let src = self.at(seq, h, 0);
-                let dst = h * ctx * hd;
-                self.k[layer].load_rows(src,
-                                        &mut kdq[dst..dst + ctx * hd],
-                                        hd);
-                self.v[layer].load_rows(src,
-                                        &mut vdq[dst..dst + ctx * hd],
-                                        hd);
+            // gather-dequantize the live prefix block run by block run;
+            // rows land in the same [nh, ctx, hd] order the old slab
+            // walk produced, so the kernel sees identical inputs
+            let mut p = 0;
+            while p < ctx {
+                let b = self.tables[seq][p / blk] as usize;
+                let run = blk.min(ctx - p);
+                for h in 0..nh {
+                    let src = self.blk_off(b, h, 0);
+                    let dst = (h * ctx + p) * hd;
+                    self.k[layer].load_rows(
+                        src, &mut kdq[dst..dst + run * hd], hd);
+                    self.v[layer].load_rows(
+                        src, &mut vdq[dst..dst + run * hd], hd);
+                }
+                p += run;
             }
             // the dequantized copy is tight: capacity == ctx
             let o = kernels::cached_attend(q, &kdq, &vdq, nh, t_new,
@@ -332,8 +499,10 @@ mod tests {
             let k = randv(nh * t * hd, rng);
             let v = randv(nh * t * hd, rng);
             let (want, _) = causal_attention_fwd(&q, &k, &v, nh, t, hd);
-            // feed the same q/k/v through the cache one token at a time
-            let mut cache = KvCache::new(1, 1, nh, hd, t);
+            // feed the same q/k/v through the cache one token at a time,
+            // with a tiny block size so the walk crosses boundaries
+            let mut cache = KvCache::with_layout(1, 1, nh, hd, t,
+                                                 DType::F32, 2);
             let mut got = vec![0.0f32; nh * t * hd];
             for i in 0..t {
                 let pick = |x: &[f32]| -> Vec<f32> {
@@ -367,7 +536,8 @@ mod tests {
         let mut one = KvCache::new(1, 1, nh, hd, t);
         one.append(0, 0, &k, &v, t);
         let want = one.attend(0, 0, &q, t);
-        // split the chunk 4 + 2
+        // split the chunk 4 + 2, with a block size that straddles the
+        // split (block 3: positions 3..6 span two blocks)
         let split = 4;
         let part = |x: &[f32], lo: usize, hi: usize| -> Vec<f32> {
             (0..nh)
@@ -376,7 +546,7 @@ mod tests {
                 })
                 .collect()
         };
-        let mut two = KvCache::new(1, 1, nh, hd, t);
+        let mut two = KvCache::with_layout(1, 1, nh, hd, t, DType::F32, 3);
         two.append(0, 0, &part(&k, 0, split), &part(&v, 0, split), split);
         let o1 = two.attend(0, 0, &part(&q, 0, split), split);
         two.bump(0, split);
@@ -401,10 +571,53 @@ mod tests {
     }
 
     #[test]
+    fn paged_decode_is_bitwise_identical_across_block_sizes() {
+        // The paged attend path must reproduce the single-block
+        // (contiguous) layout bit-for-bit for every storage mode: same
+        // per-row values, same serial accumulation order — only the
+        // addresses differ.
+        let mut rng = Rng::new(77);
+        let (nh, hd, t) = (3, 8, 13);
+        let k = randv(nh * t * hd, &mut rng);
+        let v = randv(nh * t * hd, &mut rng);
+        let q = randv(nh * t * hd, &mut rng);
+        let pick = |x: &[f32], i: usize| -> Vec<f32> {
+            (0..nh)
+                .flat_map(|h| {
+                    x[(h * t + i) * hd..(h * t + i + 1) * hd].to_vec()
+                })
+                .collect()
+        };
+        let bits = |x: &[f32]| -> Vec<u32> {
+            x.iter().map(|v| v.to_bits()).collect()
+        };
+        for dtype in [DType::F32, DType::Bf16, DType::I8] {
+            // block 4 (boundaries mid-sequence) vs block t (one block ==
+            // the old contiguous strip)
+            let mut paged =
+                KvCache::with_layout(1, 1, nh, hd, t, dtype, 4);
+            let mut contig =
+                KvCache::with_layout(1, 1, nh, hd, t, dtype, t);
+            for i in 0..t {
+                let (qi, ki, vi) = (pick(&q, i), pick(&k, i), pick(&v, i));
+                paged.append(0, 0, &ki, &vi, 1);
+                contig.append(0, 0, &ki, &vi, 1);
+                let op = paged.attend(0, 0, &qi, 1);
+                let oc = contig.attend(0, 0, &qi, 1);
+                paged.bump(0, 1);
+                contig.bump(0, 1);
+                assert_eq!(bits(&op), bits(&oc),
+                           "{dtype} diverged at position {i}");
+            }
+        }
+    }
+
+    #[test]
     fn sequences_are_independent() {
         let mut rng = Rng::new(9);
         let (nh, hd) = (2, 4);
-        let mut cache = KvCache::new(1, 3, nh, hd, 8);
+        let mut cache = KvCache::with_layout(1, 3, nh, hd, 8,
+                                             DType::F32, 2);
         let k0 = randv(nh * hd, &mut rng);
         let v0 = randv(nh * hd, &mut rng);
         cache.append(0, 0, &k0, &v0, 1);
@@ -414,8 +627,11 @@ mod tests {
         cache.append(0, 2, &k0, &v0, 1);
         cache.bump(2, 1);
         assert_eq!((cache.len(0), cache.len(1), cache.len(2)), (1, 0, 2));
+        assert_eq!(cache.blocks_live(), 2); // one block each for 0 and 2
         cache.reset();
         assert_eq!((cache.len(0), cache.len(1), cache.len(2)), (0, 0, 0));
+        assert_eq!(cache.blocks_live(), 0);
+        assert_eq!(cache.blocks_free(), 2); // pool retained, not shrunk
     }
 
     #[test]
@@ -454,18 +670,75 @@ mod tests {
     }
 
     #[test]
+    fn pool_grows_with_live_tokens_and_recycles_on_release() {
+        // batch 4, capacity 16, block 4 → ceiling 16 blocks; nothing is
+        // reserved up front, bytes grow block-by-block with appends,
+        // and released blocks are recycled before the pool grows again.
+        let (nh, hd, blk) = (2, 4, 4);
+        let mut c = KvCache::with_layout(2, 4, nh, hd, 16, DType::F32,
+                                         blk);
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.blocks_allocated(), 0);
+        assert_eq!(c.max_blocks(), 16);
+        let row = vec![0.25f32; nh * hd];
+        let fill = |c: &mut KvCache, seq: usize, n: usize| {
+            for _ in 0..n {
+                for l in 0..2 {
+                    c.append(l, seq, &row, &row, 1);
+                }
+                c.bump(seq, 1);
+            }
+        };
+        let s0 = c.acquire().unwrap();
+        fill(&mut c, s0, 5); // 5 tokens → 2 blocks
+        assert_eq!((c.blocks_live(), c.blocks_allocated()), (2, 2));
+        assert_eq!(c.bytes(), 2 * c.block_bytes());
+        let s1 = c.acquire().unwrap();
+        fill(&mut c, s1, 4); // exactly 1 block
+        assert_eq!((c.blocks_live(), c.blocks_allocated()), (3, 3));
+        // release s0: its 2 blocks return in O(blocks)
+        c.release(s0);
+        assert_eq!((c.blocks_live(), c.blocks_free()), (1, 2));
+        // a new sequence reuses freed blocks — allocation stays at 3
+        let s2 = c.acquire().unwrap();
+        fill(&mut c, s2, 8); // needs 2 blocks, both recycled
+        assert_eq!((c.blocks_live(), c.blocks_allocated()), (3, 3));
+        assert_eq!(c.bytes(), 3 * c.block_bytes());
+        // drain everything: free count returns to the full allocation
+        c.release(s1);
+        c.release(s2);
+        assert_eq!((c.blocks_live(), c.blocks_free()), (0, 3));
+        // the paged pool undercuts the old up-front slab by design
+        assert!(c.bytes() < c.slab_bytes(),
+                "pool {} >= slab {}", c.bytes(), c.slab_bytes());
+    }
+
+    #[test]
     fn bytes_accounting() {
-        let c = KvCache::new(2, 3, 4, 8, 16);
-        assert_eq!(c.bytes(), 2 * 2 * 3 * 4 * 16 * 8 * 4);
-        // bf16 halves the payload exactly
-        let b = KvCache::with_dtype(2, 3, 4, 8, 16, DType::Bf16);
-        assert_eq!(b.bytes(), c.bytes() / 2);
-        // int8: 1 byte/elem + one f32 scale per (seq, head, pos) row
-        let i = KvCache::with_dtype(2, 3, 4, 8, 16, DType::I8);
-        let rows = 3 * 4 * 16;
-        assert_eq!(i.bytes(), 2 * 2 * (rows * 8 + 4 * rows));
-        assert_eq!(i.dtype(), DType::I8);
-        assert_eq!(c.dtype(), DType::F32);
+        // pool bytes are exact multiples of block_bytes() and grow only
+        // with appends — never with batch or capacity headroom
+        let (nh, hd, blk) = (4, 8, 8);
+        for dtype in [DType::F32, DType::Bf16, DType::I8] {
+            let mut c = KvCache::with_layout(2, 3, nh, hd, 16, dtype,
+                                             blk);
+            assert_eq!(c.bytes(), 0, "{dtype}: nothing reserved up front");
+            let row = vec![0.5f32; nh * hd];
+            for l in 0..2 {
+                c.append(l, 0, &row, &row, 1);
+            }
+            c.bump(0, 1);
+            // one token → one block, at the dtype's storage width
+            let e = nh * blk * hd;
+            let r = nh * blk;
+            let per_buf = match dtype {
+                DType::F32 => 4 * e,
+                DType::Bf16 => 2 * e,
+                DType::I8 => e + 4 * r,
+            };
+            assert_eq!(c.block_bytes(), 2 * 2 * per_buf, "{dtype}");
+            assert_eq!(c.bytes(), c.block_bytes(), "{dtype}");
+            assert_eq!(c.dtype(), dtype);
+        }
     }
 
     #[test]
@@ -502,7 +775,9 @@ mod tests {
     #[test]
     fn quantized_chunked_append_is_position_consistent() {
         // appending in chunks quantizes exactly the same per-position
-        // rows, so chunked == one-shot bitwise for every storage mode
+        // rows, so chunked == one-shot bitwise for every storage mode —
+        // including across block boundaries (block 3 vs one-shot's
+        // identical layout)
         let mut rng = Rng::new(31);
         let (nh, hd, t, split) = (2, 8, 6, 4);
         let k = randv(nh * t * hd, &mut rng);
@@ -516,11 +791,11 @@ mod tests {
                 .collect()
         };
         for dtype in [DType::Bf16, DType::I8] {
-            let mut one = KvCache::with_dtype(1, 1, nh, hd, t, dtype);
+            let mut one = KvCache::with_layout(1, 1, nh, hd, t, dtype, 3);
             one.append(0, 0, &k, &v, t);
             one.bump(0, split); // queries sit at positions split..t
             let want = one.attend(0, 0, &q, t - split);
-            let mut two = KvCache::with_dtype(1, 1, nh, hd, t, dtype);
+            let mut two = KvCache::with_layout(1, 1, nh, hd, t, dtype, 3);
             two.append(0, 0, &part(&k, 0, split), &part(&v, 0, split),
                        split);
             two.bump(0, split);

@@ -704,6 +704,90 @@ fn attend_heads(o: &mut [f32], q: &[f32], kc: &[f32], vc: &[f32],
     }
 }
 
+/// Causal attention of a `[heads, t_new, hd]` query chunk over one
+/// sequence's **paged** KV cache.  `kp`/`vp` are whole per-layer block
+/// pools laid out `[n_blocks, heads, block, hd]`, and `table[i]` names
+/// the block holding the sequence's positions `i·block..(i+1)·block`.
+/// Query row `i` sits at absolute position `base + i` and attends to
+/// cached positions `0..base + i + 1`.
+///
+/// Mirrors [`cached_attend`] operation-for-operation — the same
+/// dot-product, max-subtraction, exp/denominator and `axpy` accumulation
+/// in the same ascending-`j` order per row; only the *address* of each
+/// K/V row is resolved through the block table — so the paged path
+/// reproduces the contiguous path bit-for-bit at any thread count (the
+/// PR 4 determinism contract, pinned by the unit tests below).
+#[allow(clippy::too_many_arguments)]
+pub fn cached_attend_paged(q: &[f32], kp: &[f32], vp: &[f32],
+                           table: &[u32], nh: usize, t_new: usize,
+                           base: usize, block: usize, hd: usize,
+                           scratch: &mut Vec<f32>) -> Vec<f32> {
+    let ctx = base + t_new;
+    debug_assert_eq!(q.len(), nh * t_new * hd, "paged attend q shape");
+    debug_assert!(table.len() * block >= ctx, "block table too short");
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut o = vec![0.0f32; nh * t_new * hd];
+    let work_per_head = t_new * ctx * hd;
+    if nh <= 1
+        || pool::threads() <= 1
+        || pool::in_serial()
+        || nh.saturating_mul(work_per_head) < 2 * MIN_TASK_WORK
+    {
+        scratch.resize(ctx, 0.0);
+        attend_heads_paged(&mut o, q, kp, vp, table, 0, nh, nh, t_new,
+                           base, block, hd, scale, scratch);
+        return o;
+    }
+    let op = SendPtr(o.as_mut_ptr());
+    par_rows(nh, work_per_head, |lo, hi| {
+        // SAFETY: tasks receive disjoint head ranges of `o`
+        let oc = unsafe { op.rows(lo, hi, t_new * hd) };
+        let mut zrow = vec![0.0f32; ctx];
+        attend_heads_paged(oc, q, kp, vp, table, lo, hi, nh, t_new,
+                           base, block, hd, scale, &mut zrow);
+    });
+    o
+}
+
+/// Serial body of [`cached_attend_paged`] for heads `lo..hi`, writing
+/// into the head-sliced output `o` (`[hi-lo, t_new, hd]`).  Identical to
+/// [`attend_heads`] except that each K/V row address goes through the
+/// block table: position `j` of head `h` lives at element offset
+/// `((table[j/block]·nh + h)·block + j%block)·hd` of the pool.
+#[allow(clippy::too_many_arguments)]
+fn attend_heads_paged(o: &mut [f32], q: &[f32], kp: &[f32], vp: &[f32],
+                      table: &[u32], lo: usize, hi: usize, nh: usize,
+                      t_new: usize, base: usize, block: usize, hd: usize,
+                      scale: f32, zrow: &mut [f32]) {
+    let row = |h: usize, j: usize| -> usize {
+        ((table[j / block] as usize * nh + h) * block + j % block) * hd
+    };
+    for h in lo..hi {
+        for i in 0..t_new {
+            let qi = &q[(h * t_new + i) * hd..(h * t_new + i + 1) * hd];
+            let ctx = base + i + 1;
+            let mut zmax = f32::NEG_INFINITY;
+            for (j, zj) in zrow.iter_mut().take(ctx).enumerate() {
+                let ko = row(h, j);
+                let z = dot(qi, &kp[ko..ko + hd]) * scale;
+                *zj = z;
+                zmax = zmax.max(z);
+            }
+            let mut denom = 0.0f32;
+            for zj in zrow.iter_mut().take(ctx) {
+                *zj = (*zj - zmax).exp();
+                denom += *zj;
+            }
+            let orow = &mut o[((h - lo) * t_new + i) * hd
+                              ..((h - lo) * t_new + i + 1) * hd];
+            for (j, zj) in zrow.iter().take(ctx).enumerate() {
+                let vo = row(h, j);
+                axpy(orow, zj / denom, &vp[vo..vo + hd]);
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------------
 // Shard fan-out (data-parallel workers).
 // ---------------------------------------------------------------------
@@ -893,6 +977,51 @@ mod tests {
                 let mut scratch = Vec::new();
                 cached_attend(&q, &kc, &vc, nh, t_new, base, cap, hd,
                               &mut scratch)
+            },
+            |o| bits(o));
+    }
+
+    #[test]
+    fn paged_attend_matches_contiguous_bitwise() {
+        // Scatter the contiguous [nh, cap, hd] cache into a block pool
+        // with a deliberately shuffled block order; the paged kernel
+        // must reproduce the contiguous kernel bit-for-bit (same serial
+        // accumulation order per row — only the addresses differ).
+        let mut rng = Rng::new(11);
+        let (nh, t_new, base, hd, block) = (5, 6, 120, 16, 32);
+        let ctx = base + t_new;
+        let cap = ctx; // tight contiguous reference
+        let q = randv(nh * t_new * hd, &mut rng);
+        let kc = randv(nh * cap * hd, &mut rng);
+        let vc = randv(nh * cap * hd, &mut rng);
+        let n_blocks = ctx.div_ceil(block);
+        // table[i] = shuffled id, so pool order != position order
+        let table: Vec<u32> =
+            (0..n_blocks).map(|i| (n_blocks - 1 - i) as u32).collect();
+        let mut kp = vec![0.0f32; n_blocks * nh * block * hd];
+        let mut vp = vec![0.0f32; n_blocks * nh * block * hd];
+        for j in 0..ctx {
+            let b = table[j / block] as usize;
+            for h in 0..nh {
+                let src = (h * cap + j) * hd;
+                let dst = ((b * nh + h) * block + j % block) * hd;
+                kp[dst..dst + hd].copy_from_slice(&kc[src..src + hd]);
+                vp[dst..dst + hd].copy_from_slice(&vc[src..src + hd]);
+            }
+        }
+        let mut scratch = Vec::new();
+        let want = cached_attend(&q, &kc, &vc, nh, t_new, base, cap, hd,
+                                 &mut scratch);
+        let got = cached_attend_paged(&q, &kp, &vp, &table, nh, t_new,
+                                      base, block, hd, &mut scratch);
+        assert_eq!(bits(&got), bits(&want),
+                   "paged attend diverged from contiguous");
+        // and the paged kernel itself is thread-invariant
+        assert_thread_invariant(
+            || {
+                let mut s = Vec::new();
+                cached_attend_paged(&q, &kp, &vp, &table, nh, t_new,
+                                    base, block, hd, &mut s)
             },
             |o| bits(o));
     }

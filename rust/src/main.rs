@@ -38,6 +38,7 @@
 //!            [--adapter NAME=PATH | NAME=seed:N]...   # repeatable
 //!            [--host 127.0.0.1] [--port 8080] [--max-batch 4]
 //!            [--queue-depth 16] [--max-context 256] [--max-new 64]
+//!            [--prefill-chunk 32] [--kv-block 32]
 //!            [--quantize-base int8|bf16|f32]   # default: int8
 //!   continuous-batching HTTP server: N named LoRA adapters multiplexed
 //!   over ONE shared (int8 by default) frozen base.  POST /v1/generate
@@ -167,7 +168,10 @@ seeded demo adapter) runs a continuous-batching HTTP server that\n\
 multiplexes every named LoRA adapter over ONE shared frozen base\n\
 (int8 by default) — POST /v1/generate streams NDJSON tokens with\n\
 per-request adapter/seed/temperature/top-k/top-p; 429 + Retry-After\n\
-under backpressure; SIGTERM or POST /admin/drain drains gracefully\n\
+under backpressure; SIGTERM or POST /admin/drain drains gracefully;\n\
+KV lives in a paged block pool (--kv-block N positions/block), long\n\
+prompts prefill in --prefill-chunk N slices interleaved with decode,\n\
+and connections are HTTP/1.1 keep-alive\n\
 telemetry: `--trace-out run.jsonl` on any subcommand records phase\n\
 spans, comm rounds, switch audits and memory ledgers (math untouched);\n\
 `--trace-format chrome` emits a Perfetto/chrome://tracing file, and\n\
@@ -597,6 +601,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.parse_num("queue-depth", 16usize)?,
         max_context: args.parse_num("max-context", 256usize)?,
         default_max_new: args.parse_num("max-new", 64usize)?,
+        prefill_chunk: args.parse_num("prefill-chunk", 32usize)?,
+        kv_block: args.parse_num(
+            "kv-block",
+            switchlora::infer::kv_cache::DEFAULT_KV_BLOCK)?,
     };
     Server::bind(cfg, rt, base, registry, mc.vocab)?.run()
 }

@@ -396,6 +396,11 @@ pub fn packed_mem_rows(p: &PackedStore, base_dtype: DType) -> Vec<MemRow> {
 }
 
 /// The KV-cache row; equals `KvCache::bytes()` exactly (test-pinned).
+/// Under the paged allocator that is the *allocated block pool* — it
+/// grows with the live-token high-water mark, not the `batch ×
+/// capacity` slab the pre-paging cache reserved — and the serving
+/// scheduler pairs it with `serve.kv_blocks_live` / `serve.kv_blocks_free`
+/// gauges for the block-level view.
 pub fn kv_mem_row(cache: &KvCache) -> MemRow {
     MemRow { component: "kv_cache".to_string(),
              dtype: cache.dtype(),

@@ -167,8 +167,16 @@ pub trait InferRuntime: Send + Sync {
     }
 
     /// An empty cache shaped for this model: `batch` sequences of up to
-    /// `capacity` positions.
-    fn new_cache(&self, batch: usize, capacity: usize) -> KvCache;
+    /// `capacity` positions, K/V paged in `block`-position blocks
+    /// (`--kv-block`) allocated lazily from a shared pool.
+    fn new_cache_blocked(&self, batch: usize, capacity: usize,
+                         block: usize) -> KvCache;
+
+    /// [`InferRuntime::new_cache_blocked`] at the default block size.
+    fn new_cache(&self, batch: usize, capacity: usize) -> KvCache {
+        self.new_cache_blocked(batch, capacity,
+                               crate::infer::kv_cache::DEFAULT_KV_BLOCK)
+    }
 
     /// Width of the LM head (the sampler's domain).
     fn vocab_out(&self) -> usize;

@@ -1164,10 +1164,11 @@ impl InferRuntime for NativeModel {
         Ok(linear_fwd(&xf, src.f32s("lm_head")?, b, h, v_out))
     }
 
-    fn new_cache(&self, batch: usize, capacity: usize) -> KvCache {
+    fn new_cache_blocked(&self, batch: usize, capacity: usize,
+                         block: usize) -> KvCache {
         let mc = &self.manifest.config;
-        KvCache::with_dtype(mc.layers, batch, mc.heads, mc.head_dim(),
-                            capacity, self.policy.kv_cache)
+        KvCache::with_layout(mc.layers, batch, mc.heads, mc.head_dim(),
+                             capacity, self.policy.kv_cache, block)
     }
 
     fn vocab_out(&self) -> usize {

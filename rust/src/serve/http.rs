@@ -1,9 +1,21 @@
 //! Thin HTTP/1.1 framing over std I/O — just enough protocol for the
 //! serving endpoints: request-line + header parsing with a
 //! `Content-Length` body, fixed responses, and a chunked
-//! `Transfer-Encoding` writer for streaming token output.  One request
-//! per connection (`Connection: close`), generic over `Read`/`Write` so
-//! the parsers unit-test against in-memory buffers.
+//! `Transfer-Encoding` writer for streaming token output.  Connections
+//! are **persistent** (HTTP/1.1 keep-alive): each response advertises
+//! `Connection: keep-alive` or `close` per request — honoring the
+//! client's `Connection` header and the HTTP/1.0 default — and the
+//! server loops reading requests off one socket until the client closes,
+//! asks to, idles out, or hits the per-connection request bound.
+//!
+//! Every response goes out in as few `write` syscalls as possible: fixed
+//! responses are one buffer (head + body), and each streamed chunk is
+//! one buffer (size line + payload + CRLF).  With `TCP_NODELAY` set on
+//! accepted sockets, a token chunk is exactly one small packet on the
+//! wire instead of three Nagle-delayed fragments.
+//!
+//! Generic over `Read`/`Write` so the parsers unit-test against
+//! in-memory buffers.
 
 use std::io::{BufRead, Read, Write};
 
@@ -22,6 +34,9 @@ pub struct Request {
     /// name/value pairs in arrival order; names matched case-insensitively
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// protocol minor version: true for HTTP/1.1 (persistent by
+    /// default), false for HTTP/1.0 (close by default)
+    pub http11: bool,
 }
 
 impl Request {
@@ -30,6 +45,25 @@ impl Request {
             .iter()
             .find(|(k, _)| k.eq_ignore_ascii_case(name))
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client wants the connection kept open after this
+    /// request: an explicit `Connection: close` / `keep-alive` token
+    /// wins, otherwise HTTP/1.1 defaults to persistent and HTTP/1.0 to
+    /// close.
+    pub fn wants_keep_alive(&self) -> bool {
+        if let Some(v) = self.header("connection") {
+            for tok in v.split(',') {
+                let tok = tok.trim();
+                if tok.eq_ignore_ascii_case("close") {
+                    return false;
+                }
+                if tok.eq_ignore_ascii_case("keep-alive") {
+                    return true;
+                }
+            }
+        }
+        self.http11
     }
 }
 
@@ -53,6 +87,7 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
     let version = parts.next().context("request line without version")?;
     ensure!(version.starts_with("HTTP/1."),
             "unsupported protocol version {version}");
+    let http11 = version != "HTTP/1.0";
     let mut headers = Vec::new();
     loop {
         let mut hl = String::new();
@@ -83,7 +118,7 @@ pub fn read_request(r: &mut impl BufRead) -> Result<Option<Request>> {
     let mut body = vec![0u8; len];
     r.read_exact(&mut body).context("reading request body")?;
     if method == "GET" || method == "POST" || method == "HEAD" {
-        Ok(Some(Request { method, path, headers, body }))
+        Ok(Some(Request { method, path, headers, body, http11 }))
     } else {
         bail!("unsupported method {method}")
     }
@@ -103,49 +138,67 @@ pub fn reason(status: u16) -> &'static str {
     }
 }
 
+/// The `Connection` header value for a response.
+fn conn_value(keep_alive: bool) -> &'static str {
+    if keep_alive { "keep-alive" } else { "close" }
+}
+
 /// Write a complete fixed-length response (plus `extra` headers, e.g.
-/// `Retry-After` on a 429) and flush.
+/// `Retry-After` on a 429) and flush.  Head and body are assembled into
+/// one buffer — a single `write` syscall on a socket.
 pub fn respond(w: &mut impl Write, status: u16, content_type: &str,
-               body: &[u8], extra: &[(&str, &str)])
+               body: &[u8], extra: &[(&str, &str)], keep_alive: bool)
     -> std::io::Result<()> {
-    write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
-    write!(w, "Content-Type: {content_type}\r\n")?;
-    write!(w, "Content-Length: {}\r\n", body.len())?;
-    write!(w, "Connection: close\r\n")?;
+    let mut buf = Vec::with_capacity(256 + body.len());
+    let _ = write!(buf, "HTTP/1.1 {} {}\r\n", status, reason(status));
+    let _ = write!(buf, "Content-Type: {content_type}\r\n");
+    let _ = write!(buf, "Content-Length: {}\r\n", body.len());
+    let _ = write!(buf, "Connection: {}\r\n", conn_value(keep_alive));
     for (k, v) in extra {
-        write!(w, "{k}: {v}\r\n")?;
+        let _ = write!(buf, "{k}: {v}\r\n");
     }
-    w.write_all(b"\r\n")?;
-    w.write_all(body)?;
+    buf.extend_from_slice(b"\r\n");
+    buf.extend_from_slice(body);
+    w.write_all(&buf)?;
     w.flush()
 }
 
 /// [`respond`] with a JSON body (newline-terminated).
 pub fn respond_json(w: &mut impl Write, status: u16,
-                    body: &crate::util::json::Json)
+                    body: &crate::util::json::Json, keep_alive: bool)
     -> std::io::Result<()> {
     let mut s = body.to_string();
     s.push('\n');
-    respond(w, status, "application/json", s.as_bytes(), &[])
+    respond(w, status, "application/json", s.as_bytes(), &[], keep_alive)
 }
 
 /// Chunked `Transfer-Encoding` writer: each [`ChunkedWriter::chunk`] is
 /// flushed immediately, so the peer sees tokens as they decode — the
 /// "streamed tokens arrive incrementally" property the serve smoke test
-/// asserts.  Call [`ChunkedWriter::finish`] to write the terminal chunk.
+/// asserts.  Size line, payload and trailing CRLF are coalesced into
+/// ONE `write` syscall per chunk (three separate writes would interact
+/// badly with Nagle on a streaming connection).  Call
+/// [`ChunkedWriter::finish`] to write the terminal chunk.
 pub struct ChunkedWriter<'a, W: Write> {
     w: &'a mut W,
+    /// chunk assembly buffer, reused across tokens
+    buf: Vec<u8>,
 }
 
 impl<'a, W: Write> ChunkedWriter<'a, W> {
-    pub fn start(w: &'a mut W, status: u16, content_type: &str)
+    pub fn start(w: &'a mut W, status: u16, content_type: &str,
+                 keep_alive: bool)
         -> std::io::Result<ChunkedWriter<'a, W>> {
-        write!(w, "HTTP/1.1 {} {}\r\n", status, reason(status))?;
-        write!(w, "Content-Type: {content_type}\r\n")?;
-        write!(w, "Transfer-Encoding: chunked\r\n")?;
-        write!(w, "Connection: close\r\n\r\n")?;
+        let mut buf = Vec::with_capacity(256);
+        let _ = write!(buf, "HTTP/1.1 {} {}\r\n", status, reason(status));
+        let _ = write!(buf, "Content-Type: {content_type}\r\n");
+        let _ = write!(buf, "Transfer-Encoding: chunked\r\n");
+        let _ = write!(buf, "Connection: {}\r\n\r\n",
+                       conn_value(keep_alive));
+        w.write_all(&buf)?;
         w.flush()?;
-        Ok(ChunkedWriter { w })
+        buf.clear();
+        Ok(ChunkedWriter { w, buf })
     }
 
     pub fn chunk(&mut self, data: &[u8]) -> std::io::Result<()> {
@@ -153,9 +206,11 @@ impl<'a, W: Write> ChunkedWriter<'a, W> {
             // a zero-length chunk is the stream terminator; skip
             return Ok(());
         }
-        write!(self.w, "{:x}\r\n", data.len())?;
-        self.w.write_all(data)?;
-        self.w.write_all(b"\r\n")?;
+        self.buf.clear();
+        let _ = write!(self.buf, "{:x}\r\n", data.len());
+        self.buf.extend_from_slice(data);
+        self.buf.extend_from_slice(b"\r\n");
+        self.w.write_all(&self.buf)?;
         self.w.flush()
     }
 
@@ -209,6 +264,31 @@ mod tests {
         assert_eq!(req.header("content-type"), Some("application/json"));
         assert_eq!(req.header("HOST"), Some("x"));
         assert_eq!(req.body, b"{\"\"}");
+        assert!(req.http11 && req.wants_keep_alive());
+    }
+
+    #[test]
+    fn connection_semantics_follow_header_and_version() {
+        let parse = |raw: &str| {
+            read_request(&mut Cursor::new(raw.as_bytes().to_vec()))
+                .unwrap()
+                .unwrap()
+        };
+        // HTTP/1.1 defaults to keep-alive; Connection: close overrides
+        assert!(parse("GET / HTTP/1.1\r\n\r\n").wants_keep_alive());
+        assert!(!parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .wants_keep_alive());
+        assert!(!parse("GET / HTTP/1.1\r\nConnection: CLOSE\r\n\r\n")
+            .wants_keep_alive());
+        // HTTP/1.0 defaults to close; Connection: keep-alive overrides
+        assert!(!parse("GET / HTTP/1.0\r\n\r\n").wants_keep_alive());
+        assert!(
+            parse("GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n")
+                .wants_keep_alive());
+        // token lists are scanned, not string-matched
+        assert!(!parse(
+            "GET / HTTP/1.1\r\nConnection: foo, close\r\n\r\n")
+            .wants_keep_alive());
     }
 
     #[test]
@@ -230,21 +310,28 @@ mod tests {
     fn fixed_response_roundtrip() {
         let mut out = Vec::new();
         respond(&mut out, 429, "application/json", b"{}",
-                &[("Retry-After", "1")])
+                &[("Retry-After", "1")], false)
             .unwrap();
         let s = String::from_utf8(out).unwrap();
         assert!(s.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{s}");
         assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
         assert!(s.contains("Retry-After: 1\r\n"));
         assert!(s.ends_with("\r\n\r\n{}"));
+        // keep-alive responses advertise it so clients reuse the socket
+        let mut out = Vec::new();
+        respond(&mut out, 200, "application/json", b"{}", &[], true)
+            .unwrap();
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.contains("Connection: keep-alive\r\n"), "{s}");
     }
 
     #[test]
     fn chunked_stream_roundtrip() {
         let mut out = Vec::new();
-        let mut cw =
-            ChunkedWriter::start(&mut out, 200, "application/x-ndjson")
-                .unwrap();
+        let mut cw = ChunkedWriter::start(&mut out, 200,
+                                          "application/x-ndjson", true)
+            .unwrap();
         cw.chunk(b"{\"token\":1}\n").unwrap();
         cw.chunk(b"").unwrap(); // no-op, must not terminate the stream
         cw.chunk(b"{\"done\":true}\n").unwrap();
@@ -252,6 +339,7 @@ mod tests {
         let s = String::from_utf8(out.clone()).unwrap();
         let head_end = s.find("\r\n\r\n").unwrap() + 4;
         assert!(s.contains("Transfer-Encoding: chunked\r\n"));
+        assert!(s.contains("Connection: keep-alive\r\n"));
         let body = decode_chunked(&out[head_end..]).unwrap();
         assert_eq!(body, b"{\"token\":1}\n{\"done\":true}\n");
     }

@@ -3,12 +3,22 @@
 //! One scheduler thread owns the model runtime, the shared base
 //! parameters, the adapter registry and the KV cache; handler threads
 //! only touch the bounded admission [`Queue`].  Each loop iteration
-//! admits queued requests into free cache slots (prefill + first
-//! token), then advances every active sequence by one token with a
-//! single batched `decode_adapted` call — so a request joins the batch
-//! mid-flight, streams tokens over its channel as they decode, and
-//! leaves on stop/length without stalling its peers, whose cache slot
-//! the next admission reclaims.
+//! admits queued requests into free cache slots, advances at most one
+//! pending prefill by one `--prefill-chunk` slice, then advances every
+//! active sequence by one token with a single batched `decode_adapted`
+//! call — so a request joins the batch mid-flight, streams tokens over
+//! its channel as they decode, and leaves on stop/length without
+//! stalling its peers, whose cache slot the next admission reclaims.
+//!
+//! **Chunked prefill:** a long prompt no longer monopolizes the loop.
+//! Its prefill runs `--prefill-chunk` tokens at a time, one chunk per
+//! iteration, interleaved with the batch's decode steps — so an
+//! in-flight peer's time-between-tokens is bounded by one chunk of
+//! forward work, not by the whole joining prompt.  Chunking is
+//! *token-identical* to monolithic prefill: each cached position's K/V
+//! and the final position's logits depend only on its own row and the
+//! rows before it, so splitting the prompt changes addresses, never
+//! values (`rust/tests/serving.rs` pins the streams equal).
 //!
 //! Determinism: a request's sampling stream is `Rng::new(seed).fork(0)`
 //! — the same stream a solo `generate` run at sequence index 0 uses —
@@ -17,9 +27,13 @@
 //! (`rust/tests/serving.rs` pins this bitwise).
 //!
 //! Backpressure: [`Queue::push`] rejects when `--queue-depth` requests
-//! are already waiting (the handler answers 429) or once a drain has
-//! begun (503).  Graceful drain: everything already admitted or queued
-//! runs to completion; only new arrivals are refused.
+//! are already waiting across all tenants (the handler answers 429) or
+//! once a drain has begun (503).  Admission is **fair per tenant**: the
+//! queue keeps one FIFO lane per adapter name and hands requests out
+//! round-robin across non-empty lanes, so one chatty tenant can fill
+//! its own lane but cannot starve a quieter one out of decode slots.
+//! Graceful drain: everything already admitted or queued runs to
+//! completion; only new arrivals are refused.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -97,12 +111,40 @@ pub enum Admission {
 }
 
 struct QueueInner {
-    pending: VecDeque<ServeRequest>,
+    /// one FIFO lane per tenant (adapter name, or "base" for bare-base
+    /// requests), in first-arrival order; lanes persist once created so
+    /// the round-robin cursor stays meaningful
+    lanes: Vec<(String, VecDeque<ServeRequest>)>,
+    /// next lane the round-robin scan starts from
+    cursor: usize,
+    /// requests waiting across all lanes (the `--queue-depth` bound)
+    total: usize,
     draining: bool,
 }
 
+impl QueueInner {
+    /// Pop round-robin: the first non-empty lane at or after `cursor`,
+    /// then advance the cursor past it so the next pop favors the next
+    /// tenant.  Single-tenant traffic degenerates to plain FIFO.
+    fn pop_rr(&mut self) -> Option<ServeRequest> {
+        if self.total == 0 || self.lanes.is_empty() {
+            return None;
+        }
+        let n = self.lanes.len();
+        for i in 0..n {
+            let at = (self.cursor + i) % n;
+            if let Some(req) = self.lanes[at].1.pop_front() {
+                self.cursor = (at + 1) % n;
+                self.total -= 1;
+                return Some(req);
+            }
+        }
+        None
+    }
+}
+
 /// Bounded MPSC admission queue between handler threads and the
-/// scheduler thread.
+/// scheduler thread: one FIFO lane per tenant, handed out round-robin.
 pub struct Queue {
     inner: Mutex<QueueInner>,
     cv: Condvar,
@@ -114,7 +156,9 @@ impl Queue {
         assert!(depth > 0, "queue depth must be positive");
         Queue {
             inner: Mutex::new(QueueInner {
-                pending: VecDeque::new(),
+                lanes: Vec::new(),
+                cursor: 0,
+                total: 0,
                 draining: false,
             }),
             cv: Condvar::new(),
@@ -124,22 +168,31 @@ impl Queue {
 
     /// Try to enqueue; on `Full`/`Draining` the request is dropped here
     /// (the handler still owns the receiving end and answers the client
-    /// itself).
+    /// itself).  The depth bound is global across tenants — fairness
+    /// shapes *dequeue* order, not queue capacity.
     pub fn push(&self, req: ServeRequest) -> Admission {
         let mut g = self.inner.lock().unwrap();
         if g.draining {
             return Admission::Draining;
         }
-        if g.pending.len() >= self.depth {
+        if g.total >= self.depth {
             return Admission::Full;
         }
-        g.pending.push_back(req);
+        let tenant = req.adapter.as_deref().unwrap_or("base");
+        match g.lanes.iter_mut().find(|(n, _)| n == tenant) {
+            Some((_, lane)) => lane.push_back(req),
+            None => {
+                let name = tenant.to_string();
+                g.lanes.push((name, VecDeque::from([req])));
+            }
+        }
+        g.total += 1;
         self.cv.notify_one();
         Admission::Queued
     }
 
     pub fn try_pop(&self) -> Option<ServeRequest> {
-        self.inner.lock().unwrap().pending.pop_front()
+        self.inner.lock().unwrap().pop_rr()
     }
 
     /// Block up to `timeout` for a request (the scheduler's idle wait).
@@ -149,18 +202,31 @@ impl Queue {
         let (mut g, _) = self
             .cv
             .wait_timeout_while(g, timeout, |i| {
-                i.pending.is_empty() && !i.draining
+                i.total == 0 && !i.draining
             })
             .unwrap();
-        g.pending.pop_front()
+        g.pop_rr()
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().pending.len()
+        self.inner.lock().unwrap().total
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Queued depth per tenant lane (the `serve.queued.<tenant>` gauges
+    /// and the `/healthz` breakdown).  Lanes a tenant has touched stay
+    /// listed at 0 so the gauge series doesn't vanish between bursts.
+    pub fn depths(&self) -> Vec<(String, usize)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .lanes
+            .iter()
+            .map(|(n, l)| (n.clone(), l.len()))
+            .collect()
     }
 
     /// Refuse new admissions; everything already queued still runs.
@@ -210,6 +276,14 @@ struct Active {
     n_gen: usize,
 }
 
+/// A request mid-prefill: it owns a cache slot and has cached
+/// `done` prompt tokens so far; the next chunk continues from there.
+struct Prefilling {
+    slot: usize,
+    req: ServeRequest,
+    done: usize,
+}
+
 /// The continuous-batching loop.  Owns the KV cache; borrows the
 /// runtime, the ONE shared base `ParamSource` and the adapter registry
 /// for its lifetime — per-request state never includes parameters,
@@ -220,6 +294,11 @@ pub struct Scheduler<'a> {
     adapters: &'a BTreeMap<String, AdapterSet>,
     cache: KvCache,
     active: Vec<Active>,
+    /// admitted requests whose prompts are still being prefilled,
+    /// advanced one `prefill_chunk` per loop iteration in FIFO order
+    prefilling: VecDeque<Prefilling>,
+    /// prompt tokens prefilled per iteration; 0 = whole prompt at once
+    prefill_chunk: usize,
 }
 
 impl<'a> Scheduler<'a> {
@@ -228,14 +307,34 @@ impl<'a> Scheduler<'a> {
     pub fn new(rt: &'a dyn InferRuntime, base: &'a dyn ParamSource,
                adapters: &'a BTreeMap<String, AdapterSet>, cache: KvCache)
         -> Scheduler<'a> {
-        Scheduler { rt, base, adapters, cache, active: Vec::new() }
+        Scheduler {
+            rt,
+            base,
+            adapters,
+            cache,
+            active: Vec::new(),
+            prefilling: VecDeque::new(),
+            prefill_chunk: 0,
+        }
+    }
+
+    /// Prefill prompts `chunk` tokens at a time (`--prefill-chunk`),
+    /// interleaved with decode steps; 0 keeps monolithic prefill.  The
+    /// token streams are identical either way — chunking only bounds
+    /// how long peers wait between their own tokens.
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Scheduler<'a> {
+        self.prefill_chunk = chunk;
+        self
     }
 
     /// Serve until `queue` is draining and no work remains.  Everything
     /// admitted or queued before the drain began runs to completion.
     pub fn run(&mut self, queue: &Queue, stats: &ServeStats) {
         loop {
-            while self.active.len() < self.cache.batch {
+            // prefilling requests hold slots too — don't over-admit
+            while self.active.len() + self.prefilling.len()
+                < self.cache.batch
+            {
                 match queue.try_pop() {
                     Some(r) => self.admit(r, stats),
                     None => break,
@@ -248,8 +347,17 @@ impl<'a> Scheduler<'a> {
             if obs::enabled() {
                 obs::gauge("serve.queue_depth", queue.len() as f64);
                 obs::gauge("serve.active", self.active.len() as f64);
+                for (tenant, depth) in queue.depths() {
+                    obs::gauge(&format!("serve.queued.{tenant}"),
+                               depth as f64);
+                }
+                obs::gauge("serve.kv_blocks_live",
+                           self.cache.blocks_live() as f64);
+                obs::gauge("serve.kv_blocks_free",
+                           self.cache.blocks_free() as f64);
+                obs::gauge("serve.kv_bytes", self.cache.bytes() as f64);
             }
-            if self.active.is_empty() {
+            if self.active.is_empty() && self.prefilling.is_empty() {
                 if queue.is_draining() && queue.is_empty() {
                     break;
                 }
@@ -260,26 +368,26 @@ impl<'a> Scheduler<'a> {
                 }
                 continue;
             }
+            // one prefill chunk, then one decode step: an in-flight
+            // peer waits at most one chunk of forward work per token
+            self.advance_prefill(stats);
             self.step(stats);
         }
     }
 
-    /// Admit one request: claim a slot, prefill, sample + stream the
-    /// first token.  Any failure is reported on the request's channel
-    /// and never disturbs the rest of the batch.
+    /// Admit one request: validate it, claim a cache slot and park it on
+    /// the prefill queue (its first chunk runs on the next loop
+    /// iteration).  Any failure is reported on the request's channel and
+    /// never disturbs the rest of the batch.
     fn admit(&mut self, req: ServeRequest, stats: &ServeStats) {
-        let adapter = match &req.adapter {
-            Some(name) => match self.adapters.get(name) {
-                Some(a) => Some(a),
-                None => {
-                    let _ = req.tx.send(TokenEvent::Error(format!(
-                        "unknown adapter {name:?}")));
-                    stats.rejected.fetch_add(1, Ordering::Relaxed);
-                    return;
-                }
-            },
-            None => None,
-        };
+        if let Some(name) = &req.adapter {
+            if !self.adapters.contains_key(name) {
+                let _ = req.tx.send(TokenEvent::Error(format!(
+                    "unknown adapter {name:?}")));
+                stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
         if req.prompt.is_empty()
             || req.prompt.len() > self.cache.capacity
         {
@@ -290,27 +398,57 @@ impl<'a> Scheduler<'a> {
             return;
         }
         let Some(slot) = self.cache.acquire() else {
-            // active.len() < cache.batch implies a free slot; report
-            // rather than trusting the invariant with a panic
+            // active + prefilling < cache.batch implies a free slot;
+            // report rather than trusting the invariant with a panic
             let _ = req.tx.send(TokenEvent::Error(
                 "no free cache slot".to_string()));
             stats.rejected.fetch_add(1, Ordering::Relaxed);
             return;
         };
+        self.prefilling.push_back(Prefilling { slot, req, done: 0 });
+    }
+
+    /// Advance the oldest pending prefill by one chunk; on the last
+    /// chunk, sample + stream the first token and move the request into
+    /// the decode batch.  Chunked and monolithic prefill produce the
+    /// same cached K/V and the same final-position logits (each
+    /// position's forward depends only on itself and earlier positions),
+    /// so the resulting token stream is pinned identical.
+    fn advance_prefill(&mut self, stats: &ServeStats) {
+        let Some(mut p) = self.prefilling.pop_front() else {
+            return;
+        };
+        let chunk = if self.prefill_chunk == 0 {
+            p.req.prompt.len()
+        } else {
+            self.prefill_chunk
+        };
+        let hi = (p.done + chunk).min(p.req.prompt.len());
+        let adapter = p.req.adapter.as_deref()
+            .and_then(|n| self.adapters.get(n));
         let sp = obs::span("serve", "prefill");
         let logits = match self.rt.prefill_adapted(
-            self.base, adapter, &mut self.cache, slot, &req.prompt)
+            self.base, adapter, &mut self.cache, p.slot,
+            &p.req.prompt[p.done..hi])
         {
             Ok(l) => l,
             Err(e) => {
-                self.cache.release(slot);
-                let _ =
-                    req.tx.send(TokenEvent::Error(format!("prefill: {e}")));
+                self.cache.release(p.slot);
+                let _ = p.req.tx
+                    .send(TokenEvent::Error(format!("prefill: {e}")));
                 stats.rejected.fetch_add(1, Ordering::Relaxed);
                 return;
             }
         };
         sp.done();
+        p.done = hi;
+        if p.done < p.req.prompt.len() {
+            // more chunks to go; intermediate logits are discarded
+            self.prefilling.push_front(p);
+            return;
+        }
+        let req = p.req;
+        let slot = p.slot;
         if obs::enabled() {
             obs::hist_record(
                 "serve.ttft_us",
@@ -447,9 +585,14 @@ mod tests {
     use std::sync::mpsc::channel;
 
     fn dummy_request(id: u64, tx: Sender<TokenEvent>) -> ServeRequest {
+        tenant_request(id, None, tx)
+    }
+
+    fn tenant_request(id: u64, adapter: Option<&str>,
+                      tx: Sender<TokenEvent>) -> ServeRequest {
         ServeRequest {
             id,
-            adapter: None,
+            adapter: adapter.map(str::to_string),
             prompt: vec![1, 2, 3],
             spec: SamplingSpec {
                 sampler: Sampler::greedy(),
@@ -486,6 +629,34 @@ mod tests {
         let t0 = Instant::now();
         assert!(q.pop_wait(Duration::from_secs(5)).is_none());
         assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn queue_round_robins_across_tenants() {
+        // a chatty tenant fills the queue but dequeue order interleaves
+        // every waiting tenant: one request each per rotation
+        let q = Queue::new(16);
+        let (tx, _rx) = channel();
+        for id in [1, 2, 3] {
+            q.push(tenant_request(id, Some("chatty"), tx.clone()));
+        }
+        q.push(tenant_request(10, Some("quiet"), tx.clone()));
+        q.push(tenant_request(20, None, tx.clone())); // "base" lane
+        q.push(tenant_request(11, Some("quiet"), tx.clone()));
+        let depths = q.depths();
+        assert_eq!(depths, vec![("chatty".to_string(), 3),
+                                ("quiet".to_string(), 2),
+                                ("base".to_string(), 1)]);
+        let order: Vec<u64> =
+            (0..6).map(|_| q.try_pop().unwrap().id).collect();
+        // rotation 1: chatty, quiet, base; rotation 2: chatty, quiet;
+        // rotation 3: chatty — FIFO within each lane throughout
+        assert_eq!(order, vec![1, 10, 20, 2, 11, 3]);
+        assert!(q.try_pop().is_none());
+        // drained lanes stay listed at depth 0 for the gauges
+        assert_eq!(q.depths(), vec![("chatty".to_string(), 0),
+                                    ("quiet".to_string(), 0),
+                                    ("base".to_string(), 0)]);
     }
 
     #[test]

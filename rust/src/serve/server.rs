@@ -3,12 +3,21 @@
 //!
 //! Thread shape: the caller's thread becomes the scheduler (it owns the
 //! runtime, the ONE shared base and the KV cache); one accept thread
-//! hands each connection to a short-lived handler thread; handlers talk
-//! to the scheduler only through the bounded [`Queue`] and a per-request
-//! mpsc channel.  On SIGTERM/SIGINT (or `POST /admin/drain`) the accept
+//! hands each connection to a handler thread; handlers talk to the
+//! scheduler only through the bounded [`Queue`] and a per-request mpsc
+//! channel.  On SIGTERM/SIGINT (or `POST /admin/drain`) the accept
 //! thread begins a drain: new requests get 503, everything admitted or
 //! queued streams to completion, then the scheduler exits and
 //! [`Server::run`] returns — clean shutdown with no truncated streams.
+//!
+//! Connections are persistent (HTTP/1.1 keep-alive): a handler thread
+//! serves requests off one socket in a loop until the client sends
+//! `Connection: close` (or speaks HTTP/1.0 without `keep-alive`), goes
+//! idle past [`IDLE_TIMEOUT`], hits the [`MAX_REQUESTS_PER_CONN`]
+//! bound, or the server starts draining — whichever comes first.  This
+//! removes a TCP handshake (and two TIME_WAIT sockets) per request for
+//! chatty clients; `tools/serve_smoke.py` and the serve bench exercise
+//! the reuse path.
 //!
 //! Routes:
 //! * `GET  /healthz` — liveness + queue/stream counters.
@@ -227,6 +236,13 @@ pub struct ServeConfig {
     pub max_context: usize,
     /// `max_new` when the request body leaves it unset
     pub default_max_new: usize,
+    /// prompt tokens prefilled per scheduler iteration (0 = whole
+    /// prompt at once); bounds how long a long prompt can stall the
+    /// decode batch between token emissions
+    pub prefill_chunk: usize,
+    /// positions per paged-KV block; pool bytes grow in units of
+    /// `block × heads × head_dim` per layer side
+    pub kv_block: usize,
 }
 
 impl Default for ServeConfig {
@@ -238,6 +254,8 @@ impl Default for ServeConfig {
             queue_depth: 16,
             max_context: 256,
             default_max_new: 64,
+            prefill_chunk: 32,
+            kv_block: crate::infer::kv_cache::DEFAULT_KV_BLOCK,
         }
     }
 }
@@ -278,6 +296,7 @@ impl Server {
                 "--max-context must fit a prompt token and a generated \
                  token");
         ensure!(cfg.default_max_new >= 1, "--max-new must be >= 1");
+        ensure!(cfg.kv_block >= 1, "--kv-block must be >= 1");
         let listener =
             TcpListener::bind(format!("{}:{}", cfg.host, cfg.port))
                 .with_context(|| {
@@ -312,10 +331,12 @@ impl Server {
         let addr = listener.local_addr()?;
         crate::info!(
             "serving on http://{addr} — base: {}; {} adapter(s): [{}]; \
-             max-batch {}, queue-depth {}, max-context {}",
+             max-batch {}, queue-depth {}, max-context {}, \
+             prefill-chunk {}, kv-block {}",
             base.describe(), registry.len(),
             shared.adapter_names.join(", "), cfg.max_batch,
-            cfg.queue_depth, cfg.max_context);
+            cfg.queue_depth, cfg.max_context, cfg.prefill_chunk,
+            cfg.kv_block);
         // the ONE machine-readable stdout line: how tools/serve_smoke.py
         // discovers a --port 0 server's actual port
         let ready = Json::obj(vec![(
@@ -362,7 +383,15 @@ impl Server {
             }
             handlers
         });
-        let cache = rt.new_cache(cfg.max_batch, cfg.max_context);
+        let cache = rt.new_cache_blocked(cfg.max_batch, cfg.max_context,
+                                         cfg.kv_block);
+        crate::info!(
+            "paged KV pool: up to {} blocks of {} positions ({} each, \
+             {} ceiling); nothing pre-reserved",
+            cache.max_blocks(), cache.block,
+            human_bytes(cache.block_bytes() as u64),
+            human_bytes(
+                (cache.max_blocks() * cache.block_bytes()) as u64));
         if let BaseSource::Packed { store, dtype } = &base {
             // the zero-base-duplication ledger: one frozen-base copy no
             // matter how many tenants; totals equal resident_bytes()
@@ -380,6 +409,7 @@ impl Server {
         }
         Scheduler::new(rt.as_ref(), base.as_source(), registry.map(),
                        cache)
+            .with_prefill_chunk(cfg.prefill_chunk)
             .run(&shared.queue, &shared.stats);
         // scheduler exited: drain is complete; reap the I/O threads
         let handlers = accept
@@ -411,7 +441,28 @@ impl Server {
     }
 }
 
-/// One connection, one request (`Connection: close`).
+/// How long a kept-alive connection may sit idle between requests
+/// before the handler closes it.  Doubles as the per-read timeout while
+/// parsing a request, so a stalled client cannot pin a thread.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Requests served per connection before the handler closes it anyway —
+/// bounds how long one socket can monopolise a handler thread.
+const MAX_REQUESTS_PER_CONN: usize = 128;
+
+/// `true` when an error chain bottoms out in a read timeout — a
+/// kept-alive client that simply stopped talking, not a protocol error.
+fn is_idle_timeout(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| {
+        c.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(io.kind(),
+                     std::io::ErrorKind::TimedOut
+                     | std::io::ErrorKind::WouldBlock)
+        })
+    })
+}
+
+/// One connection, many requests (HTTP/1.1 keep-alive).
 fn handle(stream: TcpStream, shared: &Arc<Shared>) {
     if let Err(e) = try_handle(stream, shared) {
         crate::debuglog!("handler: {e:#}");
@@ -421,49 +472,85 @@ fn handle(stream: TcpStream, shared: &Arc<Shared>) {
 fn try_handle(stream: TcpStream, shared: &Arc<Shared>) -> Result<()> {
     // the listener is non-blocking; its accepted sockets must not be
     stream.set_nonblocking(false)?;
-    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    stream.set_read_timeout(Some(IDLE_TIMEOUT))?;
     stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    // token lines are tiny; never let Nagle hold one back
     let _ = stream.set_nodelay(true);
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut w = stream;
-    let req = match http::read_request(&mut reader) {
-        Ok(Some(r)) => r,
-        Ok(None) => return Ok(()), // clean close before any bytes
-        Err(e) => {
-            let body = Json::obj(vec![(
-                "error", Json::str(&format!("{e:#}")))]);
-            http::respond_json(&mut w, 400, &body)?;
+    for served in 0.. {
+        let req = match http::read_request(&mut reader) {
+            Ok(Some(r)) => r,
+            Ok(None) => return Ok(()), // clean close between requests
+            Err(e) if is_idle_timeout(&e) => return Ok(()),
+            Err(e) => {
+                let body = Json::obj(vec![(
+                    "error", Json::str(&format!("{e:#}")))]);
+                http::respond_json(&mut w, 400, &body, false)?;
+                return Ok(());
+            }
+        };
+        // draining forces close so handler threads exit with the
+        // scheduler instead of idling out one by one
+        let keep = req.wants_keep_alive()
+            && served + 1 < MAX_REQUESTS_PER_CONN
+            && !shared.queue.is_draining();
+        let open = route(&mut w, &req, shared, keep)?;
+        if !(keep && open) {
             return Ok(());
         }
-    };
+    }
+    Ok(())
+}
+
+/// Dispatch one request.  `keep` is what the response headers promise;
+/// the return value is whether the connection is actually still usable
+/// (`false` when a streaming client hung up mid-response).
+fn route(w: &mut TcpStream, req: &Request, shared: &Arc<Shared>,
+         keep: bool) -> Result<bool> {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => healthz(&mut w, shared),
-        ("GET", "/v1/adapters") => adapters_route(&mut w, shared),
+        ("GET", "/healthz") => {
+            healthz(w, shared, keep)?;
+            Ok(keep)
+        }
+        ("GET", "/v1/adapters") => {
+            adapters_route(w, shared, keep)?;
+            Ok(keep)
+        }
         ("POST", "/admin/drain") => {
             shared.shutdown.store(true, Ordering::SeqCst);
             let body = Json::obj(vec![("draining", Json::Bool(true))]);
-            http::respond_json(&mut w, 200, &body)?;
-            Ok(())
+            // the drain request itself never keeps the socket open
+            http::respond_json(w, 200, &body, false)?;
+            Ok(false)
         }
-        ("POST", "/v1/generate") => generate_route(&mut w, &req, shared),
+        ("POST", "/v1/generate") => generate_route(w, req, shared, keep),
         _ => {
             let body = Json::obj(vec![(
                 "error",
                 Json::str(&format!("no route {} {}", req.method,
                                    req.path)))]);
-            http::respond_json(&mut w, 404, &body)?;
-            Ok(())
+            http::respond_json(w, 404, &body, keep)?;
+            Ok(keep)
         }
     }
 }
 
-fn healthz(w: &mut TcpStream, shared: &Arc<Shared>) -> Result<()> {
+fn healthz(w: &mut TcpStream, shared: &Arc<Shared>, keep: bool)
+    -> Result<()> {
     let s = &shared.stats;
+    let by_tenant: BTreeMap<String, Json> = shared
+        .queue
+        .depths()
+        .into_iter()
+        .map(|(n, d)| (n, Json::num(d as f64)))
+        .collect();
     let body = Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("draining", Json::Bool(shared.queue.is_draining())),
         ("active", Json::num(s.active.load(Ordering::Relaxed) as f64)),
         ("queued", Json::num(shared.queue.len() as f64)),
+        ("queued_by_tenant", Json::Obj(by_tenant)),
         ("received",
          Json::num(s.received.load(Ordering::Relaxed) as f64)),
         ("completed",
@@ -479,11 +566,12 @@ fn healthz(w: &mut TcpStream, shared: &Arc<Shared>) -> Result<()> {
              .map(|n| Json::str(n))
              .collect())),
     ]);
-    http::respond_json(w, 200, &body)?;
+    http::respond_json(w, 200, &body, keep)?;
     Ok(())
 }
 
-fn adapters_route(w: &mut TcpStream, shared: &Arc<Shared>) -> Result<()> {
+fn adapters_route(w: &mut TcpStream, shared: &Arc<Shared>, keep: bool)
+    -> Result<()> {
     let arr = shared
         .adapter_ledger
         .iter()
@@ -492,7 +580,7 @@ fn adapters_route(w: &mut TcpStream, shared: &Arc<Shared>) -> Result<()> {
             ("resident_bytes", Json::num(*b as f64)),
         ]))
         .collect();
-    http::respond_json(w, 200, &Json::Arr(arr))?;
+    http::respond_json(w, 200, &Json::Arr(arr), keep)?;
     Ok(())
 }
 
@@ -596,14 +684,14 @@ fn parse_generate(body: &[u8], shared: &Shared) -> Result<GenRequest> {
 const EVENT_TIMEOUT: Duration = Duration::from_secs(300);
 
 fn generate_route(w: &mut TcpStream, req: &Request,
-                  shared: &Arc<Shared>) -> Result<()> {
+                  shared: &Arc<Shared>, keep: bool) -> Result<bool> {
     let gr = match parse_generate(&req.body, shared) {
         Ok(g) => g,
         Err(e) => {
             let body = Json::obj(vec![(
                 "error", Json::str(&format!("{e:#}")))]);
-            http::respond_json(w, 400, &body)?;
-            return Ok(());
+            http::respond_json(w, 400, &body, keep)?;
+            return Ok(keep);
         }
     };
     shared.stats.received.fetch_add(1, Ordering::Relaxed);
@@ -626,15 +714,15 @@ fn generate_route(w: &mut TcpStream, req: &Request,
                 .to_string();
             body.push('\n');
             http::respond(w, 429, "application/json", body.as_bytes(),
-                          &[("Retry-After", "1")])?;
-            return Ok(());
+                          &[("Retry-After", "1")], keep)?;
+            return Ok(keep);
         }
         Admission::Draining => {
             shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
             let body = Json::obj(vec![(
                 "error", Json::str("server is draining"))]);
-            http::respond_json(w, 503, &body)?;
-            return Ok(());
+            http::respond_json(w, 503, &body, false)?;
+            return Ok(false);
         }
         Admission::Queued => {}
     }
@@ -644,7 +732,7 @@ fn generate_route(w: &mut TcpStream, req: &Request,
         // NDJSON over chunked transfer encoding: one line per token,
         // flushed as it decodes, then a final summary line
         let mut cw =
-            ChunkedWriter::start(w, 200, "application/x-ndjson")?;
+            ChunkedWriter::start(w, 200, "application/x-ndjson", keep)?;
         loop {
             match rx.recv_timeout(EVENT_TIMEOUT) {
                 Ok(TokenEvent::Token(t)) => {
@@ -658,7 +746,7 @@ fn generate_route(w: &mut TcpStream, req: &Request,
                     if cw.chunk(line.as_bytes()).is_err() {
                         // client went away; the scheduler notices on
                         // its next send and reclaims the slot
-                        return Ok(());
+                        return Ok(false);
                     }
                 }
                 Ok(TokenEvent::Done { finish, n_generated }) => {
@@ -671,25 +759,25 @@ fn generate_route(w: &mut TcpStream, req: &Request,
                     ])
                     .to_string();
                     line.push('\n');
-                    let _ = cw.chunk(line.as_bytes());
-                    let _ = cw.finish();
-                    return Ok(());
+                    let sent = cw.chunk(line.as_bytes()).is_ok()
+                        && cw.finish().is_ok();
+                    return Ok(keep && sent);
                 }
                 Ok(TokenEvent::Error(e)) => {
                     let mut line = Json::obj(vec![(
                         "error", Json::str(&e))])
                         .to_string();
                     line.push('\n');
-                    let _ = cw.chunk(line.as_bytes());
-                    let _ = cw.finish();
-                    return Ok(());
+                    let sent = cw.chunk(line.as_bytes()).is_ok()
+                        && cw.finish().is_ok();
+                    return Ok(keep && sent);
                 }
                 Err(RecvTimeoutError::Timeout)
                 | Err(RecvTimeoutError::Disconnected) => {
                     let _ = cw.chunk(
                         b"{\"error\":\"generation stream closed\"}\n");
                     let _ = cw.finish();
-                    return Ok(());
+                    return Ok(false);
                 }
             }
         }
@@ -709,22 +797,22 @@ fn generate_route(w: &mut TcpStream, req: &Request,
                     ("finish", Json::str(finish.as_str())),
                     ("n_generated", Json::num(n_generated as f64)),
                 ]);
-                http::respond_json(w, 200, &body)?;
-                return Ok(());
+                http::respond_json(w, 200, &body, keep)?;
+                return Ok(keep);
             }
             Ok(TokenEvent::Error(e)) => {
                 let body =
                     Json::obj(vec![("error", Json::str(&e))]);
-                http::respond_json(w, 500, &body)?;
-                return Ok(());
+                http::respond_json(w, 500, &body, keep)?;
+                return Ok(keep);
             }
             Err(RecvTimeoutError::Timeout)
             | Err(RecvTimeoutError::Disconnected) => {
                 let body = Json::obj(vec![(
                     "error",
                     Json::str("generation stream closed"))]);
-                http::respond_json(w, 500, &body)?;
-                return Ok(());
+                http::respond_json(w, 500, &body, false)?;
+                return Ok(false);
             }
         }
     }
@@ -815,5 +903,9 @@ mod tests {
         let c = ServeConfig::default();
         assert_eq!(c.port, 8080);
         assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
+        assert_eq!(c.kv_block,
+                   crate::infer::kv_cache::DEFAULT_KV_BLOCK);
+        assert!(c.prefill_chunk > 0,
+                "serve should default to chunked prefill");
     }
 }

@@ -15,6 +15,19 @@
 //!   admission and slot reuse;
 //! * the HTTP server streams those tokens over chunked NDJSON and
 //!   drains cleanly on `POST /admin/drain`.
+//!
+//! ISSUE 9 (paged KV + chunked prefill + keep-alive) additions:
+//!
+//! * a paged cache decodes bitwise identically to a one-block-per-slot
+//!   (contiguous-equivalent) cache through the full model forward, for
+//!   all three KV dtypes;
+//! * chunked prefill streams exactly the tokens of monolithic prefill;
+//! * slot churn through real decodes returns every block to the pool
+//!   and reuses them instead of growing it;
+//! * one TCP connection serves several requests back to back
+//!   (keep-alive) and still honors `Connection: close`;
+//! * the serve memory ledger's KV row tracks the paged pool exactly
+//!   (`blocks_allocated × block_bytes`).
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -237,6 +250,21 @@ fn serve_ledger_total_is_exact_and_base_rows_never_grow() {
     assert_eq!(base_rows(&rows2), base_rows(&rows3));
     assert_eq!(rows3.len(), rows2.len() + 1,
                "a new tenant must add exactly one ledger row");
+
+    // the KV row tracks the paged pool exactly: zero before any token,
+    // then blocks_allocated × block_bytes — never the dense-slab size
+    assert_eq!(cache.bytes(), 0, "paged cache pre-reserved memory");
+    let mut grown = rt.new_cache_blocked(4, 64, 8);
+    let row = vec![0.5f32;
+                   man.config.heads * man.config.head_dim() * 11];
+    grown.append(0, 0, &row, &row, 11);
+    assert_eq!(grown.bytes(),
+               grown.blocks_allocated() * grown.block_bytes());
+    let rows = serve_mem_rows(&packed, DType::I8, &two, &grown);
+    let kv = rows.iter().find(|r| r.component == "kv_cache").unwrap();
+    assert_eq!(kv.bytes, grown.bytes() as u64);
+    assert!(kv.bytes < grown.slab_bytes() as u64,
+            "pool should be smaller than the retired dense slab");
 }
 
 #[test]
@@ -330,13 +358,17 @@ fn scheduler_serves_queued_requests_identically_to_solo_runs() {
 }
 
 /// One blocking HTTP exchange against `addr`; returns (status, head,
-/// raw body bytes).  The server closes the connection after each
-/// response, so EOF delimits it.
+/// raw body bytes).  Sends `Connection: close` so the (keep-alive by
+/// default) server closes after the response and EOF delimits it.
 fn http_roundtrip(addr: &str, request: &str) -> (u16, String, Vec<u8>) {
     let mut s = TcpStream::connect(addr).unwrap();
     s.write_all(request.as_bytes()).unwrap();
     let mut buf = Vec::new();
     s.read_to_end(&mut buf).unwrap();
+    split_response(&buf)
+}
+
+fn split_response(buf: &[u8]) -> (u16, String, Vec<u8>) {
     let head_end = buf
         .windows(4)
         .position(|w| w == b"\r\n\r\n")
@@ -352,10 +384,16 @@ fn http_roundtrip(addr: &str, request: &str) -> (u16, String, Vec<u8>) {
     (status, head, buf[head_end..].to_vec())
 }
 
+fn get(addr: &str, path: &str) -> (u16, String, Vec<u8>) {
+    http_roundtrip(addr, &format!(
+        "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"))
+}
+
 fn post(addr: &str, path: &str, body: &str) -> (u16, String, Vec<u8>) {
     http_roundtrip(addr, &format!(
-        "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Type: \
-         application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Type: application/json\r\nContent-Length: \
+         {}\r\n\r\n{body}",
         body.len()))
 }
 
@@ -377,6 +415,7 @@ fn http_server_streams_tokens_and_drains_cleanly() {
         queue_depth: 4,
         max_context: 64,
         default_max_new: 8,
+        ..ServeConfig::default()
     };
     let server = Server::bind(cfg, rt,
                               BaseSource::Master(base_store.clone()),
@@ -386,14 +425,13 @@ fn http_server_streams_tokens_and_drains_cleanly() {
     let handle = thread::spawn(move || server.run());
 
     // liveness + adapter listing
-    let (status, _, body) = http_roundtrip(
-        &addr, "GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n");
+    let (status, _, body) = get(&addr, "/healthz");
     assert_eq!(status, 200);
     let health =
         Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     assert!(health.get("ok").unwrap().as_bool().unwrap());
-    let (status, _, body) = http_roundtrip(
-        &addr, "GET /v1/adapters HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert!(health.opt("queued_by_tenant").is_some());
+    let (status, _, body) = get(&addr, "/v1/adapters");
     assert_eq!(status, 200);
     let ads = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     assert_eq!(ads.as_arr().unwrap().len(), 2);
@@ -444,5 +482,242 @@ fn http_server_streams_tokens_and_drains_cleanly() {
     assert_eq!(status, 200);
     let j = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
     assert!(j.get("draining").unwrap().as_bool().unwrap());
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn paged_decode_is_bitwise_contiguous_for_every_kv_dtype() {
+    // the full model forward through a finely-paged cache must emit the
+    // exact bits of a coarse one whose single block degenerates to the
+    // old contiguous slab — for every KV dtype, not just f32
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 13).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let mc = &man.config;
+    let prompt = rand_prompt(mc.vocab, 7, 61);
+    for dtype in [DType::F32, DType::BF16, DType::I8] {
+        let run = |block: usize| -> Vec<u32> {
+            let mut cache = KvCache::with_layout(
+                mc.layers, 1, mc.heads, mc.head_dim(), 32, dtype,
+                block);
+            let mut bits = Vec::new();
+            let mut y =
+                rt.prefill(&store, &mut cache, 0, &prompt).unwrap();
+            for _ in 0..10 {
+                bits.extend(y.iter().map(|x| x.to_bits()));
+                let t = argmax(&y) as i32;
+                y = rt.decode(&store, &mut cache, &[0], &[t]).unwrap();
+            }
+            bits
+        };
+        assert_eq!(run(4), run(32),
+                   "{dtype}: block layout changed decode logits");
+    }
+}
+
+#[test]
+fn chunked_prefill_streams_identical_tokens_to_monolithic() {
+    let man = manifest();
+    let vocab = man.config.vocab;
+    let lora1 = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let base = base_from(&man, &lora1);
+    let mut adapters = BTreeMap::new();
+    adapters.insert("a".to_string(),
+                    AdapterSet::from_store(&man, &lora1, "a").unwrap());
+    let rt = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    // prompts longer than the chunk, equal to it, and shorter
+    let reqs: Vec<(Option<&str>, usize, u64)> =
+        vec![(Some("a"), 11, 5), (None, 4, 6), (Some("a"), 2, 7)];
+    let run = |chunk: usize| -> Vec<Vec<i32>> {
+        let cache = rt.new_cache_blocked(2, 64, 4);
+        let queue = Queue::new(8);
+        let stats = ServeStats::default();
+        let mut rxs = Vec::new();
+        for (i, (name, len, seed)) in reqs.iter().enumerate() {
+            let (tx, rx) = channel();
+            queue.push(ServeRequest {
+                id: i as u64,
+                adapter: name.map(str::to_string),
+                prompt: rand_prompt(vocab, *len, 70 + i as u64),
+                spec: SamplingSpec {
+                    sampler: Sampler::top_k(8, 0.9),
+                    seed: *seed,
+                    max_new: 6,
+                    stop_tokens: Vec::new(),
+                },
+                tx,
+                enqueued: Instant::now(),
+            });
+            rxs.push(rx);
+        }
+        queue.begin_drain();
+        Scheduler::new(&rt, &base, &adapters, cache)
+            .with_prefill_chunk(chunk)
+            .run(&queue, &stats);
+        rxs.iter()
+            .map(|rx| {
+                let mut toks = Vec::new();
+                while let Ok(ev) = rx.try_recv() {
+                    if let TokenEvent::Token(t) = ev {
+                        toks.push(t);
+                    }
+                }
+                toks
+            })
+            .collect()
+    };
+    let mono = run(0); // 0 = whole prompt in one pass
+    assert!(mono.iter().all(|t| t.len() == 6));
+    assert_eq!(mono, run(4),
+               "prefill chunking changed the streamed tokens");
+    assert_eq!(mono, run(3),
+               "a chunk size not dividing the prompts changed tokens");
+}
+
+#[test]
+fn block_pool_recycles_under_slot_churn() {
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 9).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let vocab = man.config.vocab;
+    let mut cache = rt.new_cache_blocked(2, 32, 4);
+    assert_eq!(cache.bytes(), 0, "nothing is pre-reserved");
+    let mut high_water = 0usize;
+    for wave in 0..3u64 {
+        let s0 = cache.acquire().unwrap();
+        let s1 = cache.acquire().unwrap();
+        for (i, s) in [s0, s1].into_iter().enumerate() {
+            let p = rand_prompt(vocab, 6 + i, 80 + 2 * wave + i as u64);
+            let mut y = rt.prefill(&store, &mut cache, s, &p).unwrap();
+            for _ in 0..5 {
+                let t = argmax(&y) as i32;
+                y = rt.decode(&store, &mut cache, &[s], &[t]).unwrap();
+            }
+        }
+        assert!(cache.blocks_live() > 0);
+        cache.release(s0);
+        cache.release(s1);
+        // O(blocks) retire: every block is back on the free list
+        assert_eq!(cache.blocks_live(), 0, "wave {wave} leaked blocks");
+        assert_eq!(cache.blocks_free(), cache.blocks_allocated());
+        if wave == 0 {
+            high_water = cache.blocks_allocated();
+            assert!(high_water > 0);
+        } else {
+            assert_eq!(cache.blocks_allocated(), high_water,
+                       "churn grew the pool instead of recycling");
+        }
+    }
+    assert_eq!(cache.bytes(), high_water * cache.block_bytes());
+    assert!(cache.bytes() < cache.slab_bytes(),
+            "pool high-water should undercut the dense slab");
+}
+
+/// Read exactly one HTTP response off a kept-alive socket: headers,
+/// then a `Content-Length` body or a chunked body up to its terminator.
+fn read_one_response(s: &mut TcpStream) -> (u16, String, Vec<u8>) {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        assert!(s.read(&mut byte).unwrap() > 0,
+                "EOF inside response head");
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8_lossy(&head).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .unwrap();
+    let lower = head.to_ascii_lowercase();
+    let mut body = Vec::new();
+    if let Some(pos) = lower.find("content-length:") {
+        let n: usize = lower[pos + "content-length:".len()..]
+            .lines()
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        body.resize(n, 0);
+        s.read_exact(&mut body).unwrap();
+    } else if lower.contains("transfer-encoding: chunked") {
+        while !body.ends_with(b"\r\n0\r\n\r\n") {
+            assert!(s.read(&mut byte).unwrap() > 0,
+                    "EOF inside chunked body");
+            body.push(byte[0]);
+        }
+    }
+    (status, head, body)
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_connection() {
+    let man = manifest();
+    let vocab = man.config.vocab;
+    let lora1 = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let base_store = base_from(&man, &lora1);
+    let rt: Box<dyn InferRuntime> =
+        Box::new(NativeModel::new(man.clone(), Variant::Full).unwrap());
+    let cfg = ServeConfig {
+        host: "127.0.0.1".to_string(),
+        port: 0,
+        max_batch: 2,
+        queue_depth: 4,
+        max_context: 64,
+        default_max_new: 8,
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(cfg, rt,
+                              BaseSource::Master(base_store),
+                              AdapterRegistry::new(), vocab)
+        .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = thread::spawn(move || server.run());
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    // 1: HTTP/1.1 defaults to keep-alive — no Connection header sent
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let (status, head, _) = read_one_response(&mut s);
+    assert_eq!(status, 200);
+    assert!(head.contains("Connection: keep-alive"), "head: {head}");
+    // 2: a full streamed generation on the SAME socket
+    let body = r#"{"tokens":[1,2,3],"max_new":4,"seed":3}"#;
+    s.write_all(format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: \
+         {}\r\n\r\n{body}", body.len()).as_bytes())
+        .unwrap();
+    let (status, head, raw) = read_one_response(&mut s);
+    assert_eq!(status, 200, "head: {head}");
+    assert!(head.contains("Transfer-Encoding: chunked"));
+    assert!(head.contains("Connection: keep-alive"));
+    let nd = String::from_utf8(decode_chunked(&raw).unwrap()).unwrap();
+    assert_eq!(nd.lines().filter(|l| !l.is_empty()).count(), 5,
+               "4 token lines + 1 done line: {nd}");
+    // 3: a non-streamed generation, still the same socket
+    let body = r#"{"tokens":[5],"max_new":2,"stream":false}"#;
+    s.write_all(format!(
+        "POST /v1/generate HTTP/1.1\r\nHost: t\r\nContent-Length: \
+         {}\r\n\r\n{body}", body.len()).as_bytes())
+        .unwrap();
+    let (status, _, raw) = read_one_response(&mut s);
+    assert_eq!(status, 200);
+    let j = Json::parse(std::str::from_utf8(&raw).unwrap()).unwrap();
+    assert_eq!(j.get("n_generated").unwrap().as_usize().unwrap(), 2);
+    // 4: Connection: close is honored with an EOF after the response
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\nConnection: \
+                  close\r\n\r\n")
+        .unwrap();
+    let (status, head, _) = read_one_response(&mut s);
+    assert_eq!(status, 200);
+    assert!(head.contains("Connection: close"), "head: {head}");
+    let mut rest = Vec::new();
+    s.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(),
+            "server kept the socket open after Connection: close");
+
+    let (status, _, _) = post(&addr, "/admin/drain", "");
+    assert_eq!(status, 200);
     handle.join().unwrap().unwrap();
 }

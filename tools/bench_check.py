@@ -8,8 +8,9 @@ Usage:
 Both files are `switchlora-bench-v2` reports (written by the bench
 binaries' `--json` flag; see `rust/src/bench/mod.rs`).  Only the flat
 `tracked` table is compared, on the keys the two reports share.  The
-naming convention carries the direction: keys ending `_gflops` or
-`_tok_s` are higher-is-better, `_ms` or `_ms_per_tok` lower-is-better.
+naming convention carries the direction: keys ending `_gflops`,
+`_tok_s` or `_req_s` are higher-is-better, `_ms` or `_ms_per_tok`
+lower-is-better.
 
 A metric REGRESSES when it moves against its direction by more than
 `--threshold` (default 0.30 = 30%, the ISSUE 6 gate) relative to the
@@ -30,7 +31,7 @@ import json
 import os
 import sys
 
-HIGHER_BETTER = ("_gflops", "_tok_s")
+HIGHER_BETTER = ("_gflops", "_tok_s", "_req_s")
 LOWER_BETTER = ("_ms", "_ms_per_tok")
 
 

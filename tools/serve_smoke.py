@@ -6,12 +6,20 @@ contracts that matter in deployment:
 
   1. startup handshake: one machine-readable ``{"serve_ready": ...}``
      stdout line announces the bound port (``--port 0`` friendly);
-  2. multi-tenant continuous batching: a request for adapter ``b``
+  2. HTTP/1.1 keep-alive: several sequential requests reuse ONE
+     connection (``Connection: keep-alive`` promised and honored), and
+     an explicit ``Connection: close`` gets an EOF right after the
+     response;
+  3. multi-tenant continuous batching: a request for adapter ``b``
      issued *after* a long-running request for adapter ``a`` has started
      streaming must run alongside it and finish while ``a`` is still
      mid-stream — proving mid-flight batch join AND that tokens arrive
      incrementally (not buffered until completion);
-  3. graceful drain: SIGTERM while a request is in flight lets that
+  4. chunked prefill: a long-prompt request submitted mid-stream (the
+     server runs with ``--prefill-chunk 16``) must NOT stall its peer —
+     tokens for ``a`` keep arriving on the wire between prefill chunks,
+     before the long request's first token;
+  5. graceful drain: SIGTERM while a request is in flight lets that
      request stream to completion, then the process exits 0.
 
 Usage:  python3 tools/serve_smoke.py [--bin target/release/switchlora]
@@ -20,6 +28,7 @@ Usage:  python3 tools/serve_smoke.py [--bin target/release/switchlora]
 import argparse
 import json
 import os
+import select
 import signal
 import socket
 import subprocess
@@ -126,8 +135,8 @@ class Stream:
 
 def get_json(port, path):
     s = socket.create_connection(("127.0.0.1", port), timeout=30)
-    s.sendall(("GET %s HTTP/1.1\r\nHost: smoke\r\n\r\n"
-               % path).encode())
+    s.sendall(("GET %s HTTP/1.1\r\nHost: smoke\r\n"
+               "Connection: close\r\n\r\n" % path).encode())
     data = b""
     while True:
         d = s.recv(4096)
@@ -136,6 +145,57 @@ def get_json(port, path):
         data += d
     head, _, body = data.partition(b"\r\n\r\n")
     return int(head.split()[1]), json.loads(body.decode())
+
+
+def read_one_response(sock, buf):
+    """Read exactly one response off a kept-alive socket; returns
+    (status, head text, body bytes, leftover buffer)."""
+    while b"\r\n\r\n" not in buf:
+        d = sock.recv(4096)
+        if not d:
+            fail("EOF inside a kept-alive response head")
+        buf += d
+    head, _, buf = buf.partition(b"\r\n\r\n")
+    status = int(head.split()[1])
+    headtext = head.decode("latin-1")
+    lower = headtext.lower()
+    body = b""
+    for line in lower.split("\r\n"):
+        if line.startswith("content-length:"):
+            n = int(line.split(":", 1)[1])
+            while len(buf) < n:
+                d = sock.recv(4096)
+                if not d:
+                    fail("EOF inside a kept-alive response body")
+                buf += d
+            body, buf = buf[:n], buf[n:]
+            break
+    return status, headtext, body, buf
+
+
+def keepalive_check(port):
+    """Several sequential requests over ONE socket, then an explicit
+    Connection: close that must be answered with an EOF."""
+    s = socket.create_connection(("127.0.0.1", port), timeout=30)
+    buf = b""
+    for path in ("/healthz", "/v1/adapters", "/healthz"):
+        s.sendall(("GET %s HTTP/1.1\r\nHost: smoke\r\n\r\n"
+                   % path).encode())
+        status, head, body, buf = read_one_response(s, buf)
+        assert status == 200, head
+        assert "connection: keep-alive" in head.lower(), head
+        json.loads(body.decode())
+    s.sendall(b"GET /healthz HTTP/1.1\r\nHost: smoke\r\n"
+              b"Connection: close\r\n\r\n")
+    status, head, body, buf = read_one_response(s, buf)
+    assert status == 200, head
+    assert "connection: close" in head.lower(), head
+    assert buf == b"", "bytes after a Connection: close response"
+    if s.recv(4096) != b"":
+        fail("server kept the socket open after Connection: close")
+    s.close()
+    print("serve_smoke: keep-alive reused one connection for 3 "
+          "requests; Connection: close honored with EOF")
 
 
 def wait_ready(proc, timeout=300):
@@ -172,7 +232,7 @@ def main():
          "--adapter", "a=seed:7", "--adapter", "b=seed:9",
          "--host", "127.0.0.1", "--port", "0",
          "--max-batch", "2", "--queue-depth", "8",
-         "--max-context", "512"],
+         "--max-context", "512", "--prefill-chunk", "16"],
         stdout=subprocess.PIPE, text=True)
     try:
         port = wait_ready(proc)
@@ -183,6 +243,8 @@ def main():
         assert health["adapters"] == ["a", "b"], health
         status, ads = get_json(port, "/v1/adapters")
         assert status == 200 and len(ads) == 2, ads
+
+        keepalive_check(port)
 
         # long request for tenant a: 200 tokens, streamed
         a = Stream(port, "/v1/generate",
@@ -211,6 +273,49 @@ def main():
         a.assert_still_streaming()
         print("serve_smoke: request b joined mid-flight and finished "
               "(16 tokens) while a still streaming")
+
+        # a LONG prompt (400 tokens = 25 prefill chunks of 16) joins
+        # while a is still streaming.  With chunked prefill the
+        # scheduler emits one decode token for a between chunks, so a's
+        # tokens must keep arriving on the wire BEFORE d's first token;
+        # monolithic prefill would stall a for the whole prompt.
+        d = Stream(port, "/v1/generate",
+                   {"prompt": "x" * 400, "adapter": "b", "max_new": 8,
+                    "seed": 6})
+        assert d.status == 200, d.head
+        a_between = 0
+        d_first = None
+        a_live = True
+        while d_first is None:
+            if a_live and a.buf:
+                t = a.next_token()
+                if t is None:
+                    a_live = False
+                else:
+                    a_between += 1
+                continue
+            rd, _, _ = select.select(
+                [a.sock, d.sock] if a_live else [d.sock], [], [], 120)
+            if not rd:
+                fail("timed out waiting for interleaved streams")
+            if d.sock in rd:
+                d_first = d.next_token()
+                if d_first is None:
+                    fail("long request finished before its first token")
+            elif a.sock in rd:
+                t = a.next_token()
+                if t is None:
+                    a_live = False
+                else:
+                    a_between += 1
+        assert a_between >= 3, (
+            "peer starved during a 25-chunk prefill: only %d tokens "
+            "arrived before the long request's first token" % a_between)
+        nd, ddone = d.drain()
+        assert nd == 8 and ddone["finish"] == "length", (nd, ddone)
+        print("serve_smoke: long 400-token prompt prefilled in chunks; "
+              "%d peer tokens streamed between chunks" % a_between)
+
         na, adone = a.drain()
         assert na == 200 and adone["finish"] == "length", (na, adone)
         assert adone["n_generated"] == 200, adone
@@ -227,8 +332,8 @@ def main():
         assert nc == 300 and cdone["finish"] == "length", (nc, cdone)
         rc = proc.wait(timeout=120)
         assert rc == 0, "server exited %d after drain" % rc
-        print("serve_smoke: OK — mid-flight join, incremental "
-              "streaming, graceful drain")
+        print("serve_smoke: OK — keep-alive reuse, mid-flight join, "
+              "chunked prefill interleaving, graceful drain")
     except Exception:
         proc.kill()
         raise
