@@ -8,12 +8,17 @@
 //!   batcher;
 //! * paged-KV residency: pool bytes vs the retired dense slab across
 //!   live-token counts — bytes scale with tokens, not with
-//!   `--max-batch × --max-context`.
+//!   `--max-batch × --max-context`;
+//! * prefix-cache TTFT: the same long prompt sent cold and then warm —
+//!   the warm request splices the sealed prefix blocks and prefills
+//!   only the uncached suffix, with `/healthz` counters verifying the
+//!   exact token savings.
 //!
 //! `--json <path>` writes the `switchlora-bench-v2` report; the
 //! committed `BENCH_serve.json` holds the current trajectory point and
 //! `tools/bench_check.py` gates CI on the flat `tracked` table
-//! (`_req_s` higher-is-better, `_ms` / `_ms_per_tok` lower-is-better).
+//! (`_req_s` higher-is-better, `_ms` / `_ms_per_tok` / `_us`
+//! lower-is-better).
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -117,11 +122,13 @@ fn close_req_s(addr: &str, n: usize) -> f64 {
 
 /// One streamed generation; returns (ttft_ms, itl_ms) measured at the
 /// socket: time to the first NDJSON line, then mean gap between
-/// consecutive token lines (each payload line ends `}\n`).
-fn stream_latencies(addr: &str, prompt_len: usize, max_new: usize)
-    -> (f64, f64) {
+/// consecutive token lines (each payload line ends `}\n`).  `salt`
+/// varies the prompt tokens, so two calls with different salts never
+/// share a cacheable prefix while two calls with the same salt do.
+fn stream_latencies(addr: &str, prompt_len: usize, max_new: usize,
+                    salt: usize) -> (f64, f64) {
     let tokens: Vec<String> =
-        (0..prompt_len).map(|i| (i % 200).to_string()).collect();
+        (0..prompt_len).map(|i| ((i + salt) % 200).to_string()).collect();
     let body = format!(
         r#"{{"tokens":[{}],"max_new":{max_new},"seed":7}}"#,
         tokens.join(","));
@@ -156,6 +163,26 @@ fn stream_latencies(addr: &str, prompt_len: usize, max_new: usize)
     let itl = 1e3 * (line_times[max_new - 1] - line_times[0])
         / (max_new - 1).max(1) as f64;
     (ttft, itl)
+}
+
+/// `(prefilled_tokens, prefix_hit_tokens)` counters from `/healthz` —
+/// deltas across a request give its exact prefill work and savings.
+fn healthz_prefill_stats(addr: &str) -> (u64, u64) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: b\r\nConnection: \
+                  close\r\n\r\n")
+        .unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let body_at = buf.windows(4).position(|w| w == b"\r\n\r\n").unwrap()
+        + 4;
+    let j = Json::parse(std::str::from_utf8(&buf[body_at..]).unwrap())
+        .unwrap();
+    let prefilled =
+        j.get("prefilled_tokens").unwrap().as_usize().unwrap() as u64;
+    let hit = j.get("prefix_cache").unwrap()
+        .get("hit_tokens").unwrap().as_usize().unwrap() as u64;
+    (prefilled, hit)
 }
 
 /// The residency table: paged-pool bytes vs the dense slab the old
@@ -217,11 +244,43 @@ fn main() {
     println!("   keep-alive {ka:>9.0} req/s   close-per-request \
               {cl:>9.0} req/s   ({:.2}x)", ka / cl.max(1e-9));
 
-    // streamed generation latency through chunked prefill
-    let (_, _) = stream_latencies(&addr, 64, 32); // warm
-    let (ttft, itl) = stream_latencies(&addr, 64, 32);
+    // streamed generation latency through chunked prefill; distinct
+    // salts keep the measured request prefix-COLD so this metric means
+    // what it always meant with the prefix cache (default-on) running
+    let (_, _) = stream_latencies(&addr, 64, 32, 1); // warm the path
+    let (ttft, itl) = stream_latencies(&addr, 64, 32, 38);
     println!("\n-- streamed generation (prompt 64, max_new 32) --");
     println!("   ttft {ttft:.2}ms   inter-token {itl:.3}ms/tok");
+
+    // prefix cache: one long prompt sent twice — the repeat splices the
+    // sealed blocks and prefills only the uncached suffix
+    let plen = 193; // 6 whole 32-position blocks + 1-token tail
+    let (pre0, hit0) = healthz_prefill_stats(&addr);
+    let (ttft_cold, _) = stream_latencies(&addr, plen, 8, 75);
+    let (pre1, _) = healthz_prefill_stats(&addr);
+    let (ttft_warm, _) = stream_latencies(&addr, plen, 8, 75);
+    let (pre2, hit2) = healthz_prefill_stats(&addr);
+    let (cold_toks, warm_toks) = (pre1 - pre0, pre2 - pre1);
+    println!("\n-- prefix cache (prompt {plen}, max_new 8) --");
+    println!("   cold ttft {:>9.0}us  prefilled {cold_toks} tokens",
+             1e3 * ttft_cold);
+    println!("   warm ttft {:>9.0}us  prefilled {warm_toks} tokens \
+              ({} cached, {:.2}x ttft)",
+             1e3 * ttft_warm, hit2 - hit0,
+             ttft_cold / ttft_warm.max(1e-9));
+    let prefix_rows = vec![
+        Json::obj(vec![
+            ("phase", Json::str("cold")),
+            ("ttft_us", Json::num(1e3 * ttft_cold)),
+            ("prefilled_tokens", Json::num(cold_toks as f64)),
+        ]),
+        Json::obj(vec![
+            ("phase", Json::str("warm")),
+            ("ttft_us", Json::num(1e3 * ttft_warm)),
+            ("prefilled_tokens", Json::num(warm_toks as f64)),
+            ("prefix_hit_tokens", Json::num((hit2 - hit0) as f64)),
+        ]),
+    ];
 
     // stop the server cleanly
     let mut s = TcpStream::connect(&addr).unwrap();
@@ -239,7 +298,10 @@ fn main() {
                 ("serve_close_req_s", Json::num(cl)),
                 ("serve_ttft_ms", Json::num(ttft)),
                 ("serve_itl_ms_per_tok", Json::num(itl)),
+                ("serve_ttft_cold_us", Json::num(1e3 * ttft_cold)),
+                ("serve_ttft_warm_us", Json::num(1e3 * ttft_warm)),
             ])),
+            ("prefix_warm", Json::Arr(prefix_rows)),
             ("kv_residency", Json::Arr(kv_rows)),
         ])
         .expect("writing bench json");

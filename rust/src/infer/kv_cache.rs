@@ -27,6 +27,28 @@
 //!     checked against `capacity` first, so the pool ceiling is a true
 //!     invariant.
 //!
+//! On top of the paged pool sits an optional **prefix cache**
+//! ([`KvCache::enable_prefix`], `--prefix-cache`): once a block is
+//! completely filled it is *sealed* — immutable and shareable — and
+//! registered under a parent-chained FNV-1a hash of its token ids (the
+//! vLLM lineage scheme: block `i`'s key folds block `i-1`'s key, so one
+//! lookup walk matches whole prefixes, never mid-sequence content).
+//! Admission ([`KvCache::admit_prefix`]) walks the chain for the longest
+//! sealed prefix of an incoming prompt, bumps per-block refcounts and
+//! splices the block ids into the new sequence's table, so only the
+//! uncached suffix is prefilled.  [`KvCache::release`] then returns a
+//! still-sealed block to an LRU *prefix pool* (budget blocks, evicted
+//! leaf-first) instead of the free list, keeping it warm for the next
+//! request with the same opening.  Keys are namespaced by tenant
+//! (adapter) and verified against the stored token ids on lookup, and a
+//! sealed block holds exactly the dtype-tagged rows a deterministic
+//! prefill would recompute — so a prefix-warm decode is **bitwise
+//! identical** to the cold path at f32/bf16/int8, and a hash collision
+//! can never splice wrong content.  The partially-filled tail block is
+//! always private, and a write aimed at a shared or sealed block
+//! copies-on-write into a fresh private block first (defensive: the
+//! admission cap keeps suffix writes past every shared block).
+//!
 //! Blocks are dtype-tagged exactly like the old slab (`--kv-dtype`):
 //! `f32` (exact), `bf16` (half the bytes, RNE-rounded), or `int8`
 //! (quarter the bytes, symmetric per-position-row quantization with one
@@ -46,6 +68,8 @@
 //! gather-dequantize the live prefix blockwise into a reused f32 scratch
 //! (identical rows in identical order to the old slab walk) before the
 //! same contiguous kernel.
+
+use std::collections::HashMap;
 
 use crate::kernels;
 use crate::tensor::dtype::{bf16_to_f32, f32_to_bf16, quantize_row_i8,
@@ -133,6 +157,25 @@ impl KvBuf {
         }
     }
 
+    /// Copy block `src`'s storage over block `dst`'s (the copy-on-write
+    /// path): `numel` elements and `rows` scale rows per block.
+    fn copy_block(&mut self, src: usize, dst: usize, numel: usize,
+                  rows: usize) {
+        match self {
+            KvBuf::F32(d) => {
+                d.copy_within(src * numel..(src + 1) * numel, dst * numel);
+            }
+            KvBuf::Bf16(d) => {
+                d.copy_within(src * numel..(src + 1) * numel, dst * numel);
+            }
+            KvBuf::I8 { q, scales } => {
+                q.copy_within(src * numel..(src + 1) * numel, dst * numel);
+                scales.copy_within(src * rows..(src + 1) * rows,
+                                   dst * rows);
+            }
+        }
+    }
+
     /// Resident bytes (int8 includes its per-row f32 scales).
     fn bytes(&self) -> usize {
         match self {
@@ -140,6 +183,198 @@ impl KvBuf {
             KvBuf::Bf16(d) => 2 * d.len(),
             KvBuf::I8 { q, scales } => q.len() + 4 * scales.len(),
         }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Chain root for tenant namespace `ns`: adapters change the K/V a
+/// prompt produces (wq/wk/wv overlays), so identical token prefixes
+/// under different adapters must never share blocks.
+fn ns_root(ns: &str) -> u64 {
+    fnv1a(FNV_OFFSET, ns.as_bytes())
+}
+
+/// Key of the block holding `tokens` whose predecessor chain hashed to
+/// `parent` — vLLM-style lineage hashing: equal keys ⇒ equal whole
+/// prefixes (up to collisions, which lookup defeats by comparing the
+/// stored token ids).
+fn chain_hash(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = parent;
+    for &t in tokens {
+        h = fnv1a(h, &t.to_le_bytes());
+    }
+    h
+}
+
+/// Registry entry for one sealed (full, immutable, shareable) block.
+struct SealedMeta {
+    /// chain key this block is canonical for
+    hash: u64,
+    /// chain key of the preceding block (`None` for a prefix head)
+    parent: Option<u64>,
+    /// exact token ids — lookup verifies these, so a 64-bit hash
+    /// collision degrades to a miss, never to wrong K/V
+    tokens: Vec<i32>,
+    /// tenant namespace the rows were computed under
+    ns: String,
+    /// currently-registered sealed children (leaf-first eviction)
+    children: u32,
+    /// LRU stamp: bumped on splice, seal and pool insertion
+    last_use: u64,
+}
+
+/// A point-in-time snapshot of the prefix cache — the `/healthz`
+/// `prefix_cache` object and the `serve.prefix_*` metrics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    pub enabled: bool,
+    /// sealed blocks spliced into admissions instead of re-prefilled
+    pub hit_blocks: u64,
+    /// full prompt blocks that were eligible but not cached
+    pub miss_blocks: u64,
+    /// prompt positions served from the cache (prefill work avoided)
+    pub hit_tokens: u64,
+    /// pooled blocks reclaimed by the LRU budget
+    pub evicted: u64,
+    /// sealed blocks currently retained with no live reference
+    pub pool_blocks: usize,
+    /// blocks currently referenced by two or more live sequences
+    pub shared_blocks: usize,
+    /// sealed (immutable, shareable) blocks, live or pooled
+    pub sealed_blocks: usize,
+}
+
+/// Prefix-sharing state layered over the block pool (`--prefix-cache`).
+/// Owns the content-hash registry, the per-block refcounts and the LRU
+/// pool of released-but-retained blocks; the `KvCache` methods consult
+/// it only when present, so `None` is a strict no-op.
+struct PrefixCache {
+    /// retained-block ceiling (`--prefix-cache-blocks`)
+    budget: usize,
+    /// canonical chain key → sealed block id
+    by_hash: HashMap<u64, u32>,
+    /// sealed block id → registry entry (canonical blocks only)
+    meta: HashMap<u32, SealedMeta>,
+    /// live references per block id (sequence tables holding it)
+    refs: Vec<u32>,
+    /// sealed blocks with no live reference, retained for reuse
+    pool: Vec<u32>,
+    /// monotonic LRU clock
+    clock: u64,
+    hit_blocks: u64,
+    miss_blocks: u64,
+    hit_tokens: u64,
+    evicted: u64,
+    /// per-sequence cached-token history (mirrors `lens` positions)
+    toks: Vec<Vec<i32>>,
+    /// per-sequence tenant namespace
+    ns: Vec<String>,
+    /// per-sequence chain key after the sealed table prefix
+    chain: Vec<u64>,
+    /// per-sequence count of sealed leading table entries
+    sealed: Vec<usize>,
+}
+
+impl PrefixCache {
+    fn new(budget: usize, batch: usize) -> PrefixCache {
+        PrefixCache {
+            budget,
+            by_hash: HashMap::new(),
+            meta: HashMap::new(),
+            refs: Vec::new(),
+            pool: Vec::new(),
+            clock: 0,
+            hit_blocks: 0,
+            miss_blocks: 0,
+            hit_tokens: 0,
+            evicted: 0,
+            toks: vec![Vec::new(); batch],
+            ns: vec![String::new(); batch],
+            chain: vec![0; batch],
+            sealed: vec![0; batch],
+        }
+    }
+
+    /// Mark one live reference on a freshly allocated private block.
+    fn track(&mut self, b: u32) {
+        let bi = b as usize;
+        if self.refs.len() <= bi {
+            self.refs.resize(bi + 1, 0);
+        }
+        self.refs[bi] = 1;
+    }
+
+    /// Drop one reference; a block nobody holds goes to the LRU pool if
+    /// sealed (still discoverable by admission) or back to `free`.
+    fn unref(&mut self, b: u32, free: &mut Vec<u32>) {
+        let bi = b as usize;
+        self.refs[bi] -= 1;
+        if self.refs[bi] > 0 {
+            return;
+        }
+        if self.meta.contains_key(&b) {
+            self.clock += 1;
+            self.meta.get_mut(&b).unwrap().last_use = self.clock;
+            self.pool.push(b);
+        } else {
+            free.push(b);
+        }
+    }
+
+    /// Evict pooled blocks until the pool fits the budget again.
+    fn evict_over_budget(&mut self, free: &mut Vec<u32>) {
+        while self.pool.len() > self.budget {
+            self.evict_one(free);
+        }
+    }
+
+    /// Reclaim one pooled block, leaf-first: a pooled block whose chain
+    /// has registered children is a live lookup path for longer
+    /// prefixes, so childless (leaf) blocks go first, oldest stamp
+    /// wins; if every pooled block still parents a sealed child, fall
+    /// back to the global LRU.
+    fn evict_one(&mut self, free: &mut Vec<u32>) {
+        let pick = self
+            .pool
+            .iter()
+            .copied()
+            .enumerate()
+            .filter(|(_, b)| self.meta[b].children == 0)
+            .min_by_key(|&(_, b)| self.meta[&b].last_use)
+            .map(|(i, _)| i)
+            .or_else(|| {
+                self.pool
+                    .iter()
+                    .copied()
+                    .enumerate()
+                    .min_by_key(|&(_, b)| self.meta[&b].last_use)
+                    .map(|(i, _)| i)
+            });
+        let Some(at) = pick else {
+            return;
+        };
+        let b = self.pool.swap_remove(at);
+        let m = self.meta.remove(&b).expect("pooled block is sealed");
+        self.by_hash.remove(&m.hash);
+        if let Some(ph) = m.parent {
+            if let Some(&pb) = self.by_hash.get(&ph) {
+                if let Some(pm) = self.meta.get_mut(&pb) {
+                    pm.children = pm.children.saturating_sub(1);
+                }
+            }
+        }
+        free.push(b);
+        self.evicted += 1;
     }
 }
 
@@ -162,6 +397,10 @@ pub struct KvCache {
     /// Purely bookkeeping — batch-at-once users (`infer::generate`)
     /// index slots directly and never touch it.
     free: Vec<usize>,
+    /// per-slot ownership bitmap: `owned[seq]` iff an [`KvCache::acquire`]
+    /// claimed `seq` and no [`KvCache::release`] returned it — the O(1)
+    /// double-release check on the admission hot path
+    owned: Vec<bool>,
     /// per-sequence block table: `tables[seq][i]` stores positions
     /// `i·block .. (i+1)·block`; one id spans all layers and K+V
     tables: Vec<Vec<u32>>,
@@ -181,6 +420,9 @@ pub struct KvCache {
     /// storage modes, reused across `attend` calls
     kdq: Vec<f32>,
     vdq: Vec<f32>,
+    /// prefix-sharing layer (`--prefix-cache`); `None` is a strict
+    /// no-op — every consultation is behind an `is_some` check
+    prefix: Option<PrefixCache>,
 }
 
 impl KvCache {
@@ -219,6 +461,7 @@ impl KvCache {
             dtype,
             lens: vec![0; batch],
             free: (0..batch).rev().collect(),
+            owned: vec![false; batch],
             tables: vec![Vec::new(); batch],
             free_blocks: Vec::new(),
             n_blocks: 0,
@@ -228,6 +471,7 @@ impl KvCache {
             scratch: Vec::new(),
             kdq: Vec::new(),
             vdq: Vec::new(),
+            prefix: None,
         }
     }
 
@@ -242,13 +486,36 @@ impl KvCache {
     }
 
     /// Forget all cached positions and return every block to the pool
-    /// (the pool allocation itself is kept for the next batch).
+    /// (the pool allocation itself is kept for the next batch).  With
+    /// prefix sharing on, the registry and retained pool are dropped
+    /// too — a reset cache recognizes no prior content.
     pub fn reset(&mut self) {
-        for t in &mut self.tables {
-            self.free_blocks.append(t);
+        if let Some(p) = &mut self.prefix {
+            // tables may share block ids: free each block exactly once,
+            // when its last reference drops
+            for t in &mut self.tables {
+                for b in t.drain(..) {
+                    p.refs[b as usize] -= 1;
+                    if p.refs[b as usize] == 0 {
+                        self.free_blocks.push(b);
+                    }
+                }
+            }
+            self.free_blocks.append(&mut p.pool);
+            p.by_hash.clear();
+            p.meta.clear();
+            for t in &mut p.toks {
+                t.clear();
+            }
+            p.sealed.fill(0);
+        } else {
+            for t in &mut self.tables {
+                self.free_blocks.append(t);
+            }
         }
         self.lens.fill(0);
         self.free = (0..self.batch).rev().collect();
+        self.owned.fill(false);
     }
 
     /// Claim a free sequence slot for a newly admitted request (lowest
@@ -257,6 +524,7 @@ impl KvCache {
     pub fn acquire(&mut self) -> Option<usize> {
         let seq = self.free.pop()?;
         self.lens[seq] = 0;
+        self.owned[seq] = true;
         Some(seq)
     }
 
@@ -265,10 +533,26 @@ impl KvCache {
     /// reusable by any peer.  A request admitted into a recycled slot
     /// decodes bitwise identically to one admitted into a fresh cache
     /// (`rust/tests/serving.rs`).
+    ///
+    /// With prefix sharing on, each block instead drops one reference:
+    /// blocks other sequences still hold stay put, and a sealed block
+    /// whose last reference this was parks in the LRU prefix pool —
+    /// still discoverable by [`KvCache::admit_prefix`] — rather than
+    /// returning to the free list.
     pub fn release(&mut self, seq: usize) {
         assert!(seq < self.batch, "slot {seq} out of batch {}", self.batch);
-        assert!(!self.free.contains(&seq), "double release of slot {seq}");
-        self.free_blocks.append(&mut self.tables[seq]);
+        assert!(self.owned[seq], "double release of slot {seq}");
+        self.owned[seq] = false;
+        if let Some(p) = &mut self.prefix {
+            for b in self.tables[seq].drain(..) {
+                p.unref(b, &mut self.free_blocks);
+            }
+            p.toks[seq].clear();
+            p.sealed[seq] = 0;
+            p.evict_over_budget(&mut self.free_blocks);
+        } else {
+            self.free_blocks.append(&mut self.tables[seq]);
+        }
         self.lens[seq] = 0;
         self.free.push(seq);
     }
@@ -293,9 +577,161 @@ impl KvCache {
         self.n_blocks
     }
 
-    /// Pool ceiling: `batch · ceil(capacity / block)` blocks.
+    /// Pool ceiling: `batch · ceil(capacity / block)` blocks, plus the
+    /// prefix-pool budget when prefix sharing is enabled.
     pub fn max_blocks(&self) -> usize {
         self.max_blocks
+    }
+
+    /// Turn on prefix sharing with an LRU pool of up to `budget`
+    /// retained blocks (`--prefix-cache-blocks`).  Raises the pool
+    /// ceiling by the budget so retained blocks never steal allocation
+    /// headroom from live sequences.  Call once, on a fresh cache,
+    /// before the first admission.
+    pub fn enable_prefix(&mut self, budget: usize) {
+        assert!(self.prefix.is_none(), "prefix cache already enabled");
+        assert_eq!(self.n_blocks, 0,
+                   "enable_prefix on a cache that already allocated");
+        self.max_blocks += budget;
+        self.prefix = Some(PrefixCache::new(budget, self.batch));
+    }
+
+    /// Whether [`KvCache::enable_prefix`] has been called.
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    /// Splice the longest sealed-block prefix of `prompt` (under tenant
+    /// namespace `ns`) into freshly-acquired slot `seq` and return how
+    /// many positions are now already cached — the caller prefills only
+    /// `prompt[reused..]`.  Each candidate block is verified against
+    /// its stored token ids and namespace, so a hash collision degrades
+    /// to a miss, never to wrong K/V.  At least the final prompt token
+    /// is always left uncached (its logits seed sampling), which also
+    /// puts every suffix write past the spliced blocks — the tail block
+    /// stays private.  Returns 0 when prefix sharing is off.
+    pub fn admit_prefix(&mut self, seq: usize, ns: &str, prompt: &[i32])
+        -> usize {
+        let blk = self.block;
+        let Some(p) = &mut self.prefix else {
+            return 0;
+        };
+        debug_assert!(self.owned[seq] && self.lens[seq] == 0
+                      && self.tables[seq].is_empty(),
+                      "admit_prefix on a mid-flight slot");
+        p.ns[seq] = ns.to_string();
+        p.toks[seq].clear();
+        let mut chain = ns_root(ns);
+        // only whole blocks strictly before the last prompt token are
+        // eligible — the final token must be prefilled for its logits
+        let cap = prompt.len().saturating_sub(1) / blk * blk;
+        let mut reused = 0;
+        while reused + blk <= cap {
+            let want = &prompt[reused..reused + blk];
+            let h = chain_hash(chain, want);
+            let hit = p.by_hash.get(&h).copied().filter(|b| {
+                let m = &p.meta[b];
+                m.ns == ns && m.tokens == want
+            });
+            let Some(b) = hit else {
+                break;
+            };
+            if p.refs[b as usize] == 0 {
+                let at = p.pool.iter().position(|&x| x == b)
+                    .expect("unreferenced sealed block is pooled");
+                p.pool.swap_remove(at);
+            }
+            p.refs[b as usize] += 1;
+            p.clock += 1;
+            p.meta.get_mut(&b).unwrap().last_use = p.clock;
+            self.tables[seq].push(b);
+            chain = h;
+            reused += blk;
+            p.hit_blocks += 1;
+        }
+        p.miss_blocks += ((cap - reused) / blk) as u64;
+        p.hit_tokens += reused as u64;
+        p.chain[seq] = chain;
+        p.sealed[seq] = reused / blk;
+        p.toks[seq].extend_from_slice(&prompt[..reused]);
+        self.lens[seq] = reused;
+        reused
+    }
+
+    /// Record the token ids whose K/V the caller just cached for `seq`
+    /// (call after each prefill chunk or decode step has appended and
+    /// bumped), sealing each block the moment it fills: a sealed block
+    /// is immutable and registered under its parent-chained content
+    /// hash for [`KvCache::admit_prefix`] to find.  If the chain key is
+    /// already canonical under another block (a concurrent twin
+    /// computation), this block stays private and frees normally.
+    /// No-op when prefix sharing is off.
+    pub fn note_tokens(&mut self, seq: usize, tokens: &[i32]) {
+        let blk = self.block;
+        let len = self.lens[seq];
+        let Some(p) = &mut self.prefix else {
+            return;
+        };
+        p.toks[seq].extend_from_slice(tokens);
+        debug_assert_eq!(p.toks[seq].len(), len,
+                         "token history out of step with cache length");
+        let covered = p.toks[seq].len().min(len);
+        while (p.sealed[seq] + 1) * blk <= covered {
+            let i = p.sealed[seq];
+            let b = self.tables[seq][i];
+            let ts = &p.toks[seq][i * blk..(i + 1) * blk];
+            let parent = (i > 0).then(|| p.chain[seq]);
+            let h = chain_hash(p.chain[seq], ts);
+            if !p.by_hash.contains_key(&h) {
+                p.clock += 1;
+                p.meta.insert(b, SealedMeta {
+                    hash: h,
+                    parent,
+                    tokens: ts.to_vec(),
+                    ns: p.ns[seq].clone(),
+                    children: 0,
+                    last_use: p.clock,
+                });
+                p.by_hash.insert(h, b);
+                if let Some(ph) = parent {
+                    if let Some(&pb) = p.by_hash.get(&ph) {
+                        if let Some(pm) = p.meta.get_mut(&pb) {
+                            pm.children += 1;
+                        }
+                    }
+                }
+            }
+            p.chain[seq] = h;
+            p.sealed[seq] += 1;
+        }
+    }
+
+    /// Snapshot of the prefix cache's counters and gauges; all-zero
+    /// (`enabled: false`) when prefix sharing is off.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        match &self.prefix {
+            None => PrefixStats::default(),
+            Some(p) => PrefixStats {
+                enabled: true,
+                hit_blocks: p.hit_blocks,
+                miss_blocks: p.miss_blocks,
+                hit_tokens: p.hit_tokens,
+                evicted: p.evicted,
+                pool_blocks: p.pool.len(),
+                shared_blocks:
+                    p.refs.iter().filter(|&&r| r > 1).count(),
+                sealed_blocks: p.meta.len(),
+            },
+        }
+    }
+
+    /// Bytes held by pooled (retained, unreferenced) prefix blocks —
+    /// the `kv_prefix_pool` ledger row; [`KvCache::bytes`] minus this
+    /// is the live/free pool's share.
+    pub fn prefix_pool_bytes(&self) -> usize {
+        self.prefix
+            .as_ref()
+            .map_or(0, |p| p.pool.len() * self.block_bytes())
     }
 
     /// Bytes one logical block occupies across all layers, K and V.
@@ -354,6 +790,20 @@ impl KvCache {
         if let Some(b) = self.free_blocks.pop() {
             return b;
         }
+        if self.n_blocks >= self.max_blocks {
+            // unreachable while the budget invariants hold (live ≤
+            // batch·ceil(capacity/block), pool ≤ budget, ceiling covers
+            // both) — but if they ever don't, reclaiming a retained
+            // prefix block beats aborting the batch
+            if let Some(p) = &mut self.prefix {
+                if !p.pool.is_empty() {
+                    p.evict_one(&mut self.free_blocks);
+                    if let Some(b) = self.free_blocks.pop() {
+                        return b;
+                    }
+                }
+            }
+        }
         assert!(self.n_blocks < self.max_blocks,
                 "KV pool invariant broken: {} blocks exceeds ceiling {}",
                 self.n_blocks + 1, self.max_blocks);
@@ -371,8 +821,38 @@ impl KvCache {
     fn ensure_blocks(&mut self, seq: usize, upto: usize) {
         while self.tables[seq].len() * self.block < upto {
             let b = self.alloc_block();
+            if let Some(p) = &mut self.prefix {
+                p.track(b);
+            }
             self.tables[seq].push(b);
         }
+    }
+
+    /// Copy-on-write guard: if table entry `bi` of `seq` points at a
+    /// block someone else can see — shared (refcount > 1) or sealed
+    /// (registered for admission lookups) — replace it with a fresh
+    /// private copy before writing.  The admission cap keeps ordinary
+    /// suffix prefill past every shared block, so this is a defensive
+    /// invariant, not a hot path.
+    fn cow_block(&mut self, seq: usize, bi: usize) {
+        let b = self.tables[seq][bi] as usize;
+        let shared = match &self.prefix {
+            Some(p) => p.refs[b] > 1 || p.meta.contains_key(&(b as u32)),
+            None => false,
+        };
+        if !shared {
+            return;
+        }
+        let nb = self.alloc_block();
+        let (ne, nr) = (self.blk_elems(), self.heads * self.block);
+        for buf in self.k.iter_mut().chain(self.v.iter_mut()) {
+            buf.copy_block(b, nb as usize, ne, nr);
+        }
+        self.tables[seq][bi] = nb;
+        let p = self.prefix.as_mut().unwrap();
+        p.track(nb);
+        p.unref(b as u32, &mut self.free_blocks);
+        p.evict_over_budget(&mut self.free_blocks);
     }
 
     /// Append `t_new` RoPE'd key rows and value rows for sequence `seq`
@@ -389,6 +869,11 @@ impl KvCache {
         assert_eq!(k_new.len(), nh * t_new * hd, "k chunk shape");
         assert_eq!(v_new.len(), nh * t_new * hd, "v chunk shape");
         self.ensure_blocks(seq, base + t_new);
+        if self.prefix.is_some() && t_new > 0 {
+            for bi in base / blk..=(base + t_new - 1) / blk {
+                self.cow_block(seq, bi);
+            }
+        }
         // walk the chunk in per-block runs of global positions
         let mut p = base;
         while p < base + t_new {
@@ -807,6 +1292,228 @@ mod tests {
             };
             assert_eq!(bits(&got), bits(&want), "{dtype}");
         }
+    }
+
+    /// Append `toks.len()` synthetic K/V rows (one per token, derived
+    /// from the token id so equal tokens ⇒ equal rows) to `seq` and
+    /// record them with the prefix cache, mirroring the scheduler's
+    /// prefill+note flow.
+    fn feed(c: &mut KvCache, seq: usize, toks: &[i32]) {
+        let (nh, hd) = (c.heads, c.head_dim);
+        for &t in toks {
+            let row: Vec<f32> = (0..nh * hd)
+                .map(|j| (t as f32) * 0.01 + j as f32 * 0.001)
+                .collect();
+            for l in 0..c.layers {
+                c.append(l, seq, &row, &row, 1);
+            }
+            c.bump(seq, 1);
+            c.note_tokens(seq, &[t]);
+        }
+    }
+
+    #[test]
+    fn prefix_off_is_strict_noop() {
+        let mut c = KvCache::with_layout(1, 2, 2, 4, 16, DType::F32, 4);
+        assert!(!c.prefix_enabled());
+        let s = c.acquire().unwrap();
+        // admit/note are inert without enable_prefix
+        assert_eq!(c.admit_prefix(s, "base", &[1, 2, 3, 4, 5]), 0);
+        assert_eq!(c.len(s), 0);
+        let kv = vec![0.5f32; 2 * 4];
+        for _ in 0..5 {
+            c.append(0, s, &kv, &kv, 1);
+            c.bump(s, 1);
+        }
+        c.note_tokens(s, &[1, 2, 3, 4, 5]);
+        c.release(s);
+        // every block went straight back to the free list
+        assert_eq!((c.blocks_free(), c.blocks_live()), (2, 0));
+        assert_eq!(c.prefix_stats(), PrefixStats::default());
+        assert_eq!(c.prefix_pool_bytes(), 0);
+    }
+
+    #[test]
+    fn prefix_seal_pool_and_splice_refcounts() {
+        let mut c = KvCache::with_layout(2, 3, 2, 4, 16, DType::F32, 4);
+        c.enable_prefix(8);
+        assert_eq!(c.max_blocks(), 3 * 4 + 8);
+        let prompt: Vec<i32> = (10..19).collect(); // 9 tokens, blk 4
+        let s0 = c.acquire().unwrap();
+        assert_eq!(c.admit_prefix(s0, "a", &prompt), 0); // cold
+        feed(&mut c, s0, &prompt);
+        let st = c.prefix_stats();
+        assert_eq!((st.sealed_blocks, st.pool_blocks), (2, 0));
+        // release: 2 sealed blocks park in the pool, the tail frees
+        c.release(s0);
+        let st = c.prefix_stats();
+        assert_eq!((st.pool_blocks, c.blocks_free()), (2, 1));
+        assert_eq!(c.prefix_pool_bytes(), 2 * c.block_bytes());
+        // warm admission reuses both sealed blocks (cap spares the
+        // 9th token), leaving only a 1-token suffix to prefill
+        let s1 = c.acquire().unwrap();
+        assert_eq!(c.admit_prefix(s1, "a", &prompt), 8);
+        assert_eq!(c.len(s1), 8);
+        let st = c.prefix_stats();
+        assert_eq!((st.hit_blocks, st.hit_tokens, st.pool_blocks),
+                   (2, 8, 0));
+        // a second tenant must NOT hit the same tokens
+        let s2 = c.acquire().unwrap();
+        assert_eq!(c.admit_prefix(s2, "b", &prompt), 0);
+        assert_eq!(c.prefix_stats().miss_blocks, 2 + 2); // s0 cold + s2
+        // a peer of the same tenant shares the spliced blocks
+        c.release(s2);
+        let s2 = c.acquire().unwrap();
+        assert_eq!(c.admit_prefix(s2, "a", &prompt), 8);
+        assert_eq!(c.prefix_stats().shared_blocks, 2);
+        // dropping one sharer keeps the blocks live for the other
+        c.release(s1);
+        let st = c.prefix_stats();
+        assert_eq!((st.shared_blocks, st.pool_blocks), (0, 0));
+        c.release(s2);
+        assert_eq!(c.prefix_stats().pool_blocks, 2);
+    }
+
+    #[test]
+    fn prefix_warm_attend_is_bitwise_identical() {
+        // spliced blocks hold exactly the rows a cold prefill stores,
+        // for every storage dtype — attend output bits must match
+        let mut rng = Rng::new(41);
+        let (nh, hd, blk, n) = (2, 8, 4, 9);
+        let prompt: Vec<i32> = (0..n as i32).map(|i| 20 + i).collect();
+        let k = randv(nh * n * hd, &mut rng);
+        let v = randv(nh * n * hd, &mut rng);
+        let q = randv(nh * hd, &mut rng);
+        let pick = |x: &[f32], i: usize| -> Vec<f32> {
+            (0..nh)
+                .flat_map(|h| {
+                    x[(h * n + i) * hd..(h * n + i + 1) * hd].to_vec()
+                })
+                .collect()
+        };
+        let bits = |x: &[f32]| -> Vec<u32> {
+            x.iter().map(|v| v.to_bits()).collect()
+        };
+        for dtype in [DType::F32, DType::Bf16, DType::I8] {
+            let mut c = KvCache::with_layout(1, 2, nh, hd, 16, dtype,
+                                             blk);
+            c.enable_prefix(8);
+            // cold request: feed all n positions, sealing 2 blocks;
+            // the final position's query attends over the whole cache
+            let s0 = c.acquire().unwrap();
+            assert_eq!(c.admit_prefix(s0, "base", &prompt), 0);
+            for i in 0..n - 1 {
+                c.append(0, s0, &pick(&k, i), &pick(&v, i), 1);
+                c.bump(s0, 1);
+                c.note_tokens(s0, &[prompt[i]]);
+            }
+            c.append(0, s0, &pick(&k, n - 1), &pick(&v, n - 1), 1);
+            let cold = c.attend(0, s0, &q, 1);
+            c.bump(s0, 1);
+            c.note_tokens(s0, &[prompt[n - 1]]);
+            c.release(s0);
+            // warm request: splice 8 positions, re-append only the 9th
+            let s1 = c.acquire().unwrap();
+            assert_eq!(c.admit_prefix(s1, "base", &prompt), 8);
+            c.append(0, s1, &pick(&k, 8), &pick(&v, 8), 1);
+            let warm = c.attend(0, s1, &q, 1);
+            assert_eq!(bits(&cold), bits(&warm), "{dtype}");
+        }
+    }
+
+    #[test]
+    fn prefix_lru_evicts_leaf_first() {
+        let mut c = KvCache::with_layout(1, 2, 1, 4, 16, DType::F32, 4);
+        c.enable_prefix(2); // room for 2 pooled blocks
+        let prompt: Vec<i32> = (0..13).collect(); // 3 sealed + tail
+        let s = c.acquire().unwrap();
+        c.admit_prefix(s, "base", &prompt);
+        feed(&mut c, s, &prompt);
+        assert_eq!(c.prefix_stats().sealed_blocks, 3);
+        // release parks 3 blocks but the budget holds 2: the chain's
+        // LEAF (deepest block) is evicted, keeping the walkable root
+        c.release(s);
+        let st = c.prefix_stats();
+        assert_eq!((st.pool_blocks, st.evicted, st.sealed_blocks),
+                   (2, 1, 2));
+        // readmission still walks the surviving 2-block prefix
+        let s = c.acquire().unwrap();
+        assert_eq!(c.admit_prefix(s, "base", &prompt), 8);
+        c.release(s);
+        // evict-then-refeed: the evicted third block's content gets
+        // re-sealed and becomes canonical again under the same chain
+        let s = c.acquire().unwrap();
+        let got = c.admit_prefix(s, "base", &prompt);
+        feed(&mut c, s, &prompt[got..]);
+        assert_eq!(c.prefix_stats().sealed_blocks, 3);
+        c.release(s);
+    }
+
+    #[test]
+    fn concurrent_twin_blocks_stay_private() {
+        // two live sequences computing the same prefix: the first to
+        // seal becomes canonical; the twin is never registered and
+        // returns to the free list (not the pool) on release
+        let mut c = KvCache::with_layout(1, 2, 1, 4, 16, DType::F32, 4);
+        c.enable_prefix(4);
+        let prompt: Vec<i32> = (0..6).collect();
+        let s0 = c.acquire().unwrap();
+        let s1 = c.acquire().unwrap();
+        // both admitted before anything is sealed — both miss
+        assert_eq!(c.admit_prefix(s0, "base", &prompt), 0);
+        assert_eq!(c.admit_prefix(s1, "base", &prompt), 0);
+        feed(&mut c, s0, &prompt);
+        feed(&mut c, s1, &prompt);
+        // one canonical block despite two identical sealed-shaped fills
+        assert_eq!(c.prefix_stats().sealed_blocks, 1);
+        c.release(s1); // the twin frees: pool stays empty
+        assert_eq!(c.prefix_stats().pool_blocks, 0);
+        assert_eq!(c.blocks_free(), 2);
+        c.release(s0); // the canonical block parks
+        assert_eq!(c.prefix_stats().pool_blocks, 1);
+    }
+
+    #[test]
+    fn prefix_cow_preserves_a_sharers_view() {
+        // write aimed at a shared block: the writer gets a private
+        // copy; the other sharer's attend output is bit-unchanged
+        let (nh, hd, blk) = (2, 4, 4);
+        let mut rng = Rng::new(17);
+        let mut c = KvCache::with_layout(1, 3, nh, hd, 16, DType::F32,
+                                         blk);
+        c.enable_prefix(4);
+        let prompt: Vec<i32> = (5..10).collect();
+        let s0 = c.acquire().unwrap();
+        c.admit_prefix(s0, "base", &prompt);
+        feed(&mut c, s0, &prompt);
+        c.release(s0);
+        let sa = c.acquire().unwrap();
+        let sb = c.acquire().unwrap();
+        assert_eq!(c.admit_prefix(sa, "base", &prompt), 4);
+        assert_eq!(c.admit_prefix(sb, "base", &prompt), 4);
+        assert_eq!(c.prefix_stats().shared_blocks, 1);
+        let shared = c.tables[sa][0];
+        assert_eq!(shared, c.tables[sb][0]);
+        // append sa's final prompt position (left un-bumped so the
+        // same attend call can be replayed after the COW event)
+        let row = randv(nh * hd, &mut rng);
+        c.append(0, sa, &row, &row, 1);
+        let q = randv(nh * hd, &mut rng);
+        let before = c.attend(0, sa, &q, 1);
+        // rewind sb INTO the shared block and write junk — the COW
+        // guard must give sb a fresh private block first
+        c.lens[sb] = 2;
+        let junk = vec![9.0f32; nh * hd];
+        c.append(0, sb, &junk, &junk, 1);
+        assert_ne!(c.tables[sb][0], shared, "write hit the shared block");
+        assert_eq!(c.tables[sa][0], shared);
+        assert_eq!(c.prefix_stats().shared_blocks, 0);
+        let after = c.attend(0, sa, &q, 1);
+        let bits = |x: &[f32]| -> Vec<u32> {
+            x.iter().map(|v| v.to_bits()).collect()
+        };
+        assert_eq!(bits(&before), bits(&after),
+                   "sharer's rows changed under copy-on-write");
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod sampler;
 pub use adapters::{seeded_adapter, AdapterSet, LowRank};
 pub use generate::{generate, generate_adapted, generate_stream,
                    GenConfig, Generation};
-pub use kv_cache::KvCache;
+pub use kv_cache::{KvCache, PrefixStats};
 pub use merge::{adapter_delta, merge_adapters, merged_full_store,
                 unmerge_adapters, MergeState};
 pub use sampler::{argmax, Sampler};

@@ -39,6 +39,7 @@
 //!            [--host 127.0.0.1] [--port 8080] [--max-batch 4]
 //!            [--queue-depth 16] [--max-context 256] [--max-new 64]
 //!            [--prefill-chunk 32] [--kv-block 32]
+//!            [--prefix-cache on|off] [--prefix-cache-blocks 128]
 //!            [--quantize-base int8|bf16|f32]   # default: int8
 //!   continuous-batching HTTP server: N named LoRA adapters multiplexed
 //!   over ONE shared (int8 by default) frozen base.  POST /v1/generate
@@ -171,7 +172,9 @@ per-request adapter/seed/temperature/top-k/top-p; 429 + Retry-After\n\
 under backpressure; SIGTERM or POST /admin/drain drains gracefully;\n\
 KV lives in a paged block pool (--kv-block N positions/block), long\n\
 prompts prefill in --prefill-chunk N slices interleaved with decode,\n\
-and connections are HTTP/1.1 keep-alive\n\
+sealed KV blocks are shared across same-tenant prompts via a\n\
+refcounted prefix cache (--prefix-cache on|off, LRU pool of\n\
+--prefix-cache-blocks N), and connections are HTTP/1.1 keep-alive\n\
 telemetry: `--trace-out run.jsonl` on any subcommand records phase\n\
 spans, comm rounds, switch audits and memory ledgers (math untouched);\n\
 `--trace-format chrome` emits a Perfetto/chrome://tracing file, and\n\
@@ -605,6 +608,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kv_block: args.parse_num(
             "kv-block",
             switchlora::infer::kv_cache::DEFAULT_KV_BLOCK)?,
+        prefix_cache: match args.get_or("prefix-cache", "on").as_str() {
+            "on" => true,
+            "off" => false,
+            other => bail!("--prefix-cache must be on|off, got \
+                            {other:?}"),
+        },
+        prefix_cache_blocks: args.parse_num("prefix-cache-blocks",
+                                            128usize)?,
     };
     Server::bind(cfg, rt, base, registry, mc.vocab)?.run()
 }

@@ -407,6 +407,27 @@ pub fn kv_mem_row(cache: &KvCache) -> MemRow {
              bytes: cache.bytes() as u64 }
 }
 
+/// KV decomposition with prefix sharing: the `kv_cache` row carries the
+/// blocks owned by live sequences plus shared sealed blocks, and a
+/// `kv_prefix_pool` row (present only when nonzero) carries the sealed
+/// blocks parked in the LRU prefix pool awaiting reuse.  The two rows
+/// sum to `KvCache::bytes()` exactly, so the ledger total is unchanged
+/// by sharing — the pool is retained memory, not new memory.
+pub fn kv_mem_rows(cache: &KvCache) -> Vec<MemRow> {
+    let pool = cache.prefix_pool_bytes() as u64;
+    let mut rows = vec![
+        MemRow { component: "kv_cache".to_string(),
+                 dtype: cache.dtype(),
+                 bytes: cache.bytes() as u64 - pool },
+    ];
+    if pool > 0 {
+        rows.push(MemRow { component: "kv_prefix_pool".to_string(),
+                           dtype: cache.dtype(),
+                           bytes: pool });
+    }
+    rows
+}
+
 /// Multi-tenant serving decomposition: the ONE shared packed base (the
 /// [`packed_mem_rows`] rows — their subtotal still equals
 /// `PackedStore::resident_bytes()` exactly), one `adapter:<name>` row
@@ -424,7 +445,7 @@ pub fn serve_mem_rows(p: &PackedStore, base_dtype: DType,
                            dtype: DType::F32,
                            bytes: *bytes });
     }
-    rows.push(kv_mem_row(cache));
+    rows.extend(kv_mem_rows(cache));
     rows
 }
 

@@ -20,6 +20,17 @@
 //! rows before it, so splitting the prompt changes addresses, never
 //! values (`rust/tests/serving.rs` pins the streams equal).
 //!
+//! **Prefix cache** (`--prefix-cache`): admission asks the KV cache for
+//! the longest sealed-block prefix of the incoming prompt
+//! ([`KvCache::admit_prefix`]) — a hit splices the shared blocks into
+//! the new slot and prefill starts at the first uncached position, so
+//! a warm request's TTFT covers only its unique suffix.  After every
+//! prefill chunk and decode step the scheduler records the cached
+//! token ids ([`KvCache::note_tokens`]) so full blocks seal and become
+//! shareable.  Sharing is invisible to the math: sealed blocks hold
+//! exactly the rows a cold prefill would recompute, so warm and cold
+//! decodes are bitwise identical (`rust/tests/serving.rs`).
+//!
 //! Determinism: a request's sampling stream is `Rng::new(seed).fork(0)`
 //! — the same stream a solo `generate` run at sequence index 0 uses —
 //! and the kernels compute each batch row independently, so the tokens
@@ -252,6 +263,18 @@ pub struct ServeStats {
     pub tokens_streamed: AtomicU64,
     pub active: AtomicU64,
     pub queued: AtomicU64,
+    /// prompt tokens actually run through prefill — prefix-cache hits
+    /// are excluded, so `prefilled_tokens` vs received prompt lengths
+    /// is the compute the cache saved
+    pub prefilled_tokens: AtomicU64,
+    /// prefix-cache totals mirrored from [`KvCache::prefix_stats`] by
+    /// the scheduler loop (all zero when `--prefix-cache off`)
+    pub prefix_hit_blocks: AtomicU64,
+    pub prefix_miss_blocks: AtomicU64,
+    pub prefix_hit_tokens: AtomicU64,
+    pub prefix_evicted: AtomicU64,
+    pub prefix_pool_blocks: AtomicU64,
+    pub prefix_shared_blocks: AtomicU64,
     per_adapter: Mutex<BTreeMap<String, u64>>,
 }
 
@@ -282,6 +305,10 @@ struct Prefilling {
     slot: usize,
     req: ServeRequest,
     done: usize,
+    /// prompt positions spliced from the prefix cache at admission —
+    /// `done` starts here, and only `prompt.len() - reused` tokens
+    /// ever run through prefill
+    reused: usize,
 }
 
 /// The continuous-batching loop.  Owns the KV cache; borrows the
@@ -357,6 +384,29 @@ impl<'a> Scheduler<'a> {
                            self.cache.blocks_free() as f64);
                 obs::gauge("serve.kv_bytes", self.cache.bytes() as f64);
             }
+            let ps = self.cache.prefix_stats();
+            if ps.enabled {
+                stats.prefix_hit_blocks
+                    .store(ps.hit_blocks, Ordering::Relaxed);
+                stats.prefix_miss_blocks
+                    .store(ps.miss_blocks, Ordering::Relaxed);
+                stats.prefix_hit_tokens
+                    .store(ps.hit_tokens, Ordering::Relaxed);
+                stats.prefix_evicted
+                    .store(ps.evicted, Ordering::Relaxed);
+                stats.prefix_pool_blocks
+                    .store(ps.pool_blocks as u64, Ordering::Relaxed);
+                stats.prefix_shared_blocks
+                    .store(ps.shared_blocks as u64, Ordering::Relaxed);
+                if obs::enabled() {
+                    obs::gauge("serve.prefix_pool_blocks",
+                               ps.pool_blocks as f64);
+                    obs::gauge("serve.prefix_shared_blocks",
+                               ps.shared_blocks as f64);
+                    obs::gauge("serve.prefix_pool_bytes",
+                               self.cache.prefix_pool_bytes() as f64);
+                }
+            }
             if self.active.is_empty() && self.prefilling.is_empty() {
                 if queue.is_draining() && queue.is_empty() {
                     break;
@@ -405,7 +455,21 @@ impl<'a> Scheduler<'a> {
             stats.rejected.fetch_add(1, Ordering::Relaxed);
             return;
         };
-        self.prefilling.push_back(Prefilling { slot, req, done: 0 });
+        // splice the longest cached prefix (tenant-namespaced) into the
+        // fresh slot; prefill resumes from the first uncached position.
+        // A strict no-op returning 0 with `--prefix-cache off`.
+        let tenant = req.adapter.as_deref().unwrap_or("base");
+        let reused = self.cache.admit_prefix(slot, tenant, &req.prompt);
+        if self.cache.prefix_enabled() && obs::enabled() {
+            let blk = self.cache.block;
+            let eligible = req.prompt.len().saturating_sub(1) / blk;
+            obs::add("serve.prefix_hit_blocks", (reused / blk) as u64);
+            obs::add("serve.prefix_miss_blocks",
+                     (eligible - reused / blk) as u64);
+            obs::add("serve.prefix_hit_tokens", reused as u64);
+        }
+        self.prefilling
+            .push_back(Prefilling { slot, req, done: reused, reused });
     }
 
     /// Advance the oldest pending prefill by one chunk; on the last
@@ -441,6 +505,9 @@ impl<'a> Scheduler<'a> {
             }
         };
         sp.done();
+        // record the freshly cached tokens so full blocks seal (and
+        // become shareable) as soon as their last position lands
+        self.cache.note_tokens(p.slot, &p.req.prompt[p.done..hi]);
         p.done = hi;
         if p.done < p.req.prompt.len() {
             // more chunks to go; intermediate logits are discarded
@@ -449,11 +516,13 @@ impl<'a> Scheduler<'a> {
         }
         let req = p.req;
         let slot = p.slot;
+        let prefilled = (req.prompt.len() - p.reused) as u64;
+        stats.prefilled_tokens.fetch_add(prefilled, Ordering::Relaxed);
         if obs::enabled() {
             obs::hist_record(
                 "serve.ttft_us",
                 1e6 * req.enqueued.elapsed().as_secs_f64());
-            obs::add("serve.prefill_tokens", req.prompt.len() as u64);
+            obs::add("serve.prefill_tokens", prefilled);
             let tenant = req.adapter.as_deref().unwrap_or("base");
             obs::add(&format!("serve.requests.{tenant}"), 1);
         }
@@ -531,6 +600,12 @@ impl<'a> Scheduler<'a> {
             }
         };
         let secs = sp.done();
+        // each sequence just cached its fed token's K/V: extend the
+        // recorded histories so generated text seals blocks too (a
+        // follow-up turn quoting this reply can then hit the cache)
+        for (s, t) in seqs.iter().zip(&toks) {
+            self.cache.note_tokens(*s, &[*t]);
+        }
         if obs::enabled() {
             obs::hist_record("serve.decode_token_us",
                              1e6 * secs / batch as f64);

@@ -243,6 +243,12 @@ pub struct ServeConfig {
     /// positions per paged-KV block; pool bytes grow in units of
     /// `block × heads × head_dim` per layer side
     pub kv_block: usize,
+    /// share sealed KV blocks across requests with a common prompt
+    /// prefix (`--prefix-cache on|off`); off is a strict no-op
+    pub prefix_cache: bool,
+    /// LRU budget of released-but-retained blocks kept warm for future
+    /// admissions (`--prefix-cache-blocks`)
+    pub prefix_cache_blocks: usize,
 }
 
 impl Default for ServeConfig {
@@ -256,6 +262,8 @@ impl Default for ServeConfig {
             default_max_new: 64,
             prefill_chunk: 32,
             kv_block: crate::infer::kv_cache::DEFAULT_KV_BLOCK,
+            prefix_cache: true,
+            prefix_cache_blocks: 128,
         }
     }
 }
@@ -269,6 +277,8 @@ struct Shared {
     vocab: usize,
     max_context: usize,
     default_max_new: usize,
+    /// whether the KV prefix cache is on (the `/healthz` report)
+    prefix_cache: bool,
     adapter_names: Vec<String>,
     adapter_ledger: Vec<(String, u64)>,
     next_id: AtomicU64,
@@ -311,6 +321,7 @@ impl Server {
             vocab,
             max_context: cfg.max_context,
             default_max_new: cfg.default_max_new,
+            prefix_cache: cfg.prefix_cache,
             adapter_names: registry.names(),
             adapter_ledger: registry.ledger(),
             next_id: AtomicU64::new(1),
@@ -332,11 +343,16 @@ impl Server {
         crate::info!(
             "serving on http://{addr} — base: {}; {} adapter(s): [{}]; \
              max-batch {}, queue-depth {}, max-context {}, \
-             prefill-chunk {}, kv-block {}",
+             prefill-chunk {}, kv-block {}, prefix-cache {}",
             base.describe(), registry.len(),
             shared.adapter_names.join(", "), cfg.max_batch,
             cfg.queue_depth, cfg.max_context, cfg.prefill_chunk,
-            cfg.kv_block);
+            cfg.kv_block,
+            if cfg.prefix_cache {
+                format!("on({} blocks)", cfg.prefix_cache_blocks)
+            } else {
+                "off".to_string()
+            });
         // the ONE machine-readable stdout line: how tools/serve_smoke.py
         // discovers a --port 0 server's actual port
         let ready = Json::obj(vec![(
@@ -383,8 +399,19 @@ impl Server {
             }
             handlers
         });
-        let cache = rt.new_cache_blocked(cfg.max_batch, cfg.max_context,
-                                         cfg.kv_block);
+        let mut cache = rt.new_cache_blocked(cfg.max_batch,
+                                             cfg.max_context,
+                                             cfg.kv_block);
+        if cfg.prefix_cache {
+            cache.enable_prefix(cfg.prefix_cache_blocks);
+            crate::info!(
+                "prefix cache: on — sealed {}-position blocks shared \
+                 across same-tenant prompts, LRU pool of {} blocks \
+                 ({} budget)",
+                cache.block, cfg.prefix_cache_blocks,
+                human_bytes((cfg.prefix_cache_blocks
+                             * cache.block_bytes()) as u64));
+        }
         crate::info!(
             "paged KV pool: up to {} blocks of {} positions ({} each, \
              {} ceiling); nothing pre-reserved",
@@ -426,12 +453,14 @@ impl Server {
             .collect();
         crate::info!(
             "drained: {} received, {} completed, {} rejected, {} \
-             cancelled, {} tokens streamed{}",
+             cancelled, {} tokens streamed, {} prefilled, {} prefix-hit{}",
             s.received.load(Ordering::Relaxed),
             s.completed.load(Ordering::Relaxed),
             s.rejected.load(Ordering::Relaxed),
             s.cancelled.load(Ordering::Relaxed),
             s.tokens_streamed.load(Ordering::Relaxed),
+            s.prefilled_tokens.load(Ordering::Relaxed),
+            s.prefix_hit_tokens.load(Ordering::Relaxed),
             if per.is_empty() {
                 String::new()
             } else {
@@ -559,6 +588,30 @@ fn healthz(w: &mut TcpStream, shared: &Arc<Shared>, keep: bool)
          Json::num(s.rejected.load(Ordering::Relaxed) as f64)),
         ("tokens_streamed",
          Json::num(s.tokens_streamed.load(Ordering::Relaxed) as f64)),
+        ("prefilled_tokens",
+         Json::num(s.prefilled_tokens.load(Ordering::Relaxed) as f64)),
+        ("prefix_cache",
+         Json::obj(vec![
+             ("enabled", Json::Bool(shared.prefix_cache)),
+             ("hit_blocks",
+              Json::num(s.prefix_hit_blocks.load(Ordering::Relaxed)
+                        as f64)),
+             ("miss_blocks",
+              Json::num(s.prefix_miss_blocks.load(Ordering::Relaxed)
+                        as f64)),
+             ("hit_tokens",
+              Json::num(s.prefix_hit_tokens.load(Ordering::Relaxed)
+                        as f64)),
+             ("evicted",
+              Json::num(s.prefix_evicted.load(Ordering::Relaxed)
+                        as f64)),
+             ("pool_blocks",
+              Json::num(s.prefix_pool_blocks.load(Ordering::Relaxed)
+                        as f64)),
+             ("shared_blocks",
+              Json::num(s.prefix_shared_blocks.load(Ordering::Relaxed)
+                        as f64)),
+         ])),
         ("adapters",
          Json::Arr(shared
              .adapter_names
@@ -830,6 +883,7 @@ mod tests {
             vocab: 256,
             max_context: 32,
             default_max_new: 8,
+            prefix_cache: true,
             adapter_names: vec!["a".to_string(), "b".to_string()],
             adapter_ledger: vec![("a".to_string(), 100),
                                  ("b".to_string(), 100)],
@@ -907,5 +961,7 @@ mod tests {
                    crate::infer::kv_cache::DEFAULT_KV_BLOCK);
         assert!(c.prefill_chunk > 0,
                 "serve should default to chunked prefill");
+        assert!(c.prefix_cache, "prefix sharing should default on");
+        assert!(c.prefix_cache_blocks > 0);
     }
 }

@@ -495,7 +495,7 @@ fn paged_decode_is_bitwise_contiguous_for_every_kv_dtype() {
     let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
     let mc = &man.config;
     let prompt = rand_prompt(mc.vocab, 7, 61);
-    for dtype in [DType::F32, DType::BF16, DType::I8] {
+    for dtype in [DType::F32, DType::Bf16, DType::I8] {
         let run = |block: usize| -> Vec<u32> {
             let mut cache = KvCache::with_layout(
                 mc.layers, 1, mc.heads, mc.head_dim(), 32, dtype,
@@ -720,4 +720,245 @@ fn keep_alive_serves_sequential_requests_on_one_connection() {
     let (status, _, _) = post(&addr, "/admin/drain", "");
     assert_eq!(status, 200);
     handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn prefix_warm_decode_is_bitwise_cold_for_every_dtype_and_block() {
+    // ISSUE 10 acceptance: splicing sealed blocks from the prefix pool
+    // must reproduce the cold path's logits bit for bit, because the
+    // pool holds exactly the dtype-tagged rows a deterministic prefill
+    // would recompute — for every KV dtype and more than one block size
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 13).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let mc = &man.config;
+    let prompt = rand_prompt(mc.vocab, 13, 62);
+    for dtype in [DType::F32, DType::Bf16, DType::I8] {
+        for block in [4usize, 8] {
+            let mut cache = KvCache::with_layout(
+                mc.layers, 1, mc.heads, mc.head_dim(), 64, dtype,
+                block);
+            cache.enable_prefix(16);
+            let run = |cache: &mut KvCache| -> (usize, Vec<u32>) {
+                let s = cache.acquire().unwrap();
+                let reused = cache.admit_prefix(s, "t", &prompt);
+                let mut bits = Vec::new();
+                let mut y = rt
+                    .prefill(&store, cache, s, &prompt[reused..])
+                    .unwrap();
+                cache.note_tokens(s, &prompt[reused..]);
+                for _ in 0..10 {
+                    bits.extend(y.iter().map(|x| x.to_bits()));
+                    let t = argmax(&y) as i32;
+                    y = rt.decode(&store, cache, &[s], &[t]).unwrap();
+                    cache.note_tokens(s, &[t]);
+                }
+                cache.release(s);
+                (reused, bits)
+            };
+            let (cold_reused, cold) = run(&mut cache);
+            assert_eq!(cold_reused, 0, "{dtype}/{block}: cold run hit");
+            let (warm_reused, warm) = run(&mut cache);
+            // every whole block strictly before the final prompt token
+            // is eligible, and the cold run sealed all of them
+            assert_eq!(warm_reused, (prompt.len() - 1) / block * block,
+                       "{dtype}/{block}: short prefix match");
+            assert_eq!(warm, cold,
+                       "{dtype}/{block}: prefix-warm logits diverge \
+                        from cold prefill");
+        }
+    }
+}
+
+#[test]
+fn prefix_evict_then_readmit_decodes_identically() {
+    // a pool too small to retain the prefix forces eviction; the next
+    // admission must degrade to a cold prefill (not wrong K/V) and then
+    // re-seal, after which sharing works again
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 13).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let mc = &man.config;
+    let block = 4usize;
+    let prompt = rand_prompt(mc.vocab, 13, 63); // 3 sealable blocks
+    let other = rand_prompt(mc.vocab, 13, 64);
+    let mut cache = KvCache::with_layout(
+        mc.layers, 2, mc.heads, mc.head_dim(), 64, DType::F32, block);
+    cache.enable_prefix(2); // < 3: `prompt`'s chain cannot survive
+    let run = |cache: &mut KvCache, p: &[i32]| -> (usize, Vec<i32>) {
+        let s = cache.acquire().unwrap();
+        let reused = cache.admit_prefix(s, "t", p);
+        let mut y =
+            rt.prefill(&store, cache, s, &p[reused..]).unwrap();
+        cache.note_tokens(s, &p[reused..]);
+        let mut toks = Vec::new();
+        for _ in 0..8 {
+            let t = argmax(&y) as i32;
+            toks.push(t);
+            y = rt.decode(&store, cache, &[s], &[t]).unwrap();
+            cache.note_tokens(s, &[t]);
+        }
+        cache.release(s);
+        (reused, toks)
+    };
+    let (_, cold) = run(&mut cache, &prompt);
+    assert!(cache.prefix_stats().evicted > 0,
+            "a 2-block pool must have evicted");
+    // churn with a different prompt to evict whatever survived
+    let (_, _) = run(&mut cache, &other);
+    let (reused, again) = run(&mut cache, &prompt);
+    assert_eq!(again, cold,
+               "decode after evict-then-readmit changed tokens");
+    // and once re-sealed, the *retained* tail of the chain can hit
+    let (reused2, third) = run(&mut cache, &prompt);
+    assert_eq!(third, cold);
+    assert!(reused2 >= reused,
+            "re-sealed prefix should match at least as far");
+    assert!(cache.prefix_stats().pool_blocks <= 2,
+            "pool exceeded its budget");
+}
+
+#[test]
+fn prefix_sharing_keeps_refcounts_and_ledger_exact_under_churn() {
+    let man = manifest();
+    let store = seeded_store(&man, Variant::Lora, 13).unwrap();
+    let full = seeded_store(&man, Variant::Full, 5).unwrap();
+    let packed = PackedStore::quantize_base(&full, DType::I8).unwrap();
+    let rt = NativeModel::new(man.clone(), Variant::Lora).unwrap();
+    let mc = &man.config;
+    let block = 4usize;
+    let shared_prefix = rand_prompt(mc.vocab, 8, 65);
+    let mut cache = KvCache::with_layout(
+        mc.layers, 3, mc.heads, mc.head_dim(), 64, DType::F32, block);
+    cache.enable_prefix(8);
+    let ads = vec![("a".to_string(), 1024u64)];
+    let feed = |cache: &mut KvCache, tail_seed: u64| -> usize {
+        let mut p = shared_prefix.clone();
+        p.extend(rand_prompt(mc.vocab, 5, tail_seed));
+        let s = cache.acquire().unwrap();
+        let reused = cache.admit_prefix(s, "t", &p);
+        let y = rt.prefill(&store, cache, s, &p[reused..]).unwrap();
+        cache.note_tokens(s, &p[reused..]);
+        let t = argmax(&y) as i32;
+        rt.decode(&store, cache, &[s], &[t]).unwrap();
+        cache.note_tokens(s, &[t]);
+        s
+    };
+    // three live sequences over one shared 2-block prefix
+    let s0 = feed(&mut cache, 90);
+    let s1 = feed(&mut cache, 91);
+    let s2 = feed(&mut cache, 92);
+    let st = cache.prefix_stats();
+    assert_eq!(st.shared_blocks, 2,
+               "both whole prefix blocks should be shared 3 ways");
+    assert_eq!(st.hit_blocks, 4, "two warm admissions x two blocks");
+    // ledger: total is exact, and the kv_cache + kv_prefix_pool rows
+    // decompose bytes() with nothing pooled while everything is live
+    let rows = serve_mem_rows(&packed, DType::I8, &ads, &cache);
+    assert_eq!(mem_total(&rows),
+               packed.resident_bytes() as u64 + 1024
+                   + cache.bytes() as u64);
+    assert!(rows.iter().all(|r| r.component != "kv_prefix_pool"),
+            "no pooled blocks yet: the pool row must be absent");
+    // release everything: sealed blocks park in the pool (retained,
+    // not freed), refcounts drop to zero, totals stay exact
+    cache.release(s0);
+    cache.release(s1);
+    cache.release(s2);
+    let st = cache.prefix_stats();
+    assert_eq!(st.shared_blocks, 0);
+    assert!(st.pool_blocks > 0 && st.pool_blocks <= 8);
+    let rows = serve_mem_rows(&packed, DType::I8, &ads, &cache);
+    assert_eq!(mem_total(&rows),
+               packed.resident_bytes() as u64 + 1024
+                   + cache.bytes() as u64,
+               "pooled blocks fell out of the ledger");
+    let pool_row = rows.iter()
+        .find(|r| r.component == "kv_prefix_pool")
+        .expect("pooled blocks must get their own ledger row");
+    assert_eq!(pool_row.bytes,
+               st.pool_blocks as u64 * cache.block_bytes() as u64);
+    // readmitting pulls blocks back out of the pool: refcounts return
+    let s = cache.acquire().unwrap();
+    let reused = cache.admit_prefix(s, "t", &shared_prefix);
+    assert_eq!(reused, 4, "one whole block of the 8-token prefix");
+    assert_eq!(cache.prefix_stats().pool_blocks, st.pool_blocks - 1);
+    cache.release(s);
+}
+
+#[test]
+fn scheduler_prefix_cache_off_is_noop_and_on_streams_same_tokens() {
+    // the scheduler path: prefix sharing on must stream exactly the
+    // tokens of prefix sharing off (which itself is the pre-prefix
+    // code path), while prefilling strictly fewer suffix tokens
+    let man = manifest();
+    let vocab = man.config.vocab;
+    let lora1 = seeded_store(&man, Variant::Lora, 21).unwrap();
+    let base = base_from(&man, &lora1);
+    let mut adapters = BTreeMap::new();
+    adapters.insert("a".to_string(),
+                    AdapterSet::from_store(&man, &lora1, "a").unwrap());
+    let rt = NativeModel::new(man.clone(), Variant::Full).unwrap();
+    let prefix = rand_prompt(vocab, 12, 66);
+    let reqs: Vec<(u64, u64)> = vec![(5, 100), (6, 101), (7, 102)];
+    let run = |prefix_on: bool| -> (Vec<Vec<i32>>, u64, u64) {
+        // max_batch 1 serializes the requests, so later admissions see
+        // the earlier request's sealed blocks in the pool
+        let mut cache = rt.new_cache_blocked(1, 64, 4);
+        if prefix_on {
+            cache.enable_prefix(16);
+        }
+        let queue = Queue::new(8);
+        let stats = ServeStats::default();
+        let mut rxs = Vec::new();
+        for (i, (seed, tail_seed)) in reqs.iter().enumerate() {
+            let mut p = prefix.clone();
+            p.extend(rand_prompt(vocab, 3, *tail_seed));
+            let (tx, rx) = channel();
+            queue.push(ServeRequest {
+                id: i as u64,
+                adapter: Some("a".to_string()),
+                prompt: p,
+                spec: SamplingSpec {
+                    sampler: Sampler::top_k(8, 0.9),
+                    seed: *seed,
+                    max_new: 6,
+                    stop_tokens: Vec::new(),
+                },
+                tx,
+                enqueued: Instant::now(),
+            });
+            rxs.push(rx);
+        }
+        queue.begin_drain();
+        Scheduler::new(&rt, &base, &adapters, cache)
+            .with_prefill_chunk(5)
+            .run(&queue, &stats);
+        use std::sync::atomic::Ordering;
+        let toks = rxs.iter()
+            .map(|rx| {
+                let mut toks = Vec::new();
+                while let Ok(ev) = rx.try_recv() {
+                    if let TokenEvent::Token(t) = ev {
+                        toks.push(t);
+                    }
+                }
+                toks
+            })
+            .collect();
+        (toks,
+         stats.prefilled_tokens.load(Ordering::Relaxed),
+         stats.prefix_hit_blocks.load(Ordering::Relaxed))
+    };
+    let (cold_toks, cold_prefilled, cold_hits) = run(false);
+    assert!(cold_toks.iter().all(|t| t.len() == 6));
+    assert_eq!(cold_hits, 0, "--prefix-cache off must never hit");
+    let (warm_toks, warm_prefilled, warm_hits) = run(true);
+    assert_eq!(warm_toks, cold_toks,
+               "prefix sharing changed the streamed tokens");
+    assert!(warm_hits > 0,
+            "identical 12-token prefixes never hit the cache");
+    assert!(warm_prefilled < cold_prefilled,
+            "warm requests should prefill only the uncached suffix \
+             ({warm_prefilled} vs {cold_prefilled} tokens)");
 }

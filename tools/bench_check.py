@@ -10,7 +10,7 @@ binaries' `--json` flag; see `rust/src/bench/mod.rs`).  Only the flat
 `tracked` table is compared, on the keys the two reports share.  The
 naming convention carries the direction: keys ending `_gflops`,
 `_tok_s` or `_req_s` are higher-is-better, `_ms` or `_ms_per_tok`
-lower-is-better.
+lower-is-better, as is `_us` (microsecond latencies).
 
 A metric REGRESSES when it moves against its direction by more than
 `--threshold` (default 0.30 = 30%, the ISSUE 6 gate) relative to the
@@ -32,7 +32,7 @@ import os
 import sys
 
 HIGHER_BETTER = ("_gflops", "_tok_s", "_req_s")
-LOWER_BETTER = ("_ms", "_ms_per_tok")
+LOWER_BETTER = ("_ms", "_ms_per_tok", "_us")
 
 
 def direction(key):

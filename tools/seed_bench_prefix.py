@@ -1,0 +1,301 @@
+#!/usr/bin/env python3
+"""Fill the TTFT/ITL fields of the committed BENCH_serve.json with
+honest timings when no Rust toolchain is available.
+
+The canonical way to (re)generate the report is
+`cargo bench --bench bench_serve -- --json BENCH_serve.json`.  This
+script exists for environments that can compile C but not Rust.  The
+seed report (tools/seed_bench_serve.py) transliterated only the
+connection fast-path and therefore OMITTED `serve_ttft_ms` /
+`serve_itl_ms_per_tok`; this script closes that gap by transliterating
+the model compute those metrics are dominated by: the tiny-spec
+`forward_cached` loop from rust/src/runtime/native.rs — embedding
+lookup, per-layer RMSNorm, q/k/v/o projections, RoPE, softmax
+attention over the KV cache, SiLU-gated MLP, final norm, and the
+chunk-final lm_head row — in plain f32 C at the exact same dimensions
+(vocab 256, hidden 64, layers 2, heads 4, head_dim 16, ff 128) and the
+serve defaults (prefill chunk 32, KV block 32).  Compiled with
+`gcc -O2` (no -ffast-math: the Rust build does strict IEEE too) and
+timed as the min over repetitions.
+
+Measured figures:
+  * serve_ttft_ms        — cold chunked prefill of a 64-token prompt
+                           (the prompt bench_serve.rs times);
+  * serve_itl_ms_per_tok — mean single-token decode step at ~200 ctx;
+  * serve_ttft_cold_us   — cold chunked prefill of a 193-token prompt;
+  * serve_ttft_warm_us   — the same prompt with its first 160 positions
+                           (5 whole 32-position blocks) already cached:
+                           the prefix-warm path prefills only the
+                           33-token suffix.
+The prefill-token counts in the `prefix_warm` table are exact
+arithmetic (193 cold vs 33 warm, 160 spliced), the same numbers the
+scheduler's `prefilled_tokens` counter reports.  What this
+transliteration cannot include is the HTTP/scheduler overhead between
+socket write and first compute (~1/serve_keepalive_req_s, about 0.1 ms
+on the seed host) — the note in the JSON says so.  stdlib only.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+C_SRC = r"""
+#include <math.h>
+#include <stdio.h>
+#include <stdlib.h>
+#include <string.h>
+#include <time.h>
+
+/* tiny spec, as rust/src/model/config.rs presets it */
+#define V 256
+#define H 64
+#define L 2
+#define NH 4
+#define HD 16
+#define FF 128
+#define CAP 256
+#define CHUNK 32  /* serve --prefill-chunk default */
+
+static float embed[V * H], lm_head[V * H];
+static float attn_norm[L][H], mlp_norm[L][H], final_norm[H];
+static float wq[L][H * H], wk[L][H * H], wv[L][H * H], wo[L][H * H];
+static float wg[L][FF * H], wu[L][FF * H], wd[L][H * FF];
+/* per-layer KV cache, [head][pos][hd] like infer/kv_cache.rs views it */
+static float kc[L][NH][CAP][HD], vc[L][NH][CAP][HD];
+
+static double now_s(void) {
+    struct timespec ts;
+    clock_gettime(CLOCK_MONOTONIC, &ts);
+    return ts.tv_sec + ts.tv_nsec / 1e9;
+}
+
+static unsigned long long rng = 0x9e3779b97f4a7c15ULL;
+static float frand(void) {
+    rng ^= rng << 13; rng ^= rng >> 7; rng ^= rng << 17;
+    return (float)((double)(rng >> 11) / 9007199254740992.0 - 0.5);
+}
+
+static void fill(float *p, int n) {
+    for (int i = 0; i < n; i++) p[i] = 0.1f * frand();
+}
+
+/* y[t][o] = sum_i w[o*in + i] * x[t*in + i] — linear_fwd's loop */
+static void linear(const float *x, const float *w, float *y, int t,
+                   int in, int out) {
+    for (int r = 0; r < t; r++)
+        for (int o = 0; o < out; o++) {
+            float acc = 0.0f;
+            const float *xr = x + r * in, *wr = w + o * in;
+            for (int i = 0; i < in; i++) acc += wr[i] * xr[i];
+            y[r * out + o] = acc;
+        }
+}
+
+static void rmsnorm(const float *x, const float *g, float *y, int t,
+                    int h) {
+    for (int r = 0; r < t; r++) {
+        float ss = 0.0f;
+        for (int i = 0; i < h; i++) ss += x[r * h + i] * x[r * h + i];
+        float inv = 1.0f / sqrtf(ss / h + 1e-6f);
+        for (int i = 0; i < h; i++)
+            y[r * h + i] = x[r * h + i] * inv * g[i];
+    }
+}
+
+static void rope(float *v, int pos) { /* one head row, length HD */
+    for (int d = 0; d < HD / 2; d++) {
+        float theta = (float)pos
+            * powf(10000.0f, -2.0f * (float)d / (float)HD);
+        float c = cosf(theta), s = sinf(theta);
+        float a = v[2 * d], b = v[2 * d + 1];
+        v[2 * d] = a * c - b * s;
+        v[2 * d + 1] = a * s + b * c;
+    }
+}
+
+/* forward_cached for `t` tokens starting at absolute position `base`;
+   writes the final position's hidden state into xf_last */
+static void forward(const int *toks, int t, int base, float *xf_last) {
+    static float x[CHUNK * H], xn[CHUNK * H], y[CHUNK * H];
+    static float q[CHUNK * H], k[CHUNK * H], v[CHUNK * H];
+    static float gate[CHUNK * FF], up[CHUNK * FF], o[CHUNK * H];
+    for (int i = 0; i < t; i++)
+        memcpy(x + i * H, embed + toks[i] * H, H * sizeof(float));
+    for (int li = 0; li < L; li++) {
+        rmsnorm(x, attn_norm[li], xn, t, H);
+        linear(xn, wq[li], q, t, H, H);
+        linear(xn, wk[li], k, t, H, H);
+        linear(xn, wv[li], v, t, H, H);
+        for (int i = 0; i < t; i++)
+            for (int h = 0; h < NH; h++) {
+                rope(q + i * H + h * HD, base + i);
+                rope(k + i * H + h * HD, base + i);
+                memcpy(kc[li][h][base + i], k + i * H + h * HD,
+                       HD * sizeof(float));
+                memcpy(vc[li][h][base + i], v + i * H + h * HD,
+                       HD * sizeof(float));
+            }
+        /* causal softmax attention over the cache */
+        for (int i = 0; i < t; i++)
+            for (int h = 0; h < NH; h++) {
+                int ctx = base + i + 1;
+                static float sc[CAP];
+                const float *qi = q + i * H + h * HD;
+                float mx = -1e30f;
+                for (int j = 0; j < ctx; j++) {
+                    float acc = 0.0f;
+                    for (int d = 0; d < HD; d++)
+                        acc += qi[d] * kc[li][h][j][d];
+                    sc[j] = acc / sqrtf((float)HD);
+                    if (sc[j] > mx) mx = sc[j];
+                }
+                float den = 0.0f;
+                for (int j = 0; j < ctx; j++) {
+                    sc[j] = expf(sc[j] - mx);
+                    den += sc[j];
+                }
+                float *oi = o + i * H + h * HD;
+                memset(oi, 0, HD * sizeof(float));
+                for (int j = 0; j < ctx; j++) {
+                    float w8 = sc[j] / den;
+                    for (int d = 0; d < HD; d++)
+                        oi[d] += w8 * vc[li][h][j][d];
+                }
+            }
+        linear(o, wo[li], y, t, H, H);
+        for (int i = 0; i < t * H; i++) x[i] += y[i];
+        rmsnorm(x, mlp_norm[li], xn, t, H);
+        linear(xn, wg[li], gate, t, H, FF);
+        linear(xn, wu[li], up, t, H, FF);
+        for (int i = 0; i < t * FF; i++)
+            gate[i] = gate[i] / (1.0f + expf(-gate[i])) * up[i];
+        linear(gate, wd[li], y, t, FF, H);
+        for (int i = 0; i < t * H; i++) x[i] += y[i];
+    }
+    rmsnorm(x + (t - 1) * H, final_norm, xf_last, 1, H);
+}
+
+/* chunked prefill from `base`; returns final-chunk argmax like the
+   scheduler's first sampled token (greedy) */
+static int prefill(const int *toks, int n, int base) {
+    float xf[H], logits[V];
+    for (int at = 0; at < n; at += CHUNK) {
+        int t = (n - at) < CHUNK ? (n - at) : CHUNK;
+        forward(toks + at, t, base + at, xf);
+        linear(xf, lm_head, logits, 1, H, V); /* chunk-final row */
+    }
+    int best = 0;
+    for (int i = 1; i < V; i++) if (logits[i] > logits[best]) best = i;
+    return best;
+}
+
+int main(void) {
+    fill(embed, V * H); fill(lm_head, V * H); fill(final_norm, H);
+    for (int l = 0; l < L; l++) {
+        fill(attn_norm[l], H); fill(mlp_norm[l], H);
+        fill(wq[l], H * H); fill(wk[l], H * H); fill(wv[l], H * H);
+        fill(wo[l], H * H);
+        fill(wg[l], FF * H); fill(wu[l], FF * H); fill(wd[l], H * FF);
+    }
+    int toks[CAP];
+    for (int i = 0; i < CAP; i++) toks[i] = (i + 75) % 200;
+    const int PLEN = 193, REUSED = 160, SHORT = 64, REPS = 30;
+
+    double t64 = 1e30, cold = 1e30, warm = 1e30;
+    int sink = 0;
+    for (int r = 0; r < REPS; r++) {
+        double t0 = now_s();
+        sink += prefill(toks, SHORT, 0);
+        double dt = now_s() - t0;
+        if (dt < t64) t64 = dt;
+    }
+    for (int r = 0; r < REPS; r++) {
+        double t0 = now_s();
+        sink += prefill(toks, PLEN, 0);
+        double dt = now_s() - t0;
+        if (dt < cold) cold = dt;
+    }
+    /* warm path: positions 0..REUSED are spliced from sealed blocks —
+       no recompute, the suffix attends over the cached rows (which the
+       last cold rep left populated, bit-identical to a recompute) */
+    for (int r = 0; r < REPS; r++) {
+        double t0 = now_s();
+        sink += prefill(toks + REUSED, PLEN - REUSED, REUSED);
+        double dt = now_s() - t0;
+        if (dt < warm) warm = dt;
+    }
+    /* decode: single-token steps at ~PLEN context */
+    int t = prefill(toks, PLEN, 0);
+    double d0 = now_s();
+    int steps = 32;
+    for (int s = 0; s < steps; s++) {
+        int one[1] = { t };
+        t = prefill(one, 1, PLEN + s);
+        sink += t;
+    }
+    double itl = (now_s() - d0) / steps;
+    printf("{\"sink\":%d,\"ttft64_ms\":%.6f,\"ttft_cold_us\":%.3f,"
+           "\"ttft_warm_us\":%.3f,\"itl_ms\":%.6f}\n",
+           sink, 1e3 * t64, 1e6 * cold, 1e6 * warm, 1e3 * itl);
+    return 0;
+}
+"""
+
+
+def main():
+    bench_path = os.path.join(REPO, "BENCH_serve.json")
+    with open(bench_path, "r", encoding="utf-8") as f:
+        report = json.load(f)
+    with tempfile.TemporaryDirectory() as td:
+        src = os.path.join(td, "prefix_bench.c")
+        exe = os.path.join(td, "prefix_bench")
+        with open(src, "w", encoding="utf-8") as f:
+            f.write(C_SRC)
+        subprocess.run(["gcc", "-O2", "-o", exe, src, "-lm"],
+                       check=True)
+        out = subprocess.run([exe], check=True, capture_output=True,
+                             text=True).stdout
+    m = json.loads(out)
+    tracked = report.setdefault("tracked", {})
+    tracked["serve_ttft_ms"] = round(m["ttft64_ms"], 3)
+    tracked["serve_itl_ms_per_tok"] = round(m["itl_ms"], 3)
+    tracked["serve_ttft_cold_us"] = round(m["ttft_cold_us"], 1)
+    tracked["serve_ttft_warm_us"] = round(m["ttft_warm_us"], 1)
+    # token counts are exact arithmetic: (193-1)//32*32 = 160 spliced
+    report["prefix_warm"] = [
+        {"phase": "cold",
+         "ttft_us": tracked["serve_ttft_cold_us"],
+         "prefilled_tokens": 193},
+        {"phase": "warm",
+         "ttft_us": tracked["serve_ttft_warm_us"],
+         "prefilled_tokens": 33,
+         "prefix_hit_tokens": 160},
+    ]
+    report["note"] = (
+        report.get("note", "").rstrip() + " TTFT/ITL figures are the "
+        "min-of-30 timings of tools/seed_bench_prefix.py's C "
+        "transliteration of runtime/native.rs forward_cached at the "
+        "tiny spec (chunked prefill, chunk 32): serve_ttft_ms = cold "
+        "64-token prompt, serve_ttft_cold_us / serve_ttft_warm_us = a "
+        "193-token prompt cold vs with its first 160 positions already "
+        "cached (the prefix-cache splice), serve_itl_ms_per_tok = mean "
+        "single-token decode at ~200 ctx; HTTP/scheduler overhead "
+        "between socket write and first compute is excluded (about "
+        "1/serve_keepalive_req_s). The prefix_warm token counts are "
+        "exact arithmetic. Regenerate natively as above to replace "
+        "this calibration.")
+    with open(bench_path, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=1)
+        f.write("\n")
+    print(f"updated {bench_path}:")
+    for k in ("serve_ttft_ms", "serve_itl_ms_per_tok",
+              "serve_ttft_cold_us", "serve_ttft_warm_us"):
+        print(f"  {k:>22} = {tracked[k]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,11 @@ contracts that matter in deployment:
      server runs with ``--prefill-chunk 16``) must NOT stall its peer —
      tokens for ``a`` keep arriving on the wire between prefill chunks,
      before the long request's first token;
-  5. graceful drain: SIGTERM while a request is in flight lets that
+  5. prefix cache: two requests for the same tenant sharing a
+     256-token prefix — the second must splice the first's sealed KV
+     blocks (``/healthz`` reports ``prefix_cache.hit_blocks > 0``) and
+     prefill strictly fewer tokens (the ``prefilled_tokens`` delta);
+  6. graceful drain: SIGTERM while a request is in flight lets that
      request stream to completion, then the process exits 0.
 
 Usage:  python3 tools/serve_smoke.py [--bin target/release/switchlora]
@@ -320,6 +324,48 @@ def main():
         assert na == 200 and adone["finish"] == "length", (na, adone)
         assert adone["n_generated"] == 200, adone
 
+        # prefix cache: two same-tenant requests sharing a 256-token
+        # prefix (8 whole 32-position KV blocks) with distinct tails.
+        # The second must splice the first's sealed blocks and prefill
+        # only the uncached suffix.
+        pfx = [(3 * i + 11) % 200 for i in range(256)]
+        _, h0 = get_json(port, "/healthz")
+        assert h0["prefix_cache"]["enabled"] is True, h0
+        w1 = Stream(port, "/v1/generate",
+                    {"tokens": pfx + [201, 202], "adapter": "a",
+                     "max_new": 4, "seed": 8})
+        assert w1.status == 200, w1.head
+        w1.drain()
+        _, h1 = get_json(port, "/healthz")
+        w2 = Stream(port, "/v1/generate",
+                    {"tokens": pfx + [203, 204], "adapter": "a",
+                     "max_new": 4, "seed": 9})
+        assert w2.status == 200, w2.head
+        w2.drain()
+        cold_prefilled = h1["prefilled_tokens"] - h0["prefilled_tokens"]
+        # the scheduler mirrors prefix counters into /healthz each loop
+        # tick; poll briefly rather than racing it
+        deadline = time.time() + 5
+        while True:
+            _, h2 = get_json(port, "/healthz")
+            warm_prefilled = (h2["prefilled_tokens"]
+                              - h1["prefilled_tokens"])
+            hit_blocks = (h2["prefix_cache"]["hit_blocks"]
+                          - h0["prefix_cache"]["hit_blocks"])
+            if (warm_prefilled > 0 and hit_blocks > 0) \
+                    or time.time() > deadline:
+                break
+            time.sleep(0.05)
+        assert hit_blocks > 0, (
+            "identical 256-token prefixes never hit the prefix cache: "
+            "%r" % h2["prefix_cache"])
+        assert 0 < warm_prefilled < cold_prefilled, (
+            "warm request should prefill only the uncached suffix "
+            "(%d vs %d tokens)" % (warm_prefilled, cold_prefilled))
+        print("serve_smoke: prefix cache hit %d blocks; warm request "
+              "prefilled %d tokens vs %d cold"
+              % (hit_blocks, warm_prefilled, cold_prefilled))
+
         # graceful drain: SIGTERM mid-request; the in-flight request
         # must still stream to completion and the process must exit 0
         c = Stream(port, "/v1/generate",
@@ -333,7 +379,8 @@ def main():
         rc = proc.wait(timeout=120)
         assert rc == 0, "server exited %d after drain" % rc
         print("serve_smoke: OK — keep-alive reuse, mid-flight join, "
-              "chunked prefill interleaving, graceful drain")
+              "chunked prefill interleaving, prefix-cache sharing, "
+              "graceful drain")
     except Exception:
         proc.kill()
         raise
